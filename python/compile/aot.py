@@ -1,0 +1,97 @@
+"""AOT bridge: lower the Layer-2 block-step to HLO text artifacts.
+
+Run once by ``make artifacts``; the rust coordinator loads the emitted
+``artifacts/step_b{N}.hlo.txt`` files via the PJRT C API (`xla` crate) and
+executes them on its request path. Python is never invoked at runtime.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--blocks 8,16,...]
+
+A manifest (``manifest.txt``) records block sizes, shapes, dtype and the
+VMEM footprint estimate per artifact so the rust side can sanity-check
+what it loads, and EXPERIMENTS.md §Perf can cite the numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import stencil  # noqa: E402
+from .kernels.ref import STEP_GHOST  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit_block_step(block: int, out_dir: str) -> dict:
+    """Lower one block size; returns its manifest entry."""
+    lowered = model.lower_block_step(block)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"step_b{block}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    n = block + 2 * STEP_GHOST
+    return {
+        "block": block,
+        "path": path,
+        "input_len": n,
+        "output_len": block,
+        "dtype": "f64",
+        "vmem_bytes": stencil.vmem_footprint_bytes(block),
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        "hlo_chars": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--blocks",
+        default=",".join(str(b) for b in model.DEFAULT_BLOCK_SIZES),
+        help="comma-separated block sizes to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    blocks = [int(b) for b in args.blocks.split(",") if b]
+    entries = []
+    for b in blocks:
+        e = emit_block_step(b, args.out_dir)
+        entries.append(e)
+        print(
+            f"wrote {e['path']}  in={e['input_len']} out={e['output_len']} "
+            f"vmem~{e['vmem_bytes']}B sha={e['hlo_sha256']}"
+        )
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# block input_len output_len dtype vmem_bytes hlo_sha256\n")
+        for e in entries:
+            f.write(
+                f"{e['block']} {e['input_len']} {e['output_len']} "
+                f"{e['dtype']} {e['vmem_bytes']} {e['hlo_sha256']}\n"
+            )
+    print(f"wrote {manifest} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

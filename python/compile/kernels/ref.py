@@ -1,0 +1,95 @@
+"""Pure-jnp reference oracle for the semilinear-wave kernels.
+
+This module is the correctness ground truth: the Pallas kernels in
+``stencil.py`` and the composed RK3 step in ``model.py`` are tested
+against these functions (pytest + hypothesis). Everything here is plain
+``jax.numpy`` — no pallas, no custom calls — so it runs identically on any
+backend and is trivially auditable against the paper's Eqns. (1)-(3):
+
+    chi_t = Pi
+    Phi_t = d_r Pi
+    Pi_t  = (1/r^2) d_r (r^2 Phi) + chi^p          (p = 7)
+
+Discretization follows the paper: 2nd-order centered finite differences in
+space, third-order Shu-Osher SSP Runge-Kutta in time. The spherical term
+is expanded as d_r Phi + 2 Phi / r with the regular-center limit
+(l'Hopital) 3 d_r Phi at r = 0.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Exponent of the semilinear source term (paper §III, p = 7).
+P_EXPONENT = 7
+
+# Ghost cells consumed per RHS evaluation (centered 3-point stencil).
+RHS_GHOST = 1
+# Ghost cells consumed by a full RK3 step (3 RHS evaluations).
+STEP_GHOST = 3
+
+# Treat |r| below this as the coordinate origin for the regularized term.
+R_ORIGIN_EPS = 1e-12
+
+
+def rhs_ref(chi, phi, pi, r, dx):
+    """RHS of Eqns. (1)-(3) on the interior of a block.
+
+    Inputs have length ``n``; outputs have length ``n - 2`` (one ghost
+    consumed per side). ``r`` is the radial coordinate of each point.
+    """
+    dr_pi = (pi[2:] - pi[:-2]) / (2.0 * dx)
+    dr_phi = (phi[2:] - phi[:-2]) / (2.0 * dx)
+    r_c = r[1:-1]
+    phi_c = phi[1:-1]
+    chi_c = chi[1:-1]
+    pi_c = pi[1:-1]
+    # (1/r^2) d_r(r^2 Phi) = d_r Phi + 2 Phi / r, -> 3 d_r Phi at r = 0.
+    at_origin = jnp.abs(r_c) < R_ORIGIN_EPS
+    safe_r = jnp.where(at_origin, 1.0, r_c)
+    spherical = jnp.where(at_origin, 3.0 * dr_phi, dr_phi + 2.0 * phi_c / safe_r)
+    chi_t = pi_c
+    phi_t = dr_pi
+    pi_t = spherical + chi_c**P_EXPONENT
+    return chi_t, phi_t, pi_t
+
+
+def rk3_step_ref(chi, phi, pi, r, dx, dt):
+    """One SSP-RK3 step; input length ``n``, output length ``n - 6``.
+
+    Shu-Osher form:
+        u1 = u + dt L(u)
+        u2 = 3/4 u + 1/4 (u1 + dt L(u1))
+        u  = 1/3 u + 2/3 (u2 + dt L(u2))
+    Each stage consumes one ghost cell per side.
+    """
+    u = (chi, phi, pi)
+
+    # Stage 1: valid on [1, n-1).
+    k1 = rhs_ref(*u, r, dx)
+    u1 = tuple(f[1:-1] + dt * k for f, k in zip(u, k1))
+    r1 = r[1:-1]
+
+    # Stage 2: valid on [2, n-2).
+    k2 = rhs_ref(*u1, r1, dx)
+    u2 = tuple(
+        0.75 * f[2:-2] + 0.25 * (f1[1:-1] + dt * k)
+        for f, f1, k in zip(u, u1, k2)
+    )
+    r2 = r1[1:-1]
+
+    # Stage 3: valid on [3, n-3).
+    k3 = rhs_ref(*u2, r2, dx)
+    out = tuple(
+        f[3:-3] / 3.0 + (2.0 / 3.0) * (f2[1:-1] + dt * k)
+        for f, f2, k in zip(u, u2, k3)
+    )
+    return out
+
+
+def initial_data_ref(r, amplitude, r0=8.0, delta=1.0):
+    """Paper §III initial data: gaussian pulse in chi, Phi = d_r chi, Pi = 0."""
+    chi = amplitude * jnp.exp(-((r - r0) ** 2) / delta**2)
+    phi = chi * (-2.0 * (r - r0) / delta**2)
+    pi = jnp.zeros_like(r)
+    return chi, phi, pi

@@ -1,0 +1,176 @@
+"""Layer-1 Pallas kernels: the finite-difference hot spot.
+
+The paper's compute hot path is the per-block RHS evaluation of the
+semilinear wave system (Eqns. 1-3) inside every RK3 stage. Here it is a
+Pallas kernel so the HBM<->VMEM staging of one *task-granularity block*
+(the paper's Fig 4 parameter) is explicit: one `pallas_call` program
+instance owns one block (plus stencil ghosts) in VMEM and writes the
+block's RHS.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): this is a 1-D
+3-point stencil — pure VPU work, no MXU. The natural TPU mapping keeps a
+whole task block (hundreds of f64 points, ~KBs) resident in VMEM across
+all three RK stages; `rk3_stage_fused_pallas` below does exactly that, so
+HBM traffic per step is one block read + one write instead of three.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client used by
+the rust coordinator cannot execute Mosaic custom-calls, and interpret
+mode lowers to plain HLO while preserving the kernel's block structure
+(see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import P_EXPONENT, R_ORIGIN_EPS
+
+# All kernels run in interpret mode (CPU PJRT target); see module docstring.
+INTERPRET = True
+
+
+def _rhs_body(chi, phi, pi, r, inv_2dx):
+    """Elementwise RHS given pre-sliced neighbor views (length n-2 each).
+
+    Arguments are tuples ``(left, center, right)`` views for the stencil
+    fields and the center view of ``r``; shared by both kernels.
+    """
+    phi_l, phi_c, phi_r = phi
+    pi_l, pi_c, pi_r = pi
+    chi_c = chi
+    dr_pi = (pi_r - pi_l) * inv_2dx
+    dr_phi = (phi_r - phi_l) * inv_2dx
+    at_origin = jnp.abs(r) < R_ORIGIN_EPS
+    safe_r = jnp.where(at_origin, 1.0, r)
+    spherical = jnp.where(at_origin, 3.0 * dr_phi, dr_phi + 2.0 * phi_c / safe_r)
+    chi_t = pi_c
+    phi_t = dr_pi
+    # chi^7 via squarings: chi^7 = chi * (chi^2) * (chi^4) — 3 multiplies
+    # on the VPU instead of a transcendental pow.
+    chi2 = chi_c * chi_c
+    chi4 = chi2 * chi2
+    pi_t = spherical + chi_c * chi2 * chi4
+    return chi_t, phi_t, pi_t
+
+
+def _rhs_kernel(chi_ref, phi_ref, pi_ref, r_ref, out_chi, out_phi, out_pi, *, inv_2dx):
+    """Pallas kernel: RHS on the interior of one VMEM-resident block."""
+    chi = chi_ref[...]
+    phi = phi_ref[...]
+    pi = pi_ref[...]
+    r = r_ref[...]
+    chi_t, phi_t, pi_t = _rhs_body(
+        chi[1:-1],
+        (phi[:-2], phi[1:-1], phi[2:]),
+        (pi[:-2], pi[1:-1], pi[2:]),
+        r[1:-1],
+        inv_2dx,
+    )
+    out_chi[...] = chi_t
+    out_phi[...] = phi_t
+    out_pi[...] = pi_t
+
+
+def rhs_pallas(chi, phi, pi, r, dx):
+    """RHS of Eqns. (1)-(3) as a Pallas call; output length = n - 2.
+
+    Matches ``ref.rhs_ref`` to floating-point round-off (same operation
+    order up to the chi^7 factorization).
+    """
+    n = chi.shape[0]
+    assert n >= 3, "need at least one interior point"
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((n - 2,), chi.dtype) for _ in range(3)
+    )
+    kernel = functools.partial(_rhs_kernel, inv_2dx=1.0 / (2.0 * dx))
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=INTERPRET)(
+        chi, phi, pi, r
+    )
+
+
+def _rk3_fused_kernel(chi_ref, phi_ref, pi_ref, r_ref, scal_ref, out_chi, out_phi, out_pi):
+    """Fused SSP-RK3 step for one block: all three stages in VMEM.
+
+    Input refs have length ``n`` (block + 3 ghosts/side); outputs have
+    length ``n - 6``. No HBM round-trip between stages — the TPU-shaped
+    optimization the three-call composition cannot express. ``scal_ref``
+    carries ``[1/(2 dx), dt]`` as runtime scalars so a single compiled
+    artifact serves every refinement level (each level halves dx and dt).
+    """
+    inv_2dx = scal_ref[0]
+    dt = scal_ref[1]
+
+    def rhs(chi, phi, pi, r):
+        return _rhs_body(
+            chi[1:-1],
+            (phi[:-2], phi[1:-1], phi[2:]),
+            (pi[:-2], pi[1:-1], pi[2:]),
+            r[1:-1],
+            inv_2dx,
+        )
+
+    chi0 = chi_ref[...]
+    phi0 = phi_ref[...]
+    pi0 = pi_ref[...]
+    r0 = r_ref[...]
+
+    # Stage 1 (valid 1..n-1)
+    k1c, k1p, k1q = rhs(chi0, phi0, pi0, r0)
+    chi1 = chi0[1:-1] + dt * k1c
+    phi1 = phi0[1:-1] + dt * k1p
+    pi1 = pi0[1:-1] + dt * k1q
+    r1 = r0[1:-1]
+
+    # Stage 2 (valid 2..n-2)
+    k2c, k2p, k2q = rhs(chi1, phi1, pi1, r1)
+    chi2 = 0.75 * chi0[2:-2] + 0.25 * (chi1[1:-1] + dt * k2c)
+    phi2 = 0.75 * phi0[2:-2] + 0.25 * (phi1[1:-1] + dt * k2p)
+    pi2 = 0.75 * pi0[2:-2] + 0.25 * (pi1[1:-1] + dt * k2q)
+    r2 = r1[1:-1]
+
+    # Stage 3 (valid 3..n-3)
+    k3c, k3p, k3q = rhs(chi2, phi2, pi2, r2)
+    third = 1.0 / 3.0
+    two_third = 2.0 / 3.0
+    out_chi[...] = third * chi0[3:-3] + two_third * (chi2[1:-1] + dt * k3c)
+    out_phi[...] = third * phi0[3:-3] + two_third * (phi2[1:-1] + dt * k3p)
+    out_pi[...] = third * pi0[3:-3] + two_third * (pi2[1:-1] + dt * k3q)
+
+
+def rk3_step_fused_pallas(chi, phi, pi, r, dx, dt):
+    """One full RK3 step as a single fused Pallas kernel.
+
+    Input length ``n`` (block + 6 ghosts); output length ``n - 6``.
+    ``dx``/``dt`` may be python floats or traced rank-0 values; they enter
+    the kernel as a 2-element VMEM scalar vector, so the lowered artifact
+    keeps them as runtime parameters.
+    """
+    n = chi.shape[0]
+    assert n >= 7, "need block + 3 ghosts per side"
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((n - 6,), chi.dtype) for _ in range(3)
+    )
+    scal = jnp.stack(
+        [1.0 / (2.0 * jnp.asarray(dx, chi.dtype)), jnp.asarray(dt, chi.dtype)]
+    )
+    return pl.pallas_call(_rk3_fused_kernel, out_shape=out_shape, interpret=INTERPRET)(
+        chi, phi, pi, r, scal
+    )
+
+
+def vmem_footprint_bytes(block: int, dtype_bytes: int = 8) -> int:
+    """Estimated VMEM bytes for the fused kernel at a given block size.
+
+    4 input arrays of (block+6) + ~9 stage temporaries of <= block+4 + 3
+    outputs of block. Used by DESIGN.md §Perf to check block sizes stay
+    far under the ~16 MiB/core VMEM budget of a real TPU.
+    """
+    n = block + 6
+    inputs = 4 * n
+    temps = 9 * (n - 2)
+    outs = 3 * block
+    return (inputs + temps + outs) * dtype_bytes

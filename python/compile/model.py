@@ -1,0 +1,86 @@
+"""Layer-2 JAX model: the block-advance computation the coordinator calls.
+
+The unit of work in the ParalleX AMR driver is "advance one
+task-granularity block by one RK3 step" (paper §III/Fig 4). This module
+defines that computation as a jittable JAX function composed from the
+Layer-1 Pallas kernels, and is what ``aot.py`` lowers to HLO text for the
+rust coordinator.
+
+Python never runs at request time: everything here executes only during
+``make artifacts`` (and in pytest).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import stencil
+from .kernels.ref import STEP_GHOST
+
+# Every artifact uses float64: the AMR error estimator differences two
+# resolutions of the same solution, which f32 round-off pollutes.
+DTYPE = jnp.float64
+
+# Block sizes lowered by default: powers of two spanning the paper's
+# granularity sweep (Fig 3 explores granularities from single points to
+# large blocks; per-point tasks use the native rust path, XLA blocks
+# start at 8).
+DEFAULT_BLOCK_SIZES = (8, 16, 32, 64, 128, 256, 512)
+
+
+def block_step(chi, phi, pi, r, dx, dt):
+    """Advance one block by one fused RK3 step.
+
+    Shapes: inputs ``(block + 6,)``, outputs ``(block,)`` — callers supply
+    3 ghost points per side (one per RK stage; see ref.STEP_GHOST).
+    Returns a tuple ``(chi', phi', pi')``.
+    """
+    return stencil.rk3_step_fused_pallas(chi, phi, pi, r, dx, dt)
+
+
+def block_step_composed(chi, phi, pi, r, dx, dt):
+    """Same step as three separate RHS pallas calls (ablation target).
+
+    Used by tests and by the L2 perf ablation in EXPERIMENTS.md §Perf to
+    quantify what stage fusion buys (HBM traffic / executable count).
+    """
+    u = (chi, phi, pi)
+    k1 = stencil.rhs_pallas(*u, r, dx)
+    u1 = tuple(f[1:-1] + dt * k for f, k in zip(u, k1))
+    r1 = r[1:-1]
+    k2 = stencil.rhs_pallas(*u1, r1, dx)
+    u2 = tuple(
+        0.75 * f[2:-2] + 0.25 * (f1[1:-1] + dt * k)
+        for f, f1, k in zip(u, u1, k2)
+    )
+    r2 = r1[1:-1]
+    k3 = stencil.rhs_pallas(*u2, r2, dx)
+    return tuple(
+        f[3:-3] / 3.0 + (2.0 / 3.0) * (f2[1:-1] + dt * k)
+        for f, f2, k in zip(u, u2, k3)
+    )
+
+
+def make_block_step_fn(block: int):
+    """A jittable ``f(chi, phi, pi, r, dx, dt) -> (chi', phi', pi')`` for a
+    fixed block size, with dx/dt as *runtime scalars*.
+
+    dx and dt arrive as rank-0 f64 parameters so one artifact serves every
+    refinement level (each level halves both): the artifact set is keyed
+    by block size only.
+    """
+
+    def fn(chi, phi, pi, r, dx, dt):
+        return stencil.rk3_step_fused_pallas(chi, phi, pi, r, dx, dt)
+
+    n = block + 2 * STEP_GHOST
+    arr = jax.ShapeDtypeStruct((n,), DTYPE)
+    scalar = jax.ShapeDtypeStruct((), DTYPE)
+    return fn, (arr, arr, arr, arr, scalar, scalar)
+
+
+def lower_block_step(block: int):
+    """Lower the block-step for ``block`` to a jax ``Lowered`` object."""
+    fn, specs = make_block_step_fn(block)
+    return jax.jit(fn).lower(*specs)

@@ -1,0 +1,5 @@
+"""Shared pytest config: force x64 before any jax import in tests."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

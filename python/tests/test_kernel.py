@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: the stencil
+kernel and the fused RK3 kernel must match ``ref.py`` to tight tolerance
+across hypothesis-swept shapes, amplitudes and grid placements (including
+blocks touching the r=0 regularized origin).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencil
+
+RTOL = 1e-12
+ATOL = 1e-13
+
+
+def make_grid(n, dx, r_start):
+    return jnp.asarray(r_start + dx * np.arange(n), jnp.float64)
+
+
+def random_state(rng, n, amp=1.0):
+    chi = jnp.asarray(amp * rng.standard_normal(n))
+    phi = jnp.asarray(amp * rng.standard_normal(n))
+    pi = jnp.asarray(amp * rng.standard_normal(n))
+    return chi, phi, pi
+
+
+class TestRhsKernel:
+    def test_matches_ref_simple(self):
+        rng = np.random.default_rng(0)
+        n, dx = 32, 0.1
+        r = make_grid(n, dx, 1.0)
+        chi, phi, pi = random_state(rng, n)
+        got = stencil.rhs_pallas(chi, phi, pi, r, dx)
+        want = ref.rhs_ref(chi, phi, pi, r, dx)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_matches_ref_at_origin(self):
+        """Block containing r=0 uses the l'Hopital-regularized term."""
+        rng = np.random.default_rng(1)
+        n, dx = 16, 0.125
+        r = make_grid(n, dx, 0.0)  # r[0] == 0 exactly
+        chi, phi, pi = random_state(rng, n)
+        got = stencil.rhs_pallas(chi, phi, pi, r, dx)
+        want = ref.rhs_ref(chi, phi, pi, r, dx)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+        assert bool(jnp.all(jnp.isfinite(got[2])))
+
+    def test_chi7_power_identity(self):
+        """The squaring factorization equals jnp power to round-off."""
+        x = jnp.linspace(-2.0, 2.0, 101, dtype=jnp.float64)
+        x2 = x * x
+        x4 = x2 * x2
+        np.testing.assert_allclose(x * x2 * x4, x**7, rtol=1e-14)
+
+    def test_minimum_block(self):
+        n, dx = 3, 0.1
+        r = make_grid(n, dx, 2.0)
+        chi = jnp.ones(n, jnp.float64)
+        phi = jnp.zeros(n, jnp.float64)
+        pi = jnp.zeros(n, jnp.float64)
+        (chi_t, phi_t, pi_t) = stencil.rhs_pallas(chi, phi, pi, r, dx)
+        assert chi_t.shape == (1,)
+        # chi=1, phi=pi=0: chi_t = 0, phi_t = 0, pi_t = 1^7 = 1.
+        np.testing.assert_allclose(pi_t, [1.0], rtol=1e-14)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=3, max_value=257),
+        seed=st.integers(min_value=0, max_value=2**31),
+        dx_exp=st.integers(min_value=-6, max_value=0),
+        r_start=st.floats(min_value=0.0, max_value=50.0),
+        amp=st.floats(min_value=1e-3, max_value=2.0),
+    )
+    def test_hypothesis_matches_ref(self, n, seed, dx_exp, r_start, amp):
+        rng = np.random.default_rng(seed)
+        dx = 2.0**dx_exp
+        r = make_grid(n, dx, r_start)
+        chi, phi, pi = random_state(rng, n, amp)
+        got = stencil.rhs_pallas(chi, phi, pi, r, dx)
+        want = ref.rhs_ref(chi, phi, pi, r, dx)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-11, atol=1e-12)
+
+
+class TestFusedRk3Kernel:
+    def test_matches_ref_step(self):
+        rng = np.random.default_rng(2)
+        n, dx = 38, 0.05
+        dt = 0.4 * dx
+        r = make_grid(n, dx, 3.0)
+        chi, phi, pi = random_state(rng, n, 0.5)
+        got = stencil.rk3_step_fused_pallas(chi, phi, pi, r, dx, dt)
+        want = ref.rk3_step_ref(chi, phi, pi, r, dx, dt)
+        for g, w in zip(got, want):
+            assert g.shape == (n - 6,)
+            np.testing.assert_allclose(g, w, rtol=1e-11, atol=1e-12)
+
+    def test_matches_ref_step_at_origin(self):
+        rng = np.random.default_rng(3)
+        n, dx = 22, 0.25
+        dt = 0.1 * dx
+        r = make_grid(n, dx, 0.0)
+        chi, phi, pi = random_state(rng, n, 0.3)
+        got = stencil.rk3_step_fused_pallas(chi, phi, pi, r, dx, dt)
+        want = ref.rk3_step_ref(chi, phi, pi, r, dx, dt)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-11, atol=1e-12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        block=st.integers(min_value=1, max_value=128),
+        seed=st.integers(min_value=0, max_value=2**31),
+        cfl=st.floats(min_value=0.05, max_value=0.5),
+        r_start=st.floats(min_value=0.0, max_value=20.0),
+    )
+    def test_hypothesis_fused_matches_ref(self, block, seed, cfl, r_start):
+        rng = np.random.default_rng(seed)
+        n = block + 6
+        dx = 0.1
+        dt = cfl * dx
+        r = make_grid(n, dx, r_start)
+        chi, phi, pi = random_state(rng, n, 0.4)
+        got = stencil.rk3_step_fused_pallas(chi, phi, pi, r, dx, dt)
+        want = ref.rk3_step_ref(chi, phi, pi, r, dx, dt)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-11, atol=1e-12)
+
+    def test_dt_zero_is_identity_on_interior(self):
+        rng = np.random.default_rng(4)
+        n, dx = 20, 0.1
+        r = make_grid(n, dx, 5.0)
+        chi, phi, pi = random_state(rng, n)
+        got = stencil.rk3_step_fused_pallas(chi, phi, pi, r, dx, 0.0)
+        np.testing.assert_allclose(got[0], chi[3:-3], rtol=1e-14)
+        np.testing.assert_allclose(got[1], phi[3:-3], rtol=1e-14)
+        np.testing.assert_allclose(got[2], pi[3:-3], rtol=1e-14)
+
+
+class TestVmemFootprint:
+    def test_footprint_scales_linearly(self):
+        a = stencil.vmem_footprint_bytes(64)
+        b = stencil.vmem_footprint_bytes(128)
+        assert a < b < 2.2 * a
+
+    def test_all_default_blocks_fit_vmem(self):
+        """Every artifact block size stays far below ~16 MiB TPU VMEM."""
+        from compile.model import DEFAULT_BLOCK_SIZES
+
+        for blk in DEFAULT_BLOCK_SIZES:
+            assert stencil.vmem_footprint_bytes(blk) < 16 * 2**20 / 4

@@ -1,0 +1,10 @@
+//! Fig 7: strong scaling PX vs CSP — regenerates the paper's rows/series.
+//! Run: `cargo bench --bench fig7_scaling` (PX_SCALE=full for paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    print!("{}", parallex::bench::fig7_scaling(parallex::bench::Scale::from_env()));
+    eprintln!("[fig7_scaling] total {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Fig 9: thread-management overhead — regenerates the paper's rows/series.
+//! Run: `cargo bench --bench fig9_thread_overhead` (PX_SCALE=full for paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    print!("{}", parallex::bench::fig9_thread_overhead(parallex::bench::Scale::from_env()));
+    eprintln!("[fig9_thread_overhead] total {:.1}s", t0.elapsed().as_secs_f64());
+}

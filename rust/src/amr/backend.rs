@@ -1,0 +1,231 @@
+//! Compute backends: who evaluates a block's RK3 step.
+//!
+//! Both the ParalleX driver and the CSP baseline advance blocks through
+//! this trait, so execution-model comparisons (Figs 6-8) hold the physics
+//! constant. Two implementations:
+//!
+//! * [`NativeBackend`] — the pure-rust stencil (`physics::rk3_step`).
+//! * [`XlaBackend`] — the PJRT path executing the AOT JAX/Pallas
+//!   artifacts, padded up to the nearest compiled block size.
+//!
+//! Padding correctness: the stencil is local (output `j` depends on
+//! inputs `j..j+6`), so placing the `m+6` real inputs at the start of a
+//! `B+6` buffer and zero-filling the tail leaves outputs `0..m` exact;
+//! the polluted tail is discarded. The `r` tail continues linearly so no
+//! padded point divides by r=0.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::physics::{rk3_step, Fields, STEP_GHOST};
+use crate::runtime::XlaCompute;
+
+/// Advance `m`-point segments one RK3 step (inputs `m + 6` long).
+pub trait ComputeBackend: Send + Sync {
+    /// `chi/phi/pi/r` have length `m + 6`; returns `m` output points.
+    fn step_exact(&self, m: usize, chi: &[f64], phi: &[f64], pi: &[f64], r: &[f64], dx: f64, dt: f64)
+        -> Result<Fields>;
+
+    /// Short name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust stencil backend.
+#[derive(Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn step_exact(
+        &self,
+        m: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> Result<Fields> {
+        anyhow::ensure!(chi.len() == m + 2 * STEP_GHOST, "bad input length");
+        Ok(rk3_step(chi, phi, pi, r, dx, dt))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT/XLA backend over the AOT artifacts.
+#[derive(Clone)]
+pub struct XlaBackend {
+    xc: XlaCompute,
+}
+
+impl XlaBackend {
+    /// Wrap an opened artifact set.
+    pub fn new(xc: XlaCompute) -> XlaBackend {
+        XlaBackend { xc }
+    }
+
+    /// The underlying compute handle.
+    pub fn compute(&self) -> &XlaCompute {
+        &self.xc
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn step_exact(
+        &self,
+        m: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> Result<Fields> {
+        let n = m + 2 * STEP_GHOST;
+        anyhow::ensure!(chi.len() == n, "bad input length {} != {n}", chi.len());
+        let block = self.xc.pick_block(m);
+        if block == m {
+            let (c, p, q) = self.xc.step(block, chi, phi, pi, r, dx, dt)?;
+            return Ok(Fields { chi: c, phi: p, pi: q });
+        }
+        // Pad up: real data first, zero tail (fields) / linear tail (r).
+        let bn = block + 2 * STEP_GHOST;
+        let mut pc = vec![0.0; bn];
+        let mut pp = vec![0.0; bn];
+        let mut pq = vec![0.0; bn];
+        let mut pr = vec![0.0; bn];
+        pc[..n].copy_from_slice(chi);
+        pp[..n].copy_from_slice(phi);
+        pq[..n].copy_from_slice(pi);
+        pr[..n].copy_from_slice(r);
+        let last = r[n - 1];
+        for (k, slot) in pr[n..].iter_mut().enumerate() {
+            *slot = last + dx * (k + 1) as f64;
+        }
+        let (c, p, q) = self.xc.step(block, &pc, &pp, &pq, &pr, dx, dt)?;
+        Ok(Fields { chi: c[..m].to_vec(), phi: p[..m].to_vec(), pi: q[..m].to_vec() })
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Backend selector used by the CLI / benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(format!("unknown backend `{other}` (native|xla)")),
+        }
+    }
+}
+
+/// Build a backend; `artifacts_dir` is only consulted for `Xla`.
+pub fn make_backend(kind: BackendKind, artifacts_dir: &str) -> Result<Arc<dyn ComputeBackend>> {
+    Ok(match kind {
+        BackendKind::Native => Arc::new(NativeBackend),
+        BackendKind::Xla => Arc::new(XlaBackend::new(XlaCompute::open(artifacts_dir)?)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+    }
+
+    fn sample(m: usize, r0: f64) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let n = m + 6;
+        let dx = 0.1;
+        let r: Vec<f64> = (0..n).map(|i| r0 + dx * i as f64).collect();
+        let chi: Vec<f64> = (0..n).map(|i| 0.3 * (0.41 * i as f64).sin()).collect();
+        let phi: Vec<f64> = (0..n).map(|i| 0.2 * (0.73 * i as f64).cos()).collect();
+        let pi: Vec<f64> = (0..n).map(|i| 0.1 * (1.1 * i as f64).sin()).collect();
+        (chi, phi, pi, r)
+    }
+
+    #[test]
+    fn native_matches_exact_rk3() {
+        let (chi, phi, pi, r) = sample(10, 1.0);
+        let out = NativeBackend.step_exact(10, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+        let direct = rk3_step(&chi, &phi, &pi, &r, 0.1, 0.02);
+        assert_eq!(out, direct);
+    }
+
+    #[test]
+    fn xla_matches_native_exact_size() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let be = XlaBackend::new(XlaCompute::open(artifacts_dir()).unwrap());
+        let (chi, phi, pi, r) = sample(16, 2.0);
+        let a = be.step_exact(16, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+        let b = NativeBackend.step_exact(16, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+        for i in 0..16 {
+            assert!((a.chi[i] - b.chi[i]).abs() < 1e-12, "chi[{i}]");
+            assert!((a.phi[i] - b.phi[i]).abs() < 1e-12, "phi[{i}]");
+            assert!((a.pi[i] - b.pi[i]).abs() < 1e-12, "pi[{i}]");
+        }
+    }
+
+    #[test]
+    fn xla_padded_sizes_match_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let be = XlaBackend::new(XlaCompute::open(artifacts_dir()).unwrap());
+        for m in [1usize, 3, 5, 9, 13, 100] {
+            let (chi, phi, pi, r) = sample(m, 0.5);
+            let a = be.step_exact(m, &chi, &phi, &pi, &r, 0.1, 0.01).unwrap();
+            let b = NativeBackend.step_exact(m, &chi, &phi, &pi, &r, 0.1, 0.01).unwrap();
+            assert_eq!(a.len(), m);
+            for i in 0..m {
+                assert!((a.chi[i] - b.chi[i]).abs() < 1e-12, "m={m} chi[{i}]");
+                assert!((a.pi[i] - b.pi[i]).abs() < 1e-12, "m={m} pi[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn xla_padding_handles_origin_blocks() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        // Block whose r starts below 0 (mirror ghosts at the origin):
+        // padded r extension must not create spurious origins.
+        let be = XlaBackend::new(XlaCompute::open(artifacts_dir()).unwrap());
+        let m = 5;
+        let n = m + 6;
+        let dx = 0.1;
+        let r: Vec<f64> = (0..n).map(|i| -0.3 + dx * i as f64).collect(); // r[3] = 0
+        let chi = vec![0.1; n];
+        let phi = vec![0.0; n];
+        let pi = vec![0.05; n];
+        let a = be.step_exact(m, &chi, &phi, &pi, &r, dx, 0.01).unwrap();
+        let b = NativeBackend.step_exact(m, &chi, &phi, &pi, &r, dx, 0.01).unwrap();
+        for i in 0..m {
+            assert!((a.pi[i] - b.pi[i]).abs() < 1e-12, "pi[{i}]: {} vs {}", a.pi[i], b.pi[i]);
+        }
+    }
+}

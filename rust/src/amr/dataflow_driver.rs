@@ -1,0 +1,722 @@
+//! The barrier-free AMR driver: the paper's §III/§IV contribution.
+//!
+//! Every block-step is a PX-thread created by a dataflow-style LCO that
+//! collects exactly the block's domain of dependence (self state, ghost
+//! fragments, taper fragments at aligned steps, restriction fragments).
+//! There is **no global timestep barrier**: a coarse block four pulse
+//! widths away from the refined region advances as soon as its neighbours
+//! allow, producing the timestep "cone" of Figs 5/6, while the thread
+//! manager's work queue provides implicit load balancing (§IV).
+//!
+//! The same driver also implements the conventional *global-barrier*
+//! schedule ("HPX is also capable of implementing the standard AMR
+//! algorithm with global barriers", §III): with [`AmrConfig::barrier`]
+//! set, every task additionally gates on a global fine-step clock that
+//! only advances when all tasks of the current tick have completed —
+//! exactly the per-step synchronization an MPI AMR code performs.
+//!
+//! Wallclock-budget mode ([`AmrConfig::deadline`]): after the deadline,
+//! tasks complete without computing or pushing, freezing the graph; the
+//! per-block completed-step counts are then snapshot for the Fig 5/6
+//! timestep-reached curves.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::ComputeBackend;
+use super::engine::{assemble, restriction_of, shadow_output, split_output, EpochPlan, Input, StateOut};
+use super::mesh::{BlockId, BlockRole, Hierarchy, Region};
+use super::physics::{initial_data, Fields};
+use crate::px::lco::Future as PxFuture;
+use crate::px::runtime::PxRuntime;
+use crate::px::sched::Priority;
+use crate::px::thread::Spawner;
+
+/// Pulse / run configuration on top of the mesh geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct AmrConfig {
+    /// Gaussian amplitude A (tuned toward criticality in the example app).
+    pub amplitude: f64,
+    /// Pulse center R0 (paper: 8).
+    pub r0: f64,
+    /// Pulse width delta (paper: 1).
+    pub delta: f64,
+    /// Base-level steps to run in this epoch.
+    pub coarse_steps: u64,
+    /// Re-introduce the global timestep barrier (comparison mode).
+    pub barrier: bool,
+    /// Stop computing after this wallclock budget (Figs 5/6 mode).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for AmrConfig {
+    fn default() -> Self {
+        AmrConfig {
+            amplitude: 0.01,
+            r0: 8.0,
+            delta: 1.0,
+            coarse_steps: 16,
+            barrier: false,
+            deadline: None,
+        }
+    }
+}
+
+/// Per-block progress + final state.
+#[derive(Debug, Clone)]
+pub struct BlockOutcome {
+    pub completed_steps: u64,
+    pub state: StateOut,
+}
+
+/// Result of one epoch run.
+pub struct AmrOutcome {
+    /// Final (or frozen) state per block.
+    pub blocks: HashMap<BlockId, BlockOutcome>,
+    /// Wallclock of the run.
+    pub elapsed: Duration,
+    /// Tasks executed (compute performed).
+    pub tasks_run: u64,
+    /// Tasks that fired after the deadline (frozen, no compute).
+    pub tasks_frozen: u64,
+}
+
+impl AmrOutcome {
+    /// Assemble the contiguous solution of one level-`l` region.
+    pub fn region_state(&self, plan: &EpochPlan, l: usize, region: usize) -> (Region, Fields) {
+        let reg = plan.hierarchy.regions[l][region];
+        let mut f = Fields::zeros(reg.width());
+        for p in plan.plans.iter().filter(|p| {
+            p.info.id.level as usize == l && p.info.id.region as usize == region
+        }) {
+            if let Some(b) = self.blocks.get(&p.info.id) {
+                let off = p.info.lo - reg.lo;
+                for i in 0..b.state.interior.len() {
+                    f.chi[off + i] = b.state.interior.chi[i];
+                    f.phi[off + i] = b.state.interior.phi[i];
+                    f.pi[off + i] = b.state.interior.pi[i];
+                }
+            }
+        }
+        (reg, f)
+    }
+
+    /// Minimum completed steps across blocks of level `l` (a level is
+    /// "done to" this step).
+    pub fn min_steps(&self, _plan: &EpochPlan, l: usize) -> u64 {
+        self.blocks
+            .iter()
+            .filter(|(id, _)| id.level as usize == l)
+            .map(|(_, b)| b.completed_steps)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// `(radius, completed_steps, level)` per block — the Fig 5/6 series.
+    pub fn timestep_profile(&self, plan: &EpochPlan) -> Vec<(f64, u64, u8)> {
+        let mut rows: Vec<(f64, u64, u8)> = self
+            .blocks
+            .iter()
+            .map(|(id, b)| {
+                let info = &plan.plan(*id).info;
+                let mid = (info.lo + info.hi) as f64 / 2.0;
+                let r = plan.hierarchy.config.dx(id.level as usize) * mid;
+                (r, b.completed_steps, id.level)
+            })
+            .collect();
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        rows
+    }
+}
+
+type TaskKey = (BlockId, u64);
+
+struct TaskEntry {
+    expected: usize,
+    inputs: Vec<Input>,
+}
+
+const SHARDS: usize = 64;
+
+struct DriverState {
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    table: Vec<Mutex<HashMap<TaskKey, TaskEntry>>>,
+    board: Mutex<HashMap<BlockId, BlockOutcome>>,
+    tasks_run: AtomicU64,
+    tasks_frozen: AtomicU64,
+    remaining: AtomicU64,
+    done: PxFuture<Vec<f64>>, // resolved with [] when all tasks finished
+    start: Instant,
+    diverged: AtomicBool,
+    // --- barrier mode ---
+    clock: AtomicU64,
+    tick_due: Vec<u64>,
+    tick_done: Vec<AtomicU64>,
+    parked: Mutex<HashMap<u64, Vec<(BlockId, u64, Vec<Input>)>>>,
+}
+
+fn shard(key: &TaskKey) -> usize {
+    let id = key.0;
+    let h = (id.level as u64)
+        .wrapping_mul(0x9E37_79B9)
+        .wrapping_add((id.region as u64) << 24)
+        .wrapping_add((id.block as u64) << 8)
+        .wrapping_add(key.1.wrapping_mul(0x85EB_CA6B));
+    (h as usize) % SHARDS
+}
+
+impl DriverState {
+    fn new(plan: Arc<EpochPlan>, backend: Arc<dyn ComputeBackend>, config: AmrConfig) -> Arc<Self> {
+        let total: u64 = plan.total_tasks();
+        // Barrier-mode bookkeeping: tasks due at each global fine tick.
+        let finest = plan.hierarchy.n_levels() - 1;
+        let n_ticks = (config.coarse_steps << finest) as usize;
+        let mut tick_due = vec![0u64; n_ticks.max(1)];
+        if config.barrier {
+            for p in &plan.plans {
+                let l = p.info.id.level as usize;
+                for k in 0..plan.targets[l] {
+                    tick_due[plan.barrier_tick(p.info.id, k) as usize] += 1;
+                }
+            }
+        }
+        Arc::new(DriverState {
+            table: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            board: Mutex::new(HashMap::new()),
+            tasks_run: AtomicU64::new(0),
+            tasks_frozen: AtomicU64::new(0),
+            remaining: AtomicU64::new(total),
+            done: PxFuture::new(),
+            start: Instant::now(),
+            diverged: AtomicBool::new(false),
+            clock: AtomicU64::new(0),
+            tick_done: (0..tick_due.len()).map(|_| AtomicU64::new(0)).collect(),
+            tick_due,
+            parked: Mutex::new(HashMap::new()),
+            plan,
+            backend,
+            config,
+        })
+    }
+
+    /// Deliver one input to task `(id, k)`; fire it when complete.
+    fn push(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, input: Input) {
+        let l = id.level as usize;
+        if k >= self.plan.targets[l] {
+            return; // beyond the epoch's horizon
+        }
+        let key = (id, k);
+        let ready = {
+            let mut sh = self.table[shard(&key)].lock().unwrap();
+            let entry = sh.entry(key).or_insert_with(|| TaskEntry {
+                expected: self.plan.expected_inputs(id, k),
+                inputs: Vec::with_capacity(4),
+            });
+            entry.inputs.push(input);
+            debug_assert!(
+                entry.inputs.len() <= entry.expected,
+                "task {id:?}@{k}: {} inputs > expected {}",
+                entry.inputs.len(),
+                entry.expected
+            );
+            if entry.inputs.len() == entry.expected {
+                let e = sh.remove(&key).unwrap();
+                Some(e.inputs)
+            } else {
+                None
+            }
+        };
+        if let Some(inputs) = ready {
+            self.schedule(sp, id, k, inputs);
+        }
+    }
+
+    /// Barrier gate + spawn.
+    fn schedule(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, inputs: Vec<Input>) {
+        if self.config.barrier {
+            let tick = self.plan.barrier_tick(id, k);
+            if tick > self.clock.load(Ordering::SeqCst) {
+                self.parked.lock().unwrap().entry(tick).or_default().push((id, k, inputs));
+                // Re-check: the clock may have advanced while parking.
+                self.release_due(sp);
+                return;
+            }
+        }
+        let st = self.clone();
+        sp.spawn(move |sp| st.run_task(sp, id, k, inputs));
+    }
+
+    fn release_due(self: &Arc<Self>, sp: &Spawner) {
+        let now = self.clock.load(Ordering::SeqCst);
+        let due: Vec<(BlockId, u64, Vec<Input>)> = {
+            let mut parked = self.parked.lock().unwrap();
+            let keys: Vec<u64> = parked.keys().copied().filter(|&t| t <= now).collect();
+            keys.into_iter().flat_map(|t| parked.remove(&t).unwrap()).collect()
+        };
+        for (id, k, inputs) in due {
+            let st = self.clone();
+            sp.spawn(move |sp| st.run_task(sp, id, k, inputs));
+        }
+    }
+
+    /// Execute one block-step task.
+    fn run_task(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, inputs: Vec<Input>) {
+        let plan = self.plan.clone();
+        let p = plan.plan(id);
+        let frozen = self
+            .config
+            .deadline
+            .map(|d| self.start.elapsed() >= d)
+            .unwrap_or(false)
+            || self.diverged.load(Ordering::Relaxed);
+
+        let out: Option<StateOut> = if frozen {
+            self.tasks_frozen.fetch_add(1, Ordering::Relaxed);
+            None
+        } else if p.role == BlockRole::Shadow {
+            self.tasks_run.fetch_add(1, Ordering::Relaxed);
+            Some(shadow_output(p, &inputs))
+        } else {
+            self.tasks_run.fetch_add(1, Ordering::Relaxed);
+            let t = assemble(p, k, &inputs, &plan.hierarchy).expect("evolved block");
+            let dx = plan.hierarchy.config.dx(id.level as usize);
+            let dt = plan.hierarchy.config.dt(id.level as usize);
+            match self.backend.step_exact(t.m_out, &t.chi, &t.phi, &t.pi, &t.r, dx, dt) {
+                Ok(f) => {
+                    if !f.max_abs().is_finite() || f.max_abs() > 1e12 {
+                        // Supercritical blow-up: freeze the run (the
+                        // criticality driver detects this via outcome).
+                        self.diverged.store(true, Ordering::Relaxed);
+                    }
+                    Some(split_output(&t, f, &p.info))
+                }
+                Err(e) => {
+                    eprintln!("block {id:?}@{k}: backend error: {e}");
+                    self.diverged.store(true, Ordering::Relaxed);
+                    None
+                }
+            }
+        };
+
+        if let Some(out) = out {
+            // Record progress (monotonic: shadow tasks j and j+1 may run
+            // concurrently since both depend only on fine restrictions).
+            {
+                let mut b = self.board.lock().unwrap();
+                let e = b.entry(id).or_insert_with(|| BlockOutcome {
+                    completed_steps: 0,
+                    state: out.clone(),
+                });
+                if k + 1 >= e.completed_steps {
+                    *e = BlockOutcome { completed_steps: k + 1, state: out.clone() };
+                }
+            }
+            self.route_outputs(sp, id, k, &out);
+        }
+
+        // Barrier bookkeeping.
+        if self.config.barrier {
+            let tick = self.plan.barrier_tick(id, k) as usize;
+            let done = self.tick_done[tick].fetch_add(1, Ordering::SeqCst) + 1;
+            if done == self.tick_due[tick] {
+                // Everyone due at this tick arrived: advance the clock to
+                // the next tick with work and release parked tasks — the
+                // global barrier in action.
+                self.clock.store(tick as u64 + 1, Ordering::SeqCst);
+                self.release_due(sp);
+            }
+        }
+
+        // Epoch completion accounting.
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.done.set(sp, Vec::new());
+        }
+    }
+
+    /// Push this task's outputs to every dependent task.
+    fn route_outputs(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, out: &StateOut) {
+        let plan = self.plan.clone();
+        let p = plan.plan(id);
+        let b = &p.info;
+        let next = k + 1;
+
+        // Self (Shadow blocks take no self input — pure injection).
+        if p.role != BlockRole::Shadow {
+            self.push(sp, id, next, Input::SelfState(out.clone()));
+        }
+
+        // Ghost fragments: the full owned range (extension included).
+        if !p.ghost_to.is_empty() {
+            let mut parts: Vec<&Fields> = Vec::with_capacity(3);
+            let mut lo = b.lo;
+            if let Some(el) = &out.ext_left {
+                lo -= el.len();
+                parts.push(el);
+            }
+            parts.push(&out.interior);
+            if let Some(er) = &out.ext_right {
+                parts.push(er);
+            }
+            let frag = Fields::concat(&parts);
+            for tgt in &p.ghost_to {
+                self.push(sp, *tgt, next, Input::GhostFrag { lo, f: frag.clone() });
+            }
+        }
+
+        // Restriction to parents at aligned completions.
+        if next % 2 == 0 && !p.restrict_to.is_empty() {
+            let (plo, f) = restriction_of(out, b);
+            let m = next / 2;
+            for tgt in &p.restrict_to {
+                let role = plan.plan(*tgt).role;
+                let task_k = if role == BlockRole::Shadow { m - 1 } else { m };
+                self.push(sp, *tgt, task_k, Input::RestrictFrag { lo: plo, f: f.clone() });
+            }
+        }
+
+        // Taper fragments to children: parent state@next serves child
+        // aligned task 2*next.
+        if !p.taper_to.is_empty() {
+            let child_k = 2 * next;
+            for (tgt, _side) in &p.taper_to {
+                self.push(
+                    sp,
+                    *tgt,
+                    child_k,
+                    Input::TaperFrag { parent_lo: b.lo, f: out.interior.clone() },
+                );
+            }
+        }
+    }
+
+    /// Seed all k=0 inputs from the initial condition.
+    fn seed(self: &Arc<Self>, sp: &Spawner, init: &HashMap<BlockId, Fields>) {
+        // Mimic the push pattern of a fictitious "task -1" per block.
+        for p in &self.plan.plans {
+            let id = p.info.id;
+            let f = &init[&id];
+            let out = StateOut { ext_left: None, interior: f.clone(), ext_right: None };
+            // Self + ghosts (Shadow blocks take no self input).
+            if p.role != BlockRole::Shadow {
+                self.push(sp, id, 0, Input::SelfState(out.clone()));
+            }
+            for tgt in &p.ghost_to {
+                self.push(sp, *tgt, 0, Input::GhostFrag { lo: p.info.lo, f: f.clone() });
+            }
+            // Restriction @0 to Evolved parents only (Shadow task 0 waits
+            // for restriction @2 produced by fine task 1).
+            if !p.restrict_to.is_empty() {
+                let (plo, rf) = restriction_of(&out, &p.info);
+                for tgt in &p.restrict_to {
+                    if self.plan.plan(*tgt).role == BlockRole::Evolved {
+                        self.push(sp, *tgt, 0, Input::RestrictFrag { lo: plo, f: rf.clone() });
+                    }
+                }
+            }
+            // Taper @0 to children.
+            for (tgt, _) in &p.taper_to {
+                self.push(sp, *tgt, 0, Input::TaperFrag { parent_lo: p.info.lo, f: f.clone() });
+            }
+        }
+    }
+}
+
+/// Build the initial per-block states from the analytic pulse.
+pub fn initial_block_states(plan: &EpochPlan, cfg: &AmrConfig) -> HashMap<BlockId, Fields> {
+    let mut out = HashMap::new();
+    for p in &plan.plans {
+        let l = p.info.id.level as usize;
+        let dx = plan.hierarchy.config.dx(l);
+        let r: Vec<f64> = (p.info.lo..p.info.hi).map(|i| dx * i as f64).collect();
+        out.insert(p.info.id, initial_data(&r, cfg.amplitude, cfg.r0, cfg.delta));
+    }
+    out
+}
+
+/// Run one epoch of the barrier-free (or barrier-mode) AMR evolution on
+/// the given runtime, starting from `init` block states.
+pub fn run_epoch(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+) -> Result<AmrOutcome> {
+    let st = DriverState::new(plan, backend, config);
+    let sp = rt.locality(0).spawner.clone();
+    {
+        let st2 = st.clone();
+        let init2 = init.clone();
+        sp.spawn_prio(Priority::High, move |sp| st2.seed(sp, &init2));
+    }
+    match config.deadline {
+        None => {
+            // Graph runs to exhaustion.
+            st.done.wait().map_err(|e| anyhow::anyhow!("epoch failed: {e}"))?;
+        }
+        Some(d) => {
+            // Wait for completion or deadline + drain.
+            if st.done.wait_timeout(d + Duration::from_millis(50)).is_none() {
+                // Frozen tasks drain the graph; wait for quiescence.
+                rt.wait_quiescent();
+            }
+        }
+    }
+    rt.wait_quiescent();
+    let blocks = st.board.lock().unwrap().clone();
+    anyhow::ensure!(
+        !st.diverged.load(Ordering::Relaxed) || config.deadline.is_some(),
+        "evolution diverged (supercritical or unstable)"
+    );
+    Ok(AmrOutcome {
+        blocks,
+        elapsed: st.start.elapsed(),
+        tasks_run: st.tasks_run.load(Ordering::Relaxed),
+        tasks_frozen: st.tasks_frozen.load(Ordering::Relaxed),
+    })
+}
+
+/// Convenience: full run (build plan from hierarchy, init from pulse).
+pub fn run(
+    rt: &PxRuntime,
+    hierarchy: Hierarchy,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+) -> Result<(Arc<EpochPlan>, AmrOutcome)> {
+    let plan = Arc::new(EpochPlan::new(hierarchy, config.coarse_steps));
+    let init = initial_block_states(&plan, &config);
+    let outcome = run_epoch(rt, plan.clone(), backend, config, &init)?;
+    Ok((plan, outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amr::backend::NativeBackend;
+    use crate::amr::mesh::MeshConfig;
+    use crate::amr::physics::rk3_step;
+    use crate::px::runtime::PxConfig;
+    use crate::testkit::prop::{prop_check, Rng};
+
+    fn rt(workers: usize) -> PxRuntime {
+        PxRuntime::boot(PxConfig::smp(workers))
+    }
+
+    /// Reference unigrid evolution with the same BC handling: whole-domain
+    /// arrays, mirror at origin, extrapolation outside.
+    fn reference_unigrid(cfg: &AmrConfig, mesh: &MeshConfig, steps: u64) -> Fields {
+        let n = mesh.level_span(0);
+        let dx = mesh.dx(0);
+        let dt = mesh.dt(0);
+        let r: Vec<f64> = (0..n).map(|i| dx * i as f64).collect();
+        let mut f = initial_data(&r, cfg.amplitude, cfg.r0, cfg.delta);
+        for _ in 0..steps {
+            // Build padded arrays [-3, n+3).
+            let g = 3usize;
+            let mut chi = vec![0.0; n + 6];
+            let mut phi = vec![0.0; n + 6];
+            let mut pi = vec![0.0; n + 6];
+            let mut rr = vec![0.0; n + 6];
+            for i in 0..n {
+                chi[g + i] = f.chi[i];
+                phi[g + i] = f.phi[i];
+                pi[g + i] = f.pi[i];
+                rr[g + i] = r[i];
+            }
+            for k in 1..=g {
+                chi[g - k] = f.chi[k];
+                phi[g - k] = -f.phi[k];
+                pi[g - k] = f.pi[k];
+                rr[g - k] = -r[k];
+            }
+            let ex = |v: &[f64], j: f64| {
+                let (a, b, c) = (v[n - 3], v[n - 2], v[n - 1]);
+                c + j * (c - b) + 0.5 * j * (j + 1.0) * (a - 2.0 * b + c)
+            };
+            for k in 0..g {
+                let j = (k + 1) as f64;
+                chi[g + n + k] = ex(&f.chi, j);
+                phi[g + n + k] = ex(&f.phi, j);
+                pi[g + n + k] = ex(&f.pi, j);
+                rr[g + n + k] = r[n - 1] + dx * j;
+            }
+            f = rk3_step(&chi, &phi, &pi, &rr, dx, dt);
+            assert_eq!(f.len(), n);
+        }
+        f
+    }
+
+    #[test]
+    fn unigrid_dataflow_matches_sequential_reference() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 0, cfl: 0.25, granularity: 16 };
+        let cfg = AmrConfig { coarse_steps: 10, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[]).unwrap();
+        let runtime = rt(4);
+        let (plan, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+        let (_, got) = out.region_state(&plan, 0, 0);
+        let want = reference_unigrid(&cfg, &mesh, 10);
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!(
+                (got.chi[i] - want.chi[i]).abs() < 1e-12,
+                "chi[{i}]: {} vs {}",
+                got.chi[i],
+                want.chi[i]
+            );
+            assert!((got.pi[i] - want.pi[i]).abs() < 1e-12, "pi[{i}]");
+        }
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn unigrid_results_independent_of_granularity_and_workers() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 0, cfl: 0.25, granularity: 16 };
+        let cfg = AmrConfig { coarse_steps: 6, ..Default::default() };
+        let mut reference: Option<Fields> = None;
+        for (g, w) in [(201usize, 1usize), (16, 4), (5, 2), (1, 4)] {
+            let mesh_g = MeshConfig { granularity: g, ..mesh };
+            let h = Hierarchy::build(mesh_g, &[]).unwrap();
+            let runtime = rt(w);
+            let (plan, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+            let (_, got) = out.region_state(&plan, 0, 0);
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => {
+                    for i in 0..want.len() {
+                        assert!(
+                            (got.chi[i] - want.chi[i]).abs() < 1e-13,
+                            "g={g} w={w} chi[{i}]"
+                        );
+                    }
+                }
+            }
+            runtime.shutdown();
+        }
+    }
+
+    #[test]
+    fn one_level_amr_runs_and_respects_targets() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 8, ..Default::default() };
+        // Refine r in [6, 10] => level-1 idx [120, 200).
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let runtime = rt(4);
+        let (plan, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+        // Every level-0 block completed 8 steps; level-1 16 steps.
+        for (id, b) in &out.blocks {
+            let want = plan.targets[id.level as usize];
+            assert_eq!(b.completed_steps, want, "block {id:?}");
+        }
+        // Solution stays finite and pulse-like.
+        let (_, f0) = out.region_state(&plan, 0, 0);
+        assert!(f0.max_abs().is_finite());
+        assert!(f0.max_abs() > 1e-4, "pulse vanished");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn amr_fine_region_matches_unigrid_of_same_resolution() {
+        // The acid test of taper + restriction: an AMR run whose fine
+        // level covers the pulse must reproduce (to truncation-level
+        // differences) a uniform fine-resolution run over that window.
+        let n0 = 201;
+        let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+        let cfg = AmrConfig { coarse_steps: 6, amplitude: 0.01, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 100, hi: 240 }]]).unwrap();
+        let runtime = rt(4);
+        let (plan, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+        let (reg1, f1) = out.region_state(&plan, 1, 0);
+
+        // Uniform run at level-1 resolution everywhere.
+        let fine_mesh =
+            MeshConfig { r_max: 20.0, n0: 2 * (n0 - 1) + 1, levels: 0, cfl: 0.25, granularity: 64 };
+        let fine = reference_unigrid(&cfg, &fine_mesh, 12);
+        // Compare interior of the fine region away from the taper edges.
+        let margin = 20;
+        let mut max_err = 0.0f64;
+        for i in margin..reg1.width() - margin {
+            let gi = reg1.lo + i;
+            max_err = max_err.max((f1.chi[i] - fine.chi[gi]).abs());
+        }
+        // Taper interfaces inject coarse-truncation data; allow a small
+        // multiple of the coarse truncation error.
+        assert!(max_err < 5e-6, "fine-region mismatch {max_err}");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn barrier_mode_gives_identical_physics() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let cfg_free = AmrConfig { coarse_steps: 5, barrier: false, ..Default::default() };
+        let cfg_bar = AmrConfig { coarse_steps: 5, barrier: true, ..Default::default() };
+        let r1 = rt(4);
+        let (plan_a, a) = run(&r1, h.clone(), Arc::new(NativeBackend), cfg_free).unwrap();
+        r1.shutdown();
+        let r2 = rt(4);
+        let (_, b) = run(&r2, h, Arc::new(NativeBackend), cfg_bar).unwrap();
+        r2.shutdown();
+        for l in 0..2 {
+            let (_, fa) = a.region_state(&plan_a, l, 0);
+            let (_, fb) = b.region_state(&plan_a, l, 0);
+            for i in 0..fa.len() {
+                assert_eq!(fa.chi[i].to_bits(), fb.chi[i].to_bits(), "level {l} chi[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_freezes_progress_and_reports_profile() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 401, levels: 1, cfl: 0.25, granularity: 8 };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 240, hi: 400 }]]).unwrap();
+        let cfg = AmrConfig {
+            coarse_steps: 100_000, // far more than fits the budget
+            deadline: Some(Duration::from_millis(150)),
+            ..Default::default()
+        };
+        let runtime = rt(2);
+        let (plan, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+        assert!(out.tasks_frozen > 0, "deadline should freeze tasks");
+        let profile = out.timestep_profile(&plan);
+        assert!(!profile.is_empty());
+        // Progress is bounded and uneven (barrier-free cone): some blocks
+        // are ahead of others.
+        let steps: Vec<u64> = profile.iter().map(|(_, s, _)| *s).collect();
+        let min = *steps.iter().min().unwrap();
+        let max = *steps.iter().max().unwrap();
+        assert!(max > 0);
+        assert!(max < 100_000);
+        assert!(max > min, "expected uneven progress, got uniform {max}");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn prop_unigrid_any_granularity_matches_reference() {
+        prop_check("dataflow unigrid vs reference", 6, |rng: &mut Rng| {
+            let n0 = 101 + 2 * rng.range(0, 30);
+            let g = rng.range(1, 40);
+            let w = rng.range(1, 5);
+            let steps = rng.range(1, 6) as u64;
+            let mesh = MeshConfig { r_max: 10.0, n0, levels: 0, cfl: 0.2, granularity: g };
+            let cfg = AmrConfig { coarse_steps: steps, amplitude: 0.005, r0: 5.0, ..Default::default() };
+            let h = Hierarchy::build(mesh, &[]).unwrap();
+            let runtime = rt(w);
+            let (plan, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+            let (_, got) = out.region_state(&plan, 0, 0);
+            let want = reference_unigrid(&cfg, &mesh, steps);
+            for i in 0..want.len() {
+                assert!(
+                    (got.chi[i] - want.chi[i]).abs() < 1e-12,
+                    "n0={n0} g={g} steps={steps}: chi[{i}]"
+                );
+            }
+            runtime.shutdown();
+        });
+    }
+}

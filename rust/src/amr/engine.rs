@@ -1,0 +1,739 @@
+//! Task semantics shared by the AMR drivers: input kinds, window
+//! assembly, boundary fills, prolongation/restriction, and the
+//! expected-input accounting that makes the dataflow graph sound.
+//!
+//! A **task** is "advance block `B` of level `l` from its step `k` state
+//! to `k+1`". Its inputs are exactly the block's domain of dependence
+//! (paper §III): its own state, ghost fragments from same-level blocks
+//! whose interiors intersect its stencil window, taper fragments from
+//! parent blocks at aligned (even) steps, and restriction (injection)
+//! fragments from child blocks. The *expected count* of each input kind
+//! is a static function of the topology and the step parity, computed
+//! here and relied on by both drivers — every push must find a consumer
+//! slot, and every task must eventually receive all its inputs.
+
+use super::mesh::{BlockId, BlockInfo, BlockRole, Hierarchy, TAPER};
+#[cfg(test)]
+use super::mesh::EdgeKind;
+use super::physics::{Fields, STEP_GHOST};
+
+/// Output of one task: the advanced interior, plus surviving taper
+/// extension values when the task was an aligned (even-step) refill.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StateOut {
+    /// 3 evolved extension points below `lo` (present after even steps of
+    /// blocks owning a left fine-edge extension).
+    pub ext_left: Option<Fields>,
+    /// The block's `[lo, hi)` values.
+    pub interior: Fields,
+    /// 3 evolved extension points at/above `hi`.
+    pub ext_right: Option<Fields>,
+}
+
+/// One dataflow input to a task.
+#[derive(Debug, Clone)]
+pub enum Input {
+    /// The block's own previous output.
+    SelfState(StateOut),
+    /// Same-level values covering `[lo, lo + f.len())` in own-level
+    /// indices (a neighbour's interior and possibly its extension).
+    GhostFrag { lo: usize, f: Fields },
+    /// Parent-level values covering `[parent_lo, ...)` in *parent*
+    /// indices, for taper prolongation at aligned steps.
+    TaperFrag { parent_lo: usize, f: Fields },
+    /// Child-level injection covering `[lo, ...)` in *own-level* indices
+    /// (values at points coincident with child grid points).
+    RestrictFrag { lo: usize, f: Fields },
+}
+
+/// Which side of a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+/// Static per-block task metadata derived from the hierarchy.
+#[derive(Debug, Clone)]
+pub struct BlockPlan {
+    pub info: BlockInfo,
+    /// Own-level region bounds containing this block.
+    pub region_lo: usize,
+    pub region_hi: usize,
+    /// Same-level blocks whose interiors intersect this block's stencil
+    /// window `[lo-3, hi+3)` (ghost suppliers; excludes self).
+    pub ghost_from: Vec<BlockId>,
+    /// Same-level blocks to whose windows this block's output contributes
+    /// (the reverse map: push targets).
+    pub ghost_to: Vec<BlockId>,
+    /// True when the window's left side crosses the region's left edge
+    /// and that edge is a fine/coarse interface.
+    pub left_taper: bool,
+    pub right_taper: bool,
+    /// True when this block *owns* the evolving extension (lo == region
+    /// edge); only owners produce `ext_left/ext_right` outputs.
+    pub owns_left_ext: bool,
+    pub owns_right_ext: bool,
+    /// Parent blocks supplying taper fragments (even steps).
+    pub taper_left_from: Vec<BlockId>,
+    pub taper_right_from: Vec<BlockId>,
+    /// Child blocks supplying restriction fragments (every step).
+    pub restrict_from: Vec<BlockId>,
+    /// Parent blocks to which this block pushes restriction (on odd-step
+    /// completion).
+    pub restrict_to: Vec<BlockId>,
+    /// Child blocks to which this block pushes taper fragments (on every
+    /// completion, consumed at the child's next even step).
+    pub taper_to: Vec<(BlockId, Side)>,
+    pub role: BlockRole,
+}
+
+/// All plans for one hierarchy epoch, plus step targets per level.
+pub struct EpochPlan {
+    pub hierarchy: Hierarchy,
+    pub plans: Vec<BlockPlan>,
+    /// plans index by BlockId (parallel to hierarchy.blocks order).
+    id_index: std::collections::HashMap<BlockId, usize>,
+    /// Steps each level must complete (level l: coarse_steps << l).
+    pub targets: Vec<u64>,
+}
+
+impl EpochPlan {
+    /// Derive the task plans for `coarse_steps` base-level steps.
+    pub fn new(hierarchy: Hierarchy, coarse_steps: u64) -> EpochPlan {
+        let n_levels = hierarchy.n_levels();
+        let targets: Vec<u64> = (0..n_levels).map(|l| coarse_steps << l).collect();
+        let mut plans: Vec<BlockPlan> = Vec::with_capacity(hierarchy.blocks.len());
+        for b in &hierarchy.blocks {
+            let l = b.id.level as usize;
+            let region = hierarchy.regions[l][b.id.region as usize];
+            let w_lo = b.lo.saturating_sub(STEP_GHOST);
+            let w_hi = b.hi + STEP_GHOST;
+            // Ghost suppliers: same-level same-region blocks intersecting
+            // the window (clipped to the region). Shadow blocks take *no*
+            // ghost/self inputs (their state is pure injection), so their
+            // supplier list is empty — but they still appear as suppliers
+            // to their evolved neighbours.
+            let ghost_from: Vec<BlockId> = if b.role == BlockRole::Shadow {
+                Vec::new()
+            } else {
+                hierarchy
+                    .level_blocks(l)
+                    .filter(|o| {
+                        o.id != b.id
+                            && o.id.region == b.id.region
+                            && o.lo < w_hi.min(region.hi)
+                            && w_lo.max(region.lo) < o.hi
+                    })
+                    .map(|o| o.id)
+                    .collect()
+            };
+            let left_taper = b.lo < region.lo + STEP_GHOST
+                && region_edge_is_fine(&hierarchy, l, b.id.region as usize, Side::Left);
+            let right_taper = b.hi + STEP_GHOST > region.hi
+                && region_edge_is_fine(&hierarchy, l, b.id.region as usize, Side::Right);
+            let owns_left_ext = left_taper && b.lo == region.lo;
+            let owns_right_ext = right_taper && b.hi == region.hi;
+            // Taper suppliers: recompute for *any* window-crossing block
+            // (mesh.rs only wires them for exact edge blocks).
+            let taper_left_from = if left_taper {
+                parent_cover(&hierarchy, l, region.lo.saturating_sub(TAPER) / 2, region.lo.div_ceil(2) + 1)
+            } else {
+                Vec::new()
+            };
+            let taper_right_from = if right_taper {
+                parent_cover(&hierarchy, l, region.hi / 2, (region.hi + TAPER).div_ceil(2) + 1)
+            } else {
+                Vec::new()
+            };
+            plans.push(BlockPlan {
+                info: b.clone(),
+                region_lo: region.lo,
+                region_hi: region.hi,
+                ghost_from,
+                ghost_to: Vec::new(),
+                left_taper,
+                right_taper,
+                owns_left_ext,
+                owns_right_ext,
+                taper_left_from,
+                taper_right_from,
+                restrict_from: b.restrict_from.clone(),
+                restrict_to: Vec::new(),
+                taper_to: Vec::new(),
+                role: b.role,
+            });
+        }
+        // Reverse maps.
+        let id_index: std::collections::HashMap<BlockId, usize> =
+            plans.iter().enumerate().map(|(i, p)| (p.info.id, i)).collect();
+        let snapshot: Vec<(BlockId, Vec<BlockId>, Vec<BlockId>, Vec<BlockId>, Vec<BlockId>)> = plans
+            .iter()
+            .map(|p| {
+                (
+                    p.info.id,
+                    p.ghost_from.clone(),
+                    p.restrict_from.clone(),
+                    p.taper_left_from.clone(),
+                    p.taper_right_from.clone(),
+                )
+            })
+            .collect();
+        for (id, ghosts, restricts, tl, tr) in snapshot {
+            for g in ghosts {
+                let gi = id_index[&g];
+                plans[gi].ghost_to.push(id);
+            }
+            for rsrc in restricts {
+                let ri = id_index[&rsrc];
+                plans[ri].restrict_to.push(id);
+            }
+            for p in tl {
+                let pi = id_index[&p];
+                plans[pi].taper_to.push((id, Side::Left));
+            }
+            for p in tr {
+                let pi = id_index[&p];
+                plans[pi].taper_to.push((id, Side::Right));
+            }
+        }
+        EpochPlan { hierarchy, plans, id_index, targets }
+    }
+
+    /// Plan for one block.
+    pub fn plan(&self, id: BlockId) -> &BlockPlan {
+        &self.plans[self.id_index[&id]]
+    }
+
+    /// Expected number of inputs for task `(id, k)`.
+    ///
+    /// Soundness contract: equals exactly the number of pushes generated
+    /// by seeding (k=0 contributions) plus completions of predecessor
+    /// tasks. Verified by `prop_push_counts_match_expectations`.
+    pub fn expected_inputs(&self, id: BlockId, k: u64) -> usize {
+        let p = self.plan(id);
+        if p.role == BlockRole::Shadow {
+            return p.restrict_from.len();
+        }
+        let mut n = 1 + p.ghost_from.len(); // self + ghosts
+        if k % 2 == 0 {
+            if p.left_taper {
+                n += p.taper_left_from.len();
+            }
+            if p.right_taper {
+                n += p.taper_right_from.len();
+            }
+        }
+        n += p.restrict_from.len();
+        n
+    }
+
+    /// Total number of tasks in the epoch (for progress accounting).
+    pub fn total_tasks(&self) -> u64 {
+        self.plans
+            .iter()
+            .map(|p| self.targets[p.info.id.level as usize])
+            .sum()
+    }
+
+    /// The global fine-step tick at which task `(id, k)` runs under a
+    /// global-barrier schedule: level `l` steps every `2^(L-1-l)` ticks.
+    ///
+    /// Shadow blocks are special: their "task k" is the restriction
+    /// (injection) producing state `k+1`, whose data comes from the child
+    /// finishing its step `2k+1` — so they are due half a stride later
+    /// (the restriction phase at the end of the coarse step, exactly
+    /// where an MPI Berger-Oliger code performs injection).
+    pub fn barrier_tick(&self, id: BlockId, k: u64) -> u64 {
+        let l = id.level as usize;
+        let finest = self.hierarchy.n_levels() - 1;
+        let stride = 1u64 << (finest - l);
+        let base = k * stride;
+        if self.plan(id).role == BlockRole::Shadow {
+            base + stride / 2
+        } else {
+            base
+        }
+    }
+}
+
+fn region_edge_is_fine(h: &Hierarchy, l: usize, region: usize, side: Side) -> bool {
+    if l == 0 {
+        return false;
+    }
+    let r = h.regions[l][region];
+    match side {
+        Side::Left => r.lo != 0,
+        Side::Right => r.hi != h.config.level_span(l),
+    }
+}
+
+fn parent_cover(h: &Hierarchy, l: usize, plo: usize, phi: usize) -> Vec<BlockId> {
+    h.level_blocks(l - 1)
+        .filter(|pb| pb.lo < phi && plo < pb.hi)
+        .map(|pb| pb.id)
+        .collect()
+}
+
+// ----------------------------------------------------------- assembly
+
+/// Sparse own-level value map assembled from a task's inputs.
+struct Window {
+    lo: i64,
+    chi: Vec<f64>,
+    phi: Vec<f64>,
+    pi: Vec<f64>,
+    have: Vec<bool>,
+}
+
+impl Window {
+    fn new(lo: i64, len: usize) -> Window {
+        Window { lo, chi: vec![0.0; len], phi: vec![0.0; len], pi: vec![0.0; len], have: vec![false; len] }
+    }
+
+    fn put(&mut self, idx: i64, c: f64, p: f64, q: f64) {
+        let j = idx - self.lo;
+        if j < 0 || j as usize >= self.have.len() {
+            return; // fragment extends past the window: ignore surplus
+        }
+        let j = j as usize;
+        self.chi[j] = c;
+        self.phi[j] = p;
+        self.pi[j] = q;
+        self.have[j] = true;
+    }
+
+    fn put_fields(&mut self, lo: i64, f: &Fields) {
+        for i in 0..f.len() {
+            self.put(lo + i as i64, f.chi[i], f.phi[i], f.pi[i]);
+        }
+    }
+
+    fn get(&self, idx: i64) -> (f64, f64, f64) {
+        let j = (idx - self.lo) as usize;
+        debug_assert!(self.have[j], "window hole at {idx}");
+        (self.chi[j], self.phi[j], self.pi[j])
+    }
+
+    fn filled(&self, idx: i64) -> bool {
+        let j = idx - self.lo;
+        j >= 0 && (j as usize) < self.have.len() && self.have[j as usize]
+    }
+}
+
+/// Assembled input ready for the compute backend.
+pub struct TaskInput {
+    /// Own-level index of the first point of the padded arrays.
+    pub in_lo: i64,
+    pub chi: Vec<f64>,
+    pub phi: Vec<f64>,
+    pub pi: Vec<f64>,
+    pub r: Vec<f64>,
+    /// Output length (interior width + refilled extensions).
+    pub m_out: usize,
+    /// Own-level index of the first *output* point.
+    pub out_lo: i64,
+    /// Whether this task's output carries ext_left / ext_right.
+    pub has_ext_left: bool,
+    pub has_ext_right: bool,
+}
+
+/// Assemble the padded arrays for task `(plan, k)` from its inputs.
+///
+/// Returns `None` for Shadow blocks (their "step" is pure injection,
+/// handled by [`shadow_output`]).
+pub fn assemble(plan: &BlockPlan, k: u64, inputs: &[Input], h: &Hierarchy) -> Option<TaskInput> {
+    if plan.role == BlockRole::Shadow {
+        return None;
+    }
+    let b = &plan.info;
+    let level = b.id.level as usize;
+    let dx = h.config.dx(level);
+    let even = k % 2 == 0;
+    let g = STEP_GHOST as i64;
+
+    // Output geometry: even-step refills extend owned edges by 3.
+    let ext_l = plan.owns_left_ext && even;
+    let ext_r = plan.owns_right_ext && even;
+    let out_lo = b.lo as i64 - if ext_l { g } else { 0 };
+    let out_hi = b.hi as i64 + if ext_r { g } else { 0 };
+    let m_out = (out_hi - out_lo) as usize;
+    let in_lo = out_lo - g;
+    let in_hi = out_hi + g;
+    let n_in = (in_hi - in_lo) as usize;
+
+    // Window spans everything we might read, plus mirror sources.
+    let w_lo = in_lo.min(0);
+    let w_hi = in_hi.max(in_lo.abs() + 1);
+    let mut win = Window::new(w_lo, (w_hi - w_lo) as usize);
+
+    // 1. Self state (+ surviving extensions).
+    let mut taper_frags: Vec<(usize, &Fields)> = Vec::new();
+    let mut restrict_frags: Vec<(usize, &Fields)> = Vec::new();
+    for inp in inputs {
+        match inp {
+            Input::SelfState(s) => {
+                win.put_fields(b.lo as i64, &s.interior);
+                if let Some(el) = &s.ext_left {
+                    win.put_fields(b.lo as i64 - el.len() as i64, el);
+                }
+                if let Some(er) = &s.ext_right {
+                    win.put_fields(b.hi as i64, er);
+                }
+            }
+            Input::GhostFrag { lo, f } => win.put_fields(*lo as i64, f),
+            Input::TaperFrag { parent_lo, f } => taper_frags.push((*parent_lo, f)),
+            Input::RestrictFrag { lo, f } => restrict_frags.push((*lo, f)),
+        }
+    }
+
+    // 2. Taper prolongation (even steps near fine edges): fill own-level
+    //    points outside the region from parent values (linear interp).
+    if even && (plan.left_taper || plan.right_taper) {
+        let mut pwin_lo = usize::MAX;
+        let mut pwin_hi = 0usize;
+        for (lo, f) in &taper_frags {
+            pwin_lo = pwin_lo.min(*lo);
+            pwin_hi = pwin_hi.max(lo + f.len());
+        }
+        if pwin_lo < pwin_hi {
+            let mut pw = Window::new(pwin_lo as i64, pwin_hi - pwin_lo);
+            for (lo, f) in &taper_frags {
+                pw.put_fields(*lo as i64, f);
+            }
+            let mut fill = |fine_lo: i64, fine_hi: i64| {
+                for i in fine_lo..fine_hi {
+                    if i < 0 {
+                        continue;
+                    }
+                    let (pa, pb) = ((i / 2) as i64, (i / 2 + (i % 2)) as i64);
+                    if pw.filled(pa) && pw.filled(pb) {
+                        let va = pw.get(pa);
+                        let vb = pw.get(pb);
+                        win.put(i, 0.5 * (va.0 + vb.0), 0.5 * (va.1 + vb.1), 0.5 * (va.2 + vb.2));
+                    }
+                }
+            };
+            if plan.left_taper {
+                fill(plan.region_lo as i64 - TAPER as i64, plan.region_lo as i64);
+            }
+            if plan.right_taper {
+                fill(plan.region_hi as i64, plan.region_hi as i64 + TAPER as i64);
+            }
+        }
+    }
+
+    // 3. Restriction overwrites (evolved parents under children).
+    for (lo, f) in &restrict_frags {
+        win.put_fields(*lo as i64, f);
+    }
+
+    // 4. Physical boundary fills for window positions outside the domain
+    //    / region when the edge is Origin or Outer.
+    let span = h.config.level_span(level) as i64;
+    if in_lo < 0 {
+        // Mirror: index -i takes (chi, -phi, pi) from index +i.
+        for i in in_lo..0 {
+            let src = -i;
+            if win.filled(src) {
+                let (c, p, q) = win.get(src);
+                win.put(i, c, -p, q);
+            }
+        }
+    }
+    if in_hi > span {
+        // Outer extrapolation from the last 3 in-domain values.
+        let n_dom = span;
+        if win.filled(n_dom - 3) && win.filled(n_dom - 2) && win.filled(n_dom - 1) {
+            let (a3, b3, c3) = (win.get(n_dom - 3), win.get(n_dom - 2), win.get(n_dom - 1));
+            for i in n_dom..in_hi {
+                let j = (i - n_dom + 1) as f64;
+                let ex = |a: f64, b: f64, c: f64| c + j * (c - b) + 0.5 * j * (j + 1.0) * (a - 2.0 * b + c);
+                win.put(i, ex(a3.0, b3.0, c3.0), ex(a3.1, b3.1, c3.1), ex(a3.2, b3.2, c3.2));
+            }
+        }
+    }
+
+    // 5. Extract padded arrays.
+    let mut t = TaskInput {
+        in_lo,
+        chi: vec![0.0; n_in],
+        phi: vec![0.0; n_in],
+        pi: vec![0.0; n_in],
+        r: vec![0.0; n_in],
+        m_out,
+        out_lo,
+        has_ext_left: ext_l,
+        has_ext_right: ext_r,
+    };
+    for j in 0..n_in {
+        let idx = in_lo + j as i64;
+        debug_assert!(
+            win.filled(idx),
+            "task {:?} k={k}: missing window value at {idx} (block [{}, {}), inputs {})",
+            b.id,
+            b.lo,
+            b.hi,
+            inputs.len()
+        );
+        let (c, p, q) = win.get(idx);
+        t.chi[j] = c;
+        t.phi[j] = p;
+        t.pi[j] = q;
+        t.r[j] = dx * idx as f64;
+    }
+    Some(t)
+}
+
+/// Split backend output into the block's [`StateOut`].
+pub fn split_output(t: &TaskInput, f: Fields, b: &BlockInfo) -> StateOut {
+    let g = STEP_GHOST;
+    let mut off = 0;
+    let ext_left = t.has_ext_left.then(|| {
+        let e = f.slice(0, g);
+        off = g;
+        e
+    });
+    let w = b.hi - b.lo;
+    let interior = f.slice(off, off + w);
+    let ext_right = t.has_ext_right.then(|| f.slice(off + w, off + w + g));
+    StateOut { ext_left, interior, ext_right }
+}
+
+/// Assemble a Shadow block's output purely from restriction fragments.
+pub fn shadow_output(plan: &BlockPlan, inputs: &[Input]) -> StateOut {
+    let b = &plan.info;
+    let w = b.hi - b.lo;
+    let mut out = Fields::zeros(w);
+    let mut have = vec![false; w];
+    for inp in inputs {
+        if let Input::RestrictFrag { lo, f } = inp {
+            for i in 0..f.len() {
+                let idx = lo + i;
+                if idx >= b.lo && idx < b.hi {
+                    let j = idx - b.lo;
+                    out.chi[j] = f.chi[i];
+                    out.phi[j] = f.phi[i];
+                    out.pi[j] = f.pi[i];
+                    have[j] = true;
+                }
+            }
+        }
+    }
+    debug_assert!(have.iter().all(|&x| x), "shadow block {:?} not fully covered", b.id);
+    StateOut { ext_left: None, interior: out, ext_right: None }
+}
+
+/// Restriction fragment produced by a (fine) block's output: values at
+/// own-level even indices, expressed in parent indices.
+pub fn restriction_of(out: &StateOut, b: &BlockInfo) -> (usize, Fields) {
+    let a = b.lo;
+    let first_even = a.div_ceil(2) * 2; // first own-level even index >= lo
+    let plo = first_even / 2;
+    let mut f = Fields::default();
+    let mut i = first_even;
+    while i < b.hi {
+        let j = i - a;
+        f.chi.push(out.interior.chi[j]);
+        f.phi.push(out.interior.phi[j]);
+        f.pi.push(out.interior.pi[j]);
+        i += 2;
+    }
+    (plo, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amr::mesh::{MeshConfig, Region};
+    use crate::amr::physics::initial_data;
+
+    fn h1(granularity: usize) -> Hierarchy {
+        Hierarchy::build(
+            MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity },
+            &[vec![Region { lo: 120, hi: 200 }]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn expected_inputs_interior_block() {
+        let plan = EpochPlan::new(h1(20), 4);
+        // A mid-domain level-0 block away from the child: self + 2 ghosts.
+        let b = plan
+            .plans
+            .iter()
+            .find(|p| p.info.id.level == 0 && p.info.lo == 120 && p.restrict_from.is_empty())
+            .map(|p| p.info.id);
+        if let Some(id) = b {
+            assert_eq!(plan.expected_inputs(id, 0), 3);
+            assert_eq!(plan.expected_inputs(id, 1), 3);
+        }
+        // Fine edge block: even step adds taper fragments.
+        let fe = plan
+            .plans
+            .iter()
+            .find(|p| p.owns_left_ext)
+            .expect("edge block");
+        let even = plan.expected_inputs(fe.info.id, 0);
+        let odd = plan.expected_inputs(fe.info.id, 1);
+        assert!(even > odd, "even {even} vs odd {odd}");
+        assert_eq!(even - odd, fe.taper_left_from.len());
+    }
+
+    #[test]
+    fn reverse_maps_mirror_forward_maps() {
+        let plan = EpochPlan::new(h1(16), 2);
+        for p in &plan.plans {
+            for g in &p.ghost_from {
+                assert!(
+                    plan.plan(*g).ghost_to.contains(&p.info.id),
+                    "{:?} missing ghost_to {:?}",
+                    g,
+                    p.info.id
+                );
+            }
+            for r in &p.restrict_from {
+                assert!(plan.plan(*r).restrict_to.contains(&p.info.id));
+            }
+            for t in &p.taper_left_from {
+                assert!(plan.plan(*t).taper_to.iter().any(|(c, _)| *c == p.info.id));
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_tick_subcycles() {
+        let plan = EpochPlan::new(h1(16), 2);
+        let c0 = plan.plans.iter().find(|p| p.info.id.level == 0).unwrap().info.id;
+        let c1 = plan.plans.iter().find(|p| p.info.id.level == 1).unwrap().info.id;
+        assert_eq!(plan.barrier_tick(c0, 3), 6);
+        assert_eq!(plan.barrier_tick(c1, 3), 3);
+    }
+
+    #[test]
+    fn restriction_of_even_alignment() {
+        let b = BlockInfo {
+            id: BlockId { level: 1, region: 0, block: 0 },
+            lo: 121,
+            hi: 127,
+            left: EdgeKind::FineEdge,
+            right: EdgeKind::FineEdge,
+            role: BlockRole::Evolved,
+            restrict_from: vec![],
+            taper_left_from: vec![],
+            taper_right_from: vec![],
+        };
+        let out = StateOut {
+            ext_left: None,
+            interior: Fields {
+                chi: vec![1., 2., 3., 4., 5., 6.],
+                phi: vec![0.; 6],
+                pi: vec![0.; 6],
+            },
+            ext_right: None,
+        };
+        // Own indices 121..127; even ones: 122,124,126 -> parent 61,62,63.
+        let (plo, f) = restriction_of(&out, &b);
+        assert_eq!(plo, 61);
+        assert_eq!(f.chi, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn assemble_unigrid_interior_matches_direct_window() {
+        // Hand-feed inputs for a unigrid block and check padded arrays.
+        let h = Hierarchy::build(
+            MeshConfig { r_max: 10.0, n0: 101, levels: 0, cfl: 0.25, granularity: 10 },
+            &[],
+        )
+        .unwrap();
+        let plan = EpochPlan::new(h, 1);
+        let p = plan.plans.iter().find(|p| p.info.lo == 50).unwrap();
+        let dx = plan.hierarchy.config.dx(0);
+        let r_of = |i: usize| dx * i as f64;
+        let f_at = |lo: usize, n: usize| {
+            let r: Vec<f64> = (lo..lo + n).map(r_of).collect();
+            initial_data(&r, 0.1, 5.0, 1.0)
+        };
+        let inputs = vec![
+            Input::SelfState(StateOut { ext_left: None, interior: f_at(50, 10), ext_right: None }),
+            Input::GhostFrag { lo: 40, f: f_at(40, 10) },
+            Input::GhostFrag { lo: 60, f: f_at(60, 10) },
+        ];
+        let t = assemble(p, 0, &inputs, &plan.hierarchy).unwrap();
+        assert_eq!(t.in_lo, 47);
+        assert_eq!(t.m_out, 10);
+        assert_eq!(t.chi.len(), 16);
+        let expect = f_at(47, 16);
+        for i in 0..16 {
+            assert!((t.chi[i] - expect.chi[i]).abs() < 1e-15);
+            assert!((t.r[i] - r_of(47 + i)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn assemble_origin_block_mirrors() {
+        let h = Hierarchy::build(
+            MeshConfig { r_max: 10.0, n0: 101, levels: 0, cfl: 0.25, granularity: 10 },
+            &[],
+        )
+        .unwrap();
+        let plan = EpochPlan::new(h, 1);
+        let p = plan.plans.iter().find(|p| p.info.lo == 0).unwrap();
+        let dx = plan.hierarchy.config.dx(0);
+        let r: Vec<f64> = (0..10).map(|i| dx * i as f64).collect();
+        let f = initial_data(&r, 0.1, 3.0, 1.0);
+        let rg: Vec<f64> = (10..20).map(|i| dx * i as f64).collect();
+        let fg = initial_data(&rg, 0.1, 3.0, 1.0);
+        let inputs = vec![
+            Input::SelfState(StateOut { ext_left: None, interior: f.clone(), ext_right: None }),
+            Input::GhostFrag { lo: 10, f: fg },
+        ];
+        let t = assemble(p, 0, &inputs, &plan.hierarchy).unwrap();
+        assert_eq!(t.in_lo, -3);
+        // Mirror parities at negative indices.
+        for k in 1..=3 {
+            let jm = (3 - k) as usize; // index of -k
+            let jp = (3 + k) as usize; // index of +k
+            assert_eq!(t.chi[jm], t.chi[jp]);
+            assert_eq!(t.phi[jm], -t.phi[jp]);
+            assert_eq!(t.pi[jm], t.pi[jp]);
+            assert_eq!(t.r[jm], -t.r[jp]);
+        }
+    }
+
+    #[test]
+    fn split_output_with_extension() {
+        let b = BlockInfo {
+            id: BlockId { level: 1, region: 0, block: 0 },
+            lo: 120,
+            hi: 126,
+            left: EdgeKind::FineEdge,
+            right: EdgeKind::Neighbor(BlockId { level: 1, region: 0, block: 1 }),
+            role: BlockRole::Evolved,
+            restrict_from: vec![],
+            taper_left_from: vec![],
+            taper_right_from: vec![],
+        };
+        let t = TaskInput {
+            in_lo: 114,
+            chi: vec![],
+            phi: vec![],
+            pi: vec![],
+            r: vec![],
+            m_out: 9,
+            out_lo: 117,
+            has_ext_left: true,
+            has_ext_right: false,
+        };
+        let f = Fields {
+            chi: (0..9).map(|i| i as f64).collect(),
+            phi: vec![0.0; 9],
+            pi: vec![0.0; 9],
+        };
+        let s = split_output(&t, f, &b);
+        assert_eq!(s.ext_left.as_ref().unwrap().chi, vec![0.0, 1.0, 2.0]);
+        assert_eq!(s.interior.chi, (3..9).map(|i| i as f64).collect::<Vec<_>>());
+        assert!(s.ext_right.is_none());
+    }
+}

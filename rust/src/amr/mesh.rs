@@ -1,0 +1,536 @@
+//! Berger–Oliger mesh hierarchy with tapered interfaces (paper §III).
+//!
+//! The hierarchy is a set of refinement **levels** over the radial domain
+//! `[0, r_max]`. Level `l` has spacing `dx_l = dx0 / 2^l` and timestep
+//! `dt_l = cfl * dx_l` (2:1 subcycling). Each level above the base owns a
+//! set of disjoint index **regions**; regions are split into task
+//! **blocks** of `granularity` points — the paper's runtime-tunable task
+//! grain (Figs 3/4), down to a single point per block.
+//!
+//! Interface scheme (Lehner–Liebling–Reula tapering [32], as used by the
+//! paper's HAD code):
+//!
+//! * **Taper**: at *aligned* (even) fine steps, a fine region's edge block
+//!   extends itself by [`TAPER`] = 6 points prolongated from the parent;
+//!   each of the two substeps to the next alignment consumes 3 of them,
+//!   so no time interpolation of boundary data is ever needed.
+//! * **Shadow/restriction**: parent points under a fine region's interior
+//!   (minus an [`OVERLAP_MARGIN`]-cell overlap zone) are *shadow* points:
+//!   not evolved, owned by the fine level and filled by injection at
+//!   aligned times. Parent points in the overlap zone are evolved and
+//!   corrected by injection — this supplies valid stencil data on both
+//!   sides of the fine/coarse boundary without circular dependencies.
+//!
+//! This module is pure structure: geometry, block topology and the
+//! dependency maps (who supplies ghosts, taper fragments and restriction
+//! fragments to whom). The drivers turn it into task graphs.
+
+use super::physics::STEP_GHOST;
+
+/// Fine points of taper extension beyond a region edge (2 substeps × 3).
+pub const TAPER: usize = 6;
+/// Parent cells of evolved-and-corrected overlap inside a child region.
+pub const OVERLAP_MARGIN: usize = 4;
+/// Minimum width (in own-level points) of a refined region.
+pub const MIN_REGION_WIDTH: usize = 2 * (2 * OVERLAP_MARGIN) + 4;
+
+/// Hierarchy geometry/config.
+#[derive(Debug, Clone, Copy)]
+pub struct MeshConfig {
+    /// Outer radius of the domain (origin is always r = 0).
+    pub r_max: f64,
+    /// Base-level point count (point 0 at r=0, point n0-1 at r_max).
+    pub n0: usize,
+    /// Refinement levels above the base (0 = unigrid).
+    pub levels: usize,
+    /// CFL factor: dt_l = cfl * dx_l.
+    pub cfl: f64,
+    /// Task granularity: points per block (>= 1).
+    pub granularity: usize,
+}
+
+impl Default for MeshConfig {
+    fn default() -> Self {
+        MeshConfig { r_max: 50.0, n0: 1001, levels: 1, cfl: 0.25, granularity: 64 }
+    }
+}
+
+impl MeshConfig {
+    /// Base grid spacing.
+    pub fn dx0(&self) -> f64 {
+        self.r_max / (self.n0 - 1) as f64
+    }
+
+    /// Spacing at level `l`.
+    pub fn dx(&self, l: usize) -> f64 {
+        self.dx0() / (1u64 << l) as f64
+    }
+
+    /// Timestep at level `l`.
+    pub fn dt(&self, l: usize) -> f64 {
+        self.cfl * self.dx(l)
+    }
+
+    /// Number of index positions at level `l` spanning the whole domain.
+    pub fn level_span(&self, l: usize) -> usize {
+        (self.n0 - 1) * (1usize << l) + 1
+    }
+
+    /// Radius of index `i` at level `l`.
+    pub fn radius(&self, l: usize, i: usize) -> f64 {
+        self.dx(l) * i as f64
+    }
+}
+
+/// A half-open index interval `[lo, hi)` at some level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Region {
+    pub fn width(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        i >= self.lo && i < self.hi
+    }
+
+    pub fn intersects(&self, other: &Region) -> bool {
+        self.lo < other.hi && other.lo < self.hi
+    }
+}
+
+/// Identifies one task block: level, region index within the level,
+/// block index within the region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    pub level: u8,
+    pub region: u16,
+    pub block: u32,
+}
+
+/// What lies beyond a block's edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Another block of the same region supplies 3 ghost points.
+    Neighbor(BlockId),
+    /// The regular origin r=0: mirror-symmetry fill.
+    Origin,
+    /// The outer boundary r=r_max: extrapolation fill.
+    Outer,
+    /// A coarse/fine interface: taper prolongated from parent blocks.
+    FineEdge,
+}
+
+/// Parent-block evolution role under a child region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockRole {
+    /// Normal evolved block (possibly receiving restriction corrections).
+    Evolved,
+    /// Entirely inside a child shadow zone: filled by injection only.
+    Shadow,
+}
+
+/// Static description of one block.
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub id: BlockId,
+    /// Own-level global index range `[lo, hi)`.
+    pub lo: usize,
+    pub hi: usize,
+    pub left: EdgeKind,
+    pub right: EdgeKind,
+    pub role: BlockRole,
+    /// Fine blocks (level+1) whose restriction output overlaps this
+    /// block's `[lo - 3, hi + 3)` halo — they push injection fragments
+    /// before every step of this block.
+    pub restrict_from: Vec<BlockId>,
+    /// Parent blocks (level-1) covering this block's left taper source
+    /// range (only nonempty when `left == FineEdge`).
+    pub taper_left_from: Vec<BlockId>,
+    /// Parent blocks covering the right taper source range.
+    pub taper_right_from: Vec<BlockId>,
+}
+
+impl BlockInfo {
+    pub fn width(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// The full static structure for one regrid epoch.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub config: MeshConfig,
+    /// `regions[l]` = refined regions of level `l` (level 0 has exactly
+    /// one region spanning the domain).
+    pub regions: Vec<Vec<Region>>,
+    /// All blocks, indexable by [`BlockId`] via [`Hierarchy::block`].
+    pub blocks: Vec<BlockInfo>,
+    /// blocks index offsets: flat index of (level, region, 0).
+    index: Vec<Vec<(usize, usize)>>, // [level][region] -> (first_flat, n_blocks)
+}
+
+impl Hierarchy {
+    /// Build a hierarchy from per-level region lists (level 0 implied).
+    ///
+    /// `fine_regions[l-1]` are the level-`l` regions in level-`l` indices.
+    /// Regions are validated: sorted, disjoint, min width, properly
+    /// nested with taper margin inside their parent's coverage.
+    pub fn build(config: MeshConfig, fine_regions: &[Vec<Region>]) -> Result<Hierarchy, String> {
+        assert_eq!(fine_regions.len(), config.levels, "one region list per refined level");
+        let mut regions: Vec<Vec<Region>> = Vec::with_capacity(config.levels + 1);
+        regions.push(vec![Region { lo: 0, hi: config.level_span(0) }]);
+        for (i, regs) in fine_regions.iter().enumerate() {
+            let l = i + 1;
+            let span = config.level_span(l);
+            let mut sorted = regs.clone();
+            sorted.sort_by_key(|r| r.lo);
+            // Merge adjacent/overlapping regions.
+            let mut merged: Vec<Region> = Vec::new();
+            for r in sorted {
+                if r.width() == 0 {
+                    continue;
+                }
+                match merged.last_mut() {
+                    Some(prev) if r.lo <= prev.hi + 2 * TAPER => prev.hi = prev.hi.max(r.hi),
+                    _ => merged.push(r),
+                }
+            }
+            for r in &merged {
+                if r.hi > span {
+                    return Err(format!("level {l} region {r:?} exceeds span {span}"));
+                }
+                if r.width() < MIN_REGION_WIDTH {
+                    return Err(format!(
+                        "level {l} region {r:?} narrower than {MIN_REGION_WIDTH}"
+                    ));
+                }
+                // Proper nesting: the parent must cover [lo/2 - margin,
+                // hi/2 + margin] with evolved (own-region) points, unless
+                // the edge sits on a physical boundary.
+                let margin = TAPER; // parent points needed for taper + stencil
+                let parent_regs: &[Region] = &regions[l - 1];
+                let plo = (r.lo / 2).saturating_sub(margin);
+                let phi = ((r.hi - 1) / 2 + margin + 1).min(config.level_span(l - 1));
+                let covered = parent_regs.iter().any(|p| p.lo <= plo && phi <= p.hi);
+                if !covered {
+                    return Err(format!(
+                        "level {l} region {r:?} not nested in parent (need parent [{plo},{phi}))"
+                    ));
+                }
+            }
+            regions.push(merged);
+        }
+
+        let mut h = Hierarchy { config, regions, blocks: Vec::new(), index: Vec::new() };
+        h.build_blocks();
+        h.wire_topology();
+        Ok(h)
+    }
+
+    fn build_blocks(&mut self) {
+        let g = self.config.granularity.max(1);
+        self.blocks.clear();
+        self.index = vec![Vec::new(); self.regions.len()];
+        for (l, regs) in self.regions.iter().enumerate() {
+            for (ri, reg) in regs.iter().enumerate() {
+                let first_flat = self.blocks.len();
+                let n_blocks = reg.width().div_ceil(g);
+                for b in 0..n_blocks {
+                    let lo = reg.lo + b * g;
+                    let hi = (lo + g).min(reg.hi);
+                    let id = BlockId { level: l as u8, region: ri as u16, block: b as u32 };
+                    let left = if b > 0 {
+                        EdgeKind::Neighbor(BlockId { block: b as u32 - 1, ..id })
+                    } else if lo == 0 {
+                        EdgeKind::Origin
+                    } else if l == 0 {
+                        // Base level always spans the domain; lo>0 cannot
+                        // happen for level 0, but keep it total.
+                        EdgeKind::Origin
+                    } else {
+                        EdgeKind::FineEdge
+                    };
+                    let right = if b + 1 < n_blocks {
+                        EdgeKind::Neighbor(BlockId { block: b as u32 + 1, ..id })
+                    } else if hi == self.config.level_span(l) {
+                        EdgeKind::Outer
+                    } else if l == 0 {
+                        EdgeKind::Outer
+                    } else {
+                        EdgeKind::FineEdge
+                    };
+                    self.blocks.push(BlockInfo {
+                        id,
+                        lo,
+                        hi,
+                        left,
+                        right,
+                        role: BlockRole::Evolved,
+                        restrict_from: Vec::new(),
+                        taper_left_from: Vec::new(),
+                        taper_right_from: Vec::new(),
+                    });
+                }
+                self.index[l].push((first_flat, n_blocks));
+            }
+        }
+    }
+
+    fn wire_topology(&mut self) {
+        // Shadow roles: a parent block is Shadow when its halo lies fully
+        // inside some child region shrunk by the overlap margin.
+        let shadow_zones: Vec<Vec<Region>> = self
+            .regions
+            .iter()
+            .enumerate()
+            .map(|(l, _)| {
+                if l + 1 >= self.regions.len() {
+                    return Vec::new();
+                }
+                self.regions[l + 1]
+                    .iter()
+                    .filter_map(|c| {
+                        let plo = c.lo / 2 + OVERLAP_MARGIN;
+                        let phi = c.hi / 2;
+                        let phi = phi.saturating_sub(OVERLAP_MARGIN);
+                        (phi > plo).then_some(Region { lo: plo, hi: phi })
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let all: Vec<(usize, BlockInfo)> = self.blocks.iter().cloned().enumerate().collect();
+        for (flat, b) in all {
+            let l = b.id.level as usize;
+            // Role.
+            if let Some(zones) = shadow_zones.get(l) {
+                let halo_lo = b.lo.saturating_sub(STEP_GHOST);
+                let halo_hi = b.hi + STEP_GHOST;
+                if zones.iter().any(|z| z.lo <= halo_lo && halo_hi <= z.hi) {
+                    self.blocks[flat].role = BlockRole::Shadow;
+                }
+            }
+            // Restriction sources: fine blocks whose own-level range maps
+            // onto this block's halo [lo-3, hi+3) AND which lie inside a
+            // child region (they all do by construction).
+            if l + 1 < self.regions.len() {
+                let halo_lo = b.lo.saturating_sub(STEP_GHOST) * 2;
+                let halo_hi = (b.hi + STEP_GHOST) * 2;
+                // Only blocks under a child region receive restriction.
+                let under_child = self.regions[l + 1]
+                    .iter()
+                    .any(|c| c.lo < (b.hi + STEP_GHOST) * 2 && b.lo.saturating_sub(STEP_GHOST) * 2 < c.hi);
+                if under_child {
+                    let mut srcs = Vec::new();
+                    for fb in self.level_blocks(l + 1) {
+                        if fb.lo < halo_hi.div_ceil(1) && halo_lo < fb.hi {
+                            // fine range [fb.lo, fb.hi) in fine indices vs
+                            // halo in fine indices [halo_lo, halo_hi).
+                            if fb.lo < halo_hi && halo_lo < fb.hi {
+                                srcs.push(fb.id);
+                            }
+                        }
+                    }
+                    self.blocks[flat].restrict_from = srcs;
+                }
+            }
+            // Taper sources: parent blocks covering the taper source range
+            // in parent indices (with one extra cell for interpolation).
+            if b.left == EdgeKind::FineEdge {
+                let src_lo = (b.lo.saturating_sub(TAPER)) / 2;
+                let src_hi = b.lo.div_ceil(2) + 1;
+                self.blocks[flat].taper_left_from = self.parent_blocks_covering(l, src_lo, src_hi);
+            }
+            if b.right == EdgeKind::FineEdge {
+                let src_lo = b.hi / 2;
+                let src_hi = (b.hi + TAPER).div_ceil(2) + 1;
+                self.blocks[flat].taper_right_from = self.parent_blocks_covering(l, src_lo, src_hi);
+            }
+        }
+    }
+
+    fn parent_blocks_covering(&self, l: usize, plo: usize, phi: usize) -> Vec<BlockId> {
+        assert!(l >= 1);
+        self.level_blocks(l - 1)
+            .filter(|pb| pb.lo < phi && plo < pb.hi)
+            .map(|pb| pb.id)
+            .collect()
+    }
+
+    /// All blocks of level `l`.
+    pub fn level_blocks(&self, l: usize) -> impl Iterator<Item = &BlockInfo> {
+        self.blocks.iter().filter(move |b| b.id.level as usize == l)
+    }
+
+    /// Look up one block's static info.
+    pub fn block(&self, id: BlockId) -> &BlockInfo {
+        let (first, n) = self.index[id.level as usize][id.region as usize];
+        assert!((id.block as usize) < n, "block index out of range: {id:?}");
+        &self.blocks[first + id.block as usize]
+    }
+
+    /// Total number of levels (base + refined).
+    pub fn n_levels(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Total points across all levels (diagnostics).
+    pub fn total_points(&self) -> usize {
+        self.regions.iter().flat_map(|regs| regs.iter().map(|r| r.width())).sum()
+    }
+
+    /// Blocks that *evolve* (excludes Shadow) at level `l`.
+    pub fn evolved_blocks(&self, l: usize) -> impl Iterator<Item = &BlockInfo> {
+        self.level_blocks(l).filter(|b| b.role == BlockRole::Evolved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(levels: usize, granularity: usize) -> MeshConfig {
+        MeshConfig { r_max: 20.0, n0: 201, levels, cfl: 0.25, granularity }
+    }
+
+    #[test]
+    fn unigrid_has_one_region_and_expected_blocks() {
+        let h = Hierarchy::build(cfg(0, 50), &[]).unwrap();
+        assert_eq!(h.n_levels(), 1);
+        assert_eq!(h.regions[0], vec![Region { lo: 0, hi: 201 }]);
+        let blocks: Vec<_> = h.level_blocks(0).collect();
+        assert_eq!(blocks.len(), 5); // 201 / 50 -> 4 full + 1 of size 1
+        assert_eq!(blocks[0].left, EdgeKind::Origin);
+        assert_eq!(blocks[4].right, EdgeKind::Outer);
+        assert_eq!(blocks[4].width(), 1);
+        for w in blocks.windows(2) {
+            assert_eq!(w[0].right, EdgeKind::Neighbor(w[1].id));
+            assert_eq!(w[1].left, EdgeKind::Neighbor(w[0].id));
+        }
+    }
+
+    #[test]
+    fn one_level_hierarchy_wires_taper_and_restriction() {
+        // Level-1 region [120, 200) in level-1 indices (r in [6, 10]).
+        let h = Hierarchy::build(cfg(1, 20), &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        assert_eq!(h.n_levels(), 2);
+        let fine: Vec<_> = h.level_blocks(1).collect();
+        assert_eq!(fine.len(), 4); // 80/20
+        assert_eq!(fine[0].left, EdgeKind::FineEdge);
+        assert_eq!(fine[3].right, EdgeKind::FineEdge);
+        assert!(!fine[0].taper_left_from.is_empty());
+        assert!(!fine[3].taper_right_from.is_empty());
+        assert!(fine[1].taper_left_from.is_empty());
+        // Taper sources are level-0 blocks covering [57, 62)-ish.
+        for src in &fine[0].taper_left_from {
+            assert_eq!(src.level, 0);
+            let pb = h.block(*src);
+            assert!(pb.lo < 62 && pb.hi > 56, "parent block {pb:?}");
+        }
+        // Parent blocks under the child get restriction sources.
+        let parents_with_restrict: Vec<_> =
+            h.level_blocks(0).filter(|b| !b.restrict_from.is_empty()).collect();
+        assert!(!parents_with_restrict.is_empty());
+        for p in &parents_with_restrict {
+            // All under/near child parent range [60, 100).
+            assert!(p.hi + STEP_GHOST > 60 && p.lo < 100 + STEP_GHOST);
+            for f in &p.restrict_from {
+                assert_eq!(f.level, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn shadow_blocks_appear_under_wide_children() {
+        // Wide child: parent range [40,100); shadow = [44+..,96-..] wait
+        // margin 4 => shadow zone [44, 96) minus? = [44, 96).
+        let h = Hierarchy::build(cfg(1, 8), &[vec![Region { lo: 80, hi: 200 }]]).unwrap();
+        let shadows: Vec<_> =
+            h.level_blocks(0).filter(|b| b.role == BlockRole::Shadow).collect();
+        assert!(!shadows.is_empty(), "expected shadow parent blocks");
+        for s in &shadows {
+            // Shadow blocks lie within the child parent-range [40, 100).
+            assert!(s.lo >= 44 - STEP_GHOST && s.hi <= 96 + STEP_GHOST, "{s:?}");
+            assert!(!s.restrict_from.is_empty(), "shadow needs restriction sources");
+        }
+    }
+
+    #[test]
+    fn two_level_nesting_validated() {
+        let l1 = vec![Region { lo: 80, hi: 240 }]; // parent idx [40,120)
+        let l2 = vec![Region { lo: 200, hi: 440 }]; // parent idx [100,220) ⊂ [80,240) ✓
+        let h = Hierarchy::build(cfg(2, 16), &[l1, l2]).unwrap();
+        assert_eq!(h.n_levels(), 3);
+        assert!(h.level_blocks(2).count() > 0);
+        // Level-2 taper sources are level-1 blocks.
+        let f2: Vec<_> = h.level_blocks(2).collect();
+        for src in &f2[0].taper_left_from {
+            assert_eq!(src.level, 1);
+        }
+    }
+
+    #[test]
+    fn bad_nesting_rejected() {
+        // Child sticking out past the parent's taper margin.
+        let l1 = vec![Region { lo: 100, hi: 160 }]; // parent [50, 80)
+        let l2 = vec![Region { lo: 150, hi: 400 }]; // parent [75, 200) ⊄
+        assert!(Hierarchy::build(cfg(2, 16), &[l1, l2]).is_err());
+    }
+
+    #[test]
+    fn narrow_region_rejected() {
+        let narrow = vec![Region { lo: 100, hi: 104 }];
+        assert!(Hierarchy::build(cfg(1, 16), &[narrow]).is_err());
+    }
+
+    #[test]
+    fn adjacent_regions_merge() {
+        let rs = vec![Region { lo: 100, hi: 130 }, Region { lo: 135, hi: 170 }];
+        let h = Hierarchy::build(cfg(1, 16), &[rs]).unwrap();
+        assert_eq!(h.regions[1].len(), 1);
+        assert_eq!(h.regions[1][0], Region { lo: 100, hi: 170 });
+    }
+
+    #[test]
+    fn region_touching_origin_uses_origin_bc() {
+        let rs = vec![Region { lo: 0, hi: 80 }];
+        let h = Hierarchy::build(cfg(1, 16), &[rs]).unwrap();
+        let fine: Vec<_> = h.level_blocks(1).collect();
+        assert_eq!(fine[0].left, EdgeKind::Origin);
+        assert!(fine[0].taper_left_from.is_empty());
+        assert_eq!(fine.last().unwrap().right, EdgeKind::FineEdge);
+    }
+
+    #[test]
+    fn granularity_one_point_blocks() {
+        let h = Hierarchy::build(
+            MeshConfig { r_max: 5.0, n0: 51, levels: 0, cfl: 0.25, granularity: 1 },
+            &[],
+        )
+        .unwrap();
+        assert_eq!(h.level_blocks(0).count(), 51);
+        assert!(h.level_blocks(0).all(|b| b.width() == 1));
+    }
+
+    #[test]
+    fn dt_dx_halve_per_level() {
+        let c = cfg(2, 16);
+        assert!((c.dx(1) - c.dx0() / 2.0).abs() < 1e-15);
+        assert!((c.dt(2) - c.cfl * c.dx0() / 4.0).abs() < 1e-15);
+        assert_eq!(c.level_span(1), 401);
+    }
+
+    #[test]
+    fn block_lookup_roundtrip() {
+        let h = Hierarchy::build(cfg(1, 16), &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        for b in h.blocks.clone() {
+            assert_eq!(h.block(b.id).id, b.id);
+            assert_eq!(h.block(b.id).lo, b.lo);
+        }
+    }
+}

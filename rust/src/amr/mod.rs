@@ -1,0 +1,12 @@
+//! The paper's AMR application (HAD_AMR counterpart): tapered
+//! Berger-Oliger mesh refinement for the semilinear wave equation, with
+//! the global timestep barrier replaced by dataflow-LCO point-to-point
+//! synchronization.
+
+pub mod backend;
+pub mod dataflow_driver;
+pub mod regrid;
+pub mod three_d;
+pub mod engine;
+pub mod mesh;
+pub mod physics;

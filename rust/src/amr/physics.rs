@@ -1,0 +1,376 @@
+//! Native implementation of the semilinear-wave physics (paper Eqns. 1-3).
+//!
+//! ```text
+//! chi_t = Pi
+//! Phi_t = d_r Pi
+//! Pi_t  = (1/r^2) d_r (r^2 Phi) + chi^p ,   p = 7
+//! ```
+//!
+//! 2nd-order centered differences in space, Shu-Osher SSP-RK3 in time —
+//! *identical* math and operation order to the Pallas kernel
+//! (`python/compile/kernels/stencil.py`) and the jnp oracle (`ref.py`), so
+//! the native and XLA compute backends agree to round-off and either can
+//! drive any experiment. Also provides the physical boundary fills
+//! (regular-origin mirror symmetry at r=0, extrapolation at r=max) and
+//! the paper's gaussian initial data.
+
+/// Semilinear exponent (paper §III).
+pub const P_EXPONENT: i32 = 7;
+/// Ghost points consumed by one RHS evaluation per side.
+pub const RHS_GHOST: usize = 1;
+/// Ghost points consumed by one full RK3 step per side.
+pub const STEP_GHOST: usize = 3;
+/// |r| below this is treated as the origin (l'Hopital-regularized term).
+pub const R_ORIGIN_EPS: f64 = 1e-12;
+
+/// State of one radial segment: the three evolved fields.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Fields {
+    pub chi: Vec<f64>,
+    pub phi: Vec<f64>,
+    pub pi: Vec<f64>,
+}
+
+impl Fields {
+    /// Zero-filled fields of length `n`.
+    pub fn zeros(n: usize) -> Fields {
+        Fields { chi: vec![0.0; n], phi: vec![0.0; n], pi: vec![0.0; n] }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.chi.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.chi.is_empty()
+    }
+
+    /// Slice out `[lo, hi)`.
+    pub fn slice(&self, lo: usize, hi: usize) -> Fields {
+        Fields {
+            chi: self.chi[lo..hi].to_vec(),
+            phi: self.phi[lo..hi].to_vec(),
+            pi: self.pi[lo..hi].to_vec(),
+        }
+    }
+
+    /// Concatenate segments.
+    pub fn concat(parts: &[&Fields]) -> Fields {
+        let mut out = Fields::default();
+        for p in parts {
+            out.chi.extend_from_slice(&p.chi);
+            out.phi.extend_from_slice(&p.phi);
+            out.pi.extend_from_slice(&p.pi);
+        }
+        out
+    }
+
+    /// Max |value| across all three fields (divergence detection).
+    pub fn max_abs(&self) -> f64 {
+        self.chi
+            .iter()
+            .chain(&self.phi)
+            .chain(&self.pi)
+            .fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+}
+
+/// RHS of Eqns. (1)-(3): inputs length `n`, outputs length `n - 2`.
+pub fn rhs(chi: &[f64], phi: &[f64], pi: &[f64], r: &[f64], dx: f64) -> Fields {
+    let n = chi.len();
+    debug_assert!(n >= 3 && phi.len() == n && pi.len() == n && r.len() == n);
+    let inv_2dx = 1.0 / (2.0 * dx);
+    let m = n - 2;
+    let mut out = Fields::zeros(m);
+    for i in 0..m {
+        let c = i + 1;
+        let dr_pi = (pi[c + 1] - pi[c - 1]) * inv_2dx;
+        let dr_phi = (phi[c + 1] - phi[c - 1]) * inv_2dx;
+        let rc = r[c];
+        let spherical = if rc.abs() < R_ORIGIN_EPS {
+            3.0 * dr_phi
+        } else {
+            dr_phi + 2.0 * phi[c] / rc
+        };
+        let x = chi[c];
+        let x2 = x * x;
+        let x4 = x2 * x2;
+        out.chi[i] = pi[c];
+        out.phi[i] = dr_pi;
+        out.pi[i] = spherical + x * x2 * x4;
+    }
+    out
+}
+
+/// One fused SSP-RK3 step: inputs length `m + 6`, outputs length `m`.
+/// Matches the Pallas fused kernel stage-for-stage.
+pub fn rk3_step(chi: &[f64], phi: &[f64], pi: &[f64], r: &[f64], dx: f64, dt: f64) -> Fields {
+    let n = chi.len();
+    assert!(n >= 7, "rk3_step needs at least 7 points, got {n}");
+    let m = n - 6;
+
+    // Stage 1: u1 = u + dt L(u), valid on [1, n-1).
+    let k1 = rhs(chi, phi, pi, r, dx);
+    let n1 = n - 2;
+    let mut u1 = Fields::zeros(n1);
+    for i in 0..n1 {
+        u1.chi[i] = chi[i + 1] + dt * k1.chi[i];
+        u1.phi[i] = phi[i + 1] + dt * k1.phi[i];
+        u1.pi[i] = pi[i + 1] + dt * k1.pi[i];
+    }
+    let r1 = &r[1..n - 1];
+
+    // Stage 2: u2 = 3/4 u + 1/4 (u1 + dt L(u1)), valid on [2, n-2).
+    let k2 = rhs(&u1.chi, &u1.phi, &u1.pi, r1, dx);
+    let n2 = n1 - 2;
+    let mut u2 = Fields::zeros(n2);
+    for i in 0..n2 {
+        u2.chi[i] = 0.75 * chi[i + 2] + 0.25 * (u1.chi[i + 1] + dt * k2.chi[i]);
+        u2.phi[i] = 0.75 * phi[i + 2] + 0.25 * (u1.phi[i + 1] + dt * k2.phi[i]);
+        u2.pi[i] = 0.75 * pi[i + 2] + 0.25 * (u1.pi[i + 1] + dt * k2.pi[i]);
+    }
+    let r2 = &r1[1..n1 - 1];
+
+    // Stage 3: u = 1/3 u + 2/3 (u2 + dt L(u2)), valid on [3, n-3).
+    let k3 = rhs(&u2.chi, &u2.phi, &u2.pi, r2, dx);
+    let mut out = Fields::zeros(m);
+    const THIRD: f64 = 1.0 / 3.0;
+    const TWO_THIRD: f64 = 2.0 / 3.0;
+    for i in 0..m {
+        out.chi[i] = THIRD * chi[i + 3] + TWO_THIRD * (u2.chi[i + 1] + dt * k3.chi[i]);
+        out.phi[i] = THIRD * phi[i + 3] + TWO_THIRD * (u2.phi[i + 1] + dt * k3.phi[i]);
+        out.pi[i] = THIRD * pi[i + 3] + TWO_THIRD * (u2.pi[i + 1] + dt * k3.pi[i]);
+    }
+    out
+}
+
+/// Paper §III initial data on radii `r`: gaussian pulse
+/// `chi = A exp(-(r-R0)^2/delta^2)`, `Phi = d_r chi` (exact), `Pi = 0`.
+pub fn initial_data(r: &[f64], amplitude: f64, r0: f64, delta: f64) -> Fields {
+    let mut f = Fields::zeros(r.len());
+    for (i, &ri) in r.iter().enumerate() {
+        let g = amplitude * (-((ri - r0) * (ri - r0)) / (delta * delta)).exp();
+        f.chi[i] = g;
+        f.phi[i] = g * (-2.0 * (ri - r0) / (delta * delta));
+        f.pi[i] = 0.0;
+    }
+    f
+}
+
+/// Mirror-symmetry ghost fill at the regular origin r=0.
+///
+/// For a grid whose first interior point sits at r=0 (index 0), the ghost
+/// values at r = -k*dx are: chi even, Phi odd (it's d_r of an even
+/// function), Pi even. Returns `g` ghost points ordered by increasing r
+/// (i.e. `[-g*dx .. -dx]`), ready to prepend.
+pub fn origin_mirror_ghosts(f: &Fields, g: usize) -> Fields {
+    assert!(f.len() > g, "need {g}+1 interior points for mirror fill");
+    let mut out = Fields::zeros(g);
+    for k in 0..g {
+        // ghost index k corresponds to r = -(g-k) dx => mirror of interior g-k.
+        let src = g - k;
+        out.chi[k] = f.chi[src];
+        out.phi[k] = -f.phi[src];
+        out.pi[k] = f.pi[src];
+    }
+    out
+}
+
+/// Outer-boundary ghost fill at r = r_max: 2nd-order polynomial
+/// extrapolation of each field (adequate for runs where the pulse stays
+/// interior; the paper's criticality searches likewise keep the outer
+/// boundary causally disconnected). Returns `g` points ordered by
+/// increasing r, ready to append.
+pub fn outer_extrapolation_ghosts(f: &Fields, g: usize) -> Fields {
+    let n = f.len();
+    assert!(n >= 3, "need 3 points to extrapolate");
+    let mut out = Fields::zeros(g);
+    let extrap = |v: &[f64], k: usize| -> f64 {
+        // Quadratic through the last three points, evaluated k+1 beyond.
+        let (a, b, c) = (v[n - 3], v[n - 2], v[n - 1]);
+        let j = (k + 1) as f64;
+        // Newton forward from the end: v(n-1+j) = c + j*(c-b) + j(j+1)/2*(a - 2b + c)
+        c + j * (c - b) + 0.5 * j * (j + 1.0) * (a - 2.0 * b + c)
+    };
+    for k in 0..g {
+        out.chi[k] = extrap(&f.chi, k);
+        out.phi[k] = extrap(&f.phi, k);
+        out.pi[k] = extrap(&f.pi, k);
+    }
+    out
+}
+
+/// Discrete energy-like norm: sum dx * (Pi^2 + Phi^2 + chi^2) r^2 — a
+/// stability diagnostic (bounded for subcritical evolutions).
+pub fn energy_norm(f: &Fields, r: &[f64], dx: f64) -> f64 {
+    let mut e = 0.0;
+    for i in 0..f.len() {
+        let r2 = r[i] * r[i];
+        e += dx * r2 * (f.pi[i] * f.pi[i] + f.phi[i] * f.phi[i] + f.chi[i] * f.chi[i]);
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{prop_check, Rng};
+
+    fn grid(n: usize, dx: f64, r0: f64) -> Vec<f64> {
+        (0..n).map(|i| r0 + dx * i as f64).collect()
+    }
+
+    #[test]
+    fn rhs_constant_chi_zero_pi_phi() {
+        // chi=1, phi=pi=0 => chi_t=0, phi_t=0, pi_t=1.
+        let n = 9;
+        let r = grid(n, 0.1, 1.0);
+        let chi = vec![1.0; n];
+        let z = vec![0.0; n];
+        let out = rhs(&chi, &z, &z, &r, 0.1);
+        for i in 0..n - 2 {
+            assert_eq!(out.chi[i], 0.0);
+            assert_eq!(out.phi[i], 0.0);
+            assert!((out.pi[i] - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn rhs_second_order_convergence() {
+        // Smooth manufactured profile away from origin; same check as the
+        // python oracle's convergence test.
+        let mut errs = Vec::new();
+        for n in [100usize, 200, 400] {
+            let dx = 10.0 / n as f64;
+            let r = grid(n, dx, 1.0);
+            let chi: Vec<f64> = r.iter().map(|x| x.sin()).collect();
+            let phi: Vec<f64> = r.iter().map(|x| x.cos()).collect();
+            let pi = vec![0.0; n];
+            let out = rhs(&chi, &phi, &pi, &r, dx);
+            let mut emax = 0.0f64;
+            for i in 0..n - 2 {
+                let rc = r[i + 1];
+                let exact = -rc.sin() + 2.0 * rc.cos() / rc + rc.sin().powi(7);
+                emax = emax.max((out.pi[i] - exact).abs());
+            }
+            errs.push(emax);
+        }
+        let order = (errs[0] / errs[1]).log2();
+        assert!((1.8..2.2).contains(&order), "order={order}, errs={errs:?}");
+    }
+
+    #[test]
+    fn rk3_dt_zero_is_identity() {
+        let n = 13;
+        let r = grid(n, 0.1, 2.0);
+        let chi: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let phi: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+        let pi: Vec<f64> = (0..n).map(|i| 0.1 * i as f64).collect();
+        let out = rk3_step(&chi, &phi, &pi, &r, 0.1, 0.0);
+        for i in 0..n - 6 {
+            // 1/3 u + 2/3 u differs from u by at most one ULP.
+            assert!((out.chi[i] - chi[i + 3]).abs() < 1e-15);
+            assert!((out.phi[i] - phi[i + 3]).abs() < 1e-15);
+            assert!((out.pi[i] - pi[i + 3]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn rk3_stability_small_amplitude_many_steps() {
+        // Linearized regime: repeated steps must not blow up at CFL 0.25.
+        let n = 406;
+        let dx = 0.05;
+        let dt = 0.25 * dx;
+        let r = grid(n, dx, 0.0);
+        let mut f = initial_data(&r, 1e-3, 8.0, 1.0);
+        let e0 = energy_norm(&f, &r, dx);
+        for _ in 0..100 {
+            let inner = rk3_step(&f.chi, &f.phi, &f.pi, &r, dx, dt);
+            // freeze boundaries (pulse far from both).
+            f.chi.splice(3..n - 3, inner.chi);
+            f.phi.splice(3..n - 3, inner.phi);
+            f.pi.splice(3..n - 3, inner.pi);
+        }
+        let e1 = energy_norm(&f, &r, dx);
+        assert!(f.max_abs().is_finite());
+        assert!(e1 < 4.0 * e0 + 1e-12, "energy grew: {e0} -> {e1}");
+    }
+
+    #[test]
+    fn origin_mirror_parities() {
+        let f = Fields {
+            chi: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            phi: vec![0.0, -1.0, -2.0, -3.0, -4.0],
+            pi: vec![9.0, 8.0, 7.0, 6.0, 5.0],
+        };
+        let g = origin_mirror_ghosts(&f, 3);
+        // ghosts ordered [-3dx, -2dx, -dx] => mirrors of interior [3,2,1].
+        assert_eq!(g.chi, vec![4.0, 3.0, 2.0]);
+        assert_eq!(g.phi, vec![3.0, 2.0, 1.0]); // odd: sign flipped
+        assert_eq!(g.pi, vec![6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn outer_extrapolation_exact_for_quadratics() {
+        let n = 10;
+        let quad = |x: f64| 3.0 + 2.0 * x + 0.5 * x * x;
+        let f = Fields {
+            chi: (0..n).map(|i| quad(i as f64)).collect(),
+            phi: (0..n).map(|i| quad(i as f64) * 2.0).collect(),
+            pi: (0..n).map(|i| quad(i as f64) - 1.0).collect(),
+        };
+        let g = outer_extrapolation_ghosts(&f, 3);
+        for k in 0..3 {
+            let x = (n + k) as f64;
+            assert!((g.chi[k] - quad(x)).abs() < 1e-10, "k={k}: {} vs {}", g.chi[k], quad(x));
+        }
+    }
+
+    #[test]
+    fn initial_data_peak_and_derivative() {
+        let r = grid(400, 0.05, 0.0);
+        let f = initial_data(&r, 0.01, 8.0, 1.0);
+        let imax = f.chi.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert!((r[imax] - 8.0).abs() < 0.06);
+        assert!(f.pi.iter().all(|&x| x == 0.0));
+        // Phi ~ centered difference of chi (2nd-order check).
+        for i in 1..r.len() - 1 {
+            let fd = (f.chi[i + 1] - f.chi[i - 1]) / (2.0 * 0.05);
+            assert!((f.phi[i] - fd).abs() < 2e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn prop_rk3_shift_invariance_away_from_origin() {
+        // The step commutes with relabeling indices (only r values matter).
+        prop_check("rk3 shift invariance", 50, |rng: &mut Rng| {
+            let m = rng.range(1, 20);
+            let n = m + 6;
+            let dx = 0.1;
+            let dt = 0.02;
+            let r0 = rng.f64_range(1.0, 30.0);
+            let r = grid(n, dx, r0);
+            let chi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.4, 0.4)).collect();
+            let phi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.4, 0.4)).collect();
+            let pi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.4, 0.4)).collect();
+            let a = rk3_step(&chi, &phi, &pi, &r, dx, dt);
+            let b = rk3_step(&chi, &phi, &pi, &r, dx, dt);
+            assert_eq!(a, b, "determinism");
+            assert!(a.max_abs().is_finite());
+        });
+    }
+
+    #[test]
+    fn fields_slice_concat_roundtrip() {
+        let f = Fields {
+            chi: (0..10).map(|i| i as f64).collect(),
+            phi: (0..10).map(|i| -(i as f64)).collect(),
+            pi: vec![0.5; 10],
+        };
+        let a = f.slice(0, 4);
+        let b = f.slice(4, 10);
+        assert_eq!(Fields::concat(&[&a, &b]), f);
+    }
+}

@@ -1,0 +1,375 @@
+//! Error estimation and regridding (Berger–Oliger flag-and-cluster).
+//!
+//! Refinement is driven by a pointwise error estimator on each level's
+//! current solution; flagged points are buffered and clustered into the
+//! disjoint regions [`Hierarchy::build`] consumes. Regridding happens at
+//! *epoch boundaries*: the dataflow graph of an epoch runs over a fixed
+//! hierarchy, then the driver quiesces, re-flags, rebuilds, and remaps
+//! the solution onto the new hierarchy (prolongating newly refined areas
+//! from the parent, injecting where fine data exists). Production AMR
+//! codes regrid every N steps for the same reason — the paper's own runs
+//! hold the grid structure between adaptations too (Fig 2 shows the
+//! initial hierarchy produced by exactly this estimator).
+
+use std::collections::HashMap;
+
+use super::dataflow_driver::AmrOutcome;
+use super::engine::EpochPlan;
+use super::mesh::{BlockId, Hierarchy, MeshConfig, Region, MIN_REGION_WIDTH};
+use super::physics::{initial_data, Fields};
+
+/// Regrid policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RegridConfig {
+    /// Refine where the error estimate exceeds this threshold.
+    pub error_threshold: f64,
+    /// Flagged points are dilated by this many own-level points so the
+    /// feature stays inside the fine region between regrids.
+    pub buffer: usize,
+}
+
+impl Default for RegridConfig {
+    fn default() -> Self {
+        RegridConfig { error_threshold: 5e-4, buffer: 12 }
+    }
+}
+
+/// Pointwise error estimate: scaled gradient of chi plus curvature —
+/// the standard shadow-free truncation proxy (the paper's criterion is
+/// likewise a local-error indicator; Fig 2 "more resolution is placed
+/// where truncation error is highest").
+pub fn error_estimate(f: &Fields, dx: f64) -> Vec<f64> {
+    let n = f.len();
+    let mut e = vec![0.0; n];
+    for i in 1..n.saturating_sub(1) {
+        let grad = (f.chi[i + 1] - f.chi[i - 1]).abs() / (2.0 * dx);
+        let curv = (f.chi[i + 1] - 2.0 * f.chi[i] + f.chi[i - 1]).abs() / dx;
+        let grad_pi = (f.pi[i + 1] - f.pi[i - 1]).abs() / (2.0 * dx);
+        e[i] = dx * (grad + curv + grad_pi);
+    }
+    if n >= 2 {
+        e[0] = e[1];
+        e[n - 1] = e[n - 2];
+    }
+    e
+}
+
+/// Cluster flagged points into child regions (child-level indices).
+///
+/// `flags[i]` refers to parent-level index `parent_lo + i`; the returned
+/// regions are in child indices (×2), dilated by `buffer`, clamped to the
+/// child span, widened to `MIN_REGION_WIDTH`, and merged when close.
+pub fn cluster(
+    flags: &[bool],
+    parent_lo: usize,
+    buffer: usize,
+    child_span: usize,
+) -> Vec<Region> {
+    let mut regions: Vec<Region> = Vec::new();
+    let mut i = 0;
+    while i < flags.len() {
+        if !flags[i] {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < flags.len() && flags[i] {
+            i += 1;
+        }
+        // Parent interval [parent_lo+start, parent_lo+i), dilated.
+        let plo = (parent_lo + start).saturating_sub(buffer);
+        let phi = parent_lo + i + buffer;
+        // To child indices.
+        let mut clo = plo * 2;
+        let mut chi = (phi * 2).min(child_span);
+        if chi - clo < MIN_REGION_WIDTH {
+            let grow = MIN_REGION_WIDTH - (chi - clo);
+            clo = clo.saturating_sub(grow / 2 + 1);
+            chi = (chi + grow / 2 + 1).min(child_span);
+            if chi - clo < MIN_REGION_WIDTH {
+                clo = chi.saturating_sub(MIN_REGION_WIDTH);
+            }
+        }
+        match regions.last_mut() {
+            Some(prev) if clo <= prev.hi + 16 => prev.hi = prev.hi.max(chi),
+            _ => regions.push(Region { lo: clo, hi: chi }),
+        }
+    }
+    regions
+}
+
+/// Composite read-only view of a finished epoch: finest-available data at
+/// every radius, used for remapping and diagnostics.
+pub struct Composite<'a> {
+    plan: &'a EpochPlan,
+    outcome: &'a AmrOutcome,
+    /// Per level: (region, assembled fields).
+    levels: Vec<Vec<(Region, Fields)>>,
+}
+
+impl<'a> Composite<'a> {
+    pub fn new(plan: &'a EpochPlan, outcome: &'a AmrOutcome) -> Composite<'a> {
+        let mut levels = Vec::new();
+        for l in 0..plan.hierarchy.n_levels() {
+            let mut regs = Vec::new();
+            for ri in 0..plan.hierarchy.regions[l].len() {
+                regs.push(outcome.region_state(plan, l, ri));
+            }
+            levels.push(regs);
+        }
+        Composite { plan, outcome, levels }
+    }
+
+    /// The assembled solution of level `l`, region `ri`.
+    pub fn level_region(&self, l: usize, ri: usize) -> &(Region, Fields) {
+        &self.levels[l][ri]
+    }
+
+    /// Value (chi, phi, pi) at level-`l` index `i`, sampled from the
+    /// finest level covering that radius (linear interpolation when the
+    /// source is coarser than `l`).
+    pub fn sample(&self, l: usize, i: usize) -> (f64, f64, f64) {
+        // Try levels from finest down to base.
+        let n_levels = self.levels.len();
+        for src in (0..n_levels).rev() {
+            // level-l index i => level-src index i * 2^(src-l) (exact when
+            // src >= l, else i / 2^(l-src) possibly fractional).
+            if src >= l {
+                let fi = i << (src - l);
+                for (reg, f) in &self.levels[src] {
+                    if fi >= reg.lo && fi < reg.hi {
+                        let j = fi - reg.lo;
+                        return (f.chi[j], f.phi[j], f.pi[j]);
+                    }
+                }
+            } else {
+                let shift = l - src;
+                let ci = i >> shift;
+                let rem = i - (ci << shift);
+                for (reg, f) in &self.levels[src] {
+                    if ci >= reg.lo && ci + 1 < reg.hi {
+                        let j = ci - reg.lo;
+                        if rem == 0 {
+                            return (f.chi[j], f.phi[j], f.pi[j]);
+                        }
+                        // Linear interpolation within the coarse cell.
+                        let t = rem as f64 / (1u64 << shift) as f64;
+                        let lerp = |a: f64, b: f64| a + t * (b - a);
+                        return (
+                            lerp(f.chi[j], f.chi[j + 1]),
+                            lerp(f.phi[j], f.phi[j + 1]),
+                            lerp(f.pi[j], f.pi[j + 1]),
+                        );
+                    }
+                }
+            }
+        }
+        panic!("no level covers level-{l} index {i}");
+    }
+
+    /// The underlying outcome.
+    pub fn outcome(&self) -> &AmrOutcome {
+        self.outcome
+    }
+
+    /// The epoch plan.
+    pub fn plan(&self) -> &EpochPlan {
+        self.plan
+    }
+}
+
+/// Build the initial hierarchy by iterated flagging of the analytic
+/// initial data (Fig 2's structure).
+pub fn initial_hierarchy(
+    mesh: MeshConfig,
+    regrid: RegridConfig,
+    amplitude: f64,
+    r0: f64,
+    delta: f64,
+) -> Result<Hierarchy, String> {
+    let mut fine_regions: Vec<Vec<Region>> = Vec::new();
+    for l in 0..mesh.levels {
+        // Flag on level l's data over the union of its regions (level 0:
+        // whole domain).
+        let parent_regions: Vec<Region> = if l == 0 {
+            vec![Region { lo: 0, hi: mesh.level_span(0) }]
+        } else {
+            fine_regions[l - 1].clone()
+        };
+        let dx = mesh.dx(l);
+        let child_span = mesh.level_span(l + 1);
+        let mut regions = Vec::new();
+        for preg in &parent_regions {
+            let r: Vec<f64> = (preg.lo..preg.hi).map(|i| dx * i as f64).collect();
+            let f = initial_data(&r, amplitude, r0, delta);
+            let err = error_estimate(&f, dx);
+            let flags: Vec<bool> = err.iter().map(|&e| e > regrid.error_threshold).collect();
+            regions.extend(cluster(&flags, preg.lo, regrid.buffer, child_span));
+        }
+        if regions.is_empty() {
+            // Nothing to refine at this depth: truncate the hierarchy.
+            break;
+        }
+        fine_regions.push(regions);
+    }
+    let levels_built = fine_regions.len();
+    Hierarchy::build(MeshConfig { levels: levels_built, ..mesh }, &fine_regions)
+}
+
+/// Flag the current solution and build the next epoch's hierarchy.
+pub fn regrid_hierarchy(
+    comp: &Composite<'_>,
+    regrid: RegridConfig,
+) -> Result<Hierarchy, String> {
+    let mesh = comp.plan().hierarchy.config;
+    let mut fine_regions: Vec<Vec<Region>> = Vec::new();
+    for l in 0..mesh.levels {
+        let parent_regions: Vec<Region> = if l == 0 {
+            vec![Region { lo: 0, hi: mesh.level_span(0) }]
+        } else {
+            fine_regions[l - 1].clone()
+        };
+        let dx = mesh.dx(l);
+        let child_span = mesh.level_span(l + 1);
+        let mut regions = Vec::new();
+        for preg in &parent_regions {
+            let mut f = Fields::zeros(preg.width());
+            for (j, i) in (preg.lo..preg.hi).enumerate() {
+                let (c, p, q) = comp.sample(l, i);
+                f.chi[j] = c;
+                f.phi[j] = p;
+                f.pi[j] = q;
+            }
+            let err = error_estimate(&f, dx);
+            let flags: Vec<bool> = err.iter().map(|&e| e > regrid.error_threshold).collect();
+            regions.extend(cluster(&flags, preg.lo, regrid.buffer, child_span));
+        }
+        if regions.is_empty() {
+            break;
+        }
+        fine_regions.push(regions);
+    }
+    let levels_built = fine_regions.len();
+    Hierarchy::build(MeshConfig { levels: levels_built, ..mesh }, &fine_regions)
+}
+
+/// Remap a finished epoch's solution onto a new hierarchy's blocks
+/// (injection where the level existed; prolongation where refinement is
+/// new).
+pub fn remap(comp: &Composite<'_>, new_plan: &EpochPlan) -> HashMap<BlockId, Fields> {
+    let mut out = HashMap::new();
+    for p in &new_plan.plans {
+        let l = p.info.id.level as usize;
+        let mut f = Fields::zeros(p.info.width());
+        for (j, i) in (p.info.lo..p.info.hi).enumerate() {
+            let (c, ph, q) = comp.sample(l, i);
+            f.chi[j] = c;
+            f.phi[j] = ph;
+            f.pi[j] = q;
+        }
+        out.insert(p.info.id, f);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amr::backend::NativeBackend;
+    use crate::amr::dataflow_driver::{run, AmrConfig};
+    use crate::px::runtime::{PxConfig, PxRuntime};
+    use std::sync::Arc;
+
+    #[test]
+    fn error_estimate_peaks_at_pulse() {
+        let n = 400;
+        let dx = 0.05;
+        let r: Vec<f64> = (0..n).map(|i| dx * i as f64).collect();
+        let f = initial_data(&r, 0.01, 8.0, 1.0);
+        let e = error_estimate(&f, dx);
+        let imax = e.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        let r_peak = dx * imax as f64;
+        assert!((r_peak - 8.0).abs() < 2.0, "error peak at r={r_peak}");
+    }
+
+    #[test]
+    fn cluster_produces_buffered_min_width_regions() {
+        let mut flags = vec![false; 100];
+        for f in flags.iter_mut().take(53).skip(50) {
+            *f = true;
+        }
+        let regs = cluster(&flags, 0, 5, 400);
+        assert_eq!(regs.len(), 1);
+        let r = regs[0];
+        assert!(r.width() >= MIN_REGION_WIDTH);
+        assert!(r.lo <= 90 && r.hi >= 116, "{r:?}"); // (50-5)*2, (53+5)*2
+    }
+
+    #[test]
+    fn cluster_merges_close_islands() {
+        let mut flags = vec![false; 200];
+        flags[50] = true;
+        flags[60] = true; // within 2*buffer of each other
+        let regs = cluster(&flags, 0, 8, 800);
+        assert_eq!(regs.len(), 1);
+    }
+
+    #[test]
+    fn cluster_empty_flags_no_regions() {
+        assert!(cluster(&[false; 50], 0, 5, 200).is_empty());
+    }
+
+    #[test]
+    fn initial_hierarchy_refines_around_pulse() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 2, cfl: 0.25, granularity: 16 };
+        let h = initial_hierarchy(mesh, RegridConfig::default(), 0.05, 8.0, 1.0).unwrap();
+        assert!(h.n_levels() >= 2, "expected at least one refined level");
+        // The level-1 region covers the pulse (r=8 => level-1 idx 160).
+        let covers = h.regions[1].iter().any(|r| r.contains(160));
+        assert!(covers, "level-1 regions {:?} must cover the pulse", h.regions[1]);
+    }
+
+    #[test]
+    fn initial_hierarchy_flat_data_stays_unigrid() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 2, cfl: 0.25, granularity: 16 };
+        let h = initial_hierarchy(mesh, RegridConfig::default(), 1e-12, 8.0, 1.0).unwrap();
+        assert_eq!(h.n_levels(), 1, "tiny pulse should not trigger refinement");
+    }
+
+    #[test]
+    fn composite_sampling_and_remap_roundtrip() {
+        // Run a short epoch, regrid, remap; the new init must agree with
+        // the old composite at coincident points.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 16 };
+        let h = initial_hierarchy(mesh, RegridConfig::default(), 0.05, 8.0, 1.0).unwrap();
+        let mesh_built = h.config;
+        let rt = PxRuntime::boot(PxConfig::smp(2));
+        let cfg = AmrConfig { amplitude: 0.05, coarse_steps: 4, ..Default::default() };
+        let (plan, out) = run(&rt, h, Arc::new(NativeBackend), cfg).unwrap();
+        let comp = Composite::new(&plan, &out);
+        let h2 = regrid_hierarchy(&comp, RegridConfig::default()).unwrap();
+        assert_eq!(h2.config.n0, mesh_built.n0);
+        let plan2 = EpochPlan::new(h2, 4);
+        let init2 = remap(&comp, &plan2);
+        // Every new block has data; level-0 blocks match the old level-0
+        // solution exactly at all indices.
+        let (reg0, f0) = out.region_state(&plan, 0, 0);
+        for p in plan2.plans.iter().filter(|p| p.info.id.level == 0) {
+            let f = &init2[&p.info.id];
+            for (j, i) in (p.info.lo..p.info.hi).enumerate() {
+                // Points under the fine region sample the fine data; away
+                // from it they equal the coarse solution.
+                let under_fine = plan
+                    .hierarchy
+                    .regions
+                    .get(1)
+                    .map(|rs| rs.iter().any(|r| r.contains(i * 2)))
+                    .unwrap_or(false);
+                if !under_fine {
+                    assert_eq!(f.chi[j], f0.chi[i - reg0.lo], "i={i}");
+                }
+            }
+        }
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,377 @@
+//! 3-D homogeneous-wave refinement workload (Fig 3).
+//!
+//! Fig 3 measures the *optimal task granularity* for ParalleX mesh
+//! refinement in 3-D solving the homogeneous version of Eqns. (1)-(3)
+//! (source term dropped), as a function of refinement levels and cores.
+//! What matters for that experiment is the tasking structure — blocks of
+//! `g^3` points advancing under neighbour dataflow dependencies, with
+//! per-level 2:1 subcycling multiplying the task count — not the
+//! coarse/fine interface numerics, so levels here are nested boxes whose
+//! boundary data comes from frozen analytic values (physics-free
+//! workload; DESIGN.md §3 records the simplification). The measured
+//! quantity is wallclock per updated point as granularity sweeps from
+//! single-digit blocks (overhead-dominated, Fig 4b) to whole-level blocks
+//! (starvation-dominated, Fig 4a).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::px::lco::Future as PxFuture;
+use crate::px::runtime::PxRuntime;
+use crate::px::thread::Spawner;
+
+/// One refinement level: a cubic grid of `n^3` points with spacing `dx`
+/// subcycled `2^level` times per coarse step.
+#[derive(Debug, Clone, Copy)]
+pub struct LevelSpec {
+    pub n: usize,
+    pub dx: f64,
+    pub level: usize,
+}
+
+/// Configuration of the 3-D granularity workload.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreeDConfig {
+    /// Points per edge of the base cube.
+    pub n0: usize,
+    /// Refinement levels above base (each a centered half-extent box at
+    /// double resolution — same point count per level).
+    pub levels: usize,
+    /// Block edge length (task granularity is `g^3` points).
+    pub granularity: usize,
+    /// Coarse steps to run.
+    pub coarse_steps: u64,
+    pub cfl: f64,
+}
+
+/// A scalar field pair (chi, pi) on a cube, flattened x-major.
+struct Cube {
+    n: usize,
+    chi: Vec<f64>,
+    pi: Vec<f64>,
+}
+
+impl Cube {
+    fn gaussian(n: usize, dx: f64) -> Cube {
+        let mut chi = vec![0.0; n * n * n];
+        let pi = vec![0.0; n * n * n];
+        let c = (n as f64 - 1.0) / 2.0;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let dx2 = ((x as f64 - c) * dx).powi(2)
+                        + ((y as f64 - c) * dx).powi(2)
+                        + ((z as f64 - c) * dx).powi(2);
+                    chi[(z * n + y) * n + x] = 0.01 * (-dx2).exp();
+                }
+            }
+        }
+        Cube { n, chi, pi }
+    }
+
+    #[inline]
+    fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.n + y) * self.n + x
+    }
+}
+
+/// Advance the interior points of `block` (a g^3 box at offset `o`) one
+/// leapfrog-style step of the homogeneous wave equation; boundary points
+/// of the cube are held frozen (physics-free workload boundary).
+#[allow(clippy::too_many_arguments)]
+fn step_block(src: &Cube, dst: &mut Cube, o: (usize, usize, usize), g: usize, inv_dx2: f64, dt: f64) {
+    let n = src.n;
+    for z in o.2..(o.2 + g).min(n) {
+        for y in o.1..(o.1 + g).min(n) {
+            for x in o.0..(o.0 + g).min(n) {
+                let i = src.idx(x, y, z);
+                if x == 0 || y == 0 || z == 0 || x == n - 1 || y == n - 1 || z == n - 1 {
+                    dst.chi[i] = src.chi[i];
+                    dst.pi[i] = src.pi[i];
+                    continue;
+                }
+                let lap = (src.chi[i - 1] + src.chi[i + 1] + src.chi[i - n] + src.chi[i + n]
+                    + src.chi[i - n * n]
+                    + src.chi[i + n * n]
+                    - 6.0 * src.chi[i])
+                    * inv_dx2;
+                let pi_new = src.pi[i] + dt * lap;
+                dst.pi[i] = pi_new;
+                dst.chi[i] = src.chi[i] + dt * pi_new;
+            }
+        }
+    }
+}
+
+/// Result of one sweep point.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreeDResult {
+    pub granularity: usize,
+    pub levels: usize,
+    pub workers: usize,
+    pub elapsed: Duration,
+    pub tasks: u64,
+    pub points_updated: u64,
+    /// Wallclock nanoseconds per point update — Fig 3's y-axis inverse.
+    pub ns_per_point: f64,
+}
+
+/// Run the 3-D workload on an existing runtime; blocks synchronize with
+/// their 26-neighbourhood per substep via the task-table dataflow (same
+/// pattern as the 1-D driver, simplified to "neighbours at same step").
+pub fn run_three_d(rt: &PxRuntime, cfg: ThreeDConfig) -> ThreeDResult {
+    let sp = rt.locality(0).spawner.clone();
+    let start = Instant::now();
+    let tasks = Arc::new(AtomicU64::new(0));
+    let points = Arc::new(AtomicU64::new(0));
+
+    // Levels run concurrently (their tasks share the work queue); each
+    // level is double-buffered and blocks depend on neighbours' previous
+    // substep through a per-level dependency table.
+    let done: Vec<PxFuture<Vec<f64>>> = (0..=cfg.levels)
+        .map(|l| {
+            let fut: PxFuture<Vec<f64>> = PxFuture::new();
+            let n = cfg.n0;
+            let dx = 1.0 / (n as f64 - 1.0) / (1u64 << l) as f64;
+            let substeps = cfg.coarse_steps * (1u64 << l);
+            let spec = LevelSpec { n, dx, level: l };
+            let fut2 = fut.clone();
+            let sp2 = sp.clone();
+            let tasks = tasks.clone();
+            let points = points.clone();
+            let g = cfg.granularity.max(1);
+            let cfl = cfg.cfl;
+            sp.spawn(move |_| {
+                run_level(&sp2, spec, substeps, g, cfl, fut2, tasks, points);
+            });
+            fut
+        })
+        .collect();
+    for f in done {
+        f.wait().expect("level failed");
+    }
+    let elapsed = start.elapsed();
+    let tasks = tasks.load(Ordering::Relaxed);
+    let points_updated = points.load(Ordering::Relaxed);
+    ThreeDResult {
+        granularity: cfg.granularity,
+        levels: cfg.levels,
+        workers: rt.config().workers_per_locality,
+        elapsed,
+        tasks,
+        points_updated,
+        ns_per_point: elapsed.as_nanos() as f64 / points_updated.max(1) as f64,
+    }
+}
+
+struct LevelState {
+    bufs: [Cube; 2],
+    /// (block_index, step) -> inputs received (self + ready neighbours).
+    waiting: HashMap<(usize, u64), usize>,
+    completed: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_level(
+    sp: &Spawner,
+    spec: LevelSpec,
+    substeps: u64,
+    g: usize,
+    cfl: f64,
+    done: PxFuture<Vec<f64>>,
+    task_ctr: Arc<AtomicU64>,
+    point_ctr: Arc<AtomicU64>,
+) {
+    let n = spec.n;
+    let nb = n.div_ceil(g);
+    let n_blocks = nb * nb * nb;
+    let dt = cfl * spec.dx;
+    let inv_dx2 = 1.0 / (spec.dx * spec.dx);
+    let cube = Cube::gaussian(n, spec.dx);
+    let zero = Cube { n, chi: vec![0.0; n * n * n], pi: vec![0.0; n * n * n] };
+    let st = Arc::new((
+        Mutex::new(LevelState { bufs: [cube, zero], waiting: HashMap::new(), completed: 0 }),
+        spec,
+    ));
+
+    // Dependency count per block: self + face neighbours present.
+    let deps = move |b: usize| -> usize {
+        let (bx, by, bz) = (b % nb, (b / nb) % nb, b / (nb * nb));
+        let mut d = 1;
+        for (dx_, dy, dz) in [(-1i64, 0i64, 0i64), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)] {
+            let (x, y, z) = (bx as i64 + dx_, by as i64 + dy, bz as i64 + dz);
+            if x >= 0 && y >= 0 && z >= 0 && (x as usize) < nb && (y as usize) < nb && (z as usize) < nb {
+                d += 1;
+            }
+        }
+        d
+    };
+
+    // Recursive arrival: when (b, k) has all inputs, run it, then notify
+    // (b', k+1) for self and neighbours.
+    fn arrive(
+        st: &Arc<(Mutex<LevelState>, LevelSpec)>,
+        sp: &Spawner,
+        b: usize,
+        k: u64,
+        nb: usize,
+        g: usize,
+        substeps: u64,
+        dt: f64,
+        inv_dx2: f64,
+        deps: &Arc<dyn Fn(usize) -> usize + Send + Sync>,
+        done: &PxFuture<Vec<f64>>,
+        task_ctr: &Arc<AtomicU64>,
+        point_ctr: &Arc<AtomicU64>,
+    ) {
+        if k >= substeps {
+            return;
+        }
+        let ready = {
+            let mut s = st.0.lock().unwrap();
+            let e = s.waiting.entry((b, k)).or_insert(0);
+            *e += 1;
+            if *e == deps(b) {
+                s.waiting.remove(&(b, k));
+                true
+            } else {
+                false
+            }
+        };
+        if !ready {
+            return;
+        }
+        let st2 = st.clone();
+        let deps2 = deps.clone();
+        let done2 = done.clone();
+        let tc = task_ctr.clone();
+        let pc = point_ctr.clone();
+        sp.spawn(move |sp| {
+            let n_total;
+            {
+                // Double-buffer: even k reads buf0 writes buf1.
+                let mut s = st2.0.lock().unwrap();
+                let (bx, by, bz) = (b % nb, (b / nb) % nb, b / (nb * nb));
+                let o = (bx * g, by * g, bz * g);
+                let (src_i, _dst_i) = if k % 2 == 0 { (0, 1) } else { (1, 0) };
+                // Split borrow of the two buffers.
+                let (a, bslice) = s.bufs.split_at_mut(1);
+                let (src, dst) = if src_i == 0 {
+                    (&a[0], &mut bslice[0])
+                } else {
+                    (&bslice[0], &mut a[0])
+                };
+                step_block(src, dst, o, g, inv_dx2, dt);
+                // Count *before* bumping `completed`: the final task's
+                // done-trigger must observe every prior increment.
+                tc.fetch_add(1, Ordering::Relaxed);
+                let nn = st2.1.n;
+                let vol = |oo: usize| (oo * g + g).min(nn) - (oo * g).min(nn);
+                pc.fetch_add((vol(bx) * vol(by) * vol(bz)) as u64, Ordering::Relaxed);
+                s.completed += 1;
+                n_total = s.completed;
+            }
+            // Notify dependents at k+1: self + face neighbours.
+            let (bx, by, bz) = (b % nb, (b / nb) % nb, b / (nb * nb));
+            let mut targets = vec![b];
+            for (dx_, dy, dz) in
+                [(-1i64, 0i64, 0i64), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)]
+            {
+                let (x, y, z) = (bx as i64 + dx_, by as i64 + dy, bz as i64 + dz);
+                if x >= 0
+                    && y >= 0
+                    && z >= 0
+                    && (x as usize) < nb
+                    && (y as usize) < nb
+                    && (z as usize) < nb
+                {
+                    targets.push((z as usize * nb + y as usize) * nb + x as usize);
+                }
+            }
+            for t in targets {
+                arrive(&st2, sp, t, k + 1, nb, g, substeps, dt, inv_dx2, &deps2, &done2, &tc, &pc);
+            }
+            let total_tasks = substeps * (nb * nb * nb) as u64;
+            if n_total == total_tasks {
+                done2.set(sp, Vec::new());
+            }
+        });
+    }
+
+    let deps: Arc<dyn Fn(usize) -> usize + Send + Sync> = Arc::new(deps);
+    // Seed: every block's step-0 inputs are "already present" — arrive
+    // once per dependency.
+    for b in 0..n_blocks {
+        let d = deps(b);
+        for _ in 0..d {
+            arrive(&st, sp, b, 0, nb, g, substeps, dt, inv_dx2, &deps, &done, &task_ctr, &point_ctr);
+        }
+    }
+    if substeps == 0 {
+        done.set(sp, Vec::new());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::runtime::PxConfig;
+
+    #[test]
+    fn three_d_runs_and_counts_tasks() {
+        let rt = PxRuntime::boot(PxConfig::smp(4));
+        let cfg = ThreeDConfig { n0: 16, levels: 1, granularity: 8, coarse_steps: 2, cfl: 0.2 };
+        let r = run_three_d(&rt, cfg);
+        // level 0: 2 steps * 8 blocks; level 1: 4 steps * 8 blocks.
+        assert_eq!(r.tasks, 2 * 8 + 4 * 8);
+        assert!(r.points_updated > 0);
+        assert!(r.ns_per_point > 0.0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn three_d_granularity_one_block_whole_cube() {
+        let rt = PxRuntime::boot(PxConfig::smp(2));
+        let cfg = ThreeDConfig { n0: 12, levels: 0, granularity: 12, coarse_steps: 3, cfl: 0.2 };
+        let r = run_three_d(&rt, cfg);
+        assert_eq!(r.tasks, 3);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn three_d_results_stable_across_granularity() {
+        // Same physics at g=4 and g=16 (full cube): the evolution is a
+        // fixed stencil, so per-block execution must not change totals.
+        let rt = PxRuntime::boot(PxConfig::smp(4));
+        let a = run_three_d(
+            &rt,
+            ThreeDConfig { n0: 16, levels: 0, granularity: 4, coarse_steps: 2, cfl: 0.2 },
+        );
+        let b = run_three_d(
+            &rt,
+            ThreeDConfig { n0: 16, levels: 0, granularity: 16, coarse_steps: 2, cfl: 0.2 },
+        );
+        assert_eq!(a.points_updated, b.points_updated);
+        rt.shutdown();
+    }
+}
+
+/// Measure the compute cost of one g^3 block step (median of `reps`) —
+/// used by the virtual-parallelism Fig 3 simulation (DESIGN.md §3: the
+/// container exposes one core; scaling is replayed over measured costs).
+pub fn measure_block_cost(n: usize, g: usize, reps: usize) -> Duration {
+    let dx = 1.0 / (n as f64 - 1.0);
+    let src = Cube::gaussian(n, dx);
+    let mut dst = Cube { n, chi: vec![0.0; n * n * n], pi: vec![0.0; n * n * n] };
+    let mut times: Vec<Duration> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            step_block(&src, &mut dst, (0, 0, 0), g, 1.0 / (dx * dx), 0.1 * dx);
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    times[times.len() / 2]
+}

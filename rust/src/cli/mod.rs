@@ -1,0 +1,128 @@
+//! Minimal argument parser for the `px-amr` launcher (no clap offline).
+//!
+//! Supports `--key value`, `--key=value` and bare flags; typed getters
+//! with defaults. Unknown keys are collected so the launcher can reject
+//! typos instead of silently ignoring them.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator (first item = subcommand unless `--`-prefixed).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut it = items.into_iter().peekable();
+        let subcommand = match it.peek() {
+            Some(s) if !s.starts_with("--") => Some(it.next().unwrap()),
+            _ => None,
+        };
+        let mut opts = HashMap::new();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument `{a}`"));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+            } else {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        opts.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => {
+                        opts.insert(key.to_string(), "true".to_string());
+                    }
+                }
+            }
+        }
+        Ok(Args { subcommand, opts, consumed: std::cell::RefCell::new(Vec::new()) })
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.opts.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Any options that no getter ever consumed (call after all gets).
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        self.opts.keys().filter(|k| !seen.contains(k)).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = args("run --levels 2 --workers=8 --barrier");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_parse("levels", 0usize).unwrap(), 2);
+        assert_eq!(a.get_parse("workers", 1usize).unwrap(), 8);
+        assert!(a.flag("barrier"));
+        assert!(a.unknown().is_empty());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.get("backend", "native"), "native");
+        assert_eq!(a.get_parse("steps", 16u64).unwrap(), 16);
+        assert!(!a.flag("barrier"));
+    }
+
+    #[test]
+    fn unknown_options_reported() {
+        let a = args("run --levles 2");
+        let _ = a.get_parse("levels", 0usize);
+        assert_eq!(a.unknown(), vec!["levles".to_string()]);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = args("run --workers banana");
+        assert!(a.get_parse("workers", 1usize).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_rejected() {
+        assert!(Args::parse(["run".to_string(), "oops".to_string()]).is_err());
+    }
+}

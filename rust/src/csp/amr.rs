@@ -1,0 +1,463 @@
+//! Synchronous (MPI-style) Berger–Oliger AMR on the CSP substrate.
+//!
+//! The comparison code of §IV: static contiguous domain decomposition
+//! (each rank owns a radial slab, hence the refined region concentrates
+//! on few ranks), blocking ghost exchange, and a **global barrier every
+//! fine tick** — the execution model the paper's MPI counterpart uses.
+//! Physics, block structure and input assembly are *identical* to the
+//! ParalleX driver (same [`EpochPlan`], same [`assemble`]/backends), so
+//! Figs 6–8 compare execution models, not discretizations; results agree
+//! bitwise with the dataflow driver.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::amr::backend::ComputeBackend;
+use crate::amr::dataflow_driver::{AmrConfig, AmrOutcome, BlockOutcome};
+use crate::amr::engine::{
+    assemble, restriction_of, shadow_output, split_output, EpochPlan, Input, StateOut,
+};
+use crate::amr::mesh::{BlockId, BlockRole};
+use crate::amr::physics::Fields;
+use crate::px::net::NetModel;
+
+use super::CspWorld;
+
+/// Static owner of a block: contiguous radial slabs (an MPI domain
+/// decomposition). The refined levels therefore land on the few ranks
+/// whose slab contains the pulse — the strong-scaling limiter of §IV.
+pub fn rank_of(plan: &EpochPlan, id: BlockId, size: usize) -> usize {
+    let p = plan.plan(id);
+    let l = id.level as usize;
+    let mid = (p.info.lo + p.info.hi) as f64 / 2.0 * plan.hierarchy.config.dx(l);
+    let frac = (mid / plan.hierarchy.config.r_max).clamp(0.0, 0.999_999);
+    (frac * size as f64) as usize
+}
+
+/// Message kinds on the wire.
+#[derive(Clone, Copy)]
+enum Kind {
+    Ghost = 0,
+    Taper = 1,
+    Restrict = 2,
+}
+
+fn tag(kind: Kind, src_flat: usize, dst_flat: usize, step: u64) -> u64 {
+    (kind as u64) << 62 | (src_flat as u64) << 42 | (dst_flat as u64) << 22 | (step & 0x3F_FFFF)
+}
+
+fn encode_frag(lo: usize, f: &Fields) -> Vec<f64> {
+    let mut v = Vec::with_capacity(2 + 3 * f.len());
+    v.push(lo as f64);
+    v.push(f.len() as f64);
+    v.extend_from_slice(&f.chi);
+    v.extend_from_slice(&f.phi);
+    v.extend_from_slice(&f.pi);
+    v
+}
+
+fn decode_frag(v: &[f64]) -> (usize, Fields) {
+    let lo = v[0] as usize;
+    let n = v[1] as usize;
+    let f = Fields {
+        chi: v[2..2 + n].to_vec(),
+        phi: v[2 + n..2 + 2 * n].to_vec(),
+        pi: v[2 + 2 * n..2 + 3 * n].to_vec(),
+    };
+    (lo, f)
+}
+
+/// Run one epoch synchronously on `size` ranks. Returns the merged
+/// outcome (board of all blocks) and per-rank busy/total times for the
+/// load-balance analysis of Figs 7/8.
+pub struct CspRunStats {
+    pub outcome: AmrOutcome,
+    /// Per-rank time spent computing (vs waiting at recv/barrier).
+    pub busy: Vec<Duration>,
+    pub msgs: u64,
+    pub bytes: u64,
+}
+
+pub fn run_epoch_csp(
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    size: usize,
+    model: NetModel,
+) -> Result<CspRunStats> {
+    let finest = plan.hierarchy.n_levels() - 1;
+    let n_ticks = config.coarse_steps << finest;
+    let flat: HashMap<BlockId, usize> =
+        plan.plans.iter().enumerate().map(|(i, p)| (p.info.id, i)).collect();
+    let init = Arc::new(init.clone());
+    let plan2 = plan.clone();
+
+    type RankResult = (HashMap<BlockId, BlockOutcome>, Duration, u64, u64, u64);
+    let (rank_results, elapsed): (Vec<RankResult>, Duration) =
+        CspWorld::run(size, model, move |comm| {
+            let me = comm.rank;
+            let plan = plan2.clone();
+            let backend = backend.clone();
+            // Local state store: every block's latest output this rank
+            // has seen (own blocks + received fragments are per-task, so
+            // own store holds only owned blocks' full outputs).
+            let mut store: HashMap<BlockId, StateOut> = HashMap::new();
+            let mut steps_done: HashMap<BlockId, u64> = HashMap::new();
+            // Seed: analytic init everywhere (each rank can evaluate it).
+            for p in &plan.plans {
+                store.insert(
+                    p.info.id,
+                    StateOut { ext_left: None, interior: init[&p.info.id].clone(), ext_right: None },
+                );
+            }
+            let owned: Vec<BlockId> = plan
+                .plans
+                .iter()
+                .map(|p| p.info.id)
+                .filter(|id| rank_of(&plan, *id, comm.size) == me)
+                .collect();
+            let mut busy = Duration::ZERO;
+            let mut tasks_run = 0u64;
+            let deadline = config.deadline.map(|d| Instant::now() + d);
+
+            // Per-(block, step) inbox of received remote fragments.
+            let mut inbox: HashMap<(BlockId, u64), Vec<Input>> = HashMap::new();
+
+            for tick in 0..n_ticks {
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        break;
+                    }
+                }
+                // Tasks due this tick: evolved first, then shadow
+                // (shadow consumes same-tick fine outputs).
+                let mut due: Vec<(BlockId, u64)> = Vec::new();
+                for id in &owned {
+                    let l = id.level as usize;
+                    let stride = 1u64 << (finest - l);
+                    let k = match plan.plan(*id).role {
+                        BlockRole::Shadow => {
+                            if tick % stride == stride / 2 {
+                                Some(tick / stride)
+                            } else {
+                                None
+                            }
+                        }
+                        BlockRole::Evolved => {
+                            if tick % stride == 0 {
+                                Some(tick / stride)
+                            } else {
+                                None
+                            }
+                        }
+                    };
+                    if let Some(k) = k {
+                        if k < plan.targets[l] {
+                            due.push((*id, k));
+                        }
+                    }
+                }
+                due.sort_by_key(|(id, _)| (std::cmp::Reverse(id.level), id.region, id.block));
+
+                // Two waves per tick: evolved tasks first (their inputs
+                // were all sent in earlier ticks), commit + send, *then*
+                // shadow tasks (whose restriction sources are same-tick
+                // fine outputs, possibly from another rank). A single
+                // interleaved wave can deadlock: two ranks each blocked
+                // in a shadow recv waiting for the other's sends.
+                let (evolved_due, shadow_due): (Vec<_>, Vec<_>) = due
+                    .into_iter()
+                    .partition(|(id, _)| plan.plan(*id).role == BlockRole::Evolved);
+
+                for wave in [evolved_due, shadow_due] {
+                let mut outputs: Vec<(BlockId, u64, StateOut)> = Vec::new();
+                for (id, k) in wave {
+                    let p = plan.plan(id);
+                    // Gather inputs: local store for locally owned
+                    // sources; blocking recv for remote ones.
+                    let mut inputs: Vec<Input> =
+                        inbox.remove(&(id, k)).unwrap_or_default();
+                    if p.role == BlockRole::Shadow {
+                        for src in &p.restrict_from {
+                            if rank_of(&plan, *src, comm.size) == me {
+                                let s = &store[src];
+                                let (lo, f) = restriction_of(s, &plan.plan(*src).info);
+                                inputs.push(Input::RestrictFrag { lo, f });
+                            } else {
+                                let v = comm.recv(tag(Kind::Restrict, flat[src], flat[&id], k));
+                                let (lo, f) = decode_frag(&v);
+                                inputs.push(Input::RestrictFrag { lo, f });
+                            }
+                        }
+                        let t0 = Instant::now();
+                        let out = shadow_output(p, &inputs);
+                        busy += t0.elapsed();
+                        tasks_run += 1;
+                        outputs.push((id, k, out));
+                        continue;
+                    }
+                    // Self.
+                    inputs.push(Input::SelfState(store[&id].clone()));
+                    // Ghosts (k=0: every rank evaluated the initial data
+                    // locally, so seeds are never messaged).
+                    for src in &p.ghost_from {
+                        if k == 0 || rank_of(&plan, *src, comm.size) == me {
+                            let s = &store[src];
+                            let sp = plan.plan(*src);
+                            let mut lo = sp.info.lo;
+                            let mut parts: Vec<&Fields> = Vec::new();
+                            if let Some(el) = &s.ext_left {
+                                lo -= el.len();
+                                parts.push(el);
+                            }
+                            parts.push(&s.interior);
+                            if let Some(er) = &s.ext_right {
+                                parts.push(er);
+                            }
+                            inputs.push(Input::GhostFrag { lo, f: Fields::concat(&parts) });
+                        } else {
+                            let v = comm.recv(tag(Kind::Ghost, flat[src], flat[&id], k));
+                            let (lo, f) = decode_frag(&v);
+                            inputs.push(Input::GhostFrag { lo, f });
+                        }
+                    }
+                    // Taper at aligned steps.
+                    if k % 2 == 0 {
+                        let taper_srcs: Vec<BlockId> = p
+                            .taper_left_from
+                            .iter()
+                            .chain(p.taper_right_from.iter())
+                            .copied()
+                            .collect();
+                        for src in taper_srcs {
+                            if k == 0 || rank_of(&plan, src, comm.size) == me {
+                                let s = &store[&src];
+                                inputs.push(Input::TaperFrag {
+                                    parent_lo: plan.plan(src).info.lo,
+                                    f: s.interior.clone(),
+                                });
+                            } else {
+                                let v = comm.recv(tag(Kind::Taper, flat[&src], flat[&id], k));
+                                let (lo, f) = decode_frag(&v);
+                                inputs.push(Input::TaperFrag { parent_lo: lo, f });
+                            }
+                        }
+                    }
+                    // Restriction correction (evolved parents; k=0 reads
+                    // the local init like the dataflow driver's seeding).
+                    for src in &p.restrict_from {
+                        if k == 0 || rank_of(&plan, *src, comm.size) == me {
+                            let s = &store[src];
+                            let (lo, f) = restriction_of(s, &plan.plan(*src).info);
+                            inputs.push(Input::RestrictFrag { lo, f });
+                        } else {
+                            let v = comm.recv(tag(Kind::Restrict, flat[src], flat[&id], k));
+                            let (lo, f) = decode_frag(&v);
+                            inputs.push(Input::RestrictFrag { lo, f });
+                        }
+                    }
+                    let t0 = Instant::now();
+                    let t = assemble(p, k, &inputs, &plan.hierarchy).expect("evolved");
+                    let l = id.level as usize;
+                    let dx = plan.hierarchy.config.dx(l);
+                    let dt = plan.hierarchy.config.dt(l);
+                    let f = backend
+                        .step_exact(t.m_out, &t.chi, &t.phi, &t.pi, &t.r, dx, dt)
+                        .expect("backend");
+                    let out = split_output(&t, f, &p.info);
+                    busy += t0.elapsed();
+                    tasks_run += 1;
+                    outputs.push((id, k, out));
+                }
+
+                // Commit + send to remote consumers of these outputs.
+                for (id, k, out) in outputs {
+                    let p = plan.plan(id);
+                    store.insert(id, out.clone());
+                    *steps_done.entry(id).or_insert(0) = k + 1;
+                    let next = k + 1;
+                    // Ghost consumers at (tgt, next).
+                    for tgt in &p.ghost_to {
+                        if rank_of(&plan, *tgt, comm.size) != me
+                            && next < plan.targets[tgt.level as usize]
+                        {
+                            let mut lo = p.info.lo;
+                            let mut parts: Vec<&Fields> = Vec::new();
+                            if let Some(el) = &out.ext_left {
+                                lo -= el.len();
+                                parts.push(el);
+                            }
+                            parts.push(&out.interior);
+                            if let Some(er) = &out.ext_right {
+                                parts.push(er);
+                            }
+                            comm.send(
+                                rank_of(&plan, *tgt, comm.size),
+                                tag(Kind::Ghost, flat[&id], flat[tgt], next),
+                                encode_frag(lo, &Fields::concat(&parts)),
+                            );
+                        }
+                    }
+                    // Taper consumers: child even task 2*next.
+                    for (tgt, _) in &p.taper_to {
+                        let child_k = 2 * next;
+                        if rank_of(&plan, *tgt, comm.size) != me
+                            && child_k < plan.targets[tgt.level as usize]
+                            && plan.plan(*tgt).role == BlockRole::Evolved
+                        {
+                            comm.send(
+                                rank_of(&plan, *tgt, comm.size),
+                                tag(Kind::Taper, flat[&id], flat[tgt], child_k),
+                                encode_frag(p.info.lo, &out.interior),
+                            );
+                        }
+                    }
+                    // Restriction consumers at aligned completions.
+                    if next % 2 == 0 && !p.restrict_to.is_empty() {
+                        let (lo, f) = restriction_of(&out, &p.info);
+                        let m = next / 2;
+                        for tgt in &p.restrict_to {
+                            let role = plan.plan(*tgt).role;
+                            let task_k = if role == BlockRole::Shadow { m - 1 } else { m };
+                            if rank_of(&plan, *tgt, comm.size) != me
+                                && task_k < plan.targets[tgt.level as usize]
+                            {
+                                comm.send(
+                                    rank_of(&plan, *tgt, comm.size),
+                                    tag(Kind::Restrict, flat[&id], flat[tgt], task_k),
+                                    encode_frag(lo, &f),
+                                );
+                            }
+                        }
+                    }
+                }
+                } // wave
+
+                // THE global barrier — what ParalleX removes.
+                comm.barrier();
+            }
+
+            let board: HashMap<BlockId, BlockOutcome> = owned
+                .iter()
+                .map(|id| {
+                    (
+                        *id,
+                        BlockOutcome {
+                            completed_steps: steps_done.get(id).copied().unwrap_or(0),
+                            state: store[id].clone(),
+                        },
+                    )
+                })
+                .collect();
+            (board, busy, tasks_run, comm.msgs_sent, comm.bytes_sent)
+        });
+
+    let mut blocks = HashMap::new();
+    let mut busy = Vec::new();
+    let mut tasks_run = 0;
+    let mut msgs = 0;
+    let mut bytes = 0;
+    for (board, b, t, m, by) in rank_results {
+        blocks.extend(board);
+        busy.push(b);
+        tasks_run += t;
+        msgs += m;
+        bytes += by;
+    }
+    Ok(CspRunStats {
+        outcome: AmrOutcome { blocks, elapsed, tasks_run, tasks_frozen: 0 },
+        busy,
+        msgs,
+        bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amr::backend::NativeBackend;
+    use crate::amr::dataflow_driver::{initial_block_states, run, AmrConfig};
+    use crate::amr::mesh::{Hierarchy, MeshConfig, Region};
+    use crate::px::runtime::{PxConfig, PxRuntime};
+
+    fn one_level() -> Hierarchy {
+        Hierarchy::build(
+            MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 },
+            &[vec![Region { lo: 120, hi: 200 }]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn csp_matches_dataflow_bitwise() {
+        let cfg = AmrConfig { coarse_steps: 5, ..Default::default() };
+        let h = one_level();
+        // ParalleX run.
+        let rt = PxRuntime::boot(PxConfig::smp(4));
+        let (plan, px_out) = run(&rt, h, Arc::new(NativeBackend), cfg).unwrap();
+        rt.shutdown();
+        // CSP run on 3 ranks.
+        let plan2 = Arc::new(EpochPlan::new(plan.hierarchy.clone(), cfg.coarse_steps));
+        let init = initial_block_states(&plan2, &cfg);
+        let csp = run_epoch_csp(
+            plan2.clone(),
+            Arc::new(NativeBackend),
+            cfg,
+            &init,
+            3,
+            NetModel::instant(),
+        )
+        .unwrap();
+        assert_eq!(csp.outcome.blocks.len(), px_out.blocks.len());
+        for (id, b) in &px_out.blocks {
+            let c = &csp.outcome.blocks[id];
+            assert_eq!(c.completed_steps, b.completed_steps, "{id:?}");
+            for i in 0..b.state.interior.len() {
+                assert_eq!(
+                    c.state.interior.chi[i].to_bits(),
+                    b.state.interior.chi[i].to_bits(),
+                    "{id:?} chi[{i}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csp_single_rank_works() {
+        let cfg = AmrConfig { coarse_steps: 3, ..Default::default() };
+        let h = one_level();
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let csp =
+            run_epoch_csp(plan.clone(), Arc::new(NativeBackend), cfg, &init, 1, NetModel::instant())
+                .unwrap();
+        assert_eq!(csp.msgs, 0, "single rank sends nothing");
+        for (id, b) in &csp.outcome.blocks {
+            assert_eq!(b.completed_steps, plan.targets[id.level as usize]);
+        }
+    }
+
+    #[test]
+    fn csp_load_imbalance_grows_with_refinement() {
+        // Rank busy-time spread: with a refined region concentrated in
+        // one slab, the owning rank does disproportionate work.
+        let cfg = AmrConfig { coarse_steps: 8, ..Default::default() };
+        let h = one_level(); // fine region r in [6,10] -> rank 1 of 4 owns most
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let csp =
+            run_epoch_csp(plan, Arc::new(NativeBackend), cfg, &init, 4, NetModel::instant())
+                .unwrap();
+        let max = csp.busy.iter().max().unwrap();
+        let min = csp.busy.iter().min().unwrap();
+        assert!(
+            max.as_nanos() > 2 * min.as_nanos().max(1),
+            "expected imbalance, busy={:?}",
+            csp.busy
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! CSP baseline: the MPI-style comparison substrate (paper §IV).
+//!
+//! The paper compares HPX-based AMR against "a counterpart MPI-based mesh
+//! refinement code": communicating sequential processes with static
+//! domain decomposition, blocking two-sided messages and a global barrier
+//! every (sub)step. This module provides that execution model in-process:
+//!
+//! * [`CspWorld`] — `P` ranks, each an OS thread (one per "processor").
+//! * [`RankComm`] — blocking `send`/`recv` mailboxes between ranks with
+//!   the *same* simulated wire model as the parcel fabric
+//!   ([`crate::px::net::NetModel`]), so PX-vs-CSP comparisons hold the
+//!   interconnect constant.
+//! * [`RankComm::barrier`] — the global synchronization ParalleX removes.
+//!
+//! [`amr`] builds the paper's synchronous Berger–Oliger evolution on top:
+//! contiguous static block ownership per rank (an MPI domain
+//! decomposition), ghost exchange + barrier every fine tick. Refined
+//! levels concentrate on few ranks, so adding levels degrades strong
+//! scaling — the paper's observed MPI behaviour (Figs 7/8).
+
+pub mod amr;
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Barrier as OsBarrier, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::px::net::NetModel;
+
+/// A tagged message between ranks.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub tag: u64,
+    pub payload: Vec<f64>,
+    /// Earliest time the receiver may observe it (wire model).
+    deliver_at: Instant,
+}
+
+/// Per-rank communicator (blocking two-sided semantics).
+pub struct RankComm {
+    pub rank: usize,
+    pub size: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order buffer: messages received while waiting for another
+    /// tag (MPI's unexpected-message queue).
+    stash: HashMap<u64, Vec<Msg>>,
+    barrier: Arc<OsBarrier>,
+    model: NetModel,
+    /// Bytes sent (8 per f64 + header), for parity with parcel counters.
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+}
+
+impl RankComm {
+    /// Blocking send of `payload` to `dest` with `tag`.
+    ///
+    /// Wire cost model: the payload is stamped with its delivery time;
+    /// `recv` spins/sleeps until that deadline passes — send itself is
+    /// buffered (eager MPI small-message semantics).
+    pub fn send(&mut self, dest: usize, tag: u64, payload: Vec<f64>) {
+        let bytes = payload.len() * 8 + 16;
+        self.bytes_sent += bytes as u64;
+        self.msgs_sent += 1;
+        let deliver_at = Instant::now() + self.model.delay(bytes);
+        let msg = Msg { tag, payload, deliver_at };
+        // A send to self is delivered locally (common in decompositions).
+        self.txs[dest].send(msg).expect("rank mailbox closed");
+    }
+
+    /// Blocking receive of the next message with `tag` (any source).
+    pub fn recv(&mut self, tag: u64) -> Vec<f64> {
+        // Check the stash first.
+        if let Some(q) = self.stash.get_mut(&tag) {
+            if !q.is_empty() {
+                let m = q.remove(0);
+                wait_until(m.deliver_at);
+                return m.payload;
+            }
+        }
+        loop {
+            let m = self.rx.recv().expect("rank mailbox closed");
+            if m.tag == tag {
+                wait_until(m.deliver_at);
+                return m.payload;
+            }
+            self.stash.entry(m.tag).or_default().push(m);
+        }
+    }
+
+    /// Global barrier across all ranks.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+}
+
+fn wait_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep(t - now);
+    }
+}
+
+/// Launch `size` ranks running `f(comm)` and join them, returning each
+/// rank's result and the wallclock of the slowest rank.
+pub struct CspWorld;
+
+impl CspWorld {
+    pub fn run<T, F>(size: usize, model: NetModel, f: F) -> (Vec<T>, Duration)
+    where
+        T: Send + 'static,
+        F: Fn(&mut RankComm) -> T + Send + Sync + 'static,
+    {
+        assert!(size >= 1);
+        let f = Arc::new(f);
+        let mut txs = Vec::with_capacity(size);
+        let mut rxs = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        let barrier = Arc::new(OsBarrier::new(size));
+        let start = Instant::now();
+        let results: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..size).map(|_| None).collect()));
+        let mut handles = Vec::with_capacity(size);
+        for (rank, rx) in rxs.iter_mut().enumerate() {
+            let mut comm = RankComm {
+                rank,
+                size,
+                txs: txs.clone(),
+                rx: rx.take().unwrap(),
+                stash: HashMap::new(),
+                barrier: barrier.clone(),
+                model,
+                bytes_sent: 0,
+                msgs_sent: 0,
+            };
+            let f = f.clone();
+            let results = results.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("csp-rank-{rank}"))
+                    .spawn(move || {
+                        let out = f(&mut comm);
+                        results.lock().unwrap()[rank] = Some(out);
+                    })
+                    .expect("spawn rank"),
+            );
+        }
+        for h in handles {
+            h.join().expect("rank panicked");
+        }
+        let elapsed = start.elapsed();
+        let outs = Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("rank produced no result"))
+            .collect();
+        (outs, elapsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass_accumulates() {
+        let (results, _) = CspWorld::run(4, NetModel::instant(), |comm| {
+            // Rank 0 seeds a token; each rank adds its id and forwards.
+            if comm.rank == 0 {
+                comm.send(1, 7, vec![0.0]);
+                let v = comm.recv(7);
+                v[0]
+            } else {
+                let v = comm.recv(7);
+                let next = (comm.rank + 1) % comm.size;
+                comm.send(next, 7, vec![v[0] + comm.rank as f64]);
+                -1.0
+            }
+        });
+        assert_eq!(results[0], 6.0); // 1 + 2 + 3
+    }
+
+    #[test]
+    fn tagged_messages_do_not_cross() {
+        let (results, _) = CspWorld::run(2, NetModel::instant(), |comm| {
+            if comm.rank == 0 {
+                comm.send(1, 1, vec![1.0]);
+                comm.send(1, 2, vec![2.0]);
+                0.0
+            } else {
+                // Receive in reverse order: tag 2 first.
+                let b = comm.recv(2);
+                let a = comm.recv(1);
+                b[0] * 10.0 + a[0]
+            }
+        });
+        assert_eq!(results[1], 21.0);
+    }
+
+    #[test]
+    fn barrier_synchronizes_all_ranks() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        let (results, _) = CspWorld::run(4, NetModel::instant(), move |comm| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // After the barrier every rank must see all arrivals.
+            c2.load(Ordering::SeqCst)
+        });
+        assert!(results.iter().all(|&r| r == 4), "{results:?}");
+    }
+
+    #[test]
+    fn wire_latency_delays_delivery() {
+        let model = NetModel { base_latency: Duration::from_millis(30), bandwidth_bps: u64::MAX };
+        let (_results, elapsed) = CspWorld::run(2, model, |comm| {
+            if comm.rank == 0 {
+                comm.send(1, 0, vec![1.0]);
+            } else {
+                comm.recv(0);
+            }
+        });
+        assert!(elapsed >= Duration::from_millis(29), "elapsed {elapsed:?}");
+    }
+}

@@ -1,0 +1,294 @@
+//! FPGA runtime-acceleration study (§V) as a cycle-cost simulator.
+//!
+//! The paper uploaded a Verilog global thread-scheduler queue to a Xilinx
+//! Virtex-5 on a 4-lane PCIe board clocked at 125 MHz, and found that it
+//! "matched and in most cases marginally surpassed" an equivalent
+//! software-only queue on a thread-intensive Fibonacci benchmark —
+//! *despite* every PCI read being limited to 4-byte payloads, each adding
+//! ~90 FPGA cycles ≈ 720 ns of latency.
+//!
+//! We do not have the FPGA, so per the substitution rule we build the
+//! same *latency accounting* (DESIGN.md §3): [`FpgaQueue`] implements the
+//! thread manager's [`Policy`] trait by wrapping the software global
+//! queue with a modeled PCIe transaction cost per operation. The bus
+//! serializes transactions ("automatically enforced serialization of
+//! communication packets"), modeled by holding the transaction lock for
+//! the op's duration. Three cost models:
+//!
+//! * [`PcieModel::measured_2011`] — the paper's observed behaviour:
+//!   descriptor reads split into 4-byte payloads (2 reads × 720 ns per
+//!   64-bit descriptor pop), posted writes.
+//! * [`PcieModel::tuned_driver`] — the paper's expectation "addressing
+//!   these inefficiencies": one 90-cycle read per pop.
+//! * [`PcieModel::free`] — zero-cost (sanity baseline ≡ software queue
+//!   plus the hardware's lock-free enqueue benefit).
+//!
+//! The queue *management* itself (insert/dequeue decision logic) is free
+//! on the FPGA side — that is the hardware's advantage; the host pays
+//! only the bus. This reproduces §V's accounting exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::px::counters::Counters;
+use crate::px::sched::{GlobalQueue, Policy, Task};
+
+/// FPGA clock: Virtex-5 board of §V ran at 125 MHz.
+pub const FPGA_CLOCK_HZ: u64 = 125_000_000;
+
+/// Cycles per limited 4-byte PCI read observed in §V (≈ 720 ns).
+pub const READ_4B_CYCLES: u64 = 90;
+
+/// PCIe transaction cost model for queue operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PcieModel {
+    /// Host-visible latency of one task *pop* (read path).
+    pub pop_ns: u64,
+    /// Host-visible latency of one task *push* (posted write path).
+    pub push_ns: u64,
+    /// Human-readable label for tables.
+    pub name: &'static str,
+}
+
+impl PcieModel {
+    /// Cycles → nanoseconds at the §V clock.
+    pub fn cycles_to_ns(cycles: u64) -> u64 {
+        cycles * 1_000_000_000 / FPGA_CLOCK_HZ
+    }
+
+    /// §V as measured: a 64-bit descriptor pop costs two 4-byte reads
+    /// (90 cycles = 720 ns each); pushes are posted writes (~1/4 cost).
+    pub fn measured_2011() -> PcieModel {
+        let read = Self::cycles_to_ns(READ_4B_CYCLES);
+        PcieModel { pop_ns: 2 * read, push_ns: read / 4, name: "fpga-4B-reads" }
+    }
+
+    /// §V "addressing these inefficiencies": full-payload descriptor
+    /// read, one bus transaction per pop.
+    pub fn tuned_driver() -> PcieModel {
+        let read = Self::cycles_to_ns(READ_4B_CYCLES);
+        PcieModel { pop_ns: read, push_ns: read / 4, name: "fpga-dma" }
+    }
+
+    /// Zero-latency hardware (upper bound).
+    pub fn free() -> PcieModel {
+        PcieModel { pop_ns: 0, push_ns: 0, name: "fpga-free" }
+    }
+}
+
+/// Statistics of one queue's bus usage.
+#[derive(Debug, Default)]
+pub struct FpgaStats {
+    pub pops: AtomicU64,
+    pub pushes: AtomicU64,
+    pub bus_ns: AtomicU64,
+}
+
+/// The hardware global thread queue: software-queue semantics, FPGA bus
+/// costs. Implements [`Policy`] so the unmodified thread manager runs on
+/// it — precisely the §V experiment (swap the scheduler queue, keep the
+/// runtime).
+pub struct FpgaQueue {
+    inner: GlobalQueue,
+    model: PcieModel,
+    /// The serialized bus (north-bridge packet serialization of §V(a)).
+    bus: Mutex<()>,
+    pub stats: Arc<FpgaStats>,
+}
+
+impl FpgaQueue {
+    pub fn new(model: PcieModel, counters: Arc<Counters>) -> FpgaQueue {
+        FpgaQueue {
+            inner: GlobalQueue::new(counters),
+            model,
+            bus: Mutex::new(()),
+            stats: Arc::new(FpgaStats::default()),
+        }
+    }
+
+    /// Busy-wait a bus transaction of `ns` while holding the bus lock
+    /// (transactions serialize; sleep granularity is too coarse for
+    /// sub-µs costs).
+    fn transact(&self, ns: u64) {
+        if ns == 0 {
+            return;
+        }
+        let _bus = self.bus.lock().unwrap();
+        let t0 = Instant::now();
+        let d = Duration::from_nanos(ns);
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+        self.stats.bus_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+impl Policy for FpgaQueue {
+    fn push(&self, task: Task, hint: Option<usize>) {
+        self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+        self.transact(self.model.push_ns);
+        self.inner.push(task, hint);
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        // The read transaction happens whether or not work is present
+        // (the host cannot know without asking the device).
+        let t = self.inner.pop(w);
+        if t.is_some() {
+            self.stats.pops.fetch_add(1, Ordering::Relaxed);
+            self.transact(self.model.pop_ns);
+        }
+        t
+    }
+
+    fn approx_len(&self) -> usize {
+        self.inner.approx_len()
+    }
+}
+
+/// The §V thread-intensive Fibonacci benchmark: one PX-thread per node of
+/// the naive recursion tree, joined through atomic accumulators.
+pub mod fib {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use crate::px::counters::Counters;
+    use crate::px::lco::Future as PxFuture;
+    use crate::px::sched::Policy;
+    use crate::px::thread::{Spawner, ThreadManager};
+
+    /// Spawn-recursive fib: every call below `n` spawns two children and
+    /// joins via a tiny accumulator LCO (continuation-style).
+    fn fib_task(sp: &Spawner, n: u64, acc: Arc<AccNode>) {
+        if n < 2 {
+            acc.contribute(sp, n);
+            return;
+        }
+        let join = Arc::new(AccNode::join(acc));
+        let a = join.clone();
+        let b = join.clone();
+        sp.spawn(move |sp| fib_task(sp, n - 1, a));
+        sp.spawn(move |sp| fib_task(sp, n - 2, b));
+    }
+
+    /// Two-input adder feeding a parent accumulator (dataflow join).
+    struct AccNode {
+        parent: Option<Arc<AccNode>>,
+        sum: AtomicU64,
+        pending: AtomicU64,
+        done: Option<PxFuture<Vec<f64>>>,
+    }
+
+    impl AccNode {
+        fn root(done: PxFuture<Vec<f64>>) -> AccNode {
+            AccNode { parent: None, sum: AtomicU64::new(0), pending: AtomicU64::new(1), done: Some(done) }
+        }
+
+        fn join(parent: Arc<AccNode>) -> AccNode {
+            AccNode { parent: Some(parent), sum: AtomicU64::new(0), pending: AtomicU64::new(2), done: None }
+        }
+
+        fn contribute(&self, sp: &Spawner, v: u64) {
+            self.sum.fetch_add(v, Ordering::Relaxed);
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let total = self.sum.load(Ordering::Relaxed);
+                match (&self.parent, &self.done) {
+                    (Some(p), _) => p.contribute(sp, total),
+                    (None, Some(d)) => d.set(sp, vec![total as f64]),
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// Result of one fib run.
+    #[derive(Debug, Clone)]
+    pub struct FibResult {
+        pub n: u64,
+        pub value: u64,
+        pub threads: u64,
+        pub elapsed: Duration,
+        pub ns_per_thread: f64,
+    }
+
+    /// Run fib(n) on a manager built over `policy`.
+    pub fn run_fib(n: u64, workers: usize, policy: Box<dyn Policy>, counters: Arc<Counters>) -> FibResult {
+        let tm = ThreadManager::new(workers, policy, counters.clone());
+        let sp = tm.spawner();
+        let done: PxFuture<Vec<f64>> = PxFuture::new();
+        let root = Arc::new(AccNode::root(done.clone()));
+        let t0 = Instant::now();
+        sp.spawn(move |sp| fib_task(sp, n, root));
+        let v = done.wait().expect("fib failed")[0] as u64;
+        let elapsed = t0.elapsed();
+        let threads = counters.threads_spawned.get();
+        FibResult {
+            n,
+            value: v,
+            threads,
+            elapsed,
+            ns_per_thread: elapsed.as_nanos() as f64 / threads.max(1) as f64,
+        }
+    }
+
+    /// Ground truth for assertions.
+    pub fn fib_value(n: u64) -> u64 {
+        let (mut a, mut b) = (0u64, 1u64);
+        for _ in 0..n {
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fib::{fib_value, run_fib};
+    use super::*;
+    use crate::px::sched::GlobalQueue;
+
+    #[test]
+    fn pcie_cycle_math_matches_paper() {
+        // 90 cycles at 125 MHz = 720 ns, as §V reports.
+        assert_eq!(PcieModel::cycles_to_ns(READ_4B_CYCLES), 720);
+        assert_eq!(PcieModel::measured_2011().pop_ns, 1440);
+    }
+
+    #[test]
+    fn fib_correct_on_software_queue() {
+        let counters = Arc::new(Counters::default());
+        let r = run_fib(16, 4, Box::new(GlobalQueue::new(counters.clone())), counters);
+        assert_eq!(r.value, fib_value(16));
+        assert!(r.threads > 100);
+    }
+
+    #[test]
+    fn fib_correct_on_fpga_queue() {
+        let counters = Arc::new(Counters::default());
+        let q = FpgaQueue::new(PcieModel::measured_2011(), counters.clone());
+        let stats = q.stats.clone();
+        let r = run_fib(12, 2, Box::new(q), counters);
+        assert_eq!(r.value, fib_value(12));
+        assert!(stats.pops.load(Ordering::Relaxed) > 0);
+        assert!(stats.bus_ns.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn free_model_has_no_bus_cost() {
+        let counters = Arc::new(Counters::default());
+        let q = FpgaQueue::new(PcieModel::free(), counters.clone());
+        let stats = q.stats.clone();
+        let r = run_fib(10, 2, Box::new(q), counters);
+        assert_eq!(r.value, fib_value(10));
+        assert_eq!(stats.bus_ns.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn tuned_model_halves_pop_cost() {
+        assert_eq!(PcieModel::tuned_driver().pop_ns * 2, PcieModel::measured_2011().pop_ns);
+    }
+}

@@ -1,0 +1,25 @@
+//! # parallex — a reproduction of the ParalleX execution model
+//!
+//! Production-quality reproduction of *"An Application Driven Analysis of
+//! the ParalleX Execution Model"* (Anderson, Brodowicz, Kaiser, Sterling;
+//! 2011): an HPX-like runtime ([`px`]) — AGAS, parcels, lightweight
+//! threads, LCOs, performance counters — plus the paper's barrier-free
+//! AMR application ([`amr`]), its CSP/MPI-style comparison baseline
+//! ([`csp`]), the FPGA runtime-acceleration study as a cost-model
+//! simulator ([`fpga`]), and an XLA/PJRT compute backend ([`runtime`])
+//! that executes JAX/Pallas-compiled kernels on the request path with
+//! Python nowhere at runtime.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod amr;
+pub mod bench;
+pub mod cli;
+pub mod metrics;
+pub mod csp;
+pub mod fpga;
+pub mod px;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;

@@ -1,0 +1,223 @@
+//! `px-amr` — launcher for the ParalleX AMR reproduction.
+//!
+//! Subcommands:
+//!   run        evolve the semilinear wave with barrier-free AMR (e2e driver)
+//!   fig2..fig9 regenerate the paper's figures (see DESIGN.md §5)
+//!   fpga       §V thread-queue offload study
+//!   info       print runtime/topology/artifact information
+//!
+//! Common options for `run`:
+//!   --n0 N --levels L --steps S --granularity G --workers W
+//!   --backend native|xla --scheduler local|global --barrier
+//!   --epochs E (regrid between epochs) --amplitude A --deadline-ms MS
+//!   --localities K (distributed localities with a simulated wire)
+
+use std::sync::Arc;
+
+use parallex::amr::backend::{make_backend, BackendKind};
+use parallex::amr::dataflow_driver::{initial_block_states, run_epoch, AmrConfig};
+use parallex::amr::engine::EpochPlan;
+use parallex::amr::mesh::MeshConfig;
+use parallex::amr::physics::energy_norm;
+use parallex::amr::regrid::{initial_hierarchy, regrid_hierarchy, remap, Composite, RegridConfig};
+use parallex::bench;
+use parallex::cli::Args;
+use parallex::metrics::fmt_dur;
+use parallex::px::net::NetModel;
+use parallex::px::runtime::{PxConfig, PxRuntime, SchedPolicyKind};
+
+fn main() {
+    // Quiet the PJRT CPU client's info logging unless the user overrides.
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("px-amr: {e}");
+            std::process::exit(2);
+        }
+    };
+    let scale = bench::Scale::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "run" => cmd_run(&args),
+        "info" => cmd_info(),
+        "fig2" => {
+            print!("{}", bench::fig2_mesh());
+            Ok(())
+        }
+        "fig3" => {
+            print!("{}", bench::fig3_granularity(scale));
+            Ok(())
+        }
+        "fig5" => {
+            print!("{}", bench::fig5_cone(scale));
+            Ok(())
+        }
+        "fig6" => {
+            print!("{}", bench::fig6_barrier(scale));
+            Ok(())
+        }
+        "fig7" => {
+            print!("{}", bench::fig7_scaling(scale));
+            Ok(())
+        }
+        "fig8" => {
+            print!("{}", bench::fig8_wallclock(scale));
+            Ok(())
+        }
+        "fig9" => {
+            print!("{}", bench::fig9_thread_overhead(scale));
+            Ok(())
+        }
+        "fpga" => {
+            print!("{}", bench::fpga_fib_table(scale));
+            Ok(())
+        }
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand `{other}` (try `px-amr help`)")),
+    };
+    if let Err(e) = result {
+        eprintln!("px-amr: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga> [--options]\n\n\
+         run options: --n0 1601 --levels 2 --steps 32 --granularity 16\n\
+                      --workers <cores> --backend native|xla --scheduler local|global\n\
+                      --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
+         env: PX_SCALE=quick|full  PX_BACKEND=native|xla  PX_ARTIFACTS=<dir>"
+    );
+}
+
+fn cmd_info() -> Result<(), String> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    println!("px-amr info");
+    println!("  cores                : {cores}");
+    println!("  scale (PX_SCALE)     : {:?}", bench::Scale::from_env());
+    let dir = std::env::var("PX_ARTIFACTS")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+    match parallex::runtime::XlaCompute::open(&dir) {
+        Ok(xc) => {
+            println!("  artifacts            : {dir}");
+            for e in xc.manifest() {
+                println!(
+                    "    step_b{:<4} in={} out={} vmem~{}B sha={}",
+                    e.block, e.input_len, e.output_len, e.vmem_bytes, e.hlo_sha256
+                );
+            }
+        }
+        Err(e) => println!("  artifacts            : unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let n0: usize = args.get_parse("n0", 1601)?;
+    let levels: usize = args.get_parse("levels", 2)?;
+    let steps: u64 = args.get_parse("steps", 32)?;
+    let granularity: usize = args.get_parse("granularity", 16)?;
+    let workers: usize = args.get_parse(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )?;
+    let backend_s = args.get("backend", "native");
+    let scheduler: SchedPolicyKind = args.get("scheduler", "local").parse()?;
+    let barrier = args.flag("barrier");
+    let epochs: u64 = args.get_parse("epochs", 1)?;
+    let amplitude: f64 = args.get_parse("amplitude", 0.05)?;
+    let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
+    let localities: usize = args.get_parse("localities", 1)?;
+    let unknown = args.unknown();
+    if !unknown.is_empty() {
+        return Err(format!("unknown options: {}", unknown.join(", ")));
+    }
+
+    let kind: BackendKind = backend_s.parse()?;
+    let dir = std::env::var("PX_ARTIFACTS")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+    let backend = make_backend(kind, &dir).map_err(|e| e.to_string())?;
+
+    let mesh = MeshConfig { r_max: 20.0, n0, levels, cfl: 0.25, granularity };
+    let regrid_cfg = RegridConfig { error_threshold: 2e-4, buffer: 16 };
+    let mut hierarchy_current =
+        initial_hierarchy(mesh, regrid_cfg, amplitude, 8.0, 1.0).map_err(|e| e.to_string())?;
+
+    println!(
+        "px-amr run: n0={n0} levels={} (built {}) steps={steps} g={granularity} workers={workers} \
+         backend={} scheduler={scheduler:?} barrier={barrier} epochs={epochs}",
+        levels,
+        hierarchy_current.n_levels() - 1,
+        backend.name()
+    );
+
+    let rt = PxRuntime::boot(PxConfig {
+        localities,
+        workers_per_locality: workers,
+        policy: scheduler,
+        net: if localities > 1 { NetModel::cluster_like() } else { NetModel::instant() },
+    });
+
+    let cfg = AmrConfig {
+        amplitude,
+        r0: 8.0,
+        delta: 1.0,
+        coarse_steps: steps,
+        barrier,
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+    };
+
+    let mut init = None;
+    let t0 = std::time::Instant::now();
+    for epoch in 0..epochs {
+        let plan = Arc::new(EpochPlan::new(hierarchy_current.clone(), cfg.coarse_steps));
+        let init_states = match init.take() {
+            Some(s) => s,
+            None => initial_block_states(&plan, &cfg),
+        };
+        let outcome = run_epoch(&rt, plan.clone(), backend.clone(), cfg, &init_states)
+            .map_err(|e| e.to_string())?;
+        // Per-epoch report.
+        let counters = rt.counters_total();
+        let (reg0, f0) = outcome.region_state(&plan, 0, 0);
+        let dx0 = plan.hierarchy.config.dx(0);
+        let r0s: Vec<f64> = (reg0.lo..reg0.hi).map(|i| dx0 * i as f64).collect();
+        println!(
+            "epoch {epoch}: tasks={} frozen={} elapsed={} threads={} steals={} max|u|={:.3e} E={:.6e}",
+            outcome.tasks_run,
+            outcome.tasks_frozen,
+            fmt_dur(outcome.elapsed),
+            counters.threads_spawned,
+            counters.steals,
+            f0.max_abs(),
+            energy_norm(&f0, &r0s, dx0),
+        );
+        for l in 0..plan.hierarchy.n_levels() {
+            println!(
+                "  level {l}: regions={} min_steps={}",
+                plan.hierarchy.regions[l].len(),
+                outcome.min_steps(&plan, l)
+            );
+        }
+        if epoch + 1 < epochs {
+            let comp = Composite::new(&plan, &outcome);
+            let new_h = regrid_hierarchy(&comp, regrid_cfg).map_err(|e| e.to_string())?;
+            let new_plan = EpochPlan::new(new_h.clone(), cfg.coarse_steps);
+            init = Some(remap(&comp, &new_plan));
+            hierarchy_current = new_h;
+            println!("  regrid: levels now {}", hierarchy_current.n_levels() - 1);
+        }
+    }
+    println!("total wallclock {}", fmt_dur(t0.elapsed()));
+    println!("counters:\n{}", rt.counters_total().render());
+    rt.shutdown();
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Small reporting utilities shared by the CLI, benches and examples:
+//! aligned text tables (the benches print the paper's rows/series) and
+//! histogram binning for the Fig 5/6 timestep-profile curves.
+
+use std::fmt::Write as _;
+
+/// An aligned text table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<width$}  ", c, width = w[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = w.iter().sum::<usize>() + 2 * ncol;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+/// Bin `(x, y)` samples into `bins` over the x-range, averaging y — used
+/// to print the Fig 5/6 timestep-vs-radius curves as fixed-width series.
+pub fn bin_series(samples: &[(f64, f64)], bins: usize) -> Vec<(f64, f64)> {
+    if samples.is_empty() || bins == 0 {
+        return Vec::new();
+    }
+    let xmin = samples.iter().map(|s| s.0).fold(f64::INFINITY, f64::min);
+    let xmax = samples.iter().map(|s| s.0).fold(f64::NEG_INFINITY, f64::max);
+    let span = (xmax - xmin).max(1e-300);
+    let mut sums = vec![0.0; bins];
+    let mut counts = vec![0usize; bins];
+    for (x, y) in samples {
+        let b = (((x - xmin) / span) * bins as f64) as usize;
+        let b = b.min(bins - 1);
+        sums[b] += y;
+        counts[b] += 1;
+    }
+    (0..bins)
+        .filter(|&b| counts[b] > 0)
+        .map(|b| {
+            let xc = xmin + span * (b as f64 + 0.5) / bins as f64;
+            (xc, sums[b] / counts[b] as f64)
+        })
+        .collect()
+}
+
+/// Sparkline-style ASCII profile of a series (rough plot in logs).
+pub fn ascii_profile(series: &[(f64, f64)], width: usize) -> String {
+    if series.is_empty() {
+        return String::new();
+    }
+    let ymax = series.iter().map(|s| s.1).fold(f64::NEG_INFINITY, f64::max).max(1e-300);
+    let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let binned = bin_series(series, width);
+    binned
+        .iter()
+        .map(|(_, y)| {
+            let g = ((y / ymax) * (glyphs.len() - 1) as f64).round() as usize;
+            glyphs[g.min(glyphs.len() - 1)]
+        })
+        .collect()
+}
+
+/// Duration as compact human string.
+pub fn fmt_dur(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+        // Aligned: both data rows have the same column-2 start offset.
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].find('1'), lines[3].find("22"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bin_series_averages() {
+        let s: Vec<(f64, f64)> = (0..100).map(|i| (i as f64, 2.0)).collect();
+        let b = bin_series(&s, 10);
+        assert_eq!(b.len(), 10);
+        assert!(b.iter().all(|(_, y)| (*y - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn bin_series_empty_ok() {
+        assert!(bin_series(&[], 10).is_empty());
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(std::time::Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(std::time::Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(std::time::Duration::from_micros(7)).ends_with("us"));
+    }
+}

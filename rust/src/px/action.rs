@@ -1,0 +1,100 @@
+//! Action registry: names the functions parcels can apply remotely.
+//!
+//! In ParalleX an *action* is a registered, globally agreed-upon function
+//! id; a parcel carries `(dest gid, action id, serialized args)` and the
+//! receiving action manager spawns a PX-thread running the registered
+//! body. Applications extend the runtime by registering their own actions
+//! at boot (the paper's "application specific components", Fig 1); ids at
+//! or above [`RESERVED_ACTION_BASE`] are reserved for runtime builtins.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use super::error::{PxError, PxResult};
+use super::locality::LocalityCtx;
+use super::parcel::{ActionId, Parcel};
+
+/// Action ids ≥ this are runtime builtins (future set/get, ping, ...).
+pub const RESERVED_ACTION_BASE: ActionId = 0xFFFF_FF00;
+
+/// Builtin: resolve a registered `Future<Vec<f64>>` component.
+pub const ACT_SET_FUTURE_F64S: ActionId = RESERVED_ACTION_BASE + 1;
+/// Builtin: resolve a registered `Future<Vec<f64>>` component with an error.
+pub const ACT_SET_FUTURE_ERROR: ActionId = RESERVED_ACTION_BASE + 2;
+/// Builtin: liveness ping — replies on the continuation with `[seq]`.
+pub const ACT_PING: ActionId = RESERVED_ACTION_BASE + 3;
+
+/// The body of an action: runs as a PX-thread on the destination locality.
+pub type ActionFn = dyn Fn(&Arc<LocalityCtx>, Parcel) + Send + Sync;
+
+/// Registry shared by every locality of a runtime instance (action ids
+/// must agree globally, like function pointers linked into every rank).
+#[derive(Default)]
+pub struct ActionRegistry {
+    map: RwLock<HashMap<ActionId, Arc<ActionFn>>>,
+}
+
+impl ActionRegistry {
+    /// Empty registry.
+    pub fn new() -> Arc<ActionRegistry> {
+        Arc::new(ActionRegistry::default())
+    }
+
+    /// Register `f` under `id`. Re-registering an id is a programming
+    /// error (actions are global, static agreements).
+    pub fn register<F>(&self, id: ActionId, f: F)
+    where
+        F: Fn(&Arc<LocalityCtx>, Parcel) + Send + Sync + 'static,
+    {
+        let mut m = self.map.write().unwrap();
+        assert!(!m.contains_key(&id), "action id {id:#x} registered twice");
+        m.insert(id, Arc::new(f));
+    }
+
+    /// Look up an action body.
+    pub fn get(&self, id: ActionId) -> PxResult<Arc<ActionFn>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or(PxError::UnknownAction(id))
+    }
+
+    /// Registered action count (diagnostics).
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    /// True when no actions are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_get() {
+        let r = ActionRegistry::new();
+        r.register(7, |_, _| {});
+        assert!(r.get(7).is_ok());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn unknown_action_is_error() {
+        let r = ActionRegistry::new();
+        assert!(matches!(r.get(9), Err(PxError::UnknownAction(9))));
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn double_registration_panics() {
+        let r = ActionRegistry::new();
+        r.register(7, |_, _| {});
+        r.register(7, |_, _| {});
+    }
+}

@@ -1,0 +1,294 @@
+//! AGAS — the Active Global Address Space.
+//!
+//! AGAS maps immutable global names ([`Gid`]) to their *current* locality,
+//! decoupling object identity from placement (§II). Unlike PGAS systems
+//! (UPC/X10/Chapel) the mapping is **active**: objects migrate at runtime
+//! and the address space follows them.
+//!
+//! Implementation: a partitioned home table — each GID's *birthplace*
+//! locality owns its authoritative entry (as in HPX, where the locality
+//! that mints a name serves resolutions for it) — fronted by per-locality
+//! caches. Migration bumps a version number; stale cache hits are detected
+//! by version and refreshed. In this in-process runtime the home table
+//! partitions share one process, but all accesses go through the same
+//! resolve/bind/migrate protocol a distributed AGAS would use, and the
+//! cache-hit/miss counters feed the Fig 9-style overhead analysis.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::counters::Counters;
+use super::error::{PxError, PxResult};
+use super::gid::{Gid, LocalityId};
+
+/// An authoritative AGAS entry: where the object lives now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Locality currently hosting the object.
+    pub locality: LocalityId,
+    /// Monotone version, bumped by each migration.
+    pub version: u64,
+}
+
+/// One partition of the home table (owned by one locality).
+#[derive(Default)]
+struct HomePartition {
+    entries: HashMap<Gid, Placement>,
+}
+
+/// The AGAS service shared by all localities of a runtime instance.
+pub struct Agas {
+    /// Partition `p` holds entries for GIDs whose birthplace is `p`.
+    partitions: Vec<Mutex<HomePartition>>,
+}
+
+impl Agas {
+    /// AGAS for a runtime with `n_localities` localities.
+    pub fn new(n_localities: usize) -> Arc<Agas> {
+        Arc::new(Agas {
+            partitions: (0..n_localities).map(|_| Mutex::new(HomePartition::default())).collect(),
+        })
+    }
+
+    fn partition(&self, gid: Gid) -> &Mutex<HomePartition> {
+        &self.partitions[gid.birthplace() as usize % self.partitions.len()]
+    }
+
+    /// Bind a freshly minted GID to its initial locality.
+    pub fn bind(&self, gid: Gid, locality: LocalityId) -> PxResult<()> {
+        if gid.is_null() {
+            return Err(PxError::LcoProtocol("cannot bind the null gid".into()));
+        }
+        let mut p = self.partition(gid).lock().unwrap();
+        if p.entries.contains_key(&gid) {
+            return Err(PxError::LcoProtocol(format!("gid {gid} already bound")));
+        }
+        p.entries.insert(gid, Placement { locality, version: 0 });
+        Ok(())
+    }
+
+    /// Authoritative resolve (home-table read).
+    pub fn resolve_home(&self, gid: Gid) -> PxResult<Placement> {
+        let p = self.partition(gid).lock().unwrap();
+        p.entries.get(&gid).copied().ok_or_else(|| PxError::Unresolved(gid.to_string()))
+    }
+
+    /// Move an object to `to`; bumps the version so caches self-invalidate.
+    pub fn migrate(&self, gid: Gid, to: LocalityId) -> PxResult<Placement> {
+        let mut p = self.partition(gid).lock().unwrap();
+        match p.entries.get_mut(&gid) {
+            Some(e) => {
+                e.locality = to;
+                e.version += 1;
+                Ok(*e)
+            }
+            None => Err(PxError::Unresolved(gid.to_string())),
+        }
+    }
+
+    /// Remove a binding (object destroyed).
+    pub fn unbind(&self, gid: Gid) -> PxResult<()> {
+        let mut p = self.partition(gid).lock().unwrap();
+        p.entries.remove(&gid).map(|_| ()).ok_or_else(|| PxError::Unresolved(gid.to_string()))
+    }
+
+    /// Number of live bindings across all partitions (diagnostics).
+    pub fn bindings(&self) -> usize {
+        self.partitions.iter().map(|p| p.lock().unwrap().entries.len()).sum()
+    }
+}
+
+/// Per-locality AGAS client with a read-through cache.
+pub struct AgasClient {
+    agas: Arc<Agas>,
+    cache: RwLock<HashMap<Gid, Placement>>,
+    counters: Arc<Counters>,
+    /// This client's locality (for `is_local` checks).
+    pub locality: LocalityId,
+}
+
+impl AgasClient {
+    /// Client for `locality` backed by the shared service.
+    pub fn new(agas: Arc<Agas>, locality: LocalityId, counters: Arc<Counters>) -> AgasClient {
+        AgasClient { agas, cache: RwLock::new(HashMap::new()), counters, locality }
+    }
+
+    /// Bind and prime the local cache (objects are created locally).
+    pub fn bind(&self, gid: Gid, locality: LocalityId) -> PxResult<()> {
+        self.agas.bind(gid, locality)?;
+        self.cache.write().unwrap().insert(gid, Placement { locality, version: 0 });
+        Ok(())
+    }
+
+    /// Resolve with cache: the common (hit) path is a shared-lock map read.
+    ///
+    /// Staleness: a cached entry may point at a pre-migration locality.
+    /// The action-manager protocol tolerates this — a parcel routed to a
+    /// stale locality is *forwarded* by that locality after a fresh home
+    /// resolve (see `locality.rs`), which also refreshes the sender's
+    /// cache via `refresh`.
+    pub fn resolve(&self, gid: Gid) -> PxResult<Placement> {
+        if let Some(p) = self.cache.read().unwrap().get(&gid) {
+            self.counters.agas_cache_hits.inc();
+            return Ok(*p);
+        }
+        self.counters.agas_cache_misses.inc();
+        let p = self.agas.resolve_home(gid)?;
+        self.cache.write().unwrap().insert(gid, p);
+        Ok(p)
+    }
+
+    /// Drop a (possibly stale) cache entry and re-resolve from home.
+    pub fn refresh(&self, gid: Gid) -> PxResult<Placement> {
+        self.counters.agas_cache_misses.inc();
+        let p = self.agas.resolve_home(gid)?;
+        self.cache.write().unwrap().insert(gid, p);
+        Ok(p)
+    }
+
+    /// True when the object currently resolves to this locality.
+    pub fn is_local(&self, gid: Gid) -> PxResult<bool> {
+        Ok(self.resolve(gid)?.locality == self.locality)
+    }
+
+    /// Migrate an object and update this cache.
+    pub fn migrate(&self, gid: Gid, to: LocalityId) -> PxResult<Placement> {
+        let p = self.agas.migrate(gid, to)?;
+        self.counters.migrations.inc();
+        self.cache.write().unwrap().insert(gid, p);
+        Ok(p)
+    }
+
+    /// Unbind and purge the cache entry.
+    pub fn unbind(&self, gid: Gid) -> PxResult<()> {
+        self.agas.unbind(gid)?;
+        self.cache.write().unwrap().remove(&gid);
+        Ok(())
+    }
+
+    /// Shared service handle (for constructing sibling clients).
+    pub fn service(&self) -> Arc<Agas> {
+        self.agas.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::gid::{GidAllocator, GidKind};
+    use crate::testkit::prop::{prop_check, Rng};
+
+    fn setup(n: usize) -> (Arc<Agas>, Vec<AgasClient>) {
+        let agas = Agas::new(n);
+        let clients = (0..n as u32)
+            .map(|l| AgasClient::new(agas.clone(), l, Arc::new(Counters::default())))
+            .collect();
+        (agas, clients)
+    }
+
+    #[test]
+    fn bind_resolve_roundtrip() {
+        let (_agas, clients) = setup(2);
+        let alloc = GidAllocator::new(0);
+        let g = alloc.alloc(GidKind::Block);
+        clients[0].bind(g, 0).unwrap();
+        assert_eq!(clients[1].resolve(g).unwrap().locality, 0);
+        assert!(clients[0].is_local(g).unwrap());
+        assert!(!clients[1].is_local(g).unwrap());
+    }
+
+    #[test]
+    fn double_bind_rejected() {
+        let (_agas, clients) = setup(1);
+        let g = GidAllocator::new(0).alloc(GidKind::Component);
+        clients[0].bind(g, 0).unwrap();
+        assert!(matches!(clients[0].bind(g, 0), Err(PxError::LcoProtocol(_))));
+    }
+
+    #[test]
+    fn null_gid_rejected() {
+        let (agas, _) = setup(1);
+        assert!(agas.bind(Gid::NULL, 0).is_err());
+    }
+
+    #[test]
+    fn unresolved_gid_is_an_error() {
+        let (_agas, clients) = setup(1);
+        let g = GidAllocator::new(0).alloc(GidKind::Component);
+        assert!(matches!(clients[0].resolve(g), Err(PxError::Unresolved(_))));
+    }
+
+    #[test]
+    fn migrate_bumps_version_and_home_moves() {
+        let (agas, clients) = setup(3);
+        let g = GidAllocator::new(1).alloc(GidKind::Block);
+        clients[1].bind(g, 1).unwrap();
+        let p = clients[1].migrate(g, 2).unwrap();
+        assert_eq!(p, Placement { locality: 2, version: 1 });
+        assert_eq!(agas.resolve_home(g).unwrap().locality, 2);
+    }
+
+    #[test]
+    fn stale_cache_detected_via_refresh() {
+        let (_agas, clients) = setup(3);
+        let g = GidAllocator::new(0).alloc(GidKind::Block);
+        clients[0].bind(g, 0).unwrap();
+        // Client 2 caches the original placement.
+        assert_eq!(clients[2].resolve(g).unwrap().locality, 0);
+        // Client 0 migrates the object away; client 2's cache is now stale.
+        clients[0].migrate(g, 1).unwrap();
+        assert_eq!(clients[2].resolve(g).unwrap().locality, 0, "cache returns stale value");
+        assert_eq!(clients[2].refresh(g).unwrap().locality, 1, "refresh sees the move");
+        assert_eq!(clients[2].resolve(g).unwrap().locality, 1, "cache updated");
+    }
+
+    #[test]
+    fn unbind_purges() {
+        let (agas, clients) = setup(1);
+        let g = GidAllocator::new(0).alloc(GidKind::Future);
+        clients[0].bind(g, 0).unwrap();
+        assert_eq!(agas.bindings(), 1);
+        clients[0].unbind(g).unwrap();
+        assert_eq!(agas.bindings(), 0);
+        assert!(clients[0].resolve(g).is_err());
+    }
+
+    #[test]
+    fn cache_hit_miss_counters() {
+        let agas = Agas::new(1);
+        let counters = Arc::new(Counters::default());
+        let c = AgasClient::new(agas, 0, counters.clone());
+        let g = GidAllocator::new(0).alloc(GidKind::Block);
+        c.bind(g, 0).unwrap();
+        c.resolve(g).unwrap(); // hit (primed by bind)
+        c.resolve(g).unwrap(); // hit
+        assert_eq!(counters.agas_cache_hits.get(), 2);
+        assert_eq!(counters.agas_cache_misses.get(), 0);
+    }
+
+    #[test]
+    fn prop_resolve_after_random_migrations_matches_home() {
+        prop_check("agas migrate coherence", 100, |rng: &mut Rng| {
+            let n = rng.range(1, 6);
+            let (agas, clients) = setup(n);
+            let alloc = GidAllocator::new(rng.range(0, n) as u32);
+            let gids: Vec<Gid> = (0..rng.range(1, 20)).map(|_| alloc.alloc(GidKind::Block)).collect();
+            for &g in &gids {
+                let home = rng.range(0, n) as u32;
+                clients[home as usize].bind(g, home).unwrap();
+            }
+            for _ in 0..rng.range(0, 50) {
+                let g = gids[rng.range(0, gids.len())];
+                let to = rng.range(0, n) as u32;
+                clients[rng.range(0, n)].migrate(g, to).unwrap();
+            }
+            // After refresh every client agrees with the home table.
+            for &g in &gids {
+                let truth = agas.resolve_home(g).unwrap();
+                for c in &clients {
+                    assert_eq!(c.refresh(g).unwrap(), truth);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Performance counters — the paper's "generic monitoring framework"
+//! (Fig 1) that enables dynamic and intrinsic system and load estimates.
+//!
+//! Counters are plain relaxed atomics grouped per locality and aggregated
+//! by the runtime. They are cheap enough to leave enabled on the hot path
+//! (one relaxed `fetch_add` per event); the Fig 9 overhead bench measures
+//! their cost as part of thread-management overhead, exactly as HPX does.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One monotonically increasing event counter.
+#[derive(Default)]
+pub struct Counter(CachePadded<AtomicU64>);
+
+impl Counter {
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Record a maximum (monotone; used for high-water marks).
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+/// Counter set for one locality's runtime services.
+///
+/// Field names follow the paper's taxonomy of SLOW factors: starvation is
+/// visible through `steals`/`parked_waits`, latency through parcel
+/// round-trips, overhead through `threads_spawned` × per-thread cost, and
+/// contention through `queue_contended`.
+#[derive(Default)]
+pub struct Counters {
+    /// PX-threads created (locally spawned + parcel-instantiated).
+    pub threads_spawned: Counter,
+    /// PX-threads that ran to completion.
+    pub threads_completed: Counter,
+    /// PX-threads created in direct response to an incoming parcel.
+    pub threads_from_parcels: Counter,
+    /// Continuations registered on LCOs (suspension events).
+    pub suspensions: Counter,
+    /// Continuations resumed by LCO triggers.
+    pub resumptions: Counter,
+    /// Work-stealing events (local-priority policy only).
+    pub steals: Counter,
+    /// Times a worker found every queue empty and parked.
+    pub parked_waits: Counter,
+    /// Lock acquisitions on a scheduling queue that had to contend.
+    pub queue_contended: Counter,
+    /// High-water mark of any scheduling queue length.
+    pub queue_hwm: Counter,
+    /// Parcels sent to a remote locality.
+    pub parcels_sent: Counter,
+    /// Parcels received and decoded.
+    pub parcels_received: Counter,
+    /// Total serialized parcel bytes sent.
+    pub parcel_bytes: Counter,
+    /// AGAS lookups answered from the local cache.
+    pub agas_cache_hits: Counter,
+    /// AGAS lookups that went to the home table.
+    pub agas_cache_misses: Counter,
+    /// Objects migrated between localities.
+    pub migrations: Counter,
+    /// LCO set/trigger events (future set_value, dataflow input, ...).
+    pub lco_triggers: Counter,
+    /// XLA executable invocations (the PJRT hot path).
+    pub xla_calls: Counter,
+}
+
+/// A plain snapshot of all counters, for diffing across a run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub threads_spawned: u64,
+    pub threads_completed: u64,
+    pub threads_from_parcels: u64,
+    pub suspensions: u64,
+    pub resumptions: u64,
+    pub steals: u64,
+    pub parked_waits: u64,
+    pub queue_contended: u64,
+    pub queue_hwm: u64,
+    pub parcels_sent: u64,
+    pub parcels_received: u64,
+    pub parcel_bytes: u64,
+    pub agas_cache_hits: u64,
+    pub agas_cache_misses: u64,
+    pub migrations: u64,
+    pub lco_triggers: u64,
+    pub xla_calls: u64,
+}
+
+impl Counters {
+    /// Capture the current values.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            threads_spawned: self.threads_spawned.get(),
+            threads_completed: self.threads_completed.get(),
+            threads_from_parcels: self.threads_from_parcels.get(),
+            suspensions: self.suspensions.get(),
+            resumptions: self.resumptions.get(),
+            steals: self.steals.get(),
+            parked_waits: self.parked_waits.get(),
+            queue_contended: self.queue_contended.get(),
+            queue_hwm: self.queue_hwm.get(),
+            parcels_sent: self.parcels_sent.get(),
+            parcels_received: self.parcels_received.get(),
+            parcel_bytes: self.parcel_bytes.get(),
+            agas_cache_hits: self.agas_cache_hits.get(),
+            agas_cache_misses: self.agas_cache_misses.get(),
+            migrations: self.migrations.get(),
+            lco_triggers: self.lco_triggers.get(),
+            xla_calls: self.xla_calls.get(),
+        }
+    }
+}
+
+impl CounterSnapshot {
+    /// Event deltas between two snapshots (self - earlier).
+    pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            threads_spawned: self.threads_spawned - earlier.threads_spawned,
+            threads_completed: self.threads_completed - earlier.threads_completed,
+            threads_from_parcels: self.threads_from_parcels - earlier.threads_from_parcels,
+            suspensions: self.suspensions - earlier.suspensions,
+            resumptions: self.resumptions - earlier.resumptions,
+            steals: self.steals - earlier.steals,
+            parked_waits: self.parked_waits - earlier.parked_waits,
+            queue_contended: self.queue_contended - earlier.queue_contended,
+            queue_hwm: self.queue_hwm.max(earlier.queue_hwm),
+            parcels_sent: self.parcels_sent - earlier.parcels_sent,
+            parcels_received: self.parcels_received - earlier.parcels_received,
+            parcel_bytes: self.parcel_bytes - earlier.parcel_bytes,
+            agas_cache_hits: self.agas_cache_hits - earlier.agas_cache_hits,
+            agas_cache_misses: self.agas_cache_misses - earlier.agas_cache_misses,
+            migrations: self.migrations - earlier.migrations,
+            lco_triggers: self.lco_triggers - earlier.lco_triggers,
+            xla_calls: self.xla_calls - earlier.xla_calls,
+        }
+    }
+
+    /// Render as aligned `name value` lines for logs / EXPERIMENTS.md.
+    pub fn render(&self) -> String {
+        let rows = [
+            ("threads_spawned", self.threads_spawned),
+            ("threads_completed", self.threads_completed),
+            ("threads_from_parcels", self.threads_from_parcels),
+            ("suspensions", self.suspensions),
+            ("resumptions", self.resumptions),
+            ("steals", self.steals),
+            ("parked_waits", self.parked_waits),
+            ("queue_contended", self.queue_contended),
+            ("queue_hwm", self.queue_hwm),
+            ("parcels_sent", self.parcels_sent),
+            ("parcels_received", self.parcels_received),
+            ("parcel_bytes", self.parcel_bytes),
+            ("agas_cache_hits", self.agas_cache_hits),
+            ("agas_cache_misses", self.agas_cache_misses),
+            ("migrations", self.migrations),
+            ("lco_triggers", self.lco_triggers),
+            ("xla_calls", self.xla_calls),
+        ];
+        let mut out = String::new();
+        for (k, v) in rows {
+            out.push_str(&format!("{k:<22} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn inc_add_get() {
+        let c = Counter::default();
+        c.inc();
+        c.add(10);
+        assert_eq!(c.get(), 11);
+    }
+
+    #[test]
+    fn max_is_monotone() {
+        let c = Counter::default();
+        c.max(5);
+        c.max(3);
+        assert_eq!(c.get(), 5);
+        c.max(9);
+        assert_eq!(c.get(), 9);
+    }
+
+    #[test]
+    fn snapshot_diff() {
+        let cs = Counters::default();
+        cs.threads_spawned.add(5);
+        let a = cs.snapshot();
+        cs.threads_spawned.add(7);
+        cs.steals.inc();
+        let b = cs.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.threads_spawned, 7);
+        assert_eq!(d.steals, 1);
+    }
+
+    #[test]
+    fn counters_are_thread_safe() {
+        let cs = Arc::new(Counters::default());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let cs = cs.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    cs.threads_spawned.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cs.threads_spawned.get(), 80_000);
+    }
+
+    #[test]
+    fn render_contains_every_field() {
+        let s = Counters::default().snapshot().render();
+        assert!(s.contains("threads_spawned") && s.contains("xla_calls"));
+    }
+}

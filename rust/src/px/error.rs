@@ -1,0 +1,55 @@
+//! Error type shared by all ParalleX runtime components.
+
+use thiserror::Error;
+
+/// Errors surfaced by the ParalleX runtime.
+///
+/// LCOs propagate `PxError` through continuations (a future set to an error
+/// state delivers `Err` to every registered continuation), mirroring HPX's
+/// exception forwarding across asynchronous boundaries.
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum PxError {
+    /// An AGAS lookup failed: the GID was never bound or was unbound.
+    #[error("AGAS: unresolved gid {0}")]
+    Unresolved(String),
+    /// A parcel referenced an action id that no locality registered.
+    #[error("action manager: unknown action id {0}")]
+    UnknownAction(u32),
+    /// Wire-format decode failure (truncated or corrupt parcel).
+    #[error("wire: {0}")]
+    Wire(String),
+    /// An LCO was used against its protocol (e.g. double-set of a future).
+    #[error("LCO protocol violation: {0}")]
+    LcoProtocol(String),
+    /// A value-producing task failed; the error text is forwarded.
+    #[error("remote/async task failed: {0}")]
+    TaskFailed(String),
+    /// The runtime is shutting down; no further work is accepted.
+    #[error("runtime is shutting down")]
+    ShuttingDown,
+    /// Simulated network failure (used by failure-injection tests).
+    #[error("network: {0}")]
+    Net(String),
+}
+
+/// Convenience alias used across the runtime.
+pub type PxResult<T> = Result<T, PxError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_format_their_payload() {
+        let e = PxError::UnknownAction(42);
+        assert!(e.to_string().contains("42"));
+        let e = PxError::Unresolved("gid{7,9}".into());
+        assert!(e.to_string().contains("gid{7,9}"));
+    }
+
+    #[test]
+    fn errors_are_cloneable_and_comparable() {
+        let e = PxError::ShuttingDown;
+        assert_eq!(e.clone(), PxError::ShuttingDown);
+    }
+}

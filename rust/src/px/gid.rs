@@ -1,0 +1,195 @@
+//! Global identifiers (GIDs) for first-class ParalleX objects.
+//!
+//! In ParalleX every referentiable entity — threads, LCOs, data blocks,
+//! processes — carries an immutable global name that is decoupled from its
+//! current placement. A [`Gid`] packs a 32-bit *birthplace* locality (used
+//! only as a hint and for human-readable debugging; the authoritative
+//! mapping lives in AGAS), a 16-bit type tag and a 64-bit sequence number
+//! into a single `u128` so GIDs are cheap to copy, hash and serialize.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Identifies a locality (≈ a cluster node in the paper's terminology).
+pub type LocalityId = u32;
+
+/// Type tag carried inside a GID. Purely diagnostic: AGAS does not
+/// interpret it, but counters and debug output group by it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u16)]
+pub enum GidKind {
+    /// Untyped / application-defined component.
+    Component = 0,
+    /// A future LCO.
+    Future = 1,
+    /// A dataflow LCO.
+    Dataflow = 2,
+    /// A lightweight PX-thread (threads are first-class objects).
+    Thread = 3,
+    /// An AMR data block.
+    Block = 4,
+    /// A ParalleX process.
+    Process = 5,
+}
+
+impl GidKind {
+    fn from_u16(v: u16) -> GidKind {
+        match v {
+            1 => GidKind::Future,
+            2 => GidKind::Dataflow,
+            3 => GidKind::Thread,
+            4 => GidKind::Block,
+            5 => GidKind::Process,
+            _ => GidKind::Component,
+        }
+    }
+}
+
+/// A 128-bit global identifier: `[locality:32 | kind:16 | reserved:16 | seq:64]`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Gid(pub u128);
+
+impl Gid {
+    /// The invalid / null GID. Never bound in AGAS.
+    pub const NULL: Gid = Gid(0);
+
+    /// Assemble a GID from parts.
+    pub fn new(birthplace: LocalityId, kind: GidKind, seq: u64) -> Gid {
+        Gid(((birthplace as u128) << 96) | ((kind as u16 as u128) << 80) | seq as u128)
+    }
+
+    /// The locality on which this GID was minted (a placement *hint* only).
+    pub fn birthplace(self) -> LocalityId {
+        (self.0 >> 96) as u32
+    }
+
+    /// The diagnostic type tag.
+    pub fn kind(self) -> GidKind {
+        GidKind::from_u16((self.0 >> 80) as u16)
+    }
+
+    /// The per-allocator sequence number.
+    pub fn seq(self) -> u64 {
+        self.0 as u64
+    }
+
+    /// True for the null GID.
+    pub fn is_null(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Raw value for wire encoding.
+    pub fn raw(self) -> u128 {
+        self.0
+    }
+
+    /// Rebuild from a wire value.
+    pub fn from_raw(v: u128) -> Gid {
+        Gid(v)
+    }
+}
+
+impl fmt::Debug for Gid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_null() {
+            write!(f, "gid{{null}}")
+        } else {
+            write!(f, "gid{{L{} {:?} #{}}}", self.birthplace(), self.kind(), self.seq())
+        }
+    }
+}
+
+impl fmt::Display for Gid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// Mints GIDs unique within one runtime instance. Each locality owns one
+/// allocator; sequence numbers never repeat (64-bit monotonic counter).
+pub struct GidAllocator {
+    locality: LocalityId,
+    next: AtomicU64,
+}
+
+impl GidAllocator {
+    /// New allocator for `locality`, starting at sequence 1 (0 is reserved
+    /// so that `Gid::NULL` can never be minted).
+    pub fn new(locality: LocalityId) -> Self {
+        GidAllocator { locality, next: AtomicU64::new(1) }
+    }
+
+    /// Mint a fresh GID of the given kind.
+    pub fn alloc(&self, kind: GidKind) -> Gid {
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        Gid::new(self.locality, kind, seq)
+    }
+
+    /// Number of GIDs minted so far.
+    pub fn minted(&self) -> u64 {
+        self.next.load(Ordering::Relaxed) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{prop_check, Rng};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let g = Gid::new(7, GidKind::Dataflow, 0xDEAD_BEEF_1234);
+        assert_eq!(g.birthplace(), 7);
+        assert_eq!(g.kind(), GidKind::Dataflow);
+        assert_eq!(g.seq(), 0xDEAD_BEEF_1234);
+    }
+
+    #[test]
+    fn null_gid_is_never_minted() {
+        let a = GidAllocator::new(0);
+        for _ in 0..100 {
+            assert!(!a.alloc(GidKind::Component).is_null());
+        }
+        assert_eq!(a.minted(), 100);
+    }
+
+    #[test]
+    fn allocators_on_distinct_localities_never_collide() {
+        let a = GidAllocator::new(1);
+        let b = GidAllocator::new(2);
+        let ga: Vec<Gid> = (0..50).map(|_| a.alloc(GidKind::Thread)).collect();
+        let gb: Vec<Gid> = (0..50).map(|_| b.alloc(GidKind::Thread)).collect();
+        for x in &ga {
+            assert!(!gb.contains(x));
+        }
+    }
+
+    #[test]
+    fn prop_pack_unpack_any_fields() {
+        prop_check("gid pack/unpack", 500, |rng: &mut Rng| {
+            let loc = rng.next_u32();
+            let seq = rng.next_u64();
+            let kind = match rng.below(6) {
+                0 => GidKind::Component,
+                1 => GidKind::Future,
+                2 => GidKind::Dataflow,
+                3 => GidKind::Thread,
+                4 => GidKind::Block,
+                _ => GidKind::Process,
+            };
+            let g = Gid::new(loc, kind, seq);
+            assert_eq!(g.birthplace(), loc);
+            assert_eq!(g.kind(), kind);
+            assert_eq!(g.seq(), seq);
+            let g2 = Gid::from_raw(g.raw());
+            assert_eq!(g, g2);
+        });
+    }
+
+    #[test]
+    fn debug_format_mentions_locality_and_kind() {
+        let g = Gid::new(3, GidKind::Block, 9);
+        let s = format!("{g:?}");
+        assert!(s.contains("L3") && s.contains("Block") && s.contains("#9"));
+    }
+}

@@ -1,0 +1,1015 @@
+//! Local Control Objects (LCOs): event-driven synchronization.
+//!
+//! LCOs organize flow control in ParalleX (§II): they create PX-threads in
+//! response to events, protect shared state, and schedule follow-on work
+//! "on the fly" so every function proceeds as far as possible without
+//! global barriers. This module provides the full set the paper lists —
+//! **future**, **dataflow**, **mutex**, **counting semaphore**,
+//! **full-empty bit** — plus the *and-gate* and a (deliberately heavier)
+//! *global barrier* used by the barrier-mode comparison drivers.
+//!
+//! Suspension model: a PX-thread that would block instead registers a
+//! continuation closure on the LCO and returns; the trigger spawns the
+//! continuation as a fresh PX-thread at [`Priority::High`] (LCO
+//! resumptions preempt new application threads, as in HPX). Each LCO also
+//! offers an OS-blocking wait for use from *off-pool* threads (main,
+//! tests, benches) — never call those from inside a PX-thread, as they
+//! would occupy a worker core.
+//!
+//! Payloads are `T: Clone` because one LCO may feed many continuations
+//! (the AMR payloads are small `Vec<f64>` ghost zones and scalars).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::counters::Counters;
+use super::error::{PxError, PxResult};
+use super::sched::Priority;
+use super::thread::Spawner;
+
+type Cont<T> = Box<dyn FnOnce(&Spawner, PxResult<T>) + Send>;
+
+// ---------------------------------------------------------------- Future
+
+enum FutureState<T> {
+    Empty(Vec<Cont<T>>),
+    Ready(PxResult<T>),
+}
+
+struct FutureInner<T> {
+    state: Mutex<FutureState<T>>,
+    cv: Condvar,
+    counters: Option<Arc<Counters>>,
+}
+
+/// A write-once future LCO.
+///
+/// Acts as a proxy for a value not yet computed; consumers either chain a
+/// continuation ([`Future::when_ready`]) or block an OS thread
+/// ([`Future::wait`]). Errors propagate: resolving with an error delivers
+/// `Err` to every continuation, mirroring HPX exception forwarding across
+/// asynchronous boundaries.
+pub struct Future<T> {
+    inner: Arc<FutureInner<T>>,
+}
+
+impl<T> Clone for Future<T> {
+    fn clone(&self) -> Self {
+        Future { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Clone + Send + 'static> Default for Future<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Clone + Send + 'static> Future<T> {
+    /// New empty future.
+    pub fn new() -> Future<T> {
+        Self::build(None)
+    }
+
+    /// New empty future that reports suspension/resumption counter events.
+    pub fn with_counters(counters: Arc<Counters>) -> Future<T> {
+        Self::build(Some(counters))
+    }
+
+    fn build(counters: Option<Arc<Counters>>) -> Future<T> {
+        Future {
+            inner: Arc::new(FutureInner {
+                state: Mutex::new(FutureState::Empty(Vec::new())),
+                cv: Condvar::new(),
+                counters,
+            }),
+        }
+    }
+
+    /// Resolve with a value. Panics on double-set (protocol violation).
+    pub fn set(&self, sp: &Spawner, value: T) {
+        self.complete(sp, Ok(value));
+    }
+
+    /// Resolve with an error; continuations receive `Err`.
+    pub fn set_error(&self, sp: &Spawner, err: PxError) {
+        self.complete(sp, Err(err));
+    }
+
+    fn complete(&self, sp: &Spawner, r: PxResult<T>) {
+        if let Some(c) = &self.inner.counters {
+            c.lco_triggers.inc();
+        }
+        let conts = {
+            let mut g = self.inner.state.lock().unwrap();
+            match std::mem::replace(&mut *g, FutureState::Ready(r.clone())) {
+                FutureState::Empty(conts) => {
+                    self.inner.cv.notify_all();
+                    conts
+                }
+                FutureState::Ready(_) => panic!("LCO protocol violation: future set twice"),
+            }
+        };
+        let n = conts.len() as u64;
+        if let Some(c) = &self.inner.counters {
+            c.resumptions.add(n);
+        }
+        for f in conts {
+            let v = r.clone();
+            sp.spawn_prio(Priority::High, move |sp| f(sp, v));
+        }
+    }
+
+    /// Register a continuation to run (as a High-priority PX-thread) when
+    /// the value arrives; scheduled immediately if already resolved.
+    pub fn when_ready<F: FnOnce(&Spawner, PxResult<T>) + Send + 'static>(&self, sp: &Spawner, f: F) {
+        let mut g = self.inner.state.lock().unwrap();
+        match &mut *g {
+            FutureState::Empty(conts) => {
+                if let Some(c) = &self.inner.counters {
+                    c.suspensions.inc();
+                }
+                conts.push(Box::new(f));
+            }
+            FutureState::Ready(v) => {
+                let v = v.clone();
+                drop(g);
+                if let Some(c) = &self.inner.counters {
+                    c.resumptions.inc();
+                }
+                sp.spawn_prio(Priority::High, move |sp| f(sp, v));
+            }
+        }
+    }
+
+    /// True once resolved (value or error).
+    pub fn is_ready(&self) -> bool {
+        matches!(*self.inner.state.lock().unwrap(), FutureState::Ready(_))
+    }
+
+    /// Peek at the resolved value without blocking.
+    pub fn try_get(&self) -> Option<PxResult<T>> {
+        match &*self.inner.state.lock().unwrap() {
+            FutureState::Ready(v) => Some(v.clone()),
+            FutureState::Empty(_) => None,
+        }
+    }
+
+    /// OS-blocking wait (for off-pool threads only).
+    pub fn wait(&self) -> PxResult<T> {
+        let mut g = self.inner.state.lock().unwrap();
+        loop {
+            match &*g {
+                FutureState::Ready(v) => return v.clone(),
+                FutureState::Empty(_) => g = self.inner.cv.wait(g).unwrap(),
+            }
+        }
+    }
+
+    /// OS-blocking wait with a deadline; `None` on timeout.
+    pub fn wait_timeout(&self, d: std::time::Duration) -> Option<PxResult<T>> {
+        let deadline = std::time::Instant::now() + d;
+        let mut g = self.inner.state.lock().unwrap();
+        loop {
+            if let FutureState::Ready(v) = &*g {
+                return Some(v.clone());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.inner.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+}
+
+// -------------------------------------------------------------- Dataflow
+
+struct DataflowInner<T> {
+    slots: Mutex<DfState<T>>,
+    counters: Option<Arc<Counters>>,
+}
+
+struct DfState<T> {
+    inputs: Vec<Option<PxResult<T>>>,
+    missing: usize,
+    action: Option<Box<dyn FnOnce(&Spawner, Vec<PxResult<T>>) + Send>>,
+    fired: bool,
+}
+
+/// The dataflow LCO: fires a follow-on action exactly once, when all of
+/// its `n` inputs have been supplied.
+///
+/// This is the construct the AMR driver uses to replace the global
+/// timestep barrier: each block-update thread is the action of a dataflow
+/// LCO whose inputs are the neighbouring blocks' results at the required
+/// timestep — "points in the computational domain are updated when those
+/// points in their domain of dependence have been updated" (§III).
+pub struct Dataflow<T> {
+    inner: Arc<DataflowInner<T>>,
+}
+
+impl<T> Clone for Dataflow<T> {
+    fn clone(&self) -> Self {
+        Dataflow { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Clone + Send + 'static> Dataflow<T> {
+    /// A dataflow LCO expecting `n` inputs, triggering `action` when full.
+    pub fn new<F>(n: usize, action: F) -> Dataflow<T>
+    where
+        F: FnOnce(&Spawner, Vec<PxResult<T>>) + Send + 'static,
+    {
+        Self::build(n, action, None)
+    }
+
+    /// As [`Dataflow::new`] with counter reporting.
+    pub fn with_counters<F>(n: usize, counters: Arc<Counters>, action: F) -> Dataflow<T>
+    where
+        F: FnOnce(&Spawner, Vec<PxResult<T>>) + Send + 'static,
+    {
+        Self::build(n, action, Some(counters))
+    }
+
+    fn build<F>(n: usize, action: F, counters: Option<Arc<Counters>>) -> Dataflow<T>
+    where
+        F: FnOnce(&Spawner, Vec<PxResult<T>>) + Send + 'static,
+    {
+        assert!(n > 0, "dataflow needs at least one input");
+        Dataflow {
+            inner: Arc::new(DataflowInner {
+                slots: Mutex::new(DfState {
+                    inputs: (0..n).map(|_| None).collect(),
+                    missing: n,
+                    action: Some(Box::new(action)),
+                    fired: false,
+                }),
+                counters,
+            }),
+        }
+    }
+
+    /// Supply input `i`. Fires the action (as a High-priority PX-thread)
+    /// when this was the last missing input. Panics on double-set of a
+    /// slot or out-of-range index (protocol violations).
+    pub fn set(&self, sp: &Spawner, i: usize, v: PxResult<T>) {
+        if let Some(c) = &self.inner.counters {
+            c.lco_triggers.inc();
+        }
+        let ready = {
+            let mut g = self.inner.slots.lock().unwrap();
+            assert!(i < g.inputs.len(), "dataflow input {i} out of range");
+            assert!(g.inputs[i].is_none(), "dataflow input {i} set twice");
+            g.inputs[i] = Some(v);
+            g.missing -= 1;
+            if g.missing == 0 {
+                assert!(!g.fired);
+                g.fired = true;
+                let inputs = g.inputs.iter_mut().map(|s| s.take().unwrap()).collect::<Vec<_>>();
+                let action = g.action.take().unwrap();
+                Some((inputs, action))
+            } else {
+                None
+            }
+        };
+        if let Some((inputs, action)) = ready {
+            if let Some(c) = &self.inner.counters {
+                c.resumptions.inc();
+            }
+            sp.spawn_prio(Priority::High, move |sp| action(sp, inputs));
+        }
+    }
+
+    /// Number of inputs still missing (diagnostics).
+    pub fn missing(&self) -> usize {
+        self.inner.slots.lock().unwrap().missing
+    }
+}
+
+// --------------------------------------------------------------- AndGate
+
+/// Counting trigger: fires its action after `n` [`AndGate::arrive`] calls.
+/// Equivalent to a `Dataflow<()>` that ignores input order/identity; used
+/// for "all K children finished" joins where no value flows.
+pub struct AndGate {
+    inner: Arc<Mutex<AndGateState>>,
+}
+
+struct AndGateState {
+    remaining: usize,
+    action: Option<Box<dyn FnOnce(&Spawner) + Send>>,
+}
+
+impl Clone for AndGate {
+    fn clone(&self) -> Self {
+        AndGate { inner: self.inner.clone() }
+    }
+}
+
+impl AndGate {
+    /// Gate expecting `n` arrivals.
+    pub fn new<F: FnOnce(&Spawner) + Send + 'static>(n: usize, action: F) -> AndGate {
+        assert!(n > 0);
+        AndGate {
+            inner: Arc::new(Mutex::new(AndGateState { remaining: n, action: Some(Box::new(action)) })),
+        }
+    }
+
+    /// Record one arrival; the `n`-th spawns the action.
+    pub fn arrive(&self, sp: &Spawner) {
+        let fire = {
+            let mut g = self.inner.lock().unwrap();
+            assert!(g.remaining > 0, "and-gate over-arrived");
+            g.remaining -= 1;
+            if g.remaining == 0 {
+                g.action.take()
+            } else {
+                None
+            }
+        };
+        if let Some(f) = fire {
+            sp.spawn_prio(Priority::High, move |sp| f(sp));
+        }
+    }
+
+    /// Arrivals still awaited.
+    pub fn remaining(&self) -> usize {
+        self.inner.lock().unwrap().remaining
+    }
+}
+
+// ------------------------------------------------------------- PxMutex
+
+/// An asynchronous mutex LCO guarding a value of type `T`.
+///
+/// `with_lock` runs the critical section as soon as the lock is free —
+/// immediately inline if uncontended, otherwise queued FIFO and executed
+/// as a PX-thread when the current holder releases. The critical section
+/// must be short and non-blocking (cooperative scheduling).
+pub struct PxMutex<T> {
+    inner: Arc<PxMutexInner<T>>,
+}
+
+struct PxMutexInner<T> {
+    state: Mutex<PxMutexState<T>>,
+}
+
+struct PxMutexState<T> {
+    value: T,
+    locked: bool,
+    waiters: VecDeque<Box<dyn FnOnce(&mut T) + Send>>,
+}
+
+impl<T> Clone for PxMutex<T> {
+    fn clone(&self) -> Self {
+        PxMutex { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Send + 'static> PxMutex<T> {
+    /// Wrap `value` in an async mutex.
+    pub fn new(value: T) -> PxMutex<T> {
+        PxMutex {
+            inner: Arc::new(PxMutexInner {
+                state: Mutex::new(PxMutexState { value, locked: false, waiters: VecDeque::new() }),
+            }),
+        }
+    }
+
+    /// Run `f` with exclusive access to the value; queues if held.
+    pub fn with_lock<F: FnOnce(&mut T) + Send + 'static>(&self, sp: &Spawner, f: F) {
+        {
+            let mut g = self.inner.state.lock().unwrap();
+            if g.locked {
+                g.waiters.push_back(Box::new(f));
+                return;
+            }
+            g.locked = true;
+        }
+        // Run the critical section without holding the state lock, so the
+        // section itself may re-enter other LCOs.
+        self.run_section(sp, Box::new(f));
+    }
+
+    fn run_section(&self, sp: &Spawner, f: Box<dyn FnOnce(&mut T) + Send>) {
+        {
+            let mut g = self.inner.state.lock().unwrap();
+            f(&mut g.value);
+        }
+        // Release: hand over to the next waiter, if any, as a PX-thread.
+        let next = {
+            let mut g = self.inner.state.lock().unwrap();
+            match g.waiters.pop_front() {
+                Some(w) => Some(w),
+                None => {
+                    g.locked = false;
+                    None
+                }
+            }
+        };
+        if let Some(w) = next {
+            let this = self.clone();
+            sp.spawn_prio(Priority::High, move |sp| this.run_section(sp, w));
+        }
+    }
+
+    /// Snapshot the value via clone (diagnostics).
+    pub fn snapshot(&self) -> T
+    where
+        T: Clone,
+    {
+        self.inner.state.lock().unwrap().value.clone()
+    }
+}
+
+// ---------------------------------------------------- CountingSemaphore
+
+/// Counting semaphore LCO: `acquire_then` runs its body once a permit is
+/// available (inline if permits remain, else queued FIFO for `release`).
+pub struct CountingSemaphore {
+    inner: Arc<Mutex<SemState>>,
+}
+
+struct SemState {
+    permits: usize,
+    waiters: VecDeque<Box<dyn FnOnce(&Spawner) + Send>>,
+}
+
+impl Clone for CountingSemaphore {
+    fn clone(&self) -> Self {
+        CountingSemaphore { inner: self.inner.clone() }
+    }
+}
+
+impl CountingSemaphore {
+    /// Semaphore initialized with `permits`.
+    pub fn new(permits: usize) -> CountingSemaphore {
+        CountingSemaphore {
+            inner: Arc::new(Mutex::new(SemState { permits, waiters: VecDeque::new() })),
+        }
+    }
+
+    /// Run `f` once a permit is available; the permit is held until
+    /// [`CountingSemaphore::release`] is called (by `f` or later work it
+    /// arranges — split-phase style).
+    pub fn acquire_then<F: FnOnce(&Spawner) + Send + 'static>(&self, sp: &Spawner, f: F) {
+        let run_now = {
+            let mut g = self.inner.lock().unwrap();
+            if g.permits > 0 {
+                g.permits -= 1;
+                true
+            } else {
+                g.waiters.push_back(Box::new(f));
+                return;
+            }
+        };
+        debug_assert!(run_now);
+        f(sp);
+    }
+
+    /// Return a permit, waking the oldest waiter (which inherits it).
+    pub fn release(&self, sp: &Spawner) {
+        let next = {
+            let mut g = self.inner.lock().unwrap();
+            match g.waiters.pop_front() {
+                Some(w) => Some(w),
+                None => {
+                    g.permits += 1;
+                    None
+                }
+            }
+        };
+        if let Some(w) = next {
+            sp.spawn_prio(Priority::High, move |sp| w(sp));
+        }
+    }
+
+    /// Permits currently available.
+    pub fn available(&self) -> usize {
+        self.inner.lock().unwrap().permits
+    }
+}
+
+// ---------------------------------------------------------- FullEmptyBit
+
+/// Full/empty-bit LCO (classic Tera/HEP-style synchronized cell).
+///
+/// `read_when_full` consumes the value and leaves the cell empty;
+/// `write_when_empty` fills it and releases one pending reader. Multiple
+/// writers queue; multiple readers queue. Producer/consumer pairs need no
+/// further synchronization.
+pub struct FullEmptyBit<T> {
+    inner: Arc<Mutex<FebState<T>>>,
+}
+
+struct FebState<T> {
+    value: Option<T>,
+    readers: VecDeque<Box<dyn FnOnce(&Spawner, T) + Send>>,
+    writers: VecDeque<(T, Box<dyn FnOnce(&Spawner) + Send>)>,
+}
+
+impl<T> Clone for FullEmptyBit<T> {
+    fn clone(&self) -> Self {
+        FullEmptyBit { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Send + 'static> Default for FullEmptyBit<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send + 'static> FullEmptyBit<T> {
+    /// New empty cell.
+    pub fn new() -> FullEmptyBit<T> {
+        FullEmptyBit {
+            inner: Arc::new(Mutex::new(FebState {
+                value: None,
+                readers: VecDeque::new(),
+                writers: VecDeque::new(),
+            })),
+        }
+    }
+
+    /// Consume the value when full; empties the cell and admits a queued
+    /// writer if one is waiting.
+    pub fn read_when_full<F: FnOnce(&Spawner, T) + Send + 'static>(&self, sp: &Spawner, f: F) {
+        let action = {
+            let mut g = self.inner.lock().unwrap();
+            match g.value.take() {
+                Some(v) => {
+                    // Cell just went empty: admit one queued writer.
+                    if let Some((wv, wk)) = g.writers.pop_front() {
+                        g.value = Some(wv);
+                        // Writer's completion continuation runs as a thread.
+                        sp.spawn_prio(Priority::High, move |sp| wk(sp));
+                        // If readers are queued, the new value must flow to
+                        // the oldest one rather than sit in the cell.
+                        if let Some(r) = g.readers.pop_front() {
+                            let v2 = g.value.take().unwrap();
+                            sp.spawn_prio(Priority::High, move |sp| r(sp, v2));
+                        }
+                    }
+                    Some(v)
+                }
+                None => {
+                    g.readers.push_back(Box::new(f));
+                    return;
+                }
+            }
+        };
+        if let Some(v) = action {
+            f(sp, v);
+        }
+    }
+
+    /// Fill the cell when empty; `k` continues after the write lands.
+    pub fn write_when_empty<F: FnOnce(&Spawner) + Send + 'static>(&self, sp: &Spawner, v: T, k: F) {
+        let inline: Option<(Box<dyn FnOnce(&Spawner, T) + Send>, T)> = {
+            let mut g = self.inner.lock().unwrap();
+            if g.value.is_some() {
+                g.writers.push_back((v, Box::new(k)));
+                return;
+            }
+            // Empty: if a reader waits, hand the value straight through.
+            match g.readers.pop_front() {
+                Some(r) => Some((r, v)),
+                None => {
+                    g.value = Some(v);
+                    None
+                }
+            }
+        };
+        if let Some((r, v)) = inline {
+            let rk = move |sp: &Spawner, v: T| r(sp, v);
+            sp.spawn_prio(Priority::High, move |sp| rk(sp, v));
+        }
+        k(sp);
+    }
+
+    /// True when the cell currently holds a value.
+    pub fn is_full(&self) -> bool {
+        self.inner.lock().unwrap().value.is_some()
+    }
+}
+
+// ---------------------------------------------------------- GlobalBarrier
+
+/// A global barrier over `n` participants — the construct ParalleX exists
+/// to *avoid*. Provided for the barrier-mode AMR driver (§IV Fig 6
+/// comparison) and implemented as an and-gate that resets each round.
+pub struct GlobalBarrier {
+    inner: Arc<Mutex<BarrierState>>,
+}
+
+struct BarrierState {
+    n: usize,
+    arrived: usize,
+    generation: u64,
+    waiters: Vec<Box<dyn FnOnce(&Spawner) + Send>>,
+}
+
+impl Clone for GlobalBarrier {
+    fn clone(&self) -> Self {
+        GlobalBarrier { inner: self.inner.clone() }
+    }
+}
+
+impl GlobalBarrier {
+    /// Barrier over `n` participants, reusable across rounds.
+    pub fn new(n: usize) -> GlobalBarrier {
+        assert!(n > 0);
+        GlobalBarrier {
+            inner: Arc::new(Mutex::new(BarrierState {
+                n,
+                arrived: 0,
+                generation: 0,
+                waiters: Vec::new(),
+            })),
+        }
+    }
+
+    /// Arrive and continue with `k` once all `n` participants of this
+    /// round have arrived. The last arrival releases everyone.
+    pub fn arrive_then<F: FnOnce(&Spawner) + Send + 'static>(&self, sp: &Spawner, k: F) {
+        let release = {
+            let mut g = self.inner.lock().unwrap();
+            g.arrived += 1;
+            if g.arrived == g.n {
+                g.arrived = 0;
+                g.generation += 1;
+                let mut ws = std::mem::take(&mut g.waiters);
+                ws.push(Box::new(k));
+                Some(ws)
+            } else {
+                g.waiters.push(Box::new(k));
+                None
+            }
+        };
+        if let Some(ws) = release {
+            for w in ws {
+                sp.spawn_prio(Priority::High, move |sp| w(sp));
+            }
+        }
+    }
+
+    /// Completed rounds (diagnostics).
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::counters::Counters;
+    use crate::px::thread::{global_queue_manager, local_priority_manager, ThreadManager};
+    use crate::testkit::prop::{prop_check, Rng};
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    fn tm() -> ThreadManager {
+        local_priority_manager(4, Arc::new(Counters::default()))
+    }
+
+    #[test]
+    fn future_set_then_when_ready() {
+        let t = tm();
+        let sp = t.spawner();
+        let f: Future<u32> = Future::new();
+        f.set(&sp, 42);
+        let got = Arc::new(AtomicU64::new(0));
+        let g2 = got.clone();
+        f.when_ready(&sp, move |_, v| {
+            g2.store(v.unwrap() as u64, Ordering::SeqCst);
+        });
+        t.wait_quiescent();
+        assert_eq!(got.load(Ordering::SeqCst), 42);
+    }
+
+    #[test]
+    fn future_when_ready_then_set() {
+        let t = tm();
+        let sp = t.spawner();
+        let f: Future<u32> = Future::new();
+        let got = Arc::new(AtomicU64::new(0));
+        let g2 = got.clone();
+        f.when_ready(&sp, move |_, v| {
+            g2.store(v.unwrap() as u64, Ordering::SeqCst);
+        });
+        assert!(!f.is_ready());
+        f.set(&sp, 7);
+        t.wait_quiescent();
+        assert_eq!(got.load(Ordering::SeqCst), 7);
+        assert!(f.is_ready());
+    }
+
+    #[test]
+    fn future_fans_out_to_many_continuations() {
+        let t = tm();
+        let sp = t.spawner();
+        let f: Future<Vec<f64>> = Future::new();
+        let sum = Arc::new(Mutex::new(0.0));
+        for _ in 0..10 {
+            let sum = sum.clone();
+            f.when_ready(&sp, move |_, v| {
+                *sum.lock().unwrap() += v.unwrap().iter().sum::<f64>();
+            });
+        }
+        f.set(&sp, vec![1.0, 2.0]);
+        t.wait_quiescent();
+        assert_eq!(*sum.lock().unwrap(), 30.0);
+    }
+
+    #[test]
+    fn future_error_propagates_to_all_consumers() {
+        let t = tm();
+        let sp = t.spawner();
+        let f: Future<u32> = Future::new();
+        let errs = Arc::new(AtomicUsize::new(0));
+        for _ in 0..5 {
+            let errs = errs.clone();
+            f.when_ready(&sp, move |_, v| {
+                if matches!(v, Err(PxError::TaskFailed(_))) {
+                    errs.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        f.set_error(&sp, PxError::TaskFailed("stencil diverged".into()));
+        t.wait_quiescent();
+        assert_eq!(errs.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "future set twice")]
+    fn future_double_set_panics() {
+        let t = tm();
+        let sp = t.spawner();
+        let f: Future<u32> = Future::new();
+        f.set(&sp, 1);
+        f.set(&sp, 2);
+    }
+
+    #[test]
+    fn future_blocking_wait_from_off_pool() {
+        let t = tm();
+        let sp = t.spawner();
+        let f: Future<String> = Future::new();
+        let f2 = f.clone();
+        sp.spawn(move |sp| f2.set(sp, "done".to_string()));
+        assert_eq!(f.wait().unwrap(), "done");
+    }
+
+    #[test]
+    fn future_wait_timeout_times_out() {
+        let f: Future<u32> = Future::new();
+        assert!(f.wait_timeout(std::time::Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn dataflow_fires_once_when_all_inputs_arrive() {
+        let t = tm();
+        let sp = t.spawner();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = fired.clone();
+        let df: Dataflow<f64> = Dataflow::new(3, move |_, inputs| {
+            assert_eq!(inputs.len(), 3);
+            let s: f64 = inputs.into_iter().map(|r| r.unwrap()).sum();
+            assert_eq!(s, 6.0);
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        df.set(&sp, 0, Ok(1.0));
+        assert_eq!(df.missing(), 2);
+        df.set(&sp, 2, Ok(3.0));
+        df.set(&sp, 1, Ok(2.0));
+        t.wait_quiescent();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "set twice")]
+    fn dataflow_double_input_panics() {
+        let t = tm();
+        let sp = t.spawner();
+        let df: Dataflow<u32> = Dataflow::new(2, |_, _| {});
+        df.set(&sp, 0, Ok(1));
+        df.set(&sp, 0, Ok(2));
+    }
+
+    #[test]
+    fn dataflow_forwards_input_errors_to_action() {
+        let t = tm();
+        let sp = t.spawner();
+        let saw_err = Arc::new(AtomicUsize::new(0));
+        let s2 = saw_err.clone();
+        let df: Dataflow<u32> = Dataflow::new(2, move |_, inputs| {
+            if inputs.iter().any(|r| r.is_err()) {
+                s2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        df.set(&sp, 0, Ok(1));
+        df.set(&sp, 1, Err(PxError::TaskFailed("upstream".into())));
+        t.wait_quiescent();
+        assert_eq!(saw_err.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn and_gate_fires_after_n_arrivals() {
+        let t = tm();
+        let sp = t.spawner();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = fired.clone();
+        let gate = AndGate::new(5, move |_| {
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        for _ in 0..4 {
+            gate.arrive(&sp);
+            assert_eq!(fired.load(Ordering::SeqCst), 0);
+        }
+        gate.arrive(&sp);
+        t.wait_quiescent();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn px_mutex_serializes_critical_sections() {
+        let t = tm();
+        let sp = t.spawner();
+        let m = PxMutex::new(0u64);
+        for _ in 0..1000 {
+            let m2 = m.clone();
+            sp.spawn(move |sp| {
+                m2.with_lock(sp, |v| *v += 1);
+            });
+        }
+        t.wait_quiescent();
+        assert_eq!(m.snapshot(), 1000);
+    }
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let t = tm();
+        let sp = t.spawner();
+        let sem = CountingSemaphore::new(2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let sem2 = sem.clone();
+            let live = live.clone();
+            let peak = peak.clone();
+            sem.acquire_then(&sp, move |sp| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                live.fetch_sub(1, Ordering::SeqCst);
+                sem2.release(sp);
+            });
+        }
+        t.wait_quiescent();
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+        assert_eq!(sem.available(), 2);
+    }
+
+    #[test]
+    fn full_empty_bit_producer_consumer() {
+        let t = tm();
+        let sp = t.spawner();
+        let feb: FullEmptyBit<u32> = FullEmptyBit::new();
+        let sum = Arc::new(AtomicU64::new(0));
+        // Consumer registered first (cell empty -> queues).
+        let s2 = sum.clone();
+        feb.read_when_full(&sp, move |_, v| {
+            s2.fetch_add(v as u64, Ordering::SeqCst);
+        });
+        feb.write_when_empty(&sp, 41, |_| {});
+        t.wait_quiescent();
+        assert_eq!(sum.load(Ordering::SeqCst), 41);
+        assert!(!feb.is_full());
+    }
+
+    #[test]
+    fn full_empty_bit_write_then_read_inline() {
+        let t = tm();
+        let sp = t.spawner();
+        let feb: FullEmptyBit<u32> = FullEmptyBit::new();
+        feb.write_when_empty(&sp, 5, |_| {});
+        assert!(feb.is_full());
+        let got = Arc::new(AtomicU64::new(0));
+        let g2 = got.clone();
+        feb.read_when_full(&sp, move |_, v| {
+            g2.store(v as u64, Ordering::SeqCst);
+        });
+        t.wait_quiescent();
+        assert_eq!(got.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn full_empty_second_writer_queues_until_read() {
+        let t = tm();
+        let sp = t.spawner();
+        let feb: FullEmptyBit<u32> = FullEmptyBit::new();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        feb.write_when_empty(&sp, 1, |_| {});
+        {
+            let order = order.clone();
+            feb.write_when_empty(&sp, 2, move |_| order.lock().unwrap().push("w2-landed"));
+        }
+        assert!(feb.is_full());
+        let o2 = order.clone();
+        feb.read_when_full(&sp, move |_, v| o2.lock().unwrap().push(if v == 1 { "r1" } else { "r?" }));
+        t.wait_quiescent();
+        let seen = order.lock().unwrap().clone();
+        assert!(seen.contains(&"r1") && seen.contains(&"w2-landed"), "{seen:?}");
+        assert!(feb.is_full()); // second writer's value now occupies the cell
+    }
+
+    #[test]
+    fn global_barrier_releases_all_each_round() {
+        let t = tm();
+        let sp = t.spawner();
+        let bar = GlobalBarrier::new(4);
+        let passed = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let bar = bar.clone();
+            let passed = passed.clone();
+            sp.spawn(move |sp| {
+                let p2 = passed.clone();
+                bar.arrive_then(sp, move |_| {
+                    p2.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }
+        t.wait_quiescent();
+        assert_eq!(passed.load(Ordering::SeqCst), 4);
+        assert_eq!(bar.generation(), 1);
+    }
+
+    #[test]
+    fn prop_dataflow_any_arrival_order_fires_once_with_all_values() {
+        prop_check("dataflow arrival order", 50, |rng: &mut Rng| {
+            let n = rng.range(1, 12);
+            let t = if rng.chance(0.5) {
+                local_priority_manager(rng.range(1, 5), Arc::new(Counters::default()))
+            } else {
+                global_queue_manager(rng.range(1, 5), Arc::new(Counters::default()))
+            };
+            let sp = t.spawner();
+            let fired = Arc::new(AtomicUsize::new(0));
+            let f2 = fired.clone();
+            let df: Dataflow<u64> = Dataflow::new(n, move |_, inputs| {
+                let mut got: Vec<u64> = inputs.into_iter().map(|r| r.unwrap()).collect();
+                got.sort_unstable();
+                assert_eq!(got, (0..got.len() as u64).collect::<Vec<_>>());
+                f2.fetch_add(1, Ordering::SeqCst);
+            });
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            for i in order {
+                let df = df.clone();
+                sp.spawn(move |sp| df.set(sp, i, Ok(i as u64)));
+            }
+            t.wait_quiescent();
+            assert_eq!(fired.load(Ordering::SeqCst), 1);
+        });
+    }
+
+    #[test]
+    fn prop_future_many_racing_consumers_all_see_value() {
+        prop_check("future racing consumers", 30, |rng: &mut Rng| {
+            let t = local_priority_manager(rng.range(1, 5), Arc::new(Counters::default()));
+            let sp = t.spawner();
+            let f: Future<u64> = Future::new();
+            let n = rng.range(1, 30);
+            let seen = Arc::new(AtomicUsize::new(0));
+            for _ in 0..n {
+                let f = f.clone();
+                let seen = seen.clone();
+                sp.spawn(move |sp| {
+                    f.when_ready(sp, move |_, v| {
+                        assert_eq!(v.unwrap(), 99);
+                        seen.fetch_add(1, Ordering::SeqCst);
+                    });
+                });
+            }
+            let f2 = f.clone();
+            sp.spawn(move |sp| f2.set(sp, 99));
+            t.wait_quiescent();
+            assert_eq!(seen.load(Ordering::SeqCst), n);
+        });
+    }
+
+    #[test]
+    fn suspension_counters_are_recorded() {
+        let counters = Arc::new(Counters::default());
+        let t = local_priority_manager(2, counters.clone());
+        let sp = t.spawner();
+        let f: Future<u32> = Future::with_counters(counters.clone());
+        f.when_ready(&sp, |_, _| {});
+        f.set(&sp, 1);
+        t.wait_quiescent();
+        assert_eq!(counters.suspensions.get(), 1);
+        assert_eq!(counters.resumptions.get(), 1);
+        assert_eq!(counters.lco_triggers.get(), 1);
+    }
+}

@@ -1,0 +1,274 @@
+//! Localities: the unit of physical domain in ParalleX.
+//!
+//! A locality is "a contiguous physical domain, managing intra-locality
+//! latencies, while guaranteeing compound atomic operations on local
+//! state" (§II) — one cluster node in the paper's interpretation. Each
+//! locality composes a parcel port, an action manager, a thread manager
+//! and an AGAS client (Fig 1 walkthrough). [`LocalityCtx`] is the service
+//! handle PX-threads receive to reach all of them.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::action::{ActionRegistry, ACT_PING, ACT_SET_FUTURE_ERROR, ACT_SET_FUTURE_F64S};
+use super::agas::AgasClient;
+use super::counters::Counters;
+use super::error::{PxError, PxResult};
+use super::gid::{Gid, GidAllocator, GidKind, LocalityId};
+use super::lco::Future;
+use super::net::SimNet;
+use super::parcel::{ActionId, Parcel};
+use super::sched::Priority;
+use super::thread::Spawner;
+use super::wire::{Dec, Enc};
+
+/// Maximum AGAS-stale forwarding hops before a parcel is failed.
+const MAX_HOPS: u8 = 8;
+
+/// Per-locality service context: everything a PX-thread can reach.
+pub struct LocalityCtx {
+    /// This locality's id.
+    pub id: LocalityId,
+    /// Spawn PX-threads on this locality's thread manager.
+    pub spawner: Spawner,
+    /// AGAS client (cached resolve, bind, migrate).
+    pub agas: AgasClient,
+    /// GID mint for objects born here.
+    pub gids: GidAllocator,
+    /// The interconnect fabric.
+    pub net: Arc<SimNet>,
+    /// Global action registry.
+    pub actions: Arc<ActionRegistry>,
+    /// This locality's performance counters.
+    pub counters: Arc<Counters>,
+    /// Component store: GID-addressable local objects (LCO proxies, data
+    /// blocks). Parcels target these via their GID.
+    components: Mutex<HashMap<Gid, Arc<dyn Any + Send + Sync>>>,
+}
+
+impl LocalityCtx {
+    /// Assemble a locality context (used by the runtime builder).
+    pub fn new(
+        id: LocalityId,
+        spawner: Spawner,
+        agas: AgasClient,
+        net: Arc<SimNet>,
+        actions: Arc<ActionRegistry>,
+        counters: Arc<Counters>,
+    ) -> Arc<LocalityCtx> {
+        Arc::new(LocalityCtx {
+            id,
+            spawner,
+            agas,
+            gids: GidAllocator::new(id),
+            net,
+            actions,
+            counters,
+            components: Mutex::new(HashMap::new()),
+        })
+    }
+
+    // ------------------------------------------------------- components
+
+    /// Register a local object under a fresh GID (bound in AGAS).
+    pub fn register_component<T: Any + Send + Sync>(
+        self: &Arc<Self>,
+        kind: GidKind,
+        obj: T,
+    ) -> PxResult<Gid> {
+        let gid = self.gids.alloc(kind);
+        self.agas.bind(gid, self.id)?;
+        self.components.lock().unwrap().insert(gid, Arc::new(obj));
+        Ok(gid)
+    }
+
+    /// Fetch a local component, downcast to its concrete type.
+    pub fn component<T: Any + Send + Sync>(&self, gid: Gid) -> PxResult<Arc<T>> {
+        let c = self
+            .components
+            .lock()
+            .unwrap()
+            .get(&gid)
+            .cloned()
+            .ok_or_else(|| PxError::Unresolved(format!("no local component {gid}")))?;
+        c.downcast::<T>()
+            .map_err(|_| PxError::LcoProtocol(format!("component {gid} has unexpected type")))
+    }
+
+    /// Remove a component and its AGAS binding.
+    pub fn destroy_component(&self, gid: Gid) -> PxResult<()> {
+        self.components.lock().unwrap().remove(&gid);
+        self.agas.unbind(gid)
+    }
+
+    /// Take the component out of the store (for migration): returns the
+    /// object if it is locally present.
+    pub fn take_component(&self, gid: Gid) -> Option<Arc<dyn Any + Send + Sync>> {
+        self.components.lock().unwrap().remove(&gid)
+    }
+
+    /// Install an already-typed component under an existing GID (the
+    /// receiving half of migration).
+    pub fn install_component(&self, gid: Gid, obj: Arc<dyn Any + Send + Sync>) {
+        self.components.lock().unwrap().insert(gid, obj);
+    }
+
+    /// Number of locally hosted components.
+    pub fn component_count(&self) -> usize {
+        self.components.lock().unwrap().len()
+    }
+
+    // ------------------------------------------------------------ apply
+
+    /// Apply `action` to `dest` — *the* ParalleX primitive. If AGAS says
+    /// `dest` is local, a PX-thread is spawned directly; otherwise a
+    /// parcel is generated and sent (the paper's Fig 1 walkthrough).
+    pub fn apply(
+        self: &Arc<Self>,
+        dest: Gid,
+        action: ActionId,
+        args: Vec<u8>,
+        continuation: Gid,
+    ) -> PxResult<()> {
+        let placement = self.agas.resolve(dest)?;
+        if placement.locality == self.id {
+            let body = self.actions.get(action)?;
+            let parcel = Parcel { dest, action, args, continuation, source: self.id, hops: 0 };
+            let ctx = self.clone();
+            self.spawner.spawn(move |_| body(&ctx, parcel));
+            Ok(())
+        } else {
+            let parcel = Parcel { dest, action, args, continuation, source: self.id, hops: 0 };
+            self.send_parcel(placement.locality, &parcel)
+        }
+    }
+
+    /// Send an encoded parcel toward `to` over the fabric.
+    fn send_parcel(&self, to: LocalityId, parcel: &Parcel) -> PxResult<()> {
+        let n = self.net.send(to, parcel)?;
+        self.counters.parcels_sent.inc();
+        self.counters.parcel_bytes.add(n as u64);
+        Ok(())
+    }
+
+    /// The parcel port: decode incoming bytes and hand the parcel to the
+    /// action manager. Runs on the net delivery thread, so all real work
+    /// is pushed onto the thread manager immediately.
+    pub fn on_parcel_bytes(self: &Arc<Self>, bytes: Vec<u8>) {
+        self.counters.parcels_received.inc();
+        match Parcel::decode(&bytes) {
+            Ok(p) => self.dispatch_parcel(p),
+            Err(e) => {
+                // Corrupt parcel: account and drop (a real transport would
+                // nack; the wire here is reliable so this only fires in
+                // failure-injection tests).
+                eprintln!("[L{}] parcel decode error: {e}", self.id);
+            }
+        }
+    }
+
+    /// Action-manager dispatch of a decoded parcel.
+    fn dispatch_parcel(self: &Arc<Self>, p: Parcel) {
+        // Stale-routing check: if AGAS (fresh) says the object moved,
+        // forward the parcel rather than failing (cache coherence
+        // protocol described in agas.rs).
+        match self.agas.refresh(p.dest) {
+            Ok(pl) if pl.locality != self.id => {
+                if p.hops >= MAX_HOPS {
+                    eprintln!("[L{}] parcel to {} exceeded {MAX_HOPS} hops; dropping", self.id, p.dest);
+                    return;
+                }
+                let mut fwd = p;
+                fwd.hops += 1;
+                let _ = self.send_parcel(pl.locality, &fwd);
+                return;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                // Unbound GID: deliver anyway if a local component exists
+                // (covers LCO proxies registered without AGAS), else drop.
+                if !self.components.lock().unwrap().contains_key(&p.dest) {
+                    eprintln!("[L{}] parcel for unknown gid {}; dropping", self.id, p.dest);
+                    return;
+                }
+            }
+        }
+        let body = match self.actions.get(p.action) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("[L{}] {e}", self.id);
+                return;
+            }
+        };
+        self.counters.threads_from_parcels.inc();
+        let ctx = self.clone();
+        // Parcel-instantiated threads run at High priority: the message
+        // already crossed the wire; finishing its work promptly shortens
+        // the split-phase round trip.
+        self.spawner.spawn_prio(Priority::High, move |_| body(&ctx, p));
+    }
+
+    // --------------------------------------------- remote future helpers
+
+    /// Create a `Future<Vec<f64>>` addressable from any locality: the
+    /// future is registered as a component and its GID can be used as a
+    /// parcel continuation or `set_remote_f64s` target.
+    pub fn new_remote_future(self: &Arc<Self>) -> PxResult<(Gid, Future<Vec<f64>>)> {
+        let fut: Future<Vec<f64>> = Future::with_counters(self.counters.clone());
+        let gid = self.register_component(GidKind::Future, fut.clone())?;
+        Ok((gid, fut))
+    }
+
+    /// Resolve a remote future (wherever it lives) with `values`.
+    pub fn set_remote_f64s(self: &Arc<Self>, target: Gid, values: &[f64]) -> PxResult<()> {
+        let mut e = Enc::with_capacity(4 + values.len() * 8);
+        e.f64s(values);
+        self.apply(target, ACT_SET_FUTURE_F64S, e.finish(), Gid::NULL)
+    }
+
+    /// Resolve a remote future with an error (failure propagation across
+    /// localities).
+    pub fn set_remote_error(self: &Arc<Self>, target: Gid, msg: &str) -> PxResult<()> {
+        let mut e = Enc::new();
+        e.str(msg);
+        self.apply(target, ACT_SET_FUTURE_ERROR, e.finish(), Gid::NULL)
+    }
+}
+
+/// Register the builtin actions every locality understands.
+pub fn register_builtin_actions(reg: &ActionRegistry) {
+    reg.register(ACT_SET_FUTURE_F64S, |ctx, p| {
+        let run = || -> PxResult<()> {
+            let mut d = Dec::new(&p.args);
+            let vals = d.f64s()?;
+            let fut = ctx.component::<Future<Vec<f64>>>(p.dest)?;
+            fut.set(&ctx.spawner, vals);
+            Ok(())
+        };
+        if let Err(e) = run() {
+            eprintln!("[L{}] SET_FUTURE_F64S failed: {e}", ctx.id);
+        }
+    });
+    reg.register(ACT_SET_FUTURE_ERROR, |ctx, p| {
+        let run = || -> PxResult<()> {
+            let mut d = Dec::new(&p.args);
+            let msg = d.str()?;
+            let fut = ctx.component::<Future<Vec<f64>>>(p.dest)?;
+            fut.set_error(&ctx.spawner, PxError::TaskFailed(msg));
+            Ok(())
+        };
+        if let Err(e) = run() {
+            eprintln!("[L{}] SET_FUTURE_ERROR failed: {e}", ctx.id);
+        }
+    });
+    reg.register(ACT_PING, |ctx, p| {
+        // Echo the sequence number back on the continuation future.
+        let mut d = Dec::new(&p.args);
+        if let Ok(seq) = d.f64() {
+            if !p.continuation.is_null() {
+                let _ = ctx.set_remote_f64s(p.continuation, &[seq]);
+            }
+        }
+    });
+}

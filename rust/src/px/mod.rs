@@ -1,0 +1,41 @@
+//! The ParalleX runtime core (the paper's §II, HPX-like).
+//!
+//! Modules mirror the six ParalleX management principles and the Fig 1
+//! architecture walkthrough:
+//!
+//! * [`gid`] / [`agas`] — global names and the Active Global Address Space
+//! * [`parcel`] / [`wire`] / [`net`] / [`action`] — parcel transport,
+//!   serialization, the simulated interconnect and the action manager
+//! * [`thread`] / [`sched`] — HPX-thread manager and scheduling policies
+//! * [`lco`] — Local Control Objects (future, dataflow, mutex, semaphore,
+//!   full-empty bit, and-gate, global barrier)
+//! * [`counters`] — the performance-counter monitoring framework
+//! * [`locality`] / [`runtime`] — composition into localities and the
+//!   bootable multi-locality runtime
+
+pub mod action;
+pub mod agas;
+pub mod counters;
+pub mod error;
+pub mod gid;
+pub mod lco;
+pub mod locality;
+pub mod net;
+pub mod parcel;
+pub mod runtime;
+pub mod sched;
+pub mod thread;
+pub mod wire;
+
+pub use action::{ActionRegistry, RESERVED_ACTION_BASE};
+pub use agas::{Agas, AgasClient, Placement};
+pub use counters::{Counter, CounterSnapshot, Counters};
+pub use error::{PxError, PxResult};
+pub use gid::{Gid, GidAllocator, GidKind, LocalityId};
+pub use lco::{AndGate, CountingSemaphore, Dataflow, FullEmptyBit, Future, GlobalBarrier, PxMutex};
+pub use locality::LocalityCtx;
+pub use net::{NetModel, SimNet};
+pub use parcel::{ActionId, Parcel};
+pub use runtime::{PxConfig, PxRuntime, SchedPolicyKind};
+pub use sched::{GlobalQueue, LocalPriority, Policy, Priority, Task};
+pub use thread::{global_queue_manager, local_priority_manager, Spawner, ThreadManager};

@@ -1,0 +1,321 @@
+//! Simulated interconnect between localities.
+//!
+//! The paper's HPX prototype moved parcels over TCP/IP between cluster
+//! nodes. This runtime hosts all localities in one process (DESIGN.md §3)
+//! and models the wire instead: each parcel is *serialized to bytes* (so
+//! the full encode/decode path runs), then delivered to the destination
+//! locality's parcel port after a modeled delay
+//!
+//! `latency = base_latency + bytes / bandwidth`
+//!
+//! by a dedicated delivery thread draining a deadline-ordered heap. A
+//! zero-cost [`NetModel::instant`] configuration is available for unit
+//! tests; experiments use [`NetModel::cluster_like`] (µs-scale base
+//! latency approximating the paper's gigabit-Ethernet era testbed).
+//! Failure injection: a drop predicate can be installed to test parcel
+//! loss handling in integration tests.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::error::{PxError, PxResult};
+use super::gid::LocalityId;
+use super::parcel::Parcel;
+
+/// Latency/bandwidth model for one runtime's interconnect.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// Fixed per-parcel latency.
+    pub base_latency: Duration,
+    /// Payload cost in bytes/second (`u64::MAX`-like values ≈ free).
+    pub bandwidth_bps: u64,
+}
+
+impl NetModel {
+    /// No modeled delay (unit tests).
+    pub fn instant() -> NetModel {
+        NetModel { base_latency: Duration::ZERO, bandwidth_bps: u64::MAX }
+    }
+
+    /// Gigabit-Ethernet-era cluster: ~50 µs base latency, 1 Gb/s payload.
+    pub fn cluster_like() -> NetModel {
+        NetModel { base_latency: Duration::from_micros(50), bandwidth_bps: 125_000_000 }
+    }
+
+    /// Delivery delay for a parcel of `bytes` length.
+    pub fn delay(&self, bytes: usize) -> Duration {
+        if self.bandwidth_bps == u64::MAX {
+            return self.base_latency;
+        }
+        self.base_latency + Duration::from_nanos((bytes as u64).saturating_mul(1_000_000_000) / self.bandwidth_bps)
+    }
+}
+
+/// A timed in-flight message.
+struct InFlight {
+    deliver_at: Instant,
+    seq: u64, // FIFO tie-break for equal deadlines
+    dest: LocalityId,
+    bytes: Vec<u8>,
+}
+
+impl PartialEq for InFlight {
+    fn eq(&self, o: &Self) -> bool {
+        self.deliver_at == o.deliver_at && self.seq == o.seq
+    }
+}
+impl Eq for InFlight {}
+impl PartialOrd for InFlight {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for InFlight {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.deliver_at, self.seq).cmp(&(o.deliver_at, o.seq))
+    }
+}
+
+type PortFn = Box<dyn Fn(Vec<u8>) + Send + Sync>;
+
+struct NetShared {
+    model: NetModel,
+    heap: Mutex<BinaryHeap<Reverse<InFlight>>>,
+    cv: Condvar,
+    heap_lock_for_cv: Mutex<()>,
+    ports: Mutex<Vec<Option<Arc<PortFn>>>>,
+    in_flight: AtomicU64,
+    seq: AtomicU64,
+    shutdown: AtomicBool,
+    /// Failure injection: parcels for which this returns true are dropped.
+    drop_filter: Mutex<Option<Box<dyn Fn(&Parcel) -> bool + Send + Sync>>>,
+    dropped: AtomicU64,
+}
+
+/// The simulated network fabric connecting all localities.
+pub struct SimNet {
+    shared: Arc<NetShared>,
+    delivery: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SimNet {
+    /// Fabric for `n_localities` endpoints under `model`.
+    pub fn new(n_localities: usize, model: NetModel) -> Arc<SimNet> {
+        let shared = Arc::new(NetShared {
+            model,
+            heap: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+            heap_lock_for_cv: Mutex::new(()),
+            ports: Mutex::new((0..n_localities).map(|_| None).collect()),
+            in_flight: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            drop_filter: Mutex::new(None),
+            dropped: AtomicU64::new(0),
+        });
+        let net = Arc::new(SimNet { shared: shared.clone(), delivery: Mutex::new(None) });
+        let h = std::thread::Builder::new()
+            .name("px-net-delivery".into())
+            .spawn(move || delivery_loop(shared))
+            .expect("spawn net delivery");
+        *net.delivery.lock().unwrap() = Some(h);
+        net
+    }
+
+    /// Attach locality `l`'s parcel port (called once during runtime boot).
+    pub fn attach_port<F: Fn(Vec<u8>) + Send + Sync + 'static>(&self, l: LocalityId, port: F) {
+        let mut ports = self.shared.ports.lock().unwrap();
+        assert!(ports[l as usize].is_none(), "port {l} already attached");
+        ports[l as usize] = Some(Arc::new(Box::new(port)));
+    }
+
+    /// Install a failure-injection predicate (tests). Parcels matching the
+    /// predicate vanish in flight and bump [`SimNet::dropped`].
+    pub fn set_drop_filter<F: Fn(&Parcel) -> bool + Send + Sync + 'static>(&self, f: F) {
+        *self.shared.drop_filter.lock().unwrap() = Some(Box::new(f));
+    }
+
+    /// Send a parcel: serialize, apply the wire model, schedule delivery.
+    pub fn send(&self, dest: LocalityId, parcel: &Parcel) -> PxResult<usize> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(PxError::ShuttingDown);
+        }
+        if let Some(f) = &*self.shared.drop_filter.lock().unwrap() {
+            if f(parcel) {
+                self.shared.dropped.fetch_add(1, Ordering::SeqCst);
+                return Ok(0);
+            }
+        }
+        let bytes = parcel.encode();
+        let n = bytes.len();
+        let deliver_at = Instant::now() + self.shared.model.delay(n);
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut heap = self.shared.heap.lock().unwrap();
+            heap.push(Reverse(InFlight {
+                deliver_at,
+                seq: self.shared.seq.fetch_add(1, Ordering::Relaxed),
+                dest,
+                bytes,
+            }));
+        }
+        let _g = self.shared.heap_lock_for_cv.lock().unwrap();
+        self.shared.cv.notify_one();
+        Ok(n)
+    }
+
+    /// Parcels accepted but not yet delivered to a port.
+    pub fn in_flight(&self) -> u64 {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Parcels destroyed by the failure-injection filter.
+    pub fn dropped(&self) -> u64 {
+        self.shared.dropped.load(Ordering::SeqCst)
+    }
+
+    /// Stop the delivery thread; undelivered parcels are discarded.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _g = self.shared.heap_lock_for_cv.lock().unwrap();
+            self.shared.cv.notify_all();
+        }
+        if let Some(h) = self.delivery.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SimNet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn delivery_loop(sh: Arc<NetShared>) {
+    loop {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Pop everything due; compute sleep until the next deadline.
+        let mut due: Vec<InFlight> = Vec::new();
+        let sleep_for: Option<Duration> = {
+            let mut heap = sh.heap.lock().unwrap();
+            let now = Instant::now();
+            while let Some(Reverse(top)) = heap.peek() {
+                if top.deliver_at <= now {
+                    due.push(heap.pop().unwrap().0);
+                } else {
+                    break;
+                }
+            }
+            heap.peek().map(|Reverse(t)| t.deliver_at.saturating_duration_since(now))
+        };
+        for m in due {
+            let port = sh.ports.lock().unwrap()[m.dest as usize].clone();
+            match port {
+                Some(p) => p(m.bytes),
+                None => { /* port detached: parcel dropped on the floor */ }
+            }
+            sh.in_flight.fetch_sub(1, Ordering::SeqCst);
+        }
+        let g = sh.heap_lock_for_cv.lock().unwrap();
+        let wait = sleep_for.unwrap_or(Duration::from_millis(2));
+        let _ = sh.cv.wait_timeout(g, wait.min(Duration::from_millis(2))).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::gid::{Gid, GidKind};
+    use std::sync::mpsc;
+
+    fn parcel(n_args: usize) -> Parcel {
+        Parcel::new(Gid::new(0, GidKind::Block, 1), 7, vec![0xAB; n_args], 0)
+    }
+
+    #[test]
+    fn delivers_to_attached_port() {
+        let net = SimNet::new(2, NetModel::instant());
+        let (tx, rx) = mpsc::channel();
+        net.attach_port(1, move |bytes| tx.send(bytes).unwrap());
+        let p = parcel(8);
+        net.send(1, &p).unwrap();
+        let bytes = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(Parcel::decode(&bytes).unwrap(), p);
+        // in_flight decrements just *after* the port callback (so that
+        // quiescence never races ahead of task creation) — poll briefly.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while net.in_flight() != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(net.in_flight(), 0);
+    }
+
+    #[test]
+    fn latency_model_orders_deliveries_by_deadline() {
+        // Large payload on a slow link must arrive after a later-sent
+        // small payload.
+        let net = SimNet::new(1, NetModel { base_latency: Duration::ZERO, bandwidth_bps: 1_000_000 });
+        let (tx, rx) = mpsc::channel();
+        net.attach_port(0, move |bytes| tx.send(bytes.len()).unwrap());
+        net.send(0, &parcel(50_000)).unwrap(); // ~50ms wire time
+        std::thread::sleep(Duration::from_millis(2));
+        net.send(0, &parcel(10)).unwrap(); // ~10us wire time
+        let first = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let second = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(first < second, "small parcel must overtake large: {first} vs {second}");
+    }
+
+    #[test]
+    fn base_latency_is_respected() {
+        let net = SimNet::new(1, NetModel { base_latency: Duration::from_millis(20), bandwidth_bps: u64::MAX });
+        let (tx, rx) = mpsc::channel();
+        net.attach_port(0, move |_| tx.send(Instant::now()).unwrap());
+        let sent = Instant::now();
+        net.send(0, &parcel(1)).unwrap();
+        let arrived = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(arrived - sent >= Duration::from_millis(19), "arrived too early: {:?}", arrived - sent);
+    }
+
+    #[test]
+    fn drop_filter_discards_matching_parcels() {
+        let net = SimNet::new(1, NetModel::instant());
+        let (tx, rx) = mpsc::channel();
+        net.attach_port(0, move |b| tx.send(b).unwrap());
+        net.set_drop_filter(|p| p.action == 13);
+        let doomed = Parcel::new(Gid::new(0, GidKind::Block, 1), 13, vec![], 0);
+        net.send(0, &doomed).unwrap();
+        let ok = parcel(4);
+        net.send(0, &ok).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(Parcel::decode(&got).unwrap().action, 7);
+        assert_eq!(net.dropped(), 1);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn send_after_shutdown_errors() {
+        let net = SimNet::new(1, NetModel::instant());
+        net.shutdown();
+        assert!(matches!(net.send(0, &parcel(1)), Err(PxError::ShuttingDown)));
+    }
+
+    #[test]
+    fn in_flight_counts_pending() {
+        let net = SimNet::new(1, NetModel { base_latency: Duration::from_millis(50), bandwidth_bps: u64::MAX });
+        net.attach_port(0, |_| {});
+        net.send(0, &parcel(1)).unwrap();
+        assert_eq!(net.in_flight(), 1);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while net.in_flight() != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(net.in_flight(), 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Parcels: the message-driven substrate of ParalleX.
+//!
+//! A parcel is an extended active message (§II): it names a destination
+//! object (GID), an *action* to apply to it, serialized arguments, and an
+//! optional continuation GID for the split-phase reply. "Parcels are the
+//! remote semantic equivalent to creating a local HPX-thread": the
+//! receiving locality's action manager decodes the parcel and spawns a
+//! PX-thread running the registered action.
+
+use super::error::PxResult;
+use super::gid::{Gid, LocalityId};
+use super::wire::{Dec, Enc};
+
+/// Numeric id of a registered action (see [`crate::px::action`]).
+pub type ActionId = u32;
+
+/// An in-flight active message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Parcel {
+    /// Destination object; the action is applied *to* this GID.
+    pub dest: Gid,
+    /// Which registered action to run at the destination locality.
+    pub action: ActionId,
+    /// Serialized action arguments (format is per-action, via `wire`).
+    pub args: Vec<u8>,
+    /// Optional continuation LCO to feed with the action's result
+    /// (split-phase transaction: request and response are decoupled).
+    pub continuation: Gid,
+    /// Sending locality (for provenance/metrics; not trusted for routing).
+    pub source: LocalityId,
+    /// Forwarding-hop count: bumped each time a stale AGAS cache routes a
+    /// parcel to a locality that no longer hosts `dest`.
+    pub hops: u8,
+}
+
+impl Parcel {
+    /// A parcel with no continuation.
+    pub fn new(dest: Gid, action: ActionId, args: Vec<u8>, source: LocalityId) -> Parcel {
+        Parcel { dest, action, args, continuation: Gid::NULL, source, hops: 0 }
+    }
+
+    /// Attach a continuation GID (builder style).
+    pub fn with_continuation(mut self, k: Gid) -> Parcel {
+        self.continuation = k;
+        self
+    }
+
+    /// Serialized size in bytes (wire framing included).
+    pub fn wire_size(&self) -> usize {
+        16 + 4 + 4 + self.args.len() + 16 + 4 + 1
+    }
+
+    /// Encode to the wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(self.wire_size());
+        e.gid(self.dest)
+            .u32(self.action)
+            .bytes(&self.args)
+            .gid(self.continuation)
+            .u32(self.source)
+            .u8(self.hops);
+        e.finish()
+    }
+
+    /// Decode from the wire format (strict: trailing bytes are an error).
+    pub fn decode(buf: &[u8]) -> PxResult<Parcel> {
+        let mut d = Dec::new(buf);
+        let dest = d.gid()?;
+        let action = d.u32()?;
+        let args = d.bytes()?.to_vec();
+        let continuation = d.gid()?;
+        let source = d.u32()?;
+        let hops = d.u8()?;
+        d.expect_end()?;
+        Ok(Parcel { dest, action, args, continuation, source, hops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::gid::{Gid, GidKind};
+    use crate::testkit::prop::{prop_check, Rng};
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = Parcel::new(Gid::new(1, GidKind::Block, 7), 42, vec![1, 2, 3], 0)
+            .with_continuation(Gid::new(0, GidKind::Future, 9));
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_size());
+        assert_eq!(Parcel::decode(&buf).unwrap(), p);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing_garbage() {
+        let p = Parcel::new(Gid::new(1, GidKind::Block, 7), 1, vec![9; 16], 2);
+        let buf = p.encode();
+        assert!(Parcel::decode(&buf[..buf.len() - 1]).is_err());
+        let mut extended = buf.clone();
+        extended.push(0xFF);
+        assert!(Parcel::decode(&extended).is_err());
+    }
+
+    #[test]
+    fn prop_any_parcel_roundtrips() {
+        prop_check("parcel roundtrip", 300, |rng: &mut Rng| {
+            let p = Parcel {
+                dest: Gid::new(rng.next_u32(), GidKind::Component, rng.next_u64()),
+                action: rng.next_u32(),
+                args: rng.bytes(256),
+                continuation: if rng.chance(0.5) {
+                    Gid::NULL
+                } else {
+                    Gid::new(rng.next_u32(), GidKind::Future, rng.next_u64())
+                },
+                source: rng.next_u32(),
+                hops: rng.below(4) as u8,
+            };
+            let buf = p.encode();
+            assert_eq!(buf.len(), p.wire_size());
+            assert_eq!(Parcel::decode(&buf).unwrap(), p);
+        });
+    }
+}

@@ -1,0 +1,355 @@
+//! The multi-locality ParalleX runtime: boot, run, quiesce, shutdown.
+//!
+//! Composes everything in `px/`: one [`LocalityCtx`] per simulated node
+//! (each with its own thread manager and counters), a shared AGAS service,
+//! a shared action registry, and the simulated interconnect. This is the
+//! launcher-facing API: the `px-amr` binary and all benches build a
+//! [`PxRuntime`] from a [`PxConfig`] and go.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::action::ActionRegistry;
+use super::agas::{Agas, AgasClient};
+use super::counters::{Counters, CounterSnapshot};
+use super::error::{PxError, PxResult};
+use super::gid::LocalityId;
+use super::locality::{register_builtin_actions, LocalityCtx};
+use super::net::{NetModel, SimNet};
+use super::thread::{global_queue_manager, local_priority_manager, ThreadManager};
+
+/// Which thread-manager scheduling policy to run (paper §II lists both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicyKind {
+    /// Single shared FIFO ("global queue scheduler").
+    GlobalQueue,
+    /// Per-core priority queues with work stealing ("local priority
+    /// scheduler" — HPX's default and ours).
+    LocalPriority,
+}
+
+impl std::str::FromStr for SchedPolicyKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "global" | "global-queue" => Ok(SchedPolicyKind::GlobalQueue),
+            "local" | "local-priority" => Ok(SchedPolicyKind::LocalPriority),
+            other => Err(format!("unknown scheduler policy `{other}` (global|local)")),
+        }
+    }
+}
+
+/// Runtime topology and policy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PxConfig {
+    /// Number of simulated localities (cluster nodes).
+    pub localities: usize,
+    /// Worker OS-threads (cores) per locality.
+    pub workers_per_locality: usize,
+    /// Scheduling policy for every locality's thread manager.
+    pub policy: SchedPolicyKind,
+    /// Interconnect model.
+    pub net: NetModel,
+}
+
+impl Default for PxConfig {
+    fn default() -> Self {
+        PxConfig {
+            localities: 1,
+            workers_per_locality: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::instant(),
+        }
+    }
+}
+
+impl PxConfig {
+    /// Single-locality SMP config with `workers` cores.
+    pub fn smp(workers: usize) -> PxConfig {
+        PxConfig { localities: 1, workers_per_locality: workers, ..Default::default() }
+    }
+
+    /// Multi-locality config with a cluster-like wire.
+    pub fn cluster(localities: usize, workers_per_locality: usize) -> PxConfig {
+        PxConfig {
+            localities,
+            workers_per_locality,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::cluster_like(),
+        }
+    }
+}
+
+/// A booted ParalleX runtime instance.
+pub struct PxRuntime {
+    config: PxConfig,
+    localities: Vec<Arc<LocalityCtx>>,
+    managers: Vec<ThreadManager>,
+    net: Arc<SimNet>,
+    actions: Arc<ActionRegistry>,
+    #[allow(dead_code)]
+    agas: Arc<Agas>,
+}
+
+impl PxRuntime {
+    /// Boot a runtime: build AGAS + net + one locality per config entry,
+    /// register builtin actions, attach parcel ports.
+    pub fn boot(config: PxConfig) -> PxRuntime {
+        assert!(config.localities >= 1);
+        let agas = Agas::new(config.localities);
+        let net = SimNet::new(config.localities, config.net);
+        let actions = ActionRegistry::new();
+        register_builtin_actions(&actions);
+
+        let mut localities = Vec::with_capacity(config.localities);
+        let mut managers = Vec::with_capacity(config.localities);
+        for l in 0..config.localities as LocalityId {
+            let counters = Arc::new(Counters::default());
+            let tm = match config.policy {
+                SchedPolicyKind::GlobalQueue => global_queue_manager(config.workers_per_locality, counters.clone()),
+                SchedPolicyKind::LocalPriority => local_priority_manager(config.workers_per_locality, counters.clone()),
+            };
+            let ctx = LocalityCtx::new(
+                l,
+                tm.spawner(),
+                AgasClient::new(agas.clone(), l, counters.clone()),
+                net.clone(),
+                actions.clone(),
+                counters,
+            );
+            let port_ctx = ctx.clone();
+            net.attach_port(l, move |bytes| port_ctx.on_parcel_bytes(bytes));
+            localities.push(ctx);
+            managers.push(tm);
+        }
+        PxRuntime { config, localities, managers, net, actions, agas }
+    }
+
+    /// The boot configuration.
+    pub fn config(&self) -> &PxConfig {
+        &self.config
+    }
+
+    /// Locality `l`'s service context.
+    pub fn locality(&self, l: LocalityId) -> &Arc<LocalityCtx> {
+        &self.localities[l as usize]
+    }
+
+    /// All localities.
+    pub fn localities(&self) -> &[Arc<LocalityCtx>] {
+        &self.localities
+    }
+
+    /// The shared action registry — register application actions here
+    /// *before* sending parcels that name them.
+    pub fn actions(&self) -> &Arc<ActionRegistry> {
+        &self.actions
+    }
+
+    /// The interconnect (for failure injection in tests).
+    pub fn net(&self) -> &Arc<SimNet> {
+        &self.net
+    }
+
+    /// Global quiescence: no task queued or running on any locality and
+    /// no parcel in flight, observed stably twice. Used by drivers that
+    /// terminate by exhaustion rather than by a completion future.
+    pub fn wait_quiescent(&self) {
+        loop {
+            for tm in &self.managers {
+                tm.wait_quiescent();
+            }
+            let idle = || {
+                self.net.in_flight() == 0 && self.managers.iter().all(|tm| tm.active() == 0)
+            };
+            if idle() {
+                // Double-check after a grace period: a parcel could have
+                // been mid-decode between the two reads.
+                std::thread::sleep(Duration::from_millis(2));
+                if idle() {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// As [`wait_quiescent`](Self::wait_quiescent) but bounded; `Err` on deadline.
+    pub fn wait_quiescent_timeout(&self, d: Duration) -> PxResult<()> {
+        let deadline = Instant::now() + d;
+        loop {
+            if Instant::now() > deadline {
+                return Err(PxError::TaskFailed(format!(
+                    "quiescence deadline exceeded; active={} in_flight={}",
+                    self.managers.iter().map(|t| t.active()).sum::<u64>(),
+                    self.net.in_flight()
+                )));
+            }
+            let idle = self.net.in_flight() == 0 && self.managers.iter().all(|tm| tm.active() == 0);
+            if idle {
+                std::thread::sleep(Duration::from_millis(2));
+                if self.net.in_flight() == 0 && self.managers.iter().all(|tm| tm.active() == 0) {
+                    return Ok(());
+                }
+            } else {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    /// Aggregate counter snapshot over all localities.
+    pub fn counters_total(&self) -> CounterSnapshot {
+        let mut total = CounterSnapshot::default();
+        for l in &self.localities {
+            let s = l.counters.snapshot();
+            total.threads_spawned += s.threads_spawned;
+            total.threads_completed += s.threads_completed;
+            total.threads_from_parcels += s.threads_from_parcels;
+            total.suspensions += s.suspensions;
+            total.resumptions += s.resumptions;
+            total.steals += s.steals;
+            total.parked_waits += s.parked_waits;
+            total.queue_contended += s.queue_contended;
+            total.queue_hwm = total.queue_hwm.max(s.queue_hwm);
+            total.parcels_sent += s.parcels_sent;
+            total.parcels_received += s.parcels_received;
+            total.parcel_bytes += s.parcel_bytes;
+            total.agas_cache_hits += s.agas_cache_hits;
+            total.agas_cache_misses += s.agas_cache_misses;
+            total.migrations += s.migrations;
+            total.lco_triggers += s.lco_triggers;
+            total.xla_calls += s.xla_calls;
+        }
+        total
+    }
+
+    /// Graceful shutdown: drain thread managers, stop the net.
+    pub fn shutdown(mut self) {
+        for tm in &mut self.managers {
+            tm.shutdown();
+        }
+        self.net.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::action::ACT_PING;
+    use crate::px::gid::GidKind;
+    use crate::px::wire::Enc;
+
+    #[test]
+    fn boot_and_shutdown_single_locality() {
+        let rt = PxRuntime::boot(PxConfig::smp(2));
+        assert_eq!(rt.localities().len(), 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn local_apply_spawns_a_thread() {
+        let rt = PxRuntime::boot(PxConfig::smp(2));
+        let l0 = rt.locality(0).clone();
+        let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let h2 = hits.clone();
+        rt.actions().register(1, move |_, _| {
+            h2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        let g = l0.register_component(GidKind::Component, ()).unwrap();
+        l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
+        rt.wait_quiescent();
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn remote_apply_crosses_the_wire() {
+        let rt = PxRuntime::boot(PxConfig { localities: 2, workers_per_locality: 2, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let h2 = hits.clone();
+        rt.actions().register(1, move |ctx, _| {
+            assert_eq!(ctx.id, 1, "action must run on the object's locality");
+            h2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        let g = l1.register_component(GidKind::Component, ()).unwrap();
+        l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
+        rt.wait_quiescent();
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+        assert_eq!(rt.counters_total().parcels_sent, 1);
+        assert_eq!(rt.counters_total().threads_from_parcels, 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn ping_round_trip_via_continuation_future() {
+        let rt = PxRuntime::boot(PxConfig { localities: 2, workers_per_locality: 2, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let target = l1.register_component(GidKind::Component, ()).unwrap();
+        let (k_gid, fut) = l0.new_remote_future().unwrap();
+        let mut e = Enc::new();
+        e.f64(42.0);
+        l0.apply(target, ACT_PING, e.finish(), k_gid).unwrap();
+        let got = fut.wait().unwrap();
+        assert_eq!(got, vec![42.0]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn parcel_follows_migrated_object() {
+        let rt = PxRuntime::boot(PxConfig { localities: 3, workers_per_locality: 2, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let l2 = rt.locality(2).clone();
+        let ran_on = Arc::new(std::sync::atomic::AtomicU64::new(u64::MAX));
+        let r2 = ran_on.clone();
+        rt.actions().register(1, move |ctx, _| {
+            r2.store(ctx.id as u64, std::sync::atomic::Ordering::SeqCst);
+        });
+        // Object born on L1; L0 caches that placement.
+        let g = l1.register_component(GidKind::Block, ()).unwrap();
+        assert!(l0.agas.resolve(g).is_ok());
+        // Move it to L2 (component payload moves too).
+        let obj = l1.take_component(g).unwrap();
+        l2.install_component(g, obj);
+        l1.agas.migrate(g, 2).unwrap();
+        // L0 applies via its stale cache → parcel to L1 → forwarded to L2.
+        l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
+        rt.wait_quiescent();
+        assert_eq!(ran_on.load(std::sync::atomic::Ordering::SeqCst), 2);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn error_propagates_across_localities() {
+        let rt = PxRuntime::boot(PxConfig { localities: 2, workers_per_locality: 2, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let (k_gid, fut) = l0.new_remote_future().unwrap();
+        l1.set_remote_error(k_gid, "simulated remote failure").unwrap();
+        match fut.wait() {
+            Err(PxError::TaskFailed(m)) => assert!(m.contains("simulated remote failure")),
+            other => panic!("expected TaskFailed, got {other:?}"),
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn counters_aggregate_across_localities() {
+        let rt = PxRuntime::boot(PxConfig { localities: 2, workers_per_locality: 1, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let (k0, f0) = l0.new_remote_future().unwrap();
+        let (k1, f1) = l1.new_remote_future().unwrap();
+        l1.set_remote_f64s(k0, &[1.0]).unwrap();
+        l0.set_remote_f64s(k1, &[2.0]).unwrap();
+        f0.wait().unwrap();
+        f1.wait().unwrap();
+        let t = rt.counters_total();
+        assert_eq!(t.parcels_sent, 2);
+        assert_eq!(t.parcels_received, 2);
+        assert!(t.parcel_bytes > 0);
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,281 @@
+//! Scheduling policies for the HPX-thread manager.
+//!
+//! The paper names two policies implemented by HPX's thread manager:
+//! a **global queue** scheduler ("all cores pull their work from a single,
+//! global queue") and a **local priority** scheduler ("each core pulls its
+//! work from a separate priority queue … supports work stealing for better
+//! load balancing"). Both are provided here behind the [`Policy`] trait so
+//! the Fig 9 overhead bench and the AMR drivers can swap them at runtime.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crossbeam_utils::CachePadded;
+
+use super::counters::Counters;
+use super::thread::Spawner;
+
+/// PX-thread priority. High drains before Normal before Low within a
+/// queue; stealing ignores priority (steals the victim's oldest work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Runtime-internal work (parcel decode, LCO triggers).
+    High = 0,
+    /// Application PX-threads.
+    Normal = 1,
+    /// Background work (regridding hints, diagnostics).
+    Low = 2,
+}
+
+/// A ready-to-run PX-thread.
+pub struct Task {
+    pub prio: Priority,
+    pub f: Box<dyn FnOnce(&Spawner) + Send>,
+}
+
+/// A scheduling policy: where spawned tasks go and where workers look.
+pub trait Policy: Send + Sync {
+    /// Enqueue a task. `hint` is the spawning worker's index when the
+    /// spawn originated on-pool (used by local queues for affinity).
+    fn push(&self, task: Task, hint: Option<usize>);
+    /// Dequeue work for worker `w` (may steal). `None` = nothing runnable.
+    fn pop(&self, w: usize) -> Option<Task>;
+    /// Approximate total queued tasks (diagnostics only).
+    fn approx_len(&self) -> usize;
+}
+
+type PrioQueues = [VecDeque<Task>; 3];
+
+fn push_prio(qs: &mut PrioQueues, task: Task) {
+    qs[task.prio as usize].push_back(task);
+}
+
+fn pop_prio(qs: &mut PrioQueues) -> Option<Task> {
+    for q in qs.iter_mut() {
+        if let Some(t) = q.pop_front() {
+            return Some(t);
+        }
+    }
+    None
+}
+
+fn len_prio(qs: &PrioQueues) -> usize {
+    qs.iter().map(|q| q.len()).sum()
+}
+
+/// Single global FIFO (per priority) shared by all workers.
+///
+/// Simple and fair, but the single lock becomes the contention point as
+/// cores grow — exactly the effect the Fig 9 bench demonstrates.
+pub struct GlobalQueue {
+    queues: Mutex<PrioQueues>,
+    counters: Arc<Counters>,
+}
+
+impl GlobalQueue {
+    pub fn new(counters: Arc<Counters>) -> Self {
+        GlobalQueue { queues: Mutex::new(Default::default()), counters }
+    }
+
+    /// Lock with contention accounting: a failed `try_lock` is counted
+    /// before falling back to a blocking acquire.
+    fn lock(&self) -> std::sync::MutexGuard<'_, PrioQueues> {
+        match self.queues.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                self.counters.queue_contended.inc();
+                self.queues.lock().unwrap()
+            }
+        }
+    }
+}
+
+impl Policy for GlobalQueue {
+    fn push(&self, task: Task, _hint: Option<usize>) {
+        let mut g = self.lock();
+        push_prio(&mut g, task);
+        let n = len_prio(&g) as u64;
+        self.counters.queue_hwm.max(n);
+    }
+
+    fn pop(&self, _w: usize) -> Option<Task> {
+        pop_prio(&mut self.lock())
+    }
+
+    fn approx_len(&self) -> usize {
+        len_prio(&self.queues.lock().unwrap())
+    }
+}
+
+/// Per-worker priority deques with work stealing, plus an injector queue
+/// for spawns arriving from off-pool OS threads (parcel port, main).
+pub struct LocalPriority {
+    locals: Vec<CachePadded<Mutex<PrioQueues>>>,
+    injector: Mutex<PrioQueues>,
+    /// Round-robin cursor for off-pool pushes without a worker hint.
+    rr: AtomicUsize,
+    counters: Arc<Counters>,
+}
+
+impl LocalPriority {
+    pub fn new(n_workers: usize, counters: Arc<Counters>) -> Self {
+        LocalPriority {
+            locals: (0..n_workers).map(|_| CachePadded::new(Mutex::new(Default::default()))).collect(),
+            injector: Mutex::new(Default::default()),
+            rr: AtomicUsize::new(0),
+            counters,
+        }
+    }
+
+    fn lock_local(&self, w: usize) -> std::sync::MutexGuard<'_, PrioQueues> {
+        match self.locals[w].try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                self.counters.queue_contended.inc();
+                self.locals[w].lock().unwrap()
+            }
+        }
+    }
+}
+
+impl Policy for LocalPriority {
+    fn push(&self, task: Task, hint: Option<usize>) {
+        match hint {
+            Some(w) => {
+                let mut g = self.lock_local(w);
+                push_prio(&mut g, task);
+                self.counters.queue_hwm.max(len_prio(&g) as u64);
+            }
+            None => {
+                // Off-pool producers round-robin across local queues so a
+                // burst from the parcel port spreads without stealing.
+                let w = self.rr.fetch_add(1, Ordering::Relaxed) % self.locals.len();
+                let mut g = self.lock_local(w);
+                push_prio(&mut g, task);
+                self.counters.queue_hwm.max(len_prio(&g) as u64);
+            }
+        }
+        let _ = &self.injector; // injector reserved for explicit broadcast use
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        // 1. Own queues, highest priority first.
+        if let Some(t) = pop_prio(&mut self.lock_local(w)) {
+            return Some(t);
+        }
+        // 2. Injector.
+        if let Some(t) = pop_prio(&mut self.injector.lock().unwrap()) {
+            return Some(t);
+        }
+        // 3. Steal: scan victims from w+1, take their *oldest* task
+        //    (back of the FIFO order we pop from the front of) to move the
+        //    largest expected remaining work and reduce steal frequency.
+        let n = self.locals.len();
+        for off in 1..n {
+            let v = (w + off) % n;
+            if let Ok(mut g) = self.locals[v].try_lock() {
+                for q in g.iter_mut() {
+                    if let Some(t) = q.pop_back() {
+                        self.counters.steals.inc();
+                        return Some(t);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn approx_len(&self) -> usize {
+        let mut n = len_prio(&self.injector.lock().unwrap());
+        for l in &self.locals {
+            if let Ok(g) = l.try_lock() {
+                n += len_prio(&g);
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(prio: Priority) -> Task {
+        Task { prio, f: Box::new(|_| {}) }
+    }
+
+    #[test]
+    fn global_queue_fifo_within_priority() {
+        let c = Arc::new(Counters::default());
+        let q = GlobalQueue::new(c);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..3 {
+            let seen = seen.clone();
+            q.push(
+                Task { prio: Priority::Normal, f: Box::new(move |_| seen.lock().unwrap().push(i)) },
+                None,
+            );
+        }
+        assert_eq!(q.approx_len(), 3);
+        // Pop order must match push order (FIFO); we can't call f without a
+        // Spawner here, so check by draining lengths only.
+        assert!(q.pop(0).is_some());
+        assert_eq!(q.approx_len(), 2);
+    }
+
+    #[test]
+    fn global_queue_priority_order() {
+        let q = GlobalQueue::new(Arc::new(Counters::default()));
+        q.push(task(Priority::Low), None);
+        q.push(task(Priority::High), None);
+        q.push(task(Priority::Normal), None);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::High);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::Normal);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::Low);
+        assert!(q.pop(0).is_none());
+    }
+
+    #[test]
+    fn local_priority_hint_lands_on_that_worker() {
+        let q = LocalPriority::new(4, Arc::new(Counters::default()));
+        q.push(task(Priority::Normal), Some(2));
+        // Worker 2 gets it without stealing.
+        let c_before = q.counters.steals.get();
+        assert!(q.pop(2).is_some());
+        assert_eq!(q.counters.steals.get(), c_before);
+    }
+
+    #[test]
+    fn local_priority_steal_from_any_victim() {
+        let q = LocalPriority::new(4, Arc::new(Counters::default()));
+        q.push(task(Priority::Normal), Some(0));
+        // Worker 3 finds nothing local, must steal from 0.
+        assert!(q.pop(3).is_some());
+        assert_eq!(q.counters.steals.get(), 1);
+        assert!(q.pop(3).is_none());
+    }
+
+    #[test]
+    fn local_priority_offpool_pushes_spread_round_robin() {
+        let q = LocalPriority::new(4, Arc::new(Counters::default()));
+        for _ in 0..8 {
+            q.push(task(Priority::Normal), None);
+        }
+        // Every worker should find at least one task locally (no steals).
+        for w in 0..4 {
+            assert!(q.pop(w).is_some(), "worker {w} empty");
+        }
+        assert_eq!(q.counters.steals.get(), 0);
+    }
+
+    #[test]
+    fn hwm_tracks_longest_queue() {
+        let c = Arc::new(Counters::default());
+        let q = GlobalQueue::new(c.clone());
+        for _ in 0..10 {
+            q.push(task(Priority::Normal), None);
+        }
+        assert_eq!(c.queue_hwm.get(), 10);
+    }
+}

@@ -1,0 +1,303 @@
+//! Parcel wire format: a small, explicit little-endian encoder/decoder.
+//!
+//! The offline build has no serde, and HPX itself ships a bespoke
+//! portable-binary archive for parcel serialization, so this module plays
+//! that role: action arguments and parcel envelopes are encoded with
+//! [`Enc`] and decoded with [`Dec`]. All multi-byte integers are
+//! little-endian; sequences are length-prefixed with `u32`.
+
+use super::error::{PxError, PxResult};
+use super::gid::Gid;
+
+/// Append-only binary encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty encoder.
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    /// Encoder with pre-reserved capacity (hot-path parcels).
+    pub fn with_capacity(n: usize) -> Enc {
+        Enc { buf: Vec::with_capacity(n) }
+    }
+
+    /// Finish and take the buffer.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u128(&mut self, v: u128) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn i64(&mut self, v: i64) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.u8(v as u8)
+    }
+
+    pub fn gid(&mut self, g: Gid) -> &mut Self {
+        self.u128(g.raw())
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.bytes(s.as_bytes())
+    }
+
+    /// Length-prefixed f64 slice (the AMR ghost-zone payload type).
+    pub fn f64s(&mut self, v: &[f64]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 8);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self
+    }
+}
+
+/// Cursor-based binary decoder over a byte slice.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from `buf` starting at offset 0.
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Bytes left to decode.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> PxResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(PxError::Wire(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> PxResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> PxResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> PxResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> PxResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u128(&mut self) -> PxResult<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> PxResult<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    pub fn f64(&mut self) -> PxResult<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> PxResult<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn gid(&mut self) -> PxResult<Gid> {
+        Ok(Gid::from_raw(self.u128()?))
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self) -> PxResult<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> PxResult<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|e| PxError::Wire(format!("bad utf8: {e}")))
+    }
+
+    /// Length-prefixed f64 vector.
+    pub fn f64s(&mut self) -> PxResult<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(8) {
+            out.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+        }
+        Ok(out)
+    }
+
+    /// Assert the whole buffer was consumed (catches protocol drift).
+    pub fn expect_end(&self) -> PxResult<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(PxError::Wire(format!("{} trailing bytes", self.remaining())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::px::gid::GidKind;
+    use crate::testkit::prop::{prop_check, Rng};
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7).u16(513).u32(70_000).u64(1 << 40).f64(-2.5).bool(true).str("hello");
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 513);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f64().unwrap(), -2.5);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.str().unwrap(), "hello");
+        d.expect_end().unwrap();
+    }
+
+    #[test]
+    fn gid_roundtrip() {
+        let g = Gid::new(9, GidKind::Dataflow, 1234567);
+        let mut e = Enc::new();
+        e.gid(g);
+        let buf = e.finish();
+        assert_eq!(Dec::new(&buf).gid().unwrap(), g);
+    }
+
+    #[test]
+    fn truncated_input_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.u64(42);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf[..5]);
+        assert!(matches!(d.u64(), Err(PxError::Wire(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut e = Enc::new();
+        e.u32(1).u32(2);
+        let buf = e.finish();
+        let mut d = Dec::new(&buf);
+        d.u32().unwrap();
+        assert!(d.expect_end().is_err());
+    }
+
+    #[test]
+    fn bytes_with_bad_length_prefix_fails_cleanly() {
+        // Length prefix claims 1000 bytes but only 2 follow.
+        let mut e = Enc::new();
+        e.u32(1000).u16(7);
+        let buf = e.finish();
+        assert!(Dec::new(&buf).bytes().is_err());
+    }
+
+    #[test]
+    fn prop_f64s_roundtrip_including_specials() {
+        prop_check("wire f64s roundtrip", 200, |rng: &mut Rng| {
+            let mut v = rng.f64_vec(0, 64, -1e12, 1e12);
+            if rng.chance(0.3) {
+                v.push(f64::INFINITY);
+                v.push(f64::NEG_INFINITY);
+                v.push(0.0);
+                v.push(-0.0);
+            }
+            let mut e = Enc::new();
+            e.f64s(&v);
+            let buf = e.finish();
+            let got = Dec::new(&buf).f64s().unwrap();
+            assert_eq!(v.len(), got.len());
+            for (a, b) in v.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mixed_sequences_roundtrip() {
+        prop_check("wire mixed roundtrip", 200, |rng: &mut Rng| {
+            let raw = rng.bytes(128);
+            let s: String = (0..rng.below(20)).map(|i| (b'a' + (i % 26) as u8) as char).collect();
+            let x = rng.next_u64();
+            let mut e = Enc::new();
+            e.bytes(&raw).str(&s).u64(x);
+            let buf = e.finish();
+            let mut d = Dec::new(&buf);
+            assert_eq!(d.bytes().unwrap(), &raw[..]);
+            assert_eq!(d.str().unwrap(), s);
+            assert_eq!(d.u64().unwrap(), x);
+            d.expect_end().unwrap();
+        });
+    }
+}

@@ -1,0 +1,340 @@
+//! XLA/PJRT compute backend: loads and executes the AOT artifacts.
+//!
+//! The Layer-2 JAX block-step (with the Layer-1 Pallas stencil inside) is
+//! lowered once, at build time, to `artifacts/step_b{N}.hlo.txt`. This
+//! module wraps the `xla` crate's PJRT CPU client to compile those HLO
+//! texts and execute them from PX-threads on the hot path — Python is not
+//! in the process.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so each worker OS-thread lazily builds its *own* client and executable
+//! cache on first use (`thread_local`). Compilation of these small
+//! modules is a few ms per thread and amortizes over the millions of
+//! block-steps of a run; crucially, workers then execute concurrently
+//! with zero shared-state contention — the same reason HPX gives each
+//! core its own scheduling queue.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::px::counters::Counters;
+
+/// One artifact as described by `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Task-granularity block size (output points per step call).
+    pub block: usize,
+    /// Input array length: block + 2 * ghost(=3).
+    pub input_len: usize,
+    /// Output array length (== block).
+    pub output_len: usize,
+    /// Element type (always "f64" for these artifacts).
+    pub dtype: String,
+    /// Build-time VMEM footprint estimate (bytes) for the fused kernel.
+    pub vmem_bytes: u64,
+    /// Content hash of the HLO text (diagnostics).
+    pub hlo_sha256: String,
+}
+
+/// Parse `manifest.txt` (see `python/compile/aot.py`).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 6 {
+            bail!("manifest line {}: expected 6 fields, got {}", lineno + 1, f.len());
+        }
+        out.push(ManifestEntry {
+            block: f[0].parse().context("block")?,
+            input_len: f[1].parse().context("input_len")?,
+            output_len: f[2].parse().context("output_len")?,
+            dtype: f[3].to_string(),
+            vmem_bytes: f[4].parse().context("vmem_bytes")?,
+            hlo_sha256: f[5].to_string(),
+        });
+    }
+    if out.is_empty() {
+        bail!("manifest is empty — run `make artifacts`");
+    }
+    Ok(out)
+}
+
+/// Handle to the artifact set; cheap to clone and `Send + Sync` (the
+/// non-`Send` PJRT state lives in per-thread caches).
+#[derive(Clone)]
+pub struct XlaCompute {
+    dir: Arc<PathBuf>,
+    manifest: Arc<Vec<ManifestEntry>>,
+    counters: Option<Arc<Counters>>,
+}
+
+/// Result of one block step.
+pub type StepOut = (Vec<f64>, Vec<f64>, Vec<f64>);
+
+thread_local! {
+    static TL_EXES: std::cell::RefCell<Option<ThreadExecCache>> = const { std::cell::RefCell::new(None) };
+}
+
+struct ThreadExecCache {
+    /// Which artifact dir this cache was built for (guards against two
+    /// XlaCompute instances with different dirs on one thread).
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaCompute {
+    /// Open an artifact directory (reads + validates the manifest; HLO
+    /// compilation happens lazily per worker thread).
+    pub fn open(dir: impl AsRef<Path>) -> Result<XlaCompute> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = parse_manifest(&text)?;
+        for e in &manifest {
+            let p = dir.join(format!("step_b{}.hlo.txt", e.block));
+            if !p.exists() {
+                bail!("manifest names {} but {:?} is missing", e.block, p);
+            }
+            if e.dtype != "f64" {
+                bail!("artifact b{} has dtype {}, expected f64", e.block, e.dtype);
+            }
+            if e.input_len != e.block + 6 || e.output_len != e.block {
+                bail!("artifact b{} has inconsistent shapes in manifest", e.block);
+            }
+        }
+        Ok(XlaCompute { dir: Arc::new(dir), manifest: Arc::new(manifest), counters: None })
+    }
+
+    /// Attach a counter set; every `step` bumps `xla_calls`.
+    pub fn with_counters(mut self, counters: Arc<Counters>) -> XlaCompute {
+        self.counters = Some(counters);
+        self
+    }
+
+    /// Available block sizes, ascending.
+    pub fn block_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.manifest.iter().map(|e| e.block).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The manifest entries.
+    pub fn manifest(&self) -> &[ManifestEntry] {
+        &self.manifest
+    }
+
+    /// Smallest available block size >= `want` (callers pad their data),
+    /// or the largest available if `want` exceeds them all.
+    pub fn pick_block(&self, want: usize) -> usize {
+        let sizes = self.block_sizes();
+        *sizes.iter().find(|&&b| b >= want).unwrap_or(sizes.last().expect("nonempty"))
+    }
+
+    /// Execute one fused RK3 block step.
+    ///
+    /// All four arrays must have length `block + 6` (3 ghosts per side);
+    /// returns `(chi', phi', pi')` of length `block`.
+    pub fn step(
+        &self,
+        block: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> Result<StepOut> {
+        let n = block + 6;
+        if chi.len() != n || phi.len() != n || pi.len() != n || r.len() != n {
+            bail!(
+                "step(b{block}): arrays must have length {n}, got {}/{}/{}/{}",
+                chi.len(),
+                phi.len(),
+                pi.len(),
+                r.len()
+            );
+        }
+        if let Some(c) = &self.counters {
+            c.xla_calls.inc();
+        }
+        TL_EXES.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            // (Re)build the thread cache if absent or pointed elsewhere.
+            let rebuild = match slot.as_ref() {
+                None => true,
+                Some(c) => c.dir != *self.dir,
+            };
+            if rebuild {
+                let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+                *slot = Some(ThreadExecCache { dir: (*self.dir).clone(), client, exes: HashMap::new() });
+            }
+            let cache = slot.as_mut().unwrap();
+            if !cache.exes.contains_key(&block) {
+                if !self.manifest.iter().any(|e| e.block == block) {
+                    bail!("no artifact for block size {block} (have {:?})", self.block_sizes());
+                }
+                let path = self.dir.join(format!("step_b{block}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = cache.client.compile(&comp).map_err(|e| anyhow!("compile b{block}: {e}"))?;
+                cache.exes.insert(block, exe);
+            }
+            let exe = &cache.exes[&block];
+
+            let args = [
+                xla::Literal::vec1(chi),
+                xla::Literal::vec1(phi),
+                xla::Literal::vec1(pi),
+                xla::Literal::vec1(r),
+                xla::Literal::from(dx),
+                xla::Literal::from(dt),
+            ];
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute b{block}: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch b{block}: {e}"))?;
+            let (l_chi, l_phi, l_pi) =
+                result.to_tuple3().map_err(|e| anyhow!("untuple b{block}: {e}"))?;
+            Ok((
+                l_chi.to_vec::<f64>().map_err(|e| anyhow!("chi out: {e}"))?,
+                l_phi.to_vec::<f64>().map_err(|e| anyhow!("phi out: {e}"))?,
+                l_pi.to_vec::<f64>().map_err(|e| anyhow!("pi out: {e}"))?,
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let text = "# header\n8 14 8 f64 1504 abcd\n16 22 16 f64 2528 ef01\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].block, 8);
+        assert_eq!(m[1].input_len, 22);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        assert!(parse_manifest("8 14 8 f64\n").is_err());
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn open_validates_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let xc = XlaCompute::open(artifacts_dir()).unwrap();
+        assert!(xc.block_sizes().contains(&8));
+        assert_eq!(xc.pick_block(10), 16);
+        assert_eq!(xc.pick_block(8), 8);
+        assert_eq!(xc.pick_block(100_000), *xc.block_sizes().last().unwrap());
+    }
+
+    #[test]
+    fn step_dt_zero_is_identity_on_interior() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let xc = XlaCompute::open(artifacts_dir()).unwrap();
+        let block = 8;
+        let n = block + 6;
+        let dx = 0.1;
+        let r: Vec<f64> = (0..n).map(|i| 1.0 + dx * i as f64).collect();
+        let chi: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin() * 0.1).collect();
+        let phi: Vec<f64> = (0..n).map(|i| (i as f64 * 0.2).cos() * 0.1).collect();
+        let pi: Vec<f64> = (0..n).map(|i| (i as f64 * 0.5).sin() * 0.05).collect();
+        let (oc, op, opi) = xc.step(block, &chi, &phi, &pi, &r, dx, 0.0).unwrap();
+        assert_eq!(oc.len(), block);
+        for i in 0..block {
+            assert!((oc[i] - chi[3 + i]).abs() < 1e-14);
+            assert!((op[i] - phi[3 + i]).abs() < 1e-14);
+            assert!((opi[i] - pi[3 + i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn step_rejects_bad_lengths() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let xc = XlaCompute::open(artifacts_dir()).unwrap();
+        let bad = vec![0.0; 5];
+        assert!(xc.step(8, &bad, &bad, &bad, &bad, 0.1, 0.0).is_err());
+    }
+
+    #[test]
+    fn step_works_from_many_threads() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let xc = XlaCompute::open(artifacts_dir()).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let xc = xc.clone();
+                std::thread::spawn(move || {
+                    let block = 8;
+                    let n = block + 6;
+                    let dx = 0.1;
+                    let r: Vec<f64> = (0..n).map(|i| 1.0 + dx * i as f64).collect();
+                    let v: Vec<f64> = (0..n).map(|i| 0.01 * (t + 1) as f64 * i as f64).collect();
+                    let z = vec![0.0; n];
+                    for _ in 0..20 {
+                        let out = xc.step(block, &v, &z, &z, &r, dx, 0.01).unwrap();
+                        assert_eq!(out.0.len(), block);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn xla_call_counter_increments() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let counters = Arc::new(Counters::default());
+        let xc = XlaCompute::open(artifacts_dir()).unwrap().with_counters(counters.clone());
+        let block = 8;
+        let n = block + 6;
+        let z = vec![0.0; n];
+        let r: Vec<f64> = (0..n).map(|i| 1.0 + 0.1 * i as f64).collect();
+        xc.step(block, &z, &z, &z, &r, 0.1, 0.0).unwrap();
+        xc.step(block, &z, &z, &z, &r, 0.1, 0.0).unwrap();
+        assert_eq!(counters.xla_calls.get(), 2);
+    }
+}

@@ -1,0 +1,221 @@
+//! Virtual-parallelism makespan simulator.
+//!
+//! **Why this exists**: the build container exposes a single CPU core
+//! (`available_parallelism() == 1`), while the paper's scaling figures
+//! (3, 7, 8, 9) sweep 2–48 cores. Per the substitution rule (DESIGN.md
+//! §3) we simulate the missing hardware: the experiments execute the
+//! *real* task DAG once to measure every task's actual compute cost, and
+//! this module replays that DAG under W virtual workers in discrete
+//! virtual time. Two schedulers are modeled:
+//!
+//! * [`simulate_px`] — ParalleX work-queue execution: any idle worker
+//!   takes any ready task (greedy list scheduling, the work-stealing
+//!   ideal), plus a per-task management overhead (the measured Fig 9
+//!   per-thread cost).
+//! * [`simulate_csp`] — CSP/MPI execution: tasks are bound to their
+//!   statically-owned rank; a global barrier ends every tick, so each
+//!   tick costs the *maximum* over ranks (plus per-remote-input wire
+//!   latency) — idle ranks wait, which is exactly the starvation the
+//!   paper attributes to the global barrier.
+//!
+//! Everything else — dependency structure, task costs, ownership — is
+//! measured, not assumed; only the worker count is virtual.
+
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Duration;
+
+/// A task in the replayed DAG.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    /// Measured compute cost.
+    pub cost: Duration,
+    /// Indices of tasks that must finish first.
+    pub preds: Vec<usize>,
+    /// Static owner rank (CSP mode) — ignored by `simulate_px`.
+    pub rank: usize,
+    /// Barrier tick (CSP mode).
+    pub tick: u64,
+    /// Number of predecessor inputs that cross a rank boundary (CSP
+    /// mode): each costs one wire latency.
+    pub remote_inputs: usize,
+}
+
+/// Result of a virtual schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOutcome {
+    pub makespan: Duration,
+    /// Sum of all task costs (the serial work).
+    pub total_work: Duration,
+    /// total_work / (makespan * workers) — utilization.
+    pub efficiency: f64,
+}
+
+/// Greedy list-scheduling makespan with `workers` virtual workers and a
+/// fixed `per_task_overhead` (thread-management cost) added to each task.
+pub fn simulate_px(tasks: &[SimTask], workers: usize, per_task_overhead: Duration) -> SimOutcome {
+    assert!(workers >= 1);
+    let n = tasks.len();
+    let mut indeg: Vec<usize> = vec![0; n];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, t) in tasks.iter().enumerate() {
+        indeg[i] = t.preds.len();
+        for &p in &t.preds {
+            succ[p].push(i);
+        }
+    }
+    // Ready tasks become available at the max finish time of their preds.
+    // Workers greedily pick the earliest-available ready task.
+    let mut ready: BinaryHeap<std::cmp::Reverse<(u64, usize)>> = BinaryHeap::new(); // (avail_ns, task)
+    for i in 0..n {
+        if indeg[i] == 0 {
+            ready.push(std::cmp::Reverse((0, i)));
+        }
+    }
+    let mut worker_free: BinaryHeap<std::cmp::Reverse<u64>> =
+        (0..workers).map(|_| std::cmp::Reverse(0u64)).collect();
+    let mut finish: Vec<u64> = vec![0; n];
+    let mut makespan = 0u64;
+    let mut total_work = 0u64;
+    let mut done = 0usize;
+    while let Some(std::cmp::Reverse((avail, i))) = ready.pop() {
+        let std::cmp::Reverse(wfree) = worker_free.pop().expect("worker");
+        let start = avail.max(wfree);
+        let cost = tasks[i].cost.as_nanos() as u64 + per_task_overhead.as_nanos() as u64;
+        let end = start + cost;
+        finish[i] = end;
+        makespan = makespan.max(end);
+        total_work += cost;
+        worker_free.push(std::cmp::Reverse(end));
+        done += 1;
+        for &s in &succ[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                let avail_s = tasks[s].preds.iter().map(|&p| finish[p]).max().unwrap_or(0);
+                ready.push(std::cmp::Reverse((avail_s, s)));
+            }
+        }
+    }
+    assert_eq!(done, n, "DAG had a cycle or unreachable tasks");
+    let makespan = Duration::from_nanos(makespan);
+    let total_work_d = Duration::from_nanos(total_work);
+    SimOutcome {
+        makespan,
+        total_work: total_work_d,
+        efficiency: total_work as f64 / (makespan.as_nanos() as f64 * workers as f64).max(1.0),
+    }
+}
+
+/// Synchronous CSP makespan: per tick, each rank computes its owned due
+/// tasks serially (+ wire latency per remote input); the barrier makes
+/// the tick cost the max over ranks; ticks sum.
+pub fn simulate_csp(
+    tasks: &[SimTask],
+    ranks: usize,
+    wire_latency: Duration,
+    barrier_cost: Duration,
+) -> SimOutcome {
+    let mut per_tick: HashMap<u64, Vec<&SimTask>> = HashMap::new();
+    for t in tasks {
+        per_tick.entry(t.tick).or_default().push(t);
+    }
+    let mut ticks: Vec<u64> = per_tick.keys().copied().collect();
+    ticks.sort_unstable();
+    let mut makespan = 0u64;
+    let mut total_work = 0u64;
+    for t in ticks {
+        let mut rank_time = vec![0u64; ranks];
+        for task in &per_tick[&t] {
+            let c = task.cost.as_nanos() as u64
+                + task.remote_inputs as u64 * wire_latency.as_nanos() as u64;
+            rank_time[task.rank.min(ranks - 1)] += c;
+            total_work += task.cost.as_nanos() as u64;
+        }
+        makespan += rank_time.iter().copied().max().unwrap_or(0) + barrier_cost.as_nanos() as u64;
+    }
+    let makespan_d = Duration::from_nanos(makespan);
+    SimOutcome {
+        makespan: makespan_d,
+        total_work: Duration::from_nanos(total_work),
+        efficiency: total_work as f64 / (makespan as f64 * ranks as f64).max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(cost_us: u64, preds: Vec<usize>) -> SimTask {
+        SimTask {
+            cost: Duration::from_micros(cost_us),
+            preds,
+            rank: 0,
+            tick: 0,
+            remote_inputs: 0,
+        }
+    }
+
+    #[test]
+    fn independent_tasks_scale_linearly() {
+        let tasks: Vec<SimTask> = (0..100).map(|_| t(100, vec![])).collect();
+        let s1 = simulate_px(&tasks, 1, Duration::ZERO);
+        let s4 = simulate_px(&tasks, 4, Duration::ZERO);
+        assert_eq!(s1.makespan, Duration::from_micros(10_000));
+        assert_eq!(s4.makespan, Duration::from_micros(2_500));
+        assert!((s4.efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chain_does_not_scale() {
+        let tasks: Vec<SimTask> = (0..10).map(|i| t(50, if i == 0 { vec![] } else { vec![i - 1] })).collect();
+        let s1 = simulate_px(&tasks, 1, Duration::ZERO);
+        let s8 = simulate_px(&tasks, 8, Duration::ZERO);
+        assert_eq!(s1.makespan, s8.makespan);
+    }
+
+    #[test]
+    fn overhead_added_per_task() {
+        let tasks: Vec<SimTask> = (0..10).map(|_| t(10, vec![])).collect();
+        let s = simulate_px(&tasks, 1, Duration::from_micros(5));
+        assert_eq!(s.makespan, Duration::from_micros(150));
+    }
+
+    #[test]
+    fn diamond_respects_dependencies() {
+        // 0 -> {1, 2} -> 3
+        let tasks = vec![
+            t(10, vec![]),
+            t(10, vec![0]),
+            t(10, vec![0]),
+            t(10, vec![1, 2]),
+        ];
+        let s = simulate_px(&tasks, 4, Duration::ZERO);
+        assert_eq!(s.makespan, Duration::from_micros(30));
+    }
+
+    #[test]
+    fn csp_barrier_costs_max_over_ranks() {
+        // Tick 0: rank 0 has 3 tasks, rank 1 has 1 -> tick costs 30.
+        let mut tasks = vec![];
+        for _ in 0..3 {
+            tasks.push(SimTask { cost: Duration::from_micros(10), preds: vec![], rank: 0, tick: 0, remote_inputs: 0 });
+        }
+        tasks.push(SimTask { cost: Duration::from_micros(10), preds: vec![], rank: 1, tick: 0, remote_inputs: 0 });
+        let s = simulate_csp(&tasks, 2, Duration::ZERO, Duration::ZERO);
+        assert_eq!(s.makespan, Duration::from_micros(30));
+        // Perfectly balanced would be 20 across 2 ranks: efficiency 40/60.
+        assert!((s.efficiency - 40.0 / 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csp_remote_inputs_pay_latency() {
+        let tasks = vec![SimTask {
+            cost: Duration::from_micros(10),
+            preds: vec![],
+            rank: 0,
+            tick: 0,
+            remote_inputs: 2,
+        }];
+        let s = simulate_csp(&tasks, 1, Duration::from_micros(50), Duration::ZERO);
+        assert_eq!(s.makespan, Duration::from_micros(110));
+    }
+}

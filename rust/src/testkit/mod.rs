@@ -1,0 +1,8 @@
+//! In-repo testing utilities.
+//!
+//! The build environment is offline (no `proptest`/`quickcheck`), so
+//! [`prop`] provides a small deterministic property-testing harness built
+//! on a splitmix/xorshift PRNG. It is used across the runtime's unit tests
+//! for randomized invariant checking with reproducible seeds.
+
+pub mod prop;

@@ -1,0 +1,294 @@
+//! Cross-module integration tests: the full stack composed end-to-end.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use parallex::amr::backend::{NativeBackend, XlaBackend};
+use parallex::amr::dataflow_driver::{initial_block_states, run, run_epoch, AmrConfig};
+use parallex::amr::engine::EpochPlan;
+use parallex::amr::mesh::{Hierarchy, MeshConfig, Region};
+use parallex::amr::regrid::{initial_hierarchy, regrid_hierarchy, remap, Composite, RegridConfig};
+use parallex::csp::amr::run_epoch_csp;
+use parallex::px::net::NetModel;
+use parallex::px::runtime::{PxConfig, PxRuntime, SchedPolicyKind};
+use parallex::runtime::XlaCompute;
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+}
+
+fn one_level() -> Hierarchy {
+    Hierarchy::build(
+        MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 },
+        &[vec![Region { lo: 120, hi: 200 }]],
+    )
+    .unwrap()
+}
+
+/// The full three-layer path: JAX/Pallas AOT artifact -> PJRT -> rust
+/// coordinator -> barrier-free AMR, compared against the native stencil.
+#[test]
+fn xla_backend_amr_matches_native_backend() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+    let h = one_level();
+    let rt = PxRuntime::boot(PxConfig::smp(2));
+    let (plan_n, out_n) = run(&rt, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+    rt.shutdown();
+    let rt = PxRuntime::boot(PxConfig::smp(2));
+    let xla = XlaBackend::new(XlaCompute::open(artifacts_dir()).unwrap());
+    let (_, out_x) = run(&rt, h, Arc::new(xla), cfg).unwrap();
+    rt.shutdown();
+    for (id, b) in &out_n.blocks {
+        let x = &out_x.blocks[id];
+        for i in 0..b.state.interior.len() {
+            let d = (b.state.interior.chi[i] - x.state.interior.chi[i]).abs();
+            assert!(d < 1e-11, "{id:?} chi[{i}] differs by {d}");
+        }
+    }
+    let _ = plan_n;
+}
+
+/// Scheduler policies must not change physics, only performance.
+#[test]
+fn global_queue_and_local_priority_agree() {
+    let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+    let mut outs = Vec::new();
+    for policy in [SchedPolicyKind::GlobalQueue, SchedPolicyKind::LocalPriority] {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 1,
+            workers_per_locality: 3,
+            policy,
+            net: NetModel::instant(),
+        });
+        let (plan, out) = run(&rt, one_level(), Arc::new(NativeBackend), cfg).unwrap();
+        let (_, f) = out.region_state(&plan, 1, 0);
+        outs.push(f);
+        rt.shutdown();
+    }
+    assert_eq!(outs[0], outs[1]);
+}
+
+/// PX barrier-free, PX barrier-mode and CSP must agree bitwise (same
+/// physics, different execution models) — the precondition for Figs 6-8
+/// being execution-model comparisons.
+#[test]
+fn three_execution_models_agree_bitwise() {
+    let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+    let h = one_level();
+    let rt = PxRuntime::boot(PxConfig::smp(3));
+    let (plan, a) = run(&rt, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+    rt.shutdown();
+    let rt = PxRuntime::boot(PxConfig::smp(3));
+    let (_, b) = run(
+        &rt,
+        h.clone(),
+        Arc::new(NativeBackend),
+        AmrConfig { barrier: true, ..cfg },
+    )
+    .unwrap();
+    rt.shutdown();
+    let plan2 = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+    let init = initial_block_states(&plan2, &cfg);
+    let c = run_epoch_csp(plan2, Arc::new(NativeBackend), cfg, &init, 2, NetModel::instant())
+        .unwrap()
+        .outcome;
+    for (id, x) in &a.blocks {
+        for (other, name) in [(&b, "barrier"), (&c, "csp")] {
+            let y = &other.blocks[id];
+            for i in 0..x.state.interior.len() {
+                assert_eq!(
+                    x.state.interior.pi[i].to_bits(),
+                    y.state.interior.pi[i].to_bits(),
+                    "{name} {id:?} pi[{i}]"
+                );
+            }
+        }
+    }
+    let _ = plan;
+}
+
+/// Multi-epoch evolution with regridding keeps the solution finite and
+/// the refined region tracking the pulse.
+#[test]
+fn multi_epoch_regrid_tracks_pulse() {
+    let mesh = MeshConfig { r_max: 20.0, n0: 401, levels: 1, cfl: 0.25, granularity: 16 };
+    let rc = RegridConfig::default();
+    let mut h = initial_hierarchy(mesh, rc, 0.05, 8.0, 1.0).unwrap();
+    let rt = PxRuntime::boot(PxConfig::smp(2));
+    let cfg = AmrConfig { amplitude: 0.05, coarse_steps: 8, ..Default::default() };
+    let mut init = None;
+    let mut centers = Vec::new();
+    for _ in 0..3 {
+        let plan = Arc::new(EpochPlan::new(h.clone(), cfg.coarse_steps));
+        let states = init.take().unwrap_or_else(|| initial_block_states(&plan, &cfg));
+        let out = run_epoch(&rt, plan.clone(), Arc::new(NativeBackend), cfg, &states).unwrap();
+        let comp = Composite::new(&plan, &out);
+        if h.n_levels() > 1 {
+            let reg = h.regions[1][0];
+            centers.push(h.config.dx(1) * (reg.lo + reg.hi) as f64 / 2.0);
+        }
+        let h2 = regrid_hierarchy(&comp, rc).unwrap();
+        let plan2 = EpochPlan::new(h2.clone(), cfg.coarse_steps);
+        init = Some(remap(&comp, &plan2));
+        h = h2;
+    }
+    rt.shutdown();
+    assert!(centers.len() >= 2, "refinement disappeared: {centers:?}");
+    // All refined regions stay in the pulse's neighbourhood.
+    for c in &centers {
+        assert!((*c - 8.0).abs() < 5.0, "refined region drifted to r={c}");
+    }
+}
+
+/// Failure injection: dropping every parcel must not wedge the runtime's
+/// local work, and counters record the drops.
+#[test]
+fn parcel_loss_does_not_wedge_local_work() {
+    let rt = PxRuntime::boot(PxConfig {
+        localities: 2,
+        workers_per_locality: 1,
+        policy: SchedPolicyKind::LocalPriority,
+        net: NetModel::instant(),
+    });
+    rt.net().set_drop_filter(|_| true); // black hole
+    let l0 = rt.locality(0).clone();
+    let l1 = rt.locality(1).clone();
+    let (k_gid, fut) = l0.new_remote_future().unwrap();
+    // Remote set is dropped; the future must simply stay unresolved.
+    l1.set_remote_f64s(k_gid, &[1.0]).unwrap();
+    assert!(fut.wait_timeout(Duration::from_millis(100)).is_none());
+    assert_eq!(rt.net().dropped(), 1);
+    // Local work still proceeds.
+    let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let h2 = hits.clone();
+    l0.spawner.spawn(move |_| {
+        h2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    });
+    rt.wait_quiescent();
+    assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    rt.shutdown();
+}
+
+/// Energy stays bounded over a long subcritical evolution (stability of
+/// the full AMR composition: taper + restriction + BCs).
+#[test]
+fn long_subcritical_run_is_stable() {
+    let mesh = MeshConfig { r_max: 20.0, n0: 401, levels: 1, cfl: 0.25, granularity: 16 };
+    let h = initial_hierarchy(mesh, RegridConfig::default(), 0.01, 8.0, 1.0).unwrap();
+    let rt = PxRuntime::boot(PxConfig::smp(2));
+    let cfg = AmrConfig { amplitude: 0.01, coarse_steps: 100, ..Default::default() };
+    let (plan, out) = run(&rt, h, Arc::new(NativeBackend), cfg).unwrap();
+    let (reg0, f0) = out.region_state(&plan, 0, 0);
+    let dx0 = plan.hierarchy.config.dx(0);
+    let r: Vec<f64> = (reg0.lo..reg0.hi).map(|i| dx0 * i as f64).collect();
+    assert!(f0.max_abs().is_finite());
+    let e = parallex::amr::physics::energy_norm(&f0, &r, dx0);
+    assert!(e.is_finite() && e < 1.0, "energy {e}");
+    rt.shutdown();
+}
+
+/// Barrier-free outperforms barrier mode in tasks completed under the
+/// same wallclock budget (the Fig 6 claim), on a load-imbalanced grid.
+#[test]
+fn barrier_free_completes_more_tasks_per_wallclock() {
+    let h = Hierarchy::build(
+        MeshConfig { r_max: 20.0, n0: 801, levels: 1, cfl: 0.25, granularity: 8 },
+        &[vec![Region { lo: 480, hi: 800 }]],
+    )
+    .unwrap();
+    let budget = Duration::from_millis(400);
+    let mut done = Vec::new();
+    for barrier in [false, true] {
+        let rt = PxRuntime::boot(PxConfig::smp(2));
+        let cfg = AmrConfig {
+            coarse_steps: 1_000_000,
+            barrier,
+            deadline: Some(budget),
+            ..Default::default()
+        };
+        let (_, out) = run(&rt, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+        done.push(out.tasks_run);
+        rt.shutdown();
+    }
+    // Allow slack: on one physical core the gap narrows, but barrier mode
+    // must not exceed barrier-free.
+    assert!(
+        done[0] as f64 >= 0.95 * done[1] as f64,
+        "barrier-free {} vs barrier {}",
+        done[0],
+        done[1]
+    );
+}
+
+/// AGAS + parcels + thread manager under churn: many remote round-trips
+/// complete and the counters balance.
+#[test]
+fn remote_round_trip_storm() {
+    let rt = PxRuntime::boot(PxConfig {
+        localities: 3,
+        workers_per_locality: 2,
+        policy: SchedPolicyKind::LocalPriority,
+        net: NetModel::instant(),
+    });
+    let l0 = rt.locality(0).clone();
+    let mut futs = Vec::new();
+    for i in 0..200u32 {
+        let target_loc = 1 + (i % 2);
+        let tgt = rt
+            .locality(target_loc)
+            .register_component(parallex::px::gid::GidKind::Component, ())
+            .unwrap();
+        let (k_gid, fut) = l0.new_remote_future().unwrap();
+        let mut e = parallex::px::wire::Enc::new();
+        e.f64(i as f64);
+        l0.apply(tgt, parallex::px::action::ACT_PING, e.finish(), k_gid).unwrap();
+        futs.push((i, fut));
+    }
+    for (i, fut) in futs {
+        assert_eq!(fut.wait().unwrap(), vec![i as f64]);
+    }
+    let c = rt.counters_total();
+    assert!(c.parcels_sent >= 400, "requests + replies: {}", c.parcels_sent);
+    assert_eq!(c.parcels_sent, c.parcels_received);
+    rt.shutdown();
+}
+
+/// CSP and PX under a lossy-free cluster-like wire still agree (latency
+/// shifts timing, never results).
+#[test]
+fn cluster_wire_does_not_change_results() {
+    let cfg = AmrConfig { coarse_steps: 3, ..Default::default() };
+    let h = one_level();
+    let plan = Arc::new(EpochPlan::new(h.clone(), cfg.coarse_steps));
+    let init = initial_block_states(&plan, &cfg);
+    let fast = run_epoch_csp(plan.clone(), Arc::new(NativeBackend), cfg, &init, 2, NetModel::instant())
+        .unwrap()
+        .outcome;
+    let slow = run_epoch_csp(
+        plan,
+        Arc::new(NativeBackend),
+        cfg,
+        &init,
+        2,
+        NetModel { base_latency: Duration::from_micros(200), bandwidth_bps: 1_000_000_000 },
+    )
+    .unwrap()
+    .outcome;
+    let mut blocks: Vec<_> = fast.blocks.keys().copied().collect();
+    blocks.sort();
+    for id in blocks {
+        assert_eq!(
+            fast.blocks[&id].state.interior, slow.blocks[&id].state.interior,
+            "{id:?} differs under latency"
+        );
+    }
+}
