@@ -16,16 +16,17 @@ use parallex::amr::regrid::{initial_hierarchy, RegridConfig};
 use parallex::bench::backend_from_env;
 use parallex::metrics::{ascii_profile, fmt_dur};
 use parallex::px::runtime::{PxConfig, PxRuntime};
+use parallex::util::err::{Error, Result};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
     }
     // 1. Geometry: r in [0, 20], 801 base points, up to 2 refinement
     //    levels placed by the truncation-error estimator.
     let mesh = MeshConfig { r_max: 20.0, n0: 801, levels: 2, cfl: 0.25, granularity: 16 };
-    let hierarchy = initial_hierarchy(mesh, RegridConfig::default(), 0.05, 8.0, 1.0)
-        .map_err(anyhow::Error::msg)?;
+    let hierarchy =
+        initial_hierarchy(mesh, RegridConfig::default(), 0.05, 8.0, 1.0).map_err(Error::msg)?;
     println!("hierarchy: {} levels, {} blocks", hierarchy.n_levels(), hierarchy.blocks.len());
     for (l, regs) in hierarchy.regions.iter().enumerate() {
         let dx = hierarchy.config.dx(l);

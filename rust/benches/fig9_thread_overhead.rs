@@ -1,10 +1,20 @@
 //! Fig 9: thread-management overhead — regenerates the paper's rows/series.
 //! Run: `cargo bench --bench fig9_thread_overhead` (PX_SCALE=full for paper scale).
+//!
+//! Also emits the machine-readable `BENCH_1.json` (override the path with
+//! PX_BENCH_JSON): per-thread overhead plus scheduler counters for every
+//! policy — including the pre-refactor seed replica — so each PR leaves a
+//! perf trajectory behind.
 fn main() {
     if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
     }
     let t0 = std::time::Instant::now();
-    print!("{}", parallex::bench::fig9_thread_overhead(parallex::bench::Scale::from_env()));
+    let scale = parallex::bench::Scale::from_env();
+    print!("{}", parallex::bench::fig9_thread_overhead(scale));
+    match parallex::bench::write_fig9_json(scale) {
+        Ok(path) => eprintln!("[fig9_thread_overhead] wrote {}", path.display()),
+        Err(e) => eprintln!("[fig9_thread_overhead] BENCH json failed: {e}"),
+    }
     eprintln!("[fig9_thread_overhead] total {:.1}s", t0.elapsed().as_secs_f64());
 }

@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::util::err::Result;
 
 use super::physics::{rk3_step, Fields, STEP_GHOST};
 use crate::runtime::XlaCompute;
@@ -46,7 +46,7 @@ impl ComputeBackend for NativeBackend {
         dx: f64,
         dt: f64,
     ) -> Result<Fields> {
-        anyhow::ensure!(chi.len() == m + 2 * STEP_GHOST, "bad input length");
+        crate::ensure!(chi.len() == m + 2 * STEP_GHOST, "bad input length");
         Ok(rk3_step(chi, phi, pi, r, dx, dt))
     }
 
@@ -85,7 +85,7 @@ impl ComputeBackend for XlaBackend {
         dt: f64,
     ) -> Result<Fields> {
         let n = m + 2 * STEP_GHOST;
-        anyhow::ensure!(chi.len() == n, "bad input length {} != {n}", chi.len());
+        crate::ensure!(chi.len() == n, "bad input length {} != {n}", chi.len());
         let block = self.xc.pick_block(m);
         if block == m {
             let (c, p, q) = self.xc.step(block, chi, phi, pi, r, dx, dt)?;
@@ -149,7 +149,8 @@ mod tests {
     }
 
     fn have_artifacts() -> bool {
-        std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+        cfg!(feature = "pjrt")
+            && std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
     }
 
     fn sample(m: usize, r0: f64) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {

@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::util::err::Result;
 
 use super::backend::ComputeBackend;
 use super::engine::{assemble, restriction_of, shadow_output, split_output, EpochPlan, Input, StateOut};
@@ -66,11 +66,13 @@ impl Default for AmrConfig {
     }
 }
 
-/// Per-block progress + final state.
+/// Per-block progress + final state. The state is `Arc`-shared with the
+/// dataflow graph that produced it (recording progress is a refcount
+/// bump, not a copy of the block's arrays).
 #[derive(Debug, Clone)]
 pub struct BlockOutcome {
     pub completed_steps: u64,
-    pub state: StateOut,
+    pub state: Arc<StateOut>,
 }
 
 /// Result of one epoch run.
@@ -206,11 +208,17 @@ impl DriverState {
     }
 
     /// Deliver one input to task `(id, k)`; fire it when complete.
+    ///
+    /// Zero-copy contract: `input` arrives `Arc`-shared from the
+    /// producer — this path never deep-copies fragment data (the
+    /// `payload_deep_copies` counter is the tripwire; the equivalence
+    /// property test pins the physics bitwise).
     fn push(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, input: Input) {
         let l = id.level as usize;
         if k >= self.plan.targets[l] {
             return; // beyond the epoch's horizon
         }
+        sp.counters().amr_pushes.inc();
         let key = (id, k);
         let ready = {
             let mut sh = self.table[shard(&key)].lock().unwrap();
@@ -259,10 +267,13 @@ impl DriverState {
             let keys: Vec<u64> = parked.keys().copied().filter(|&t| t <= now).collect();
             keys.into_iter().flat_map(|t| parked.remove(&t).unwrap()).collect()
         };
-        for (id, k, inputs) in due {
+        // Batch-spawn the released tasks: one worker wake for the round.
+        let batch = due.into_iter().map(|(id, k, inputs)| {
             let st = self.clone();
-            sp.spawn(move |sp| st.run_task(sp, id, k, inputs));
-        }
+            Box::new(move |sp: &Spawner| st.run_task(sp, id, k, inputs))
+                as Box<dyn FnOnce(&Spawner) + Send>
+        });
+        sp.spawn_batch(Priority::Normal, batch);
     }
 
     /// Execute one block-step task.
@@ -276,12 +287,12 @@ impl DriverState {
             .unwrap_or(false)
             || self.diverged.load(Ordering::Relaxed);
 
-        let out: Option<StateOut> = if frozen {
+        let out: Option<Arc<StateOut>> = if frozen {
             self.tasks_frozen.fetch_add(1, Ordering::Relaxed);
             None
         } else if p.role == BlockRole::Shadow {
             self.tasks_run.fetch_add(1, Ordering::Relaxed);
-            Some(shadow_output(p, &inputs))
+            Some(Arc::new(shadow_output(p, &inputs)))
         } else {
             self.tasks_run.fetch_add(1, Ordering::Relaxed);
             let t = assemble(p, k, &inputs, &plan.hierarchy).expect("evolved block");
@@ -294,7 +305,7 @@ impl DriverState {
                         // criticality driver detects this via outcome).
                         self.diverged.store(true, Ordering::Relaxed);
                     }
-                    Some(split_output(&t, f, &p.info))
+                    Some(Arc::new(split_output(&t, f, &p.info)))
                 }
                 Err(e) => {
                     eprintln!("block {id:?}@{k}: backend error: {e}");
@@ -307,6 +318,7 @@ impl DriverState {
         if let Some(out) = out {
             // Record progress (monotonic: shadow tasks j and j+1 may run
             // concurrently since both depend only on fine restrictions).
+            // The board shares the graph's Arc — no array copies here.
             {
                 let mut b = self.board.lock().unwrap();
                 let e = b.entry(id).or_insert_with(|| BlockOutcome {
@@ -339,8 +351,10 @@ impl DriverState {
         }
     }
 
-    /// Push this task's outputs to every dependent task.
-    fn route_outputs(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, out: &StateOut) {
+    /// Push this task's outputs to every dependent task. Every fragment
+    /// is built (at most) once and then `Arc`-shared across consumers: a
+    /// push is a refcount bump, not a buffer copy.
+    fn route_outputs(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, out: &Arc<StateOut>) {
         let plan = self.plan.clone();
         let p = plan.plan(id);
         let b = &p.info;
@@ -352,18 +366,26 @@ impl DriverState {
         }
 
         // Ghost fragments: the full owned range (extension included).
+        // Without extensions, the ghost fragment IS the interior — share
+        // it; only extension-carrying outputs assemble a combined buffer
+        // (once, regardless of the number of consumers).
         if !p.ghost_to.is_empty() {
-            let mut parts: Vec<&Fields> = Vec::with_capacity(3);
-            let mut lo = b.lo;
-            if let Some(el) = &out.ext_left {
-                lo -= el.len();
-                parts.push(el);
-            }
-            parts.push(&out.interior);
-            if let Some(er) = &out.ext_right {
-                parts.push(er);
-            }
-            let frag = Fields::concat(&parts);
+            let (lo, frag): (usize, Arc<Fields>) =
+                if out.ext_left.is_none() && out.ext_right.is_none() {
+                    (b.lo, out.interior.clone())
+                } else {
+                    let mut parts: Vec<&Fields> = Vec::with_capacity(3);
+                    let mut lo = b.lo;
+                    if let Some(el) = &out.ext_left {
+                        lo -= el.len();
+                        parts.push(el);
+                    }
+                    parts.push(&out.interior);
+                    if let Some(er) = &out.ext_right {
+                        parts.push(er);
+                    }
+                    (lo, Arc::new(Fields::concat(&parts)))
+                };
             for tgt in &p.ghost_to {
                 self.push(sp, *tgt, next, Input::GhostFrag { lo, f: frag.clone() });
             }
@@ -372,6 +394,7 @@ impl DriverState {
         // Restriction to parents at aligned completions.
         if next % 2 == 0 && !p.restrict_to.is_empty() {
             let (plo, f) = restriction_of(out, b);
+            let f = Arc::new(f);
             let m = next / 2;
             for tgt in &p.restrict_to {
                 let role = plan.plan(*tgt).role;
@@ -381,7 +404,7 @@ impl DriverState {
         }
 
         // Taper fragments to children: parent state@next serves child
-        // aligned task 2*next.
+        // aligned task 2*next. The payload is the interior itself.
         if !p.taper_to.is_empty() {
             let child_k = 2 * next;
             for (tgt, _side) in &p.taper_to {
@@ -400,8 +423,9 @@ impl DriverState {
         // Mimic the push pattern of a fictitious "task -1" per block.
         for p in &self.plan.plans {
             let id = p.info.id;
-            let f = &init[&id];
-            let out = StateOut { ext_left: None, interior: f.clone(), ext_right: None };
+            // One shared buffer per block; every seed push below shares it.
+            let f = Arc::new(init[&id].clone());
+            let out = Arc::new(StateOut { ext_left: None, interior: f.clone(), ext_right: None });
             // Self + ghosts (Shadow blocks take no self input).
             if p.role != BlockRole::Shadow {
                 self.push(sp, id, 0, Input::SelfState(out.clone()));
@@ -413,6 +437,7 @@ impl DriverState {
             // for restriction @2 produced by fine task 1).
             if !p.restrict_to.is_empty() {
                 let (plo, rf) = restriction_of(&out, &p.info);
+                let rf = Arc::new(rf);
                 for tgt in &p.restrict_to {
                     if self.plan.plan(*tgt).role == BlockRole::Evolved {
                         self.push(sp, *tgt, 0, Input::RestrictFrag { lo: plo, f: rf.clone() });
@@ -458,7 +483,7 @@ pub fn run_epoch(
     match config.deadline {
         None => {
             // Graph runs to exhaustion.
-            st.done.wait().map_err(|e| anyhow::anyhow!("epoch failed: {e}"))?;
+            st.done.wait().map_err(|e| crate::anyhow!("epoch failed: {e}"))?;
         }
         Some(d) => {
             // Wait for completion or deadline + drain.
@@ -470,7 +495,7 @@ pub fn run_epoch(
     }
     rt.wait_quiescent();
     let blocks = st.board.lock().unwrap().clone();
-    anyhow::ensure!(
+    crate::ensure!(
         !st.diverged.load(Ordering::Relaxed) || config.deadline.is_some(),
         "evolution diverged (supercritical or unstable)"
     );
@@ -694,6 +719,86 @@ mod tests {
         assert!(max < 100_000);
         assert!(max > min, "expected uneven progress, got uniform {max}");
         runtime.shutdown();
+    }
+
+    #[test]
+    fn pushes_are_refcount_bumps_not_deep_copies() {
+        // The zero-copy contract: an epoch generates thousands of input
+        // deliveries (amr_pushes) and zero payload deep copies on the
+        // push path (payload_deep_copies is the tripwire counter).
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 6, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let runtime = rt(4);
+        let (_, _) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+        let totals = runtime.counters_total();
+        assert!(totals.amr_pushes > 100, "expected many pushes, got {}", totals.amr_pushes);
+        assert_eq!(
+            totals.payload_deep_copies, 0,
+            "push path must not deep-copy fragment payloads"
+        );
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn prop_arc_payload_driver_matches_clone_based_path_bitwise() {
+        // The Arc-payload dataflow driver against the CSP driver, whose
+        // local store is the seed's clone-based delivery (deep-copied
+        // `StateOut`s and fragments, synchronous schedule). Identical
+        // physics must come out bit-for-bit, for random geometry, steps,
+        // granularity and worker counts.
+        use crate::csp::amr::run_epoch_csp;
+        use crate::px::net::NetModel;
+        prop_check("arc payloads vs clone-based path", 6, |rng: &mut Rng| {
+            let levels = if rng.chance(0.5) { 1 } else { 0 };
+            let granularity = rng.range(6, 24);
+            let workers = rng.range(1, 5);
+            let steps = rng.range(2, 6) as u64;
+            let mesh = MeshConfig { r_max: 20.0, n0: 201, levels, cfl: 0.25, granularity };
+            let regions: Vec<Vec<Region>> = if levels == 1 {
+                let lo = 100 + 2 * rng.range(0, 20); // even, within [100, 140)
+                let hi = lo + 60 + 2 * rng.range(0, 20);
+                vec![vec![Region { lo, hi }]]
+            } else {
+                vec![]
+            };
+            let h = Hierarchy::build(mesh, &regions).unwrap();
+            let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+
+            let runtime = rt(workers);
+            let (_, px_out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+
+            let plan = Arc::new(EpochPlan::new(h, steps));
+            let init = initial_block_states(&plan, &cfg);
+            let ranks = rng.range(1, 4);
+            let csp = run_epoch_csp(plan, Arc::new(NativeBackend), cfg, &init, ranks, NetModel::instant())
+                .unwrap()
+                .outcome;
+
+            assert_eq!(px_out.blocks.len(), csp.blocks.len());
+            for (id, b) in &px_out.blocks {
+                let c = &csp.blocks[id];
+                assert_eq!(b.completed_steps, c.completed_steps, "{id:?}");
+                for i in 0..b.state.interior.len() {
+                    assert_eq!(
+                        b.state.interior.chi[i].to_bits(),
+                        c.state.interior.chi[i].to_bits(),
+                        "{id:?} chi[{i}]"
+                    );
+                    assert_eq!(
+                        b.state.interior.phi[i].to_bits(),
+                        c.state.interior.phi[i].to_bits(),
+                        "{id:?} phi[{i}]"
+                    );
+                    assert_eq!(
+                        b.state.interior.pi[i].to_bits(),
+                        c.state.interior.pi[i].to_bits(),
+                        "{id:?} pi[{i}]"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! here and relied on by both drivers — every push must find a consumer
 //! slot, and every task must eventually receive all its inputs.
 
+use std::sync::Arc;
+
 use super::mesh::{BlockId, BlockInfo, BlockRole, Hierarchy, TAPER};
 #[cfg(test)]
 use super::mesh::EdgeKind;
@@ -19,31 +21,38 @@ use super::physics::{Fields, STEP_GHOST};
 
 /// Output of one task: the advanced interior, plus surviving taper
 /// extension values when the task was an aligned (even-step) refill.
+///
+/// The interior is `Arc`-shared: one task's output fans out to every
+/// dependent task (self@k+1, ghost consumers, taper children), and since
+/// the zero-copy refactor each of those deliveries is a refcount bump on
+/// the same buffer, never a `Vec<f64>` copy.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct StateOut {
     /// 3 evolved extension points below `lo` (present after even steps of
     /// blocks owning a left fine-edge extension).
     pub ext_left: Option<Fields>,
-    /// The block's `[lo, hi)` values.
-    pub interior: Fields,
+    /// The block's `[lo, hi)` values (shared, immutable once produced).
+    pub interior: Arc<Fields>,
     /// 3 evolved extension points at/above `hi`.
     pub ext_right: Option<Fields>,
 }
 
-/// One dataflow input to a task.
+/// One dataflow input to a task. All payloads are `Arc`-shared: cloning
+/// an `Input` (to deliver one producer output to many consumer tasks)
+/// bumps a refcount instead of deep-copying fragment data.
 #[derive(Debug, Clone)]
 pub enum Input {
     /// The block's own previous output.
-    SelfState(StateOut),
+    SelfState(Arc<StateOut>),
     /// Same-level values covering `[lo, lo + f.len())` in own-level
     /// indices (a neighbour's interior and possibly its extension).
-    GhostFrag { lo: usize, f: Fields },
+    GhostFrag { lo: usize, f: Arc<Fields> },
     /// Parent-level values covering `[parent_lo, ...)` in *parent*
     /// indices, for taper prolongation at aligned steps.
-    TaperFrag { parent_lo: usize, f: Fields },
+    TaperFrag { parent_lo: usize, f: Arc<Fields> },
     /// Child-level injection covering `[lo, ...)` in *own-level* indices
     /// (values at points coincident with child grid points).
-    RestrictFrag { lo: usize, f: Fields },
+    RestrictFrag { lo: usize, f: Arc<Fields> },
 }
 
 /// Which side of a block.
@@ -382,8 +391,8 @@ pub fn assemble(plan: &BlockPlan, k: u64, inputs: &[Input], h: &Hierarchy) -> Op
                 }
             }
             Input::GhostFrag { lo, f } => win.put_fields(*lo as i64, f),
-            Input::TaperFrag { parent_lo, f } => taper_frags.push((*parent_lo, f)),
-            Input::RestrictFrag { lo, f } => restrict_frags.push((*lo, f)),
+            Input::TaperFrag { parent_lo, f } => taper_frags.push((*parent_lo, f.as_ref())),
+            Input::RestrictFrag { lo, f } => restrict_frags.push((*lo, f.as_ref())),
         }
     }
 
@@ -495,7 +504,7 @@ pub fn split_output(t: &TaskInput, f: Fields, b: &BlockInfo) -> StateOut {
         e
     });
     let w = b.hi - b.lo;
-    let interior = f.slice(off, off + w);
+    let interior = Arc::new(f.slice(off, off + w));
     let ext_right = t.has_ext_right.then(|| f.slice(off + w, off + w + g));
     StateOut { ext_left, interior, ext_right }
 }
@@ -521,7 +530,7 @@ pub fn shadow_output(plan: &BlockPlan, inputs: &[Input]) -> StateOut {
         }
     }
     debug_assert!(have.iter().all(|&x| x), "shadow block {:?} not fully covered", b.id);
-    StateOut { ext_left: None, interior: out, ext_right: None }
+    StateOut { ext_left: None, interior: Arc::new(out), ext_right: None }
 }
 
 /// Restriction fragment produced by a (fine) block's output: values at
@@ -626,11 +635,11 @@ mod tests {
         };
         let out = StateOut {
             ext_left: None,
-            interior: Fields {
+            interior: Arc::new(Fields {
                 chi: vec![1., 2., 3., 4., 5., 6.],
                 phi: vec![0.; 6],
                 pi: vec![0.; 6],
-            },
+            }),
             ext_right: None,
         };
         // Own indices 121..127; even ones: 122,124,126 -> parent 61,62,63.
@@ -656,9 +665,13 @@ mod tests {
             initial_data(&r, 0.1, 5.0, 1.0)
         };
         let inputs = vec![
-            Input::SelfState(StateOut { ext_left: None, interior: f_at(50, 10), ext_right: None }),
-            Input::GhostFrag { lo: 40, f: f_at(40, 10) },
-            Input::GhostFrag { lo: 60, f: f_at(60, 10) },
+            Input::SelfState(Arc::new(StateOut {
+                ext_left: None,
+                interior: Arc::new(f_at(50, 10)),
+                ext_right: None,
+            })),
+            Input::GhostFrag { lo: 40, f: Arc::new(f_at(40, 10)) },
+            Input::GhostFrag { lo: 60, f: Arc::new(f_at(60, 10)) },
         ];
         let t = assemble(p, 0, &inputs, &plan.hierarchy).unwrap();
         assert_eq!(t.in_lo, 47);
@@ -686,8 +699,12 @@ mod tests {
         let rg: Vec<f64> = (10..20).map(|i| dx * i as f64).collect();
         let fg = initial_data(&rg, 0.1, 3.0, 1.0);
         let inputs = vec![
-            Input::SelfState(StateOut { ext_left: None, interior: f.clone(), ext_right: None }),
-            Input::GhostFrag { lo: 10, f: fg },
+            Input::SelfState(Arc::new(StateOut {
+                ext_left: None,
+                interior: Arc::new(f.clone()),
+                ext_right: None,
+            })),
+            Input::GhostFrag { lo: 10, f: Arc::new(fg) },
         ];
         let t = assemble(p, 0, &inputs, &plan.hierarchy).unwrap();
         assert_eq!(t.in_lo, -3);

@@ -593,6 +593,336 @@ pub fn fig9_thread_overhead(scale: Scale) -> String {
     out
 }
 
+// ----------------------------------------------- Fig 9 machine-readable
+
+/// A replica of the *pre-refactor* thread manager, kept verbatim as the
+/// measured baseline for `BENCH_1.json`: `Mutex<VecDeque>` global queue
+/// ([`crate::px::sched::MutexQueue`]), a 1 ms condvar poll when parked,
+/// unconditional idle-lock acquisition on notify, SeqCst `active`
+/// traffic, and 5 ms quiescence polling. Everything the lock-free
+/// rebuild removed, preserved so the speedup is measured on the same
+/// machine in the same process.
+mod seed_replica {
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    struct Shared {
+        queue: Mutex<VecDeque<Box<dyn FnOnce() + Send>>>,
+        active: AtomicU64,
+        shutdown: AtomicBool,
+        parked: AtomicUsize,
+        idle_lock: Mutex<()>,
+        idle_cv: Condvar,
+        quiesce_lock: Mutex<()>,
+        quiesce_cv: Condvar,
+        contended: AtomicU64,
+        parked_waits: AtomicU64,
+    }
+
+    pub struct SeedPool {
+        shared: Arc<Shared>,
+        workers: Vec<std::thread::JoinHandle<()>>,
+    }
+
+    pub struct SeedStats {
+        pub queue_contended: u64,
+        pub parked_waits: u64,
+    }
+
+    impl SeedPool {
+        pub fn new(n_workers: usize) -> SeedPool {
+            let shared = Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                active: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                parked: AtomicUsize::new(0),
+                idle_lock: Mutex::new(()),
+                idle_cv: Condvar::new(),
+                quiesce_lock: Mutex::new(()),
+                quiesce_cv: Condvar::new(),
+                contended: AtomicU64::new(0),
+                parked_waits: AtomicU64::new(0),
+            });
+            let workers = (0..n_workers)
+                .map(|_| {
+                    let sh = shared.clone();
+                    std::thread::spawn(move || loop {
+                        let task = {
+                            let mut g = match sh.queue.try_lock() {
+                                Ok(g) => g,
+                                Err(_) => {
+                                    sh.contended.fetch_add(1, Ordering::Relaxed);
+                                    sh.queue.lock().unwrap()
+                                }
+                            };
+                            g.pop_front()
+                        };
+                        match task {
+                            Some(f) => {
+                                f();
+                                if sh.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+                                    let _g = sh.quiesce_lock.lock().unwrap();
+                                    sh.quiesce_cv.notify_all();
+                                }
+                            }
+                            None => {
+                                if sh.shutdown.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                // The seed's park protocol: 1 ms poll.
+                                let g = sh.idle_lock.lock().unwrap();
+                                sh.parked.fetch_add(1, Ordering::SeqCst);
+                                sh.parked_waits.fetch_add(1, Ordering::Relaxed);
+                                let (_g2, _) = sh
+                                    .idle_cv
+                                    .wait_timeout(g, Duration::from_millis(1))
+                                    .unwrap();
+                                sh.parked.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            SeedPool { shared, workers }
+        }
+
+        pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+            let sh = &self.shared;
+            sh.active.fetch_add(1, Ordering::SeqCst);
+            {
+                let mut g = match sh.queue.try_lock() {
+                    Ok(g) => g,
+                    Err(_) => {
+                        sh.contended.fetch_add(1, Ordering::Relaxed);
+                        sh.queue.lock().unwrap()
+                    }
+                };
+                g.push_back(Box::new(f));
+            }
+            if sh.parked.load(Ordering::SeqCst) > 0 {
+                let _g = sh.idle_lock.lock().unwrap();
+                sh.idle_cv.notify_one();
+            }
+        }
+
+        pub fn wait_quiescent(&self) {
+            let mut g = self.shared.quiesce_lock.lock().unwrap();
+            while self.shared.active.load(Ordering::SeqCst) != 0 {
+                let (g2, _) = self
+                    .shared
+                    .quiesce_cv
+                    .wait_timeout(g, Duration::from_millis(5))
+                    .unwrap();
+                g = g2;
+            }
+        }
+
+        pub fn stats(&self) -> SeedStats {
+            SeedStats {
+                queue_contended: self.shared.contended.load(Ordering::Relaxed),
+                parked_waits: self.shared.parked_waits.load(Ordering::Relaxed),
+            }
+        }
+
+        pub fn shutdown(mut self) {
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+            {
+                let _g = self.shared.idle_lock.lock().unwrap();
+                self.shared.idle_cv.notify_all();
+            }
+            for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+struct Fig9Series {
+    policy: &'static str,
+    workers: usize,
+    batch: bool,
+    ns_per_task: f64,
+    steals: u64,
+    queue_contended: u64,
+    queue_cas_retries: u64,
+    parked_waits: u64,
+    queue_hwm: u64,
+}
+
+fn fig9_measure_manager(
+    make: impl Fn(usize, Arc<Counters>) -> crate::px::thread::ThreadManager,
+    policy: &'static str,
+    workers: usize,
+    n: u64,
+    batch: bool,
+) -> Fig9Series {
+    let counters = Arc::new(Counters::default());
+    let tm = make(workers, counters.clone());
+    let sp = tm.spawner();
+    let t0 = Instant::now();
+    if batch {
+        let chunk = 1024usize;
+        let mut left = n;
+        while left > 0 {
+            let take = chunk.min(left as usize);
+            sp.spawn_batch(
+                crate::px::sched::Priority::Normal,
+                (0..take).map(|_| {
+                    Box::new(|_: &crate::px::thread::Spawner| {})
+                        as Box<dyn FnOnce(&crate::px::thread::Spawner) + Send>
+                }),
+            );
+            left -= take as u64;
+        }
+    } else {
+        for _ in 0..n {
+            sp.spawn(|_| {});
+        }
+    }
+    tm.wait_quiescent();
+    let wall = t0.elapsed();
+    let s = counters.snapshot();
+    Fig9Series {
+        policy,
+        workers,
+        batch,
+        ns_per_task: wall.as_nanos() as f64 / n as f64,
+        steals: s.steals,
+        queue_contended: s.queue_contended,
+        queue_cas_retries: s.queue_cas_retries,
+        parked_waits: s.parked_waits,
+        queue_hwm: s.queue_hwm,
+    }
+}
+
+fn fig9_measure_seed(workers: usize, n: u64) -> Fig9Series {
+    let pool = seed_replica::SeedPool::new(workers);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        pool.spawn(|| {});
+    }
+    pool.wait_quiescent();
+    let wall = t0.elapsed();
+    let stats = pool.stats();
+    pool.shutdown();
+    Fig9Series {
+        policy: "seed-mutex-poll",
+        workers,
+        batch: false,
+        ns_per_task: wall.as_nanos() as f64 / n as f64,
+        steals: 0,
+        queue_contended: stats.queue_contended,
+        queue_cas_retries: 0,
+        parked_waits: stats.parked_waits,
+        queue_hwm: 0,
+    }
+}
+
+/// Machine-readable Fig 9 measurements: per-thread overhead and counter
+/// deltas per (policy, workers), including the pre-refactor seed replica
+/// as the same-machine baseline. Consumed by CI (`BENCH_1.json`) so
+/// later PRs have a perf trajectory to compare against.
+pub fn fig9_bench_json(scale: Scale) -> String {
+    let n: u64 = match scale {
+        Scale::Quick => 50_000,
+        Scale::Full => 500_000,
+    };
+    let host = cores();
+    let worker_set: Vec<usize> = if host > 1 { vec![1, host] } else { vec![1] };
+    let mut series: Vec<Fig9Series> = Vec::new();
+    for &w in &worker_set {
+        series.push(fig9_measure_seed(w, n));
+        series.push(fig9_measure_manager(
+            crate::px::thread::mutex_queue_manager,
+            "mutex-queue",
+            w,
+            n,
+            false,
+        ));
+        series.push(fig9_measure_manager(
+            crate::px::thread::global_queue_manager,
+            "global-queue",
+            w,
+            n,
+            false,
+        ));
+        series.push(fig9_measure_manager(
+            crate::px::thread::local_priority_manager,
+            "local-priority",
+            w,
+            n,
+            false,
+        ));
+        series.push(fig9_measure_manager(
+            crate::px::thread::local_priority_manager,
+            "local-priority",
+            w,
+            n,
+            true,
+        ));
+    }
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig9_thread_overhead\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!(
+        "  \"scale\": \"{}\",\n",
+        if scale == Scale::Full { "full" } else { "quick" }
+    ));
+    out.push_str(&format!("  \"n_tasks\": {n},\n"));
+    out.push_str(&format!("  \"host_parallelism\": {host},\n"));
+    // Headline ratios: lock-free hot path vs the seed baseline.
+    for &w in &worker_set {
+        let base = series
+            .iter()
+            .find(|s| s.policy == "seed-mutex-poll" && s.workers == w)
+            .map(|s| s.ns_per_task)
+            .unwrap_or(f64::NAN);
+        let new = series
+            .iter()
+            .find(|s| s.policy == "local-priority" && s.workers == w && !s.batch)
+            .map(|s| s.ns_per_task)
+            .unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "  \"speedup_vs_seed_w{w}\": {:.3},\n",
+            base / new
+        ));
+    }
+    out.push_str("  \"series\": [\n");
+    for (i, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"workers\": {}, \"batch\": {}, \"ns_per_task\": {:.2}, \
+             \"steals\": {}, \"queue_contended\": {}, \"queue_cas_retries\": {}, \
+             \"parked_waits\": {}, \"queue_hwm\": {}}}{}\n",
+            s.policy,
+            s.workers,
+            s.batch,
+            s.ns_per_task,
+            s.steals,
+            s.queue_contended,
+            s.queue_cas_retries,
+            s.parked_waits,
+            s.queue_hwm,
+            if i + 1 == series.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write `fig9_bench_json` to `PX_BENCH_JSON` (or `<repo>/BENCH_1.json`).
+/// Returns the path written.
+pub fn write_fig9_json(scale: Scale) -> std::io::Result<std::path::PathBuf> {
+    let path = std::env::var("PX_BENCH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_1.json")
+        });
+    std::fs::write(&path, fig9_bench_json(scale))?;
+    Ok(path)
+}
+
 // ------------------------------------------------------------- §V FPGA
 
 /// §V: software queue vs FPGA-offloaded global queue on the Fibonacci
@@ -656,5 +986,25 @@ mod tests {
     #[test]
     fn scale_env_parsing() {
         assert_eq!(Scale::from_env(), Scale::Quick);
+    }
+
+    #[test]
+    fn fig9_json_reports_every_policy_and_balances_braces() {
+        let j = fig9_bench_json(Scale::Quick);
+        for key in [
+            "\"bench\": \"fig9_thread_overhead\"",
+            "seed-mutex-poll",
+            "mutex-queue",
+            "global-queue",
+            "local-priority",
+            "speedup_vs_seed_w1",
+            "\"series\": [",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        let opens = j.matches('{').count();
+        let closes = j.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced JSON braces");
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::util::err::Result;
 
 use crate::amr::backend::ComputeBackend;
 use crate::amr::dataflow_driver::{AmrConfig, AmrOutcome, BlockOutcome};
@@ -111,7 +111,11 @@ pub fn run_epoch_csp(
             for p in &plan.plans {
                 store.insert(
                     p.info.id,
-                    StateOut { ext_left: None, interior: init[&p.info.id].clone(), ext_right: None },
+                    StateOut {
+                        ext_left: None,
+                        interior: Arc::new(init[&p.info.id].clone()),
+                        ext_right: None,
+                    },
                 );
             }
             let owned: Vec<BlockId> = plan
@@ -186,11 +190,11 @@ pub fn run_epoch_csp(
                             if rank_of(&plan, *src, comm.size) == me {
                                 let s = &store[src];
                                 let (lo, f) = restriction_of(s, &plan.plan(*src).info);
-                                inputs.push(Input::RestrictFrag { lo, f });
+                                inputs.push(Input::RestrictFrag { lo, f: Arc::new(f) });
                             } else {
                                 let v = comm.recv(tag(Kind::Restrict, flat[src], flat[&id], k));
                                 let (lo, f) = decode_frag(&v);
-                                inputs.push(Input::RestrictFrag { lo, f });
+                                inputs.push(Input::RestrictFrag { lo, f: Arc::new(f) });
                             }
                         }
                         let t0 = Instant::now();
@@ -201,7 +205,7 @@ pub fn run_epoch_csp(
                         continue;
                     }
                     // Self.
-                    inputs.push(Input::SelfState(store[&id].clone()));
+                    inputs.push(Input::SelfState(Arc::new(store[&id].clone())));
                     // Ghosts (k=0: every rank evaluated the initial data
                     // locally, so seeds are never messaged).
                     for src in &p.ghost_from {
@@ -218,11 +222,11 @@ pub fn run_epoch_csp(
                             if let Some(er) = &s.ext_right {
                                 parts.push(er);
                             }
-                            inputs.push(Input::GhostFrag { lo, f: Fields::concat(&parts) });
+                            inputs.push(Input::GhostFrag { lo, f: Arc::new(Fields::concat(&parts)) });
                         } else {
                             let v = comm.recv(tag(Kind::Ghost, flat[src], flat[&id], k));
                             let (lo, f) = decode_frag(&v);
-                            inputs.push(Input::GhostFrag { lo, f });
+                            inputs.push(Input::GhostFrag { lo, f: Arc::new(f) });
                         }
                     }
                     // Taper at aligned steps.
@@ -243,7 +247,7 @@ pub fn run_epoch_csp(
                             } else {
                                 let v = comm.recv(tag(Kind::Taper, flat[&src], flat[&id], k));
                                 let (lo, f) = decode_frag(&v);
-                                inputs.push(Input::TaperFrag { parent_lo: lo, f });
+                                inputs.push(Input::TaperFrag { parent_lo: lo, f: Arc::new(f) });
                             }
                         }
                     }
@@ -253,11 +257,11 @@ pub fn run_epoch_csp(
                         if k == 0 || rank_of(&plan, *src, comm.size) == me {
                             let s = &store[src];
                             let (lo, f) = restriction_of(s, &plan.plan(*src).info);
-                            inputs.push(Input::RestrictFrag { lo, f });
+                            inputs.push(Input::RestrictFrag { lo, f: Arc::new(f) });
                         } else {
                             let v = comm.recv(tag(Kind::Restrict, flat[src], flat[&id], k));
                             let (lo, f) = decode_frag(&v);
-                            inputs.push(Input::RestrictFrag { lo, f });
+                            inputs.push(Input::RestrictFrag { lo, f: Arc::new(f) });
                         }
                     }
                     let t0 = Instant::now();
@@ -348,7 +352,7 @@ pub fn run_epoch_csp(
                         *id,
                         BlockOutcome {
                             completed_steps: steps_done.get(id).copied().unwrap_or(0),
-                            state: store[id].clone(),
+                            state: Arc::new(store[id].clone()),
                         },
                     )
                 })

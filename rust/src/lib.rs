@@ -23,3 +23,4 @@ pub mod px;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;
+pub mod util;

@@ -6,7 +6,7 @@
 //! (one relaxed `fetch_add` per event); the Fig 9 overhead bench measures
 //! their cost as part of thread-management overhead, exactly as HPX does.
 
-use crossbeam_utils::CachePadded;
+use crate::util::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// One monotonically increasing event counter.
@@ -60,7 +60,12 @@ pub struct Counters {
     /// Times a worker found every queue empty and parked.
     pub parked_waits: Counter,
     /// Lock acquisitions on a scheduling queue that had to contend.
+    /// On the lock-free schedulers the only lock left is the injector's
+    /// overflow spillover, so this stays ~0 by construction.
     pub queue_contended: Counter,
+    /// CAS retries on lock-free scheduling queues (a cursor race lost to
+    /// another core). The lock-free analogue of `queue_contended`.
+    pub queue_cas_retries: Counter,
     /// High-water mark of any scheduling queue length.
     pub queue_hwm: Counter,
     /// Parcels sent to a remote locality.
@@ -79,6 +84,12 @@ pub struct Counters {
     pub lco_triggers: Counter,
     /// XLA executable invocations (the PJRT hot path).
     pub xla_calls: Counter,
+    /// AMR dataflow inputs delivered (each an `Arc` refcount bump).
+    pub amr_pushes: Counter,
+    /// Deep copies of fragment payloads on the dataflow push path.
+    /// Contract: stays 0 — the zero-copy regression tripwire. Any future
+    /// code that must deep-copy a payload on the push path bumps this.
+    pub payload_deep_copies: Counter,
 }
 
 /// A plain snapshot of all counters, for diffing across a run.
@@ -92,6 +103,7 @@ pub struct CounterSnapshot {
     pub steals: u64,
     pub parked_waits: u64,
     pub queue_contended: u64,
+    pub queue_cas_retries: u64,
     pub queue_hwm: u64,
     pub parcels_sent: u64,
     pub parcels_received: u64,
@@ -101,6 +113,8 @@ pub struct CounterSnapshot {
     pub migrations: u64,
     pub lco_triggers: u64,
     pub xla_calls: u64,
+    pub amr_pushes: u64,
+    pub payload_deep_copies: u64,
 }
 
 impl Counters {
@@ -115,6 +129,7 @@ impl Counters {
             steals: self.steals.get(),
             parked_waits: self.parked_waits.get(),
             queue_contended: self.queue_contended.get(),
+            queue_cas_retries: self.queue_cas_retries.get(),
             queue_hwm: self.queue_hwm.get(),
             parcels_sent: self.parcels_sent.get(),
             parcels_received: self.parcels_received.get(),
@@ -124,6 +139,8 @@ impl Counters {
             migrations: self.migrations.get(),
             lco_triggers: self.lco_triggers.get(),
             xla_calls: self.xla_calls.get(),
+            amr_pushes: self.amr_pushes.get(),
+            payload_deep_copies: self.payload_deep_copies.get(),
         }
     }
 }
@@ -140,6 +157,7 @@ impl CounterSnapshot {
             steals: self.steals - earlier.steals,
             parked_waits: self.parked_waits - earlier.parked_waits,
             queue_contended: self.queue_contended - earlier.queue_contended,
+            queue_cas_retries: self.queue_cas_retries - earlier.queue_cas_retries,
             queue_hwm: self.queue_hwm.max(earlier.queue_hwm),
             parcels_sent: self.parcels_sent - earlier.parcels_sent,
             parcels_received: self.parcels_received - earlier.parcels_received,
@@ -149,6 +167,8 @@ impl CounterSnapshot {
             migrations: self.migrations - earlier.migrations,
             lco_triggers: self.lco_triggers - earlier.lco_triggers,
             xla_calls: self.xla_calls - earlier.xla_calls,
+            amr_pushes: self.amr_pushes - earlier.amr_pushes,
+            payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
         }
     }
 
@@ -163,6 +183,7 @@ impl CounterSnapshot {
             ("steals", self.steals),
             ("parked_waits", self.parked_waits),
             ("queue_contended", self.queue_contended),
+            ("queue_cas_retries", self.queue_cas_retries),
             ("queue_hwm", self.queue_hwm),
             ("parcels_sent", self.parcels_sent),
             ("parcels_received", self.parcels_received),
@@ -172,6 +193,8 @@ impl CounterSnapshot {
             ("migrations", self.migrations),
             ("lco_triggers", self.lco_triggers),
             ("xla_calls", self.xla_calls),
+            ("amr_pushes", self.amr_pushes),
+            ("payload_deep_copies", self.payload_deep_copies),
         ];
         let mut out = String::new();
         for (k, v) in rows {

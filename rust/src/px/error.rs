@@ -1,36 +1,46 @@
 //! Error type shared by all ParalleX runtime components.
-
-use thiserror::Error;
+//!
+//! (Hand-written `Display`/`Error` impls instead of a `thiserror` derive
+//! so the crate stays dependency-free for offline builds.)
 
 /// Errors surfaced by the ParalleX runtime.
 ///
 /// LCOs propagate `PxError` through continuations (a future set to an error
 /// state delivers `Err` to every registered continuation), mirroring HPX's
 /// exception forwarding across asynchronous boundaries.
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PxError {
     /// An AGAS lookup failed: the GID was never bound or was unbound.
-    #[error("AGAS: unresolved gid {0}")]
     Unresolved(String),
     /// A parcel referenced an action id that no locality registered.
-    #[error("action manager: unknown action id {0}")]
     UnknownAction(u32),
     /// Wire-format decode failure (truncated or corrupt parcel).
-    #[error("wire: {0}")]
     Wire(String),
     /// An LCO was used against its protocol (e.g. double-set of a future).
-    #[error("LCO protocol violation: {0}")]
     LcoProtocol(String),
     /// A value-producing task failed; the error text is forwarded.
-    #[error("remote/async task failed: {0}")]
     TaskFailed(String),
     /// The runtime is shutting down; no further work is accepted.
-    #[error("runtime is shutting down")]
     ShuttingDown,
     /// Simulated network failure (used by failure-injection tests).
-    #[error("network: {0}")]
     Net(String),
 }
+
+impl std::fmt::Display for PxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PxError::Unresolved(g) => write!(f, "AGAS: unresolved gid {g}"),
+            PxError::UnknownAction(id) => write!(f, "action manager: unknown action id {id}"),
+            PxError::Wire(m) => write!(f, "wire: {m}"),
+            PxError::LcoProtocol(m) => write!(f, "LCO protocol violation: {m}"),
+            PxError::TaskFailed(m) => write!(f, "remote/async task failed: {m}"),
+            PxError::ShuttingDown => write!(f, "runtime is shutting down"),
+            PxError::Net(m) => write!(f, "network: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PxError {}
 
 /// Convenience alias used across the runtime.
 pub type PxResult<T> = Result<T, PxError>;
@@ -51,5 +61,15 @@ mod tests {
     fn errors_are_cloneable_and_comparable() {
         let e = PxError::ShuttingDown;
         assert_eq!(e.clone(), PxError::ShuttingDown);
+    }
+
+    #[test]
+    fn display_matches_previous_derive_output() {
+        assert_eq!(PxError::ShuttingDown.to_string(), "runtime is shutting down");
+        assert_eq!(PxError::Wire("short".into()).to_string(), "wire: short");
+        assert_eq!(
+            PxError::TaskFailed("boom".into()).to_string(),
+            "remote/async task failed: boom"
+        );
     }
 }

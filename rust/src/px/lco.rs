@@ -110,14 +110,23 @@ impl<T: Clone + Send + 'static> Future<T> {
                 FutureState::Ready(_) => panic!("LCO protocol violation: future set twice"),
             }
         };
-        let n = conts.len() as u64;
+        let n = conts.len();
         if let Some(c) = &self.inner.counters {
-            c.resumptions.add(n);
+            c.resumptions.add(n as u64);
         }
-        for f in conts {
-            let v = r.clone();
-            sp.spawn_prio(Priority::High, move |sp| f(sp, v));
-        }
+        // Fan out as one batch (a single wake), and *move* the value into
+        // the last continuation — the single-consumer case clones nothing
+        // beyond the retained Ready copy.
+        let mut value = Some(r);
+        let batch = conts.into_iter().enumerate().map(move |(i, f)| {
+            let v = if i + 1 == n {
+                value.take().expect("value moved once")
+            } else {
+                value.as_ref().expect("value live until last").clone()
+            };
+            Box::new(move |sp: &Spawner| f(sp, v)) as Box<dyn FnOnce(&Spawner) + Send>
+        });
+        sp.spawn_batch(Priority::High, batch);
     }
 
     /// Register a continuation to run (as a High-priority PX-thread) when
@@ -200,6 +209,11 @@ struct DfState<T> {
 
 /// The dataflow LCO: fires a follow-on action exactly once, when all of
 /// its `n` inputs have been supplied.
+///
+/// Payload discipline: inputs are taken by value in [`Dataflow::set`] and
+/// *moved* into the action when the last one lands — the dataflow path
+/// never clones a payload, which is what lets the AMR driver ship
+/// `Arc`-shared fragments with pure refcount traffic.
 ///
 /// This is the construct the AMR driver uses to replace the global
 /// timestep barrier: each block-update thread is the action of a dataflow
@@ -650,9 +664,8 @@ impl GlobalBarrier {
             }
         };
         if let Some(ws) = release {
-            for w in ws {
-                sp.spawn_prio(Priority::High, move |sp| w(sp));
-            }
+            // One wake for the whole released round.
+            sp.spawn_batch(Priority::High, ws);
         }
     }
 

@@ -1,0 +1,642 @@
+//! Lock-free scheduling structures for the HPX-thread manager hot path.
+//!
+//! Two primitives, both hand-rolled on std atomics (no `crossbeam-deque`
+//! in the offline build):
+//!
+//! * [`WsDeque`] — a Chase–Lev work-stealing deque (Chase & Lev 2005,
+//!   with the weak-memory orderings of Lê et al. 2013). The owning
+//!   worker pushes and pops at the *bottom* with no atomic RMW except on
+//!   the final element; thieves steal the *oldest* task from the *top*
+//!   with a single CAS. The buffer grows geometrically; retired buffers
+//!   are kept alive until the deque drops, so a thief holding a stale
+//!   buffer pointer can always complete its read (the element it reads
+//!   is validated by the subsequent CAS on `top`).
+//!
+//! * [`MpmcQueue`] — a Vyukov-style bounded MPMC ring (per-slot sequence
+//!   numbers, one CAS per push/pop) with an overflow spillover list for
+//!   bursts beyond the ring capacity, used as the *injector* for spawns
+//!   arriving from off-pool OS threads and as the shared global queue.
+//!   Per-producer FIFO is preserved across the ring/overflow boundary:
+//!   one producer's pushes are consumed in push order (once its push
+//!   overflows, its later pushes also overflow until consumers drain
+//!   the spillover). Pushes from *different* producers carry no order
+//!   relative to each other — racing the spill transition can consume
+//!   producer B's newer element before producer A's older one, which is
+//!   the same (absent) guarantee any MPMC queue gives unordered
+//!   producers.
+//!
+//! Both report contention to the caller ([`QStats`]), split by kind so
+//! the performance counters keep distinct meanings: CAS conflicts feed
+//! `queue_cas_retries` (the lock-free analogue of lock contention) and
+//! spillover-lock conflicts feed `queue_contended` (actual lock
+//! contention, ~0 by construction).
+//!
+//! Safety model: slots hold thin raw pointers (`Box<T>` leaked into the
+//! slot, reconstructed exactly once on the consuming side). `WsDeque`
+//! ownership discipline — `push`/`pop` only from the owning worker
+//! thread, `steal` from anywhere — is enforced by the scheduler
+//! (`sched::LocalPriority`), which routes only hint-matching, on-pool
+//! spawns to the deque.
+//!
+//! Deliberate tradeoff: boxing each element costs one small allocation
+//! per push that inline `MaybeUninit` slot storage (crossbeam's choice)
+//! would avoid. Inline storage requires a thief to read a slot the owner
+//! may concurrently overwrite and discard the value on CAS failure — a
+//! technical data race under the C++11 model that crossbeam accepts and
+//! we, hand-rolling without miri/loom in the build environment, do not.
+//! The pointer-slot variant keeps every cross-thread handoff an atomic
+//! operation. Revisit if fig9 profiles show the allocator on the hot
+//! path.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::CachePadded;
+
+// ------------------------------------------------------------- WsDeque
+
+struct WsBuf<T> {
+    slots: Box<[AtomicPtr<T>]>,
+    mask: isize,
+}
+
+impl<T> WsBuf<T> {
+    fn new(cap: usize) -> WsBuf<T> {
+        debug_assert!(cap.is_power_of_two());
+        WsBuf {
+            slots: (0..cap).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            mask: cap as isize - 1,
+        }
+    }
+
+    fn cap(&self) -> isize {
+        self.mask + 1
+    }
+
+    #[inline]
+    fn put(&self, i: isize, p: *mut T) {
+        self.slots[(i & self.mask) as usize].store(p, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn get(&self, i: isize) -> *mut T {
+        self.slots[(i & self.mask) as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of a steal attempt.
+pub enum Steal<T> {
+    /// Nothing to steal.
+    Empty,
+    /// Took the victim's oldest element.
+    Taken(T),
+    /// Lost a race with the owner or another thief; worth retrying.
+    Contended,
+}
+
+/// Chase–Lev work-stealing deque. See module docs for the ownership
+/// discipline (single pusher/popper, many stealers).
+pub struct WsDeque<T> {
+    top: CachePadded<AtomicIsize>,
+    bottom: CachePadded<AtomicIsize>,
+    buf: AtomicPtr<WsBuf<T>>,
+    /// Buffers replaced by growth; freed on drop (bounded: caps double,
+    /// so all retired buffers together are smaller than the live one).
+    retired: Mutex<Vec<*mut WsBuf<T>>>,
+}
+
+// Raw pointers make these !Send/!Sync by default; the protocol above
+// makes shared access sound, and T: Send gates the payloads.
+unsafe impl<T: Send> Send for WsDeque<T> {}
+unsafe impl<T: Send> Sync for WsDeque<T> {}
+
+impl<T> Default for WsDeque<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WsDeque<T> {
+    /// New empty deque (initial capacity 64).
+    pub fn new() -> WsDeque<T> {
+        WsDeque {
+            top: CachePadded::new(AtomicIsize::new(0)),
+            bottom: CachePadded::new(AtomicIsize::new(0)),
+            buf: AtomicPtr::new(Box::into_raw(Box::new(WsBuf::new(64)))),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Approximate number of queued elements (diagnostics only).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// True when (approximately) empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner-only: push at the bottom. Returns the new approximate
+    /// length (for high-water-mark accounting).
+    pub fn push(&self, value: T) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        // Only the owner swaps `buf`, so a Relaxed load is its own write.
+        let mut buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        if b - t >= buf.cap() {
+            buf = self.grow(t, b, buf);
+        }
+        buf.put(b, Box::into_raw(Box::new(value)));
+        // Publish the slot write before the new bottom becomes visible.
+        self.bottom.store(b + 1, Ordering::Release);
+        (b + 1 - t).max(0) as usize
+    }
+
+    /// Owner-only: pop at the bottom (LIFO — best cache locality for the
+    /// task the owner just created).
+    pub fn pop(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        // The SeqCst fence orders the speculative bottom claim against
+        // thieves' top reads (Dekker-style).
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: undo the claim.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        let p = buf.get(b);
+        if t == b {
+            // Last element: race the thieves for it via top.
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                return None; // a thief got it
+            }
+        }
+        Some(*unsafe { Box::from_raw(p) })
+    }
+
+    /// Any thread: steal the oldest element.
+    pub fn steal(&self) -> Steal<T> {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Read the slot *before* the CAS: succeeding at the CAS proves
+        // element `t` had not been taken, and retired buffers stay alive,
+        // so the read pointer is the element even across a growth race.
+        let buf = unsafe { &*self.buf.load(Ordering::Acquire) };
+        let p = buf.get(t);
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            Steal::Taken(*unsafe { Box::from_raw(p) })
+        } else {
+            Steal::Contended
+        }
+    }
+
+    /// Owner-only, cold path: double the buffer, copying live elements.
+    fn grow(&self, t: isize, b: isize, old: &WsBuf<T>) -> &WsBuf<T> {
+        let new = Box::new(WsBuf::new((old.cap() as usize) * 2));
+        for i in t..b {
+            new.put(i, old.get(i));
+        }
+        let new_ptr = Box::into_raw(new);
+        let old_ptr = self.buf.swap(new_ptr, Ordering::Release);
+        self.retired.lock().unwrap().push(old_ptr);
+        unsafe { &*new_ptr }
+    }
+}
+
+impl<T> Drop for WsDeque<T> {
+    fn drop(&mut self) {
+        // Exclusive access here: free remaining elements, then buffers.
+        let t = self.top.load(Ordering::Relaxed);
+        let b = self.bottom.load(Ordering::Relaxed);
+        let buf = unsafe { Box::from_raw(self.buf.load(Ordering::Relaxed)) };
+        for i in t..b {
+            drop(unsafe { Box::from_raw(buf.get(i)) });
+        }
+        for p in self.retired.lock().unwrap().drain(..) {
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
+}
+
+// ----------------------------------------------------------- MpmcQueue
+
+struct MpmcCell<T> {
+    seq: AtomicUsize,
+    val: AtomicPtr<T>,
+}
+
+/// Contention record for one [`MpmcQueue`] operation, split by kind so
+/// the performance counters keep distinct meanings: `cas_retries` are
+/// lock-free conflicts (another core won the cursor race), while
+/// `lock_contended` are failed `try_lock`s on the overflow spillover —
+/// the only lock anywhere near the hot path, and only under sustained
+/// ring overflow.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct QStats {
+    pub cas_retries: u64,
+    pub lock_contended: u64,
+}
+
+/// Vyukov bounded MPMC ring + FIFO-preserving overflow spillover.
+///
+/// Push and pop are one CAS each on the hot path. When the ring fills
+/// (sustained producer surplus), pushes divert to a mutex-guarded list;
+/// consumers drain the ring first (it holds the older elements), so FIFO
+/// order per queue is preserved.
+pub struct MpmcQueue<T> {
+    cells: Box<[MpmcCell<T>]>,
+    mask: usize,
+    enq: CachePadded<AtomicUsize>,
+    deq: CachePadded<AtomicUsize>,
+    /// Approximate live count (ring + overflow), for len/hwm accounting.
+    count: CachePadded<AtomicUsize>,
+    /// Set while the overflow list may be non-empty.
+    overflowed: AtomicUsize,
+    overflow: Mutex<VecDeque<T>>,
+}
+
+unsafe impl<T: Send> Send for MpmcQueue<T> {}
+unsafe impl<T: Send> Sync for MpmcQueue<T> {}
+
+impl<T> MpmcQueue<T> {
+    /// Ring of `cap` slots (rounded up to a power of two, min 8).
+    pub fn with_capacity(cap: usize) -> MpmcQueue<T> {
+        let cap = cap.next_power_of_two().max(8);
+        MpmcQueue {
+            cells: (0..cap)
+                .map(|i| MpmcCell { seq: AtomicUsize::new(i), val: AtomicPtr::new(std::ptr::null_mut()) })
+                .collect(),
+            mask: cap - 1,
+            enq: CachePadded::new(AtomicUsize::new(0)),
+            deq: CachePadded::new(AtomicUsize::new(0)),
+            count: CachePadded::new(AtomicUsize::new(0)),
+            overflowed: AtomicUsize::new(0),
+            overflow: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Approximate queued elements.
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// True when (approximately) empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue. Returns the approximate post-push length; records
+    /// conflicts in `stats`.
+    pub fn push(&self, value: T, stats: &mut QStats) -> usize {
+        if self.overflowed.load(Ordering::Acquire) == 0 {
+            let boxed = Box::new(value);
+            let mut pos = self.enq.load(Ordering::Relaxed);
+            loop {
+                let cell = &self.cells[pos & self.mask];
+                let seq = cell.seq.load(Ordering::Acquire);
+                let dif = (seq as isize).wrapping_sub(pos as isize);
+                if dif == 0 {
+                    match self.enq.compare_exchange_weak(
+                        pos,
+                        pos.wrapping_add(1),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            cell.val.store(Box::into_raw(boxed), Ordering::Relaxed);
+                            cell.seq.store(pos.wrapping_add(1), Ordering::Release);
+                            return self.count.fetch_add(1, Ordering::Relaxed) + 1;
+                        }
+                        Err(cur) => {
+                            stats.cas_retries += 1;
+                            pos = cur;
+                        }
+                    }
+                } else if dif < 0 {
+                    // Ring full: spill. (Re-take ownership of the value.)
+                    self.spill(*boxed, stats);
+                    return self.count.fetch_add(1, Ordering::Relaxed) + 1;
+                } else {
+                    pos = self.enq.load(Ordering::Relaxed);
+                }
+            }
+        } else {
+            // Overflow already engaged: keep FIFO by appending there.
+            let mut g = self.lock_overflow(stats);
+            // Re-assert the flag under the lock: a consumer may have
+            // drained the list and cleared it between our load above and
+            // taking the lock — without this store the appended element
+            // would be invisible to `pop` (stranded task = deadlock, now
+            // that parking has no timeout to paper over lost work).
+            self.overflowed.store(1, Ordering::Release);
+            g.push_back(value);
+            drop(g);
+            self.count.fetch_add(1, Ordering::Relaxed) + 1
+        }
+    }
+
+    /// Dequeue. Records conflicts in `stats`.
+    pub fn pop(&self, stats: &mut QStats) -> Option<T> {
+        let mut pos = self.deq.load(Ordering::Relaxed);
+        loop {
+            let cell = &self.cells[pos & self.mask];
+            let seq = cell.seq.load(Ordering::Acquire);
+            let dif = (seq as isize).wrapping_sub(pos.wrapping_add(1) as isize);
+            if dif == 0 {
+                match self.deq.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // The producer's Release store of seq ordered the
+                        // val store before it; spin the (tiny) window where
+                        // seq is published but val not yet visible is
+                        // impossible by that ordering.
+                        let p = cell.val.swap(std::ptr::null_mut(), Ordering::Acquire);
+                        debug_assert!(!p.is_null());
+                        cell.seq.store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        self.count.fetch_sub(1, Ordering::Relaxed);
+                        return Some(*unsafe { Box::from_raw(p) });
+                    }
+                    Err(cur) => {
+                        stats.cas_retries += 1;
+                        pos = cur;
+                    }
+                }
+            } else if dif < 0 {
+                // Ring empty; check the spillover.
+                if self.overflowed.load(Ordering::Acquire) != 0 {
+                    let mut g = self.lock_overflow(stats);
+                    if let Some(v) = g.pop_front() {
+                        if g.is_empty() {
+                            self.overflowed.store(0, Ordering::Release);
+                        }
+                        drop(g);
+                        self.count.fetch_sub(1, Ordering::Relaxed);
+                        return Some(v);
+                    }
+                    self.overflowed.store(0, Ordering::Release);
+                    return None;
+                }
+                return None;
+            } else {
+                pos = self.deq.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Acquire the overflow lock, counting a failed `try_lock`.
+    fn lock_overflow(&self, stats: &mut QStats) -> std::sync::MutexGuard<'_, VecDeque<T>> {
+        match self.overflow.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                stats.lock_contended += 1;
+                self.overflow.lock().unwrap()
+            }
+            Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        }
+    }
+
+    /// Cold path of [`MpmcQueue::push`]: divert to the overflow list.
+    fn spill(&self, value: T, stats: &mut QStats) {
+        let mut g = self.lock_overflow(stats);
+        self.overflowed.store(1, Ordering::Release);
+        g.push_back(value);
+    }
+}
+
+impl<T> Drop for MpmcQueue<T> {
+    fn drop(&mut self) {
+        let mut s = QStats::default();
+        while self.pop(&mut s).is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn ws_deque_lifo_for_owner() {
+        let d: WsDeque<u32> = WsDeque::new();
+        d.push(1);
+        d.push(2);
+        d.push(3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.pop(), None); // repeated empty pops stay consistent
+        d.push(9);
+        assert_eq!(d.pop(), Some(9));
+    }
+
+    #[test]
+    fn ws_deque_steal_takes_oldest() {
+        let d: WsDeque<u32> = WsDeque::new();
+        d.push(1);
+        d.push(2);
+        match d.steal() {
+            Steal::Taken(v) => assert_eq!(v, 1),
+            _ => panic!("expected steal"),
+        }
+        assert_eq!(d.pop(), Some(2));
+        assert!(matches!(d.steal(), Steal::Empty));
+    }
+
+    #[test]
+    fn ws_deque_grows_past_initial_capacity() {
+        let d: WsDeque<usize> = WsDeque::new();
+        for i in 0..1000 {
+            d.push(i);
+        }
+        assert_eq!(d.len(), 1000);
+        // Steals drain FIFO from the top.
+        for want in 0..500 {
+            match d.steal() {
+                Steal::Taken(v) => assert_eq!(v, want),
+                _ => panic!("steal {want}"),
+            }
+        }
+        // Owner drains LIFO from the bottom.
+        for want in (500..1000).rev() {
+            assert_eq!(d.pop(), Some(want));
+        }
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn ws_deque_drop_frees_leftovers() {
+        let d: WsDeque<Vec<u8>> = WsDeque::new();
+        for _ in 0..100 {
+            d.push(vec![0u8; 128]);
+        }
+        drop(d); // leak-checked under miri/asan builds
+    }
+
+    #[test]
+    fn ws_deque_owner_vs_thieves_exactly_once() {
+        let d: Arc<WsDeque<u64>> = Arc::new(WsDeque::new());
+        let sum = Arc::new(AtomicU64::new(0));
+        let taken = Arc::new(AtomicU64::new(0));
+        const N: u64 = 100_000;
+        let thieves: Vec<_> = (0..3)
+            .map(|_| {
+                let d = d.clone();
+                let sum = sum.clone();
+                let taken = taken.clone();
+                std::thread::spawn(move || loop {
+                    match d.steal() {
+                        Steal::Taken(v) => {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Steal::Empty => {
+                            if taken.load(Ordering::Acquire) >= N {
+                                break;
+                            }
+                            std::hint::spin_loop();
+                        }
+                        Steal::Contended => std::hint::spin_loop(),
+                    }
+                })
+            })
+            .collect();
+        // Owner interleaves pushes and pops.
+        let mut next = 1u64;
+        while next <= N {
+            for _ in 0..64 {
+                if next > N {
+                    break;
+                }
+                d.push(next);
+                next += 1;
+            }
+            while let Some(v) = d.pop() {
+                sum.fetch_add(v, Ordering::Relaxed);
+                taken.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        while let Some(v) = d.pop() {
+            sum.fetch_add(v, Ordering::Relaxed);
+            taken.fetch_add(1, Ordering::Relaxed);
+        }
+        for t in thieves {
+            t.join().unwrap();
+        }
+        assert_eq!(taken.load(Ordering::SeqCst), N);
+        assert_eq!(sum.load(Ordering::SeqCst), N * (N + 1) / 2);
+    }
+
+    #[test]
+    fn mpmc_fifo_single_thread() {
+        let q: MpmcQueue<u32> = MpmcQueue::with_capacity(8);
+        let mut s = QStats::default();
+        for i in 0..5 {
+            q.push(i, &mut s);
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(&mut s), Some(i));
+        }
+        assert_eq!(q.pop(&mut s), None);
+    }
+
+    #[test]
+    fn mpmc_overflow_preserves_fifo() {
+        let q: MpmcQueue<u32> = MpmcQueue::with_capacity(8);
+        let mut s = QStats::default();
+        for i in 0..100 {
+            q.push(i, &mut s); // 8-slot ring: 92 spill
+        }
+        assert_eq!(q.len(), 100);
+        for i in 0..100 {
+            assert_eq!(q.pop(&mut s), Some(i), "at {i}");
+        }
+        assert_eq!(q.pop(&mut s), None);
+        // After draining, the ring is usable again.
+        q.push(7, &mut s);
+        assert_eq!(q.pop(&mut s), Some(7));
+    }
+
+    #[test]
+    fn mpmc_concurrent_producers_consumers_exactly_once() {
+        let q: Arc<MpmcQueue<u64>> = Arc::new(MpmcQueue::with_capacity(256));
+        const PER: u64 = 50_000;
+        const PRODUCERS: u64 = 4;
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut s = QStats::default();
+                    for i in 0..PER {
+                        q.push(p * PER + i, &mut s);
+                    }
+                })
+            })
+            .collect();
+        let got = Arc::new(AtomicU64::new(0));
+        let sum = Arc::new(AtomicU64::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let got = got.clone();
+                let sum = sum.clone();
+                std::thread::spawn(move || {
+                    let mut s = QStats::default();
+                    while got.load(Ordering::Acquire) < PRODUCERS * PER {
+                        if let Some(v) = q.pop(&mut s) {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            got.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let n = PRODUCERS * PER;
+        assert_eq!(got.load(Ordering::SeqCst), n);
+        assert_eq!(sum.load(Ordering::SeqCst), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn mpmc_drop_frees_leftovers() {
+        let q: MpmcQueue<String> = MpmcQueue::with_capacity(8);
+        let mut s = QStats::default();
+        for i in 0..40 {
+            q.push(format!("item-{i}"), &mut s);
+        }
+        drop(q);
+    }
+}

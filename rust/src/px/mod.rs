@@ -19,6 +19,7 @@ pub mod counters;
 pub mod error;
 pub mod gid;
 pub mod lco;
+pub mod lockfree;
 pub mod locality;
 pub mod net;
 pub mod parcel;
@@ -37,5 +38,7 @@ pub use locality::LocalityCtx;
 pub use net::{NetModel, SimNet};
 pub use parcel::{ActionId, Parcel};
 pub use runtime::{PxConfig, PxRuntime, SchedPolicyKind};
-pub use sched::{GlobalQueue, LocalPriority, Policy, Priority, Task};
-pub use thread::{global_queue_manager, local_priority_manager, Spawner, ThreadManager};
+pub use sched::{GlobalQueue, LocalPriority, MutexQueue, Policy, Priority, Task};
+pub use thread::{
+    global_queue_manager, local_priority_manager, mutex_queue_manager, Spawner, ThreadManager,
+};

@@ -169,6 +169,11 @@ impl PxRuntime {
                 if idle() {
                     return;
                 }
+            } else {
+                // Parcels in flight: the per-manager wait is event-driven
+                // (no timeout), so pace this cross-locality poll instead
+                // of spinning on the in-flight count.
+                std::thread::sleep(Duration::from_micros(200));
             }
         }
     }
@@ -209,6 +214,7 @@ impl PxRuntime {
             total.steals += s.steals;
             total.parked_waits += s.parked_waits;
             total.queue_contended += s.queue_contended;
+            total.queue_cas_retries += s.queue_cas_retries;
             total.queue_hwm = total.queue_hwm.max(s.queue_hwm);
             total.parcels_sent += s.parcels_sent;
             total.parcels_received += s.parcels_received;
@@ -218,6 +224,8 @@ impl PxRuntime {
             total.migrations += s.migrations;
             total.lco_triggers += s.lco_triggers;
             total.xla_calls += s.xla_calls;
+            total.amr_pushes += s.amr_pushes;
+            total.payload_deep_copies += s.payload_deep_copies;
         }
         total
     }

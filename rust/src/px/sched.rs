@@ -6,14 +6,34 @@
 //! work from a separate priority queue … supports work stealing for better
 //! load balancing"). Both are provided here behind the [`Policy`] trait so
 //! the Fig 9 overhead bench and the AMR drivers can swap them at runtime.
+//!
+//! Since the lock-free rebuild (DESIGN.md §2) the hot paths take no
+//! locks:
+//!
+//! * [`GlobalQueue`] — one shared Vyukov MPMC ring per priority class.
+//!   Still the paper's contention demonstrator: every core hammers the
+//!   same enqueue/dequeue cursors, and each CAS lost to another core is
+//!   recorded in `queue_contended` (the same "had to fight for the
+//!   queue" meaning the old `try_lock` accounting had).
+//! * [`LocalPriority`] — per-worker Chase–Lev deques (one per priority)
+//!   plus a shared injector for off-pool spawns. On-pool spawn/pop touch
+//!   only the owner's deque ends; thieves take the victim's *oldest*
+//!   task with one CAS. `steals` counts successful steals,
+//!   `queue_cas_retries` counts lost cursor/steal races, and
+//!   `queue_contended` (locks that had to contend) stays ~0 by
+//!   construction — only the injector's overflow spillover lock remains.
+//! * [`MutexQueue`] — the pre-refactor `Mutex<VecDeque>` global queue,
+//!   retained verbatim as the perf-trajectory baseline for
+//!   `BENCH_1.json` (and as a behavioural reference in tests).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crossbeam_utils::CachePadded;
+use crate::util::CachePadded;
 
 use super::counters::Counters;
+use super::lockfree::{MpmcQueue, QStats, Steal, WsDeque};
 use super::thread::Spawner;
 
 /// PX-thread priority. High drains before Normal before Low within a
@@ -37,13 +57,216 @@ pub struct Task {
 /// A scheduling policy: where spawned tasks go and where workers look.
 pub trait Policy: Send + Sync {
     /// Enqueue a task. `hint` is the spawning worker's index when the
-    /// spawn originated on-pool (used by local queues for affinity).
+    /// spawn originated on-pool *on this manager* (used by local queues
+    /// for affinity; the thread manager guarantees a `Some(w)` hint is
+    /// only ever passed from worker `w`'s own OS thread).
     fn push(&self, task: Task, hint: Option<usize>);
     /// Dequeue work for worker `w` (may steal). `None` = nothing runnable.
     fn pop(&self, w: usize) -> Option<Task>;
     /// Approximate total queued tasks (diagnostics only).
     fn approx_len(&self) -> usize;
 }
+
+/// Ring capacities per priority class for the shared MPMC queues.
+/// `GlobalQueue` carries *all* traffic, so its Normal ring absorbs most
+/// of a Fig 9 burst (one producer outrunning one worker) on the
+/// lock-free path (~1 MB of cells). The `LocalPriority` injector only
+/// carries off-pool spawns, so it gets a much smaller ring (~250 KB);
+/// extreme bursts degrade gracefully through the FIFO overflow
+/// spillover, whose lock conflicts are honestly reported as
+/// `queue_contended`. High/Low see far less traffic everywhere.
+const RING_NORMAL_GLOBAL: usize = 1 << 16;
+const RING_NORMAL_INJECTOR: usize = 1 << 13;
+const RING_OTHER: usize = 1 << 12;
+
+/// Three MPMC queues, one per priority class.
+struct PrioMpmc {
+    qs: [MpmcQueue<Task>; 3],
+    counters: Arc<Counters>,
+}
+
+impl PrioMpmc {
+    fn new(counters: Arc<Counters>, normal_cap: usize) -> PrioMpmc {
+        PrioMpmc {
+            qs: [
+                MpmcQueue::with_capacity(RING_OTHER),
+                MpmcQueue::with_capacity(normal_cap),
+                MpmcQueue::with_capacity(RING_OTHER),
+            ],
+            counters,
+        }
+    }
+
+    fn record(&self, s: QStats) {
+        if s.cas_retries > 0 {
+            self.counters.queue_cas_retries.add(s.cas_retries);
+        }
+        if s.lock_contended > 0 {
+            self.counters.queue_contended.add(s.lock_contended);
+        }
+    }
+
+    fn push(&self, task: Task) {
+        let mut s = QStats::default();
+        let len = self.qs[task.prio as usize].push(task, &mut s);
+        self.record(s);
+        self.counters.queue_hwm.max(len as u64);
+    }
+
+    fn pop(&self) -> Option<Task> {
+        let mut s = QStats::default();
+        let mut out = None;
+        for q in &self.qs {
+            if let Some(t) = q.pop(&mut s) {
+                out = Some(t);
+                break;
+            }
+        }
+        self.record(s);
+        out
+    }
+
+    fn len(&self) -> usize {
+        self.qs.iter().map(|q| q.len()).sum()
+    }
+}
+
+/// Single lock-free FIFO (per priority) shared by all workers.
+///
+/// Fair and simple, but every core contends on the same two cursors as
+/// core counts grow — exactly the effect the Fig 9 bench demonstrates,
+/// now visible as CAS conflicts (`queue_cas_retries`) and cache-line
+/// ping-pong instead of a mutex convoy.
+pub struct GlobalQueue {
+    shared: PrioMpmc,
+}
+
+impl GlobalQueue {
+    pub fn new(counters: Arc<Counters>) -> Self {
+        GlobalQueue { shared: PrioMpmc::new(counters, RING_NORMAL_GLOBAL) }
+    }
+}
+
+impl Policy for GlobalQueue {
+    fn push(&self, task: Task, _hint: Option<usize>) {
+        self.shared.push(task);
+    }
+
+    fn pop(&self, _w: usize) -> Option<Task> {
+        self.shared.pop()
+    }
+
+    fn approx_len(&self) -> usize {
+        self.shared.len()
+    }
+}
+
+/// Per-worker Chase–Lev deques (one per priority class) with work
+/// stealing, plus a shared injector queue for spawns arriving from
+/// off-pool OS threads (parcel port, main, LCO triggers off-pool).
+pub struct LocalPriority {
+    /// `locals[w]` is owned by worker `w`: push/pop only from that
+    /// worker's OS thread, steal from anywhere.
+    locals: Vec<CachePadded<[WsDeque<Task>; 3]>>,
+    injector: PrioMpmc,
+    /// Rotates the first steal victim so repeated failed rounds don't
+    /// all hammer worker w+1.
+    steal_rr: AtomicUsize,
+    counters: Arc<Counters>,
+}
+
+impl LocalPriority {
+    pub fn new(n_workers: usize, counters: Arc<Counters>) -> Self {
+        LocalPriority {
+            locals: (0..n_workers)
+                .map(|_| CachePadded::new([WsDeque::new(), WsDeque::new(), WsDeque::new()]))
+                .collect(),
+            injector: PrioMpmc::new(counters.clone(), RING_NORMAL_INJECTOR),
+            steal_rr: AtomicUsize::new(0),
+            counters,
+        }
+    }
+
+    /// One full steal sweep over the other workers' deques, oldest task
+    /// first, priority classes high-to-low per victim.
+    fn try_steal(&self, w: usize) -> Option<Task> {
+        let n = self.locals.len();
+        if n <= 1 {
+            return None;
+        }
+        let start = self.steal_rr.fetch_add(1, Ordering::Relaxed);
+        for off in 0..n - 1 {
+            // Victims cycle over every worker except `w`.
+            let v = (w + 1 + (start + off) % (n - 1)) % n;
+            for q in self.locals[v].iter() {
+                let mut spins = 0u32;
+                loop {
+                    match q.steal() {
+                        Steal::Taken(t) => {
+                            self.counters.steals.inc();
+                            return Some(t);
+                        }
+                        Steal::Empty => break,
+                        Steal::Contended => {
+                            // Another core won the race; retry briefly,
+                            // then move to the next victim.
+                            self.counters.queue_cas_retries.inc();
+                            spins += 1;
+                            if spins >= 4 {
+                                break;
+                            }
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+impl Policy for LocalPriority {
+    fn push(&self, task: Task, hint: Option<usize>) {
+        match hint {
+            // On-pool spawn: owner-push onto the spawning worker's own
+            // deque — no atomic RMW, no sharing (until stolen).
+            Some(w) => {
+                let len = self.locals[w][task.prio as usize].push(task);
+                self.counters.queue_hwm.max(len as u64);
+            }
+            // Off-pool spawn: shared injector (workers drain it when
+            // their own deques run dry; it spreads naturally).
+            None => self.injector.push(task),
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        // 1. Own deques, highest priority first (LIFO within a class:
+        //    freshest task has the hottest cache).
+        for q in self.locals[w].iter() {
+            if let Some(t) = q.pop() {
+                return Some(t);
+            }
+        }
+        // 2. Injector (off-pool arrivals), priority order.
+        if let Some(t) = self.injector.pop() {
+            return Some(t);
+        }
+        // 3. Steal the oldest work from a victim (largest expected
+        //    remaining subtree, lowest steal frequency).
+        self.try_steal(w)
+    }
+
+    fn approx_len(&self) -> usize {
+        let mut n = self.injector.len();
+        for l in &self.locals {
+            n += l.iter().map(|q| q.len()).sum::<usize>();
+        }
+        n
+    }
+}
+
+// ------------------------------------------------- MutexQueue (baseline)
 
 type PrioQueues = [VecDeque<Task>; 3];
 
@@ -64,18 +287,18 @@ fn len_prio(qs: &PrioQueues) -> usize {
     qs.iter().map(|q| q.len()).sum()
 }
 
-/// Single global FIFO (per priority) shared by all workers.
-///
-/// Simple and fair, but the single lock becomes the contention point as
-/// cores grow — exactly the effect the Fig 9 bench demonstrates.
-pub struct GlobalQueue {
+/// The pre-refactor global queue: a single `Mutex<VecDeque>` per run,
+/// with failed-`try_lock` contention accounting. Kept as the measured
+/// baseline the lock-free schedulers are compared against in
+/// `BENCH_1.json` (`bench::fig9_bench_json`).
+pub struct MutexQueue {
     queues: Mutex<PrioQueues>,
     counters: Arc<Counters>,
 }
 
-impl GlobalQueue {
+impl MutexQueue {
     pub fn new(counters: Arc<Counters>) -> Self {
-        GlobalQueue { queues: Mutex::new(Default::default()), counters }
+        MutexQueue { queues: Mutex::new(Default::default()), counters }
     }
 
     /// Lock with contention accounting: a failed `try_lock` is counted
@@ -91,7 +314,7 @@ impl GlobalQueue {
     }
 }
 
-impl Policy for GlobalQueue {
+impl Policy for MutexQueue {
     fn push(&self, task: Task, _hint: Option<usize>) {
         let mut g = self.lock();
         push_prio(&mut g, task);
@@ -105,95 +328,6 @@ impl Policy for GlobalQueue {
 
     fn approx_len(&self) -> usize {
         len_prio(&self.queues.lock().unwrap())
-    }
-}
-
-/// Per-worker priority deques with work stealing, plus an injector queue
-/// for spawns arriving from off-pool OS threads (parcel port, main).
-pub struct LocalPriority {
-    locals: Vec<CachePadded<Mutex<PrioQueues>>>,
-    injector: Mutex<PrioQueues>,
-    /// Round-robin cursor for off-pool pushes without a worker hint.
-    rr: AtomicUsize,
-    counters: Arc<Counters>,
-}
-
-impl LocalPriority {
-    pub fn new(n_workers: usize, counters: Arc<Counters>) -> Self {
-        LocalPriority {
-            locals: (0..n_workers).map(|_| CachePadded::new(Mutex::new(Default::default()))).collect(),
-            injector: Mutex::new(Default::default()),
-            rr: AtomicUsize::new(0),
-            counters,
-        }
-    }
-
-    fn lock_local(&self, w: usize) -> std::sync::MutexGuard<'_, PrioQueues> {
-        match self.locals[w].try_lock() {
-            Ok(g) => g,
-            Err(_) => {
-                self.counters.queue_contended.inc();
-                self.locals[w].lock().unwrap()
-            }
-        }
-    }
-}
-
-impl Policy for LocalPriority {
-    fn push(&self, task: Task, hint: Option<usize>) {
-        match hint {
-            Some(w) => {
-                let mut g = self.lock_local(w);
-                push_prio(&mut g, task);
-                self.counters.queue_hwm.max(len_prio(&g) as u64);
-            }
-            None => {
-                // Off-pool producers round-robin across local queues so a
-                // burst from the parcel port spreads without stealing.
-                let w = self.rr.fetch_add(1, Ordering::Relaxed) % self.locals.len();
-                let mut g = self.lock_local(w);
-                push_prio(&mut g, task);
-                self.counters.queue_hwm.max(len_prio(&g) as u64);
-            }
-        }
-        let _ = &self.injector; // injector reserved for explicit broadcast use
-    }
-
-    fn pop(&self, w: usize) -> Option<Task> {
-        // 1. Own queues, highest priority first.
-        if let Some(t) = pop_prio(&mut self.lock_local(w)) {
-            return Some(t);
-        }
-        // 2. Injector.
-        if let Some(t) = pop_prio(&mut self.injector.lock().unwrap()) {
-            return Some(t);
-        }
-        // 3. Steal: scan victims from w+1, take their *oldest* task
-        //    (back of the FIFO order we pop from the front of) to move the
-        //    largest expected remaining work and reduce steal frequency.
-        let n = self.locals.len();
-        for off in 1..n {
-            let v = (w + off) % n;
-            if let Ok(mut g) = self.locals[v].try_lock() {
-                for q in g.iter_mut() {
-                    if let Some(t) = q.pop_back() {
-                        self.counters.steals.inc();
-                        return Some(t);
-                    }
-                }
-            }
-        }
-        None
-    }
-
-    fn approx_len(&self) -> usize {
-        let mut n = len_prio(&self.injector.lock().unwrap());
-        for l in &self.locals {
-            if let Ok(g) = l.try_lock() {
-                n += len_prio(&g);
-            }
-        }
-        n
     }
 }
 
@@ -237,6 +371,18 @@ mod tests {
     }
 
     #[test]
+    fn mutex_queue_priority_order() {
+        let q = MutexQueue::new(Arc::new(Counters::default()));
+        q.push(task(Priority::Low), None);
+        q.push(task(Priority::High), None);
+        q.push(task(Priority::Normal), None);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::High);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::Normal);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::Low);
+        assert!(q.pop(0).is_none());
+    }
+
+    #[test]
     fn local_priority_hint_lands_on_that_worker() {
         let q = LocalPriority::new(4, Arc::new(Counters::default()));
         q.push(task(Priority::Normal), Some(2));
@@ -257,16 +403,44 @@ mod tests {
     }
 
     #[test]
-    fn local_priority_offpool_pushes_spread_round_robin() {
+    fn local_priority_offpool_pushes_land_in_injector() {
         let q = LocalPriority::new(4, Arc::new(Counters::default()));
         for _ in 0..8 {
             q.push(task(Priority::Normal), None);
         }
-        // Every worker should find at least one task locally (no steals).
+        // Every worker drains the shared injector directly: no steals.
         for w in 0..4 {
             assert!(q.pop(w).is_some(), "worker {w} empty");
         }
         assert_eq!(q.counters.steals.get(), 0);
+    }
+
+    #[test]
+    fn local_priority_own_queue_preferred_over_injector_and_steal() {
+        let q = LocalPriority::new(2, Arc::new(Counters::default()));
+        q.push(task(Priority::Low), None); // injector
+        q.push(task(Priority::Normal), Some(0)); // own
+        // Worker 0 must take its own Normal task before the injected Low.
+        assert_eq!(q.pop(0).unwrap().prio, Priority::Normal);
+        assert_eq!(q.pop(0).unwrap().prio, Priority::Low);
+    }
+
+    #[test]
+    fn local_priority_steal_takes_oldest() {
+        let q = LocalPriority::new(2, Arc::new(Counters::default()));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..3 {
+            let order = order.clone();
+            q.push(
+                Task { prio: Priority::Normal, f: Box::new(move |_| order.lock().unwrap().push(i)) },
+                Some(0),
+            );
+        }
+        // Worker 1 steals the oldest (i=0); worker 0 pops the newest.
+        assert!(q.pop(1).is_some());
+        assert_eq!(q.counters.steals.get(), 1);
+        assert!(q.pop(0).is_some());
+        assert_eq!(q.approx_len(), 1);
     }
 
     #[test]
@@ -277,5 +451,24 @@ mod tests {
             q.push(task(Priority::Normal), None);
         }
         assert_eq!(c.queue_hwm.get(), 10);
+    }
+
+    #[test]
+    fn hwm_tracks_local_deque_depth() {
+        let c = Arc::new(Counters::default());
+        let q = LocalPriority::new(2, c.clone());
+        for _ in 0..7 {
+            q.push(task(Priority::Normal), Some(1));
+        }
+        assert_eq!(c.queue_hwm.get(), 7);
+    }
+
+    #[test]
+    fn single_worker_local_priority_never_steals_from_itself() {
+        let q = LocalPriority::new(1, Arc::new(Counters::default()));
+        assert!(q.pop(0).is_none());
+        q.push(task(Priority::Normal), Some(0));
+        assert!(q.pop(0).is_some());
+        assert_eq!(q.counters.steals.get(), 0);
     }
 }

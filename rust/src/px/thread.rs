@@ -17,13 +17,17 @@
 //!   measured quantity (threads created, per-thread overhead, queue
 //!   contention); see DESIGN.md §3 for the fidelity note on stackful
 //!   context switching.
-//! * Workers never spin unboundedly: an idle worker parks on a condvar and
-//!   is woken by the next spawn, so the Fig 9 overhead measurements are
-//!   not polluted by busy-waiting.
+//! * Idle workers park on an *eventcount* (DESIGN.md §2): a parker
+//!   registers in `parked`, re-polls the queues, and sleeps on a condvar
+//!   with **no timeout**; a spawner wakes it only on the `parked > 0`
+//!   transition, taking the idle lock solely to publish the wake epoch.
+//!   There is no periodic poll anywhere on the spawn→run path, so Fig 9
+//!   measures scheduling cost, not timer quantization.
+//! * [`Spawner::spawn_batch`] enqueues N tasks with a *single* wake —
+//!   the fan-out fast path used by LCO triggers and the AMR driver.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
 
 use super::counters::Counters;
 use super::sched::{Policy, Task};
@@ -42,13 +46,19 @@ pub struct Spawner {
 struct TmShared {
     policy: Box<dyn Policy>,
     counters: Arc<Counters>,
+    /// Distinguishes this manager's workers from other managers' workers
+    /// sharing the process (tests boot several runtimes): an affinity
+    /// hint is only valid for the manager the spawn targets.
+    manager_id: u64,
     /// Tasks spawned but not yet completed (queued or running).
     active: AtomicU64,
     /// Monotonic PX-thread id source (threads are first-class objects).
     next_thread_id: AtomicU64,
     shutdown: AtomicBool,
-    /// Number of workers currently parked, maintained under `idle_lock`.
+    /// Workers currently in (or entering) the parked state.
     parked: AtomicUsize,
+    /// Eventcount epoch; bumped under `idle_lock` by every wake.
+    idle_epoch: AtomicU64,
     idle_lock: Mutex<()>,
     idle_cv: Condvar,
     quiesce_lock: Mutex<()>,
@@ -56,9 +66,61 @@ struct TmShared {
     n_workers: usize,
 }
 
+/// Process-wide manager id source (managers are long-lived; u64 never
+/// wraps in practice).
+static NEXT_MANAGER_ID: AtomicU64 = AtomicU64::new(1);
+
 thread_local! {
-    /// Which worker of which manager this OS thread is (None off-pool).
-    static WORKER_INDEX: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+    /// (manager id, worker index) when this OS thread is a pool worker.
+    static WORKER_INDEX: std::cell::Cell<Option<(u64, usize)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+impl TmShared {
+    /// The spawning worker's index *on this manager*, or `None` when the
+    /// spawn comes from off-pool or from another manager's worker.
+    #[inline]
+    fn local_hint(&self) -> Option<usize> {
+        WORKER_INDEX
+            .with(|w| w.get())
+            .and_then(|(mid, w)| (mid == self.manager_id).then_some(w))
+    }
+
+    /// Wake one parked worker if any are parked. The SeqCst fence pairs
+    /// with the parker's SeqCst registration: either the parker's final
+    /// re-poll observes the freshly pushed task, or this load observes
+    /// the parker and delivers an epoch bump + notify.
+    #[inline]
+    fn wake_one(&self) {
+        fence(Ordering::SeqCst);
+        if self.parked.load(Ordering::Relaxed) > 0 {
+            let _g = self.idle_lock.lock().unwrap();
+            // Release pairs with the parker's Acquire epoch read: a parker
+            // that observes the new epoch also observes the pushed task.
+            self.idle_epoch.fetch_add(1, Ordering::Release);
+            self.idle_cv.notify_one();
+        }
+    }
+
+    /// As [`TmShared::wake_one`] for a batch of `n` pushes: one epoch
+    /// bump, waking every parker (they re-park if the batch is smaller
+    /// than the pool).
+    #[inline]
+    fn wake_many(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        fence(Ordering::SeqCst);
+        if self.parked.load(Ordering::Relaxed) > 0 {
+            let _g = self.idle_lock.lock().unwrap();
+            self.idle_epoch.fetch_add(1, Ordering::Release);
+            if n == 1 {
+                self.idle_cv.notify_one();
+            } else {
+                self.idle_cv.notify_all();
+            }
+        }
+    }
 }
 
 impl Spawner {
@@ -72,19 +134,36 @@ impl Spawner {
     pub fn spawn_prio<F: FnOnce(&Spawner) + Send + 'static>(&self, prio: Priority, f: F) -> u64 {
         let sh = &*self.shared;
         let id = sh.next_thread_id.fetch_add(1, Ordering::Relaxed);
-        sh.active.fetch_add(1, Ordering::SeqCst);
+        sh.active.fetch_add(1, Ordering::Relaxed);
         sh.counters.threads_spawned.inc();
-        let hint = WORKER_INDEX.with(|w| w.get());
+        let hint = sh.local_hint();
         sh.policy.push(Task { prio, f: Box::new(f) }, hint);
-        // Wake a parked worker if any. SeqCst pairs with the park protocol:
-        // if we read parked==0 here, the would-be parker has not yet
-        // registered, and its pre-park re-poll (which follows registration)
-        // will observe the task pushed above.
-        if sh.parked.load(Ordering::SeqCst) > 0 {
-            let _g = sh.idle_lock.lock().unwrap();
-            sh.idle_cv.notify_one();
-        }
+        sh.wake_one();
         id
+    }
+
+    /// Spawn a batch of PX-threads with one wake (instead of one wake
+    /// per task). Returns the number spawned.
+    pub fn spawn_batch<I>(&self, prio: Priority, fs: I) -> usize
+    where
+        I: IntoIterator<Item = Box<dyn FnOnce(&Spawner) + Send>>,
+    {
+        let sh = &*self.shared;
+        let hint = sh.local_hint();
+        let mut n = 0usize;
+        for f in fs {
+            // `active` must rise before the task becomes poppable, or a
+            // fast worker could complete it and underflow the counter.
+            sh.active.fetch_add(1, Ordering::Relaxed);
+            sh.next_thread_id.fetch_add(1, Ordering::Relaxed);
+            sh.policy.push(Task { prio, f }, hint);
+            n += 1;
+        }
+        if n > 0 {
+            sh.counters.threads_spawned.add(n as u64);
+            sh.wake_many(n);
+        }
+        n
     }
 
     /// The locality-local performance counters.
@@ -99,12 +178,12 @@ impl Spawner {
 
     /// Tasks spawned but not yet completed.
     pub fn active(&self) -> u64 {
-        self.shared.active.load(Ordering::SeqCst)
+        self.shared.active.load(Ordering::Acquire)
     }
 
     /// True once shutdown has been requested.
     pub fn is_shutting_down(&self) -> bool {
-        self.shared.shutdown.load(Ordering::SeqCst)
+        self.shared.shutdown.load(Ordering::Acquire)
     }
 }
 
@@ -121,10 +200,12 @@ impl ThreadManager {
         let shared = Arc::new(TmShared {
             policy,
             counters,
+            manager_id: NEXT_MANAGER_ID.fetch_add(1, Ordering::Relaxed),
             active: AtomicU64::new(0),
             next_thread_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             parked: AtomicUsize::new(0),
+            idle_epoch: AtomicU64::new(0),
             idle_lock: Mutex::new(()),
             idle_cv: Condvar::new(),
             quiesce_lock: Mutex::new(()),
@@ -149,19 +230,16 @@ impl ThreadManager {
     }
 
     /// Block the calling OS thread until no task is queued or running.
+    /// Event-driven: the worker completing the last task notifies; there
+    /// is no polling interval.
     ///
     /// Note: quiescence is *not* the same as graph completion when external
     /// event sources (e.g. the parcel network) can still inject work; the
     /// multi-locality runtime combines this with in-flight parcel counts.
     pub fn wait_quiescent(&self) {
         let mut g = self.shared.quiesce_lock.lock().unwrap();
-        while self.shared.active.load(Ordering::SeqCst) != 0 {
-            let (g2, _) = self
-                .shared
-                .quiesce_cv
-                .wait_timeout(g, Duration::from_millis(5))
-                .unwrap();
-            g = g2;
+        while self.shared.active.load(Ordering::Acquire) != 0 {
+            g = self.shared.quiesce_cv.wait(g).unwrap();
         }
     }
 
@@ -171,6 +249,7 @@ impl ThreadManager {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         {
             let _g = self.shared.idle_lock.lock().unwrap();
+            self.shared.idle_epoch.fetch_add(1, Ordering::Relaxed);
             self.shared.idle_cv.notify_all();
         }
         for w in self.workers.drain(..) {
@@ -180,7 +259,7 @@ impl ThreadManager {
 
     /// Tasks spawned but not yet completed.
     pub fn active(&self) -> u64 {
-        self.shared.active.load(Ordering::SeqCst)
+        self.shared.active.load(Ordering::Acquire)
     }
 }
 
@@ -191,7 +270,7 @@ impl Drop for ThreadManager {
 }
 
 fn worker_loop(w: usize, sh: Arc<TmShared>) {
-    WORKER_INDEX.with(|c| c.set(Some(w)));
+    WORKER_INDEX.with(|c| c.set(Some((sh.manager_id, w))));
     let spawner = Spawner { shared: sh.clone() };
     loop {
         match next_task(w, &sh) {
@@ -211,8 +290,13 @@ fn worker_loop(w: usize, sh: Arc<TmShared>) {
                     eprintln!("px-worker-{w}: PX-thread panicked: {msg}");
                 }
                 sh.counters.threads_completed.inc();
-                if sh.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // Release pairs with the Acquire in wait_quiescent /
+                // active(): observing the zero implies observing all
+                // effects of the completed tasks.
+                if sh.active.fetch_sub(1, Ordering::Release) == 1 {
                     // Possibly the last task: wake quiescence waiters.
+                    // Taking the lock orders the notify after any waiter's
+                    // check-then-wait, so the wake cannot be lost.
                     let _g = sh.quiesce_lock.lock().unwrap();
                     sh.quiesce_cv.notify_all();
                 }
@@ -224,6 +308,13 @@ fn worker_loop(w: usize, sh: Arc<TmShared>) {
 
 /// Grab the next task, parking when idle. Returns `None` only on shutdown
 /// with all queues drained.
+///
+/// Park protocol (the eventcount; pairs with `TmShared::wake_one`):
+/// 1. register in `parked` (SeqCst — the Dekker store),
+/// 2. read the wake epoch,
+/// 3. re-poll the queues (a push racing step 1 is seen here, or its
+///    waker sees our registration and bumps the epoch),
+/// 4. sleep until the epoch moves — no timeout, no periodic poll.
 fn next_task(w: usize, sh: &TmShared) -> Option<Task> {
     loop {
         if let Some(t) = sh.policy.pop(w) {
@@ -233,21 +324,36 @@ fn next_task(w: usize, sh: &TmShared) -> Option<Task> {
             // Drain race: one more pop attempt after observing shutdown.
             return sh.policy.pop(w);
         }
-        // Park protocol (pairs with spawn_prio): register as parked, then
-        // re-poll before sleeping so a concurrent push cannot be lost.
-        let g = sh.idle_lock.lock().unwrap();
         sh.parked.fetch_add(1, Ordering::SeqCst);
+        // The Dekker pairing with `wake_one`: our registration is ordered
+        // against the waker's parked-read, so either the re-poll below
+        // sees the task or the waker sees us and bumps the epoch.
+        fence(Ordering::SeqCst);
+        let epoch = sh.idle_epoch.load(Ordering::Acquire);
         if let Some(t) = sh.policy.pop(w) {
-            sh.parked.fetch_sub(1, Ordering::SeqCst);
+            sh.parked.fetch_sub(1, Ordering::Relaxed);
             return Some(t);
         }
+        if sh.shutdown.load(Ordering::SeqCst) {
+            sh.parked.fetch_sub(1, Ordering::Relaxed);
+            continue; // drain + exit via the top of the loop
+        }
         sh.counters.parked_waits.inc();
-        let (_g2, _timeout) = sh.idle_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
-        sh.parked.fetch_sub(1, Ordering::SeqCst);
+        {
+            let mut g = sh.idle_lock.lock().unwrap();
+            // The epoch only moves under `idle_lock`, so this check-then-
+            // wait cannot miss a bump.
+            while sh.idle_epoch.load(Ordering::Relaxed) == epoch
+                && !sh.shutdown.load(Ordering::Relaxed)
+            {
+                g = sh.idle_cv.wait(g).unwrap();
+            }
+        }
+        sh.parked.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-/// Convenience: build a manager with the global-queue policy.
+/// Convenience: build a manager with the (lock-free) global-queue policy.
 pub fn global_queue_manager(n_workers: usize, counters: Arc<Counters>) -> ThreadManager {
     let policy = Box::new(super::sched::GlobalQueue::new(counters.clone()));
     ThreadManager::new(n_workers, policy, counters)
@@ -259,11 +365,19 @@ pub fn local_priority_manager(n_workers: usize, counters: Arc<Counters>) -> Thre
     ThreadManager::new(n_workers, policy, counters)
 }
 
+/// Convenience: build a manager with the pre-refactor mutex global queue
+/// (the `BENCH_1.json` baseline).
+pub fn mutex_queue_manager(n_workers: usize, counters: Arc<Counters>) -> ThreadManager {
+    let policy = Box::new(super::sched::MutexQueue::new(counters.clone()));
+    ThreadManager::new(n_workers, policy, counters)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::testkit::prop::{prop_check, Rng};
     use std::sync::atomic::AtomicU64;
+    use std::time::{Duration, Instant};
 
     fn run_n_tasks(tm: &ThreadManager, n: u64) -> u64 {
         let hits = Arc::new(AtomicU64::new(0));
@@ -287,6 +401,12 @@ mod tests {
     #[test]
     fn every_task_runs_exactly_once_local_priority() {
         let tm = local_priority_manager(4, Arc::new(Counters::default()));
+        assert_eq!(run_n_tasks(&tm, 10_000), 10_000);
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once_mutex_queue() {
+        let tm = mutex_queue_manager(4, Arc::new(Counters::default()));
         assert_eq!(run_n_tasks(&tm, 10_000), 10_000);
     }
 
@@ -316,9 +436,9 @@ mod tests {
         let counters = Arc::new(Counters::default());
         let tm = local_priority_manager(4, counters.clone());
         let sp = tm.spawner();
-        // All spawns come from off-pool (hint=None lands round-robin), then
-        // one worker fans out 4000 child tasks from inside a single task —
-        // those land on its local queue, forcing the other 3 to steal.
+        // The root task lands on one worker via the injector; it then
+        // fans out 4000 children onto its *local* deque, forcing the
+        // other 3 workers to steal.
         sp.spawn(move |sp| {
             for _ in 0..4000 {
                 sp.spawn(|_| {
@@ -380,6 +500,97 @@ mod tests {
         let b = sp.spawn(|_| {});
         assert!(b > a);
         tm.wait_quiescent();
+    }
+
+    #[test]
+    fn spawn_batch_runs_every_task_with_one_wake_path() {
+        let counters = Arc::new(Counters::default());
+        let tm = local_priority_manager(4, counters.clone());
+        let sp = tm.spawner();
+        let hits = Arc::new(AtomicU64::new(0));
+        let batch: Vec<Box<dyn FnOnce(&Spawner) + Send>> = (0..512)
+            .map(|_| {
+                let h = hits.clone();
+                Box::new(move |_: &Spawner| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce(&Spawner) + Send>
+            })
+            .collect();
+        assert_eq!(sp.spawn_batch(Priority::Normal, batch), 512);
+        tm.wait_quiescent();
+        assert_eq!(hits.load(Ordering::SeqCst), 512);
+        assert_eq!(counters.threads_spawned.get(), 512);
+        assert_eq!(counters.threads_completed.get(), 512);
+    }
+
+    #[test]
+    fn cross_manager_spawns_get_no_affinity_hint() {
+        // A worker of manager A spawning into manager B must not be
+        // treated as B's worker (with lock-free local deques that would
+        // be an ownership violation, not just a placement quirk).
+        let tm_a = local_priority_manager(2, Arc::new(Counters::default()));
+        let tm_b = local_priority_manager(2, Arc::new(Counters::default()));
+        let sp_b = tm_b.spawner();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        tm_a.spawner().spawn(move |_| {
+            // Runs on an A worker; spawns 100 tasks into B.
+            for _ in 0..100 {
+                let h = h2.clone();
+                sp_b.spawn(move |_| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        tm_a.wait_quiescent();
+        tm_b.wait_quiescent();
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+    }
+
+    /// The no-lost-wakeup stress of the ISSUE: off-pool bursts against
+    /// workers that have just parked (no timeout exists to paper over a
+    /// lost notify — a bug here deadlocks).
+    #[test]
+    fn burst_spawns_against_parking_workers_lose_no_wakeups() {
+        let tm = Arc::new(local_priority_manager(4, Arc::new(Counters::default())));
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut expected = 0u64;
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let sp = tm.spawner();
+                let hits = hits.clone();
+                std::thread::spawn(move || {
+                    for round in 0..200 {
+                        // Tiny bursts with gaps: workers park between them.
+                        for _ in 0..(1 + (p + round) % 4) {
+                            let h = hits.clone();
+                            sp.spawn(move |_| {
+                                h.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                        if round % 8 == 0 {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in 0..3u64 {
+            for round in 0..200u64 {
+                expected += 1 + (p + round) % 4;
+            }
+        }
+        for pr in producers {
+            pr.join().unwrap();
+        }
+        // Watchdog instead of wait_quiescent: a lost wakeup would hang.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while hits.load(Ordering::SeqCst) < expected {
+            assert!(Instant::now() < deadline, "lost wakeup: {}/{expected}", hits.load(Ordering::SeqCst));
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        tm.wait_quiescent();
+        assert_eq!(hits.load(Ordering::SeqCst), expected);
     }
 
     #[test]

@@ -13,12 +13,18 @@
 //! block-steps of a run; crucially, workers then execute concurrently
 //! with zero shared-state contention — the same reason HPX gives each
 //! core its own scheduling queue.
+//!
+//! Build gating: the external `xla` crate is not vendored, so actual
+//! PJRT execution sits behind the off-by-default `pjrt` cargo feature.
+//! Without it, manifest parsing and block-size selection work as usual
+//! and [`XlaCompute::step`] returns a descriptive error — callers
+//! (benches, CLI) default to the native backend.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::bail;
+use crate::util::err::{Context, Result};
 
 use crate::px::counters::Counters;
 
@@ -78,16 +84,18 @@ pub struct XlaCompute {
 /// Result of one block step.
 pub type StepOut = (Vec<f64>, Vec<f64>, Vec<f64>);
 
+#[cfg(feature = "pjrt")]
 thread_local! {
     static TL_EXES: std::cell::RefCell<Option<ThreadExecCache>> = const { std::cell::RefCell::new(None) };
 }
 
+#[cfg(feature = "pjrt")]
 struct ThreadExecCache {
     /// Which artifact dir this cache was built for (guards against two
     /// XlaCompute instances with different dirs on one thread).
     dir: PathBuf,
     client: xla::PjRtClient,
-    exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    exes: std::collections::HashMap<usize, xla::PjRtLoadedExecutable>,
 }
 
 impl XlaCompute {
@@ -166,6 +174,21 @@ impl XlaCompute {
         if let Some(c) = &self.counters {
             c.xla_calls.inc();
         }
+        self.step_impl(block, chi, phi, pi, r, dx, dt)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn step_impl(
+        &self,
+        block: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> Result<StepOut> {
+        use crate::anyhow;
         TL_EXES.with(|cell| {
             let mut slot = cell.borrow_mut();
             // (Re)build the thread cache if absent or pointed elsewhere.
@@ -175,7 +198,11 @@ impl XlaCompute {
             };
             if rebuild {
                 let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
-                *slot = Some(ThreadExecCache { dir: (*self.dir).clone(), client, exes: HashMap::new() });
+                *slot = Some(ThreadExecCache {
+                    dir: (*self.dir).clone(),
+                    client,
+                    exes: std::collections::HashMap::new(),
+                });
             }
             let cache = slot.as_mut().unwrap();
             if !cache.exes.contains_key(&block) {
@@ -214,6 +241,24 @@ impl XlaCompute {
                 l_pi.to_vec::<f64>().map_err(|e| anyhow!("pi out: {e}"))?,
             ))
         })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[allow(clippy::too_many_arguments)]
+    fn step_impl(
+        &self,
+        block: usize,
+        _chi: &[f64],
+        _phi: &[f64],
+        _pi: &[f64],
+        _r: &[f64],
+        _dx: f64,
+        _dt: f64,
+    ) -> Result<StepOut> {
+        bail!(
+            "PJRT execution for block size {block} is unavailable: this build has no `xla` \
+             crate (enable the `pjrt` feature with the crate vendored, or use PX_BACKEND=native)"
+        )
     }
 }
 
@@ -260,8 +305,8 @@ mod tests {
 
     #[test]
     fn step_dt_zero_is_identity_on_interior() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if !have_artifacts() || !cfg!(feature = "pjrt") {
+            eprintln!("skipping: needs artifacts + the `pjrt` feature");
             return;
         }
         let xc = XlaCompute::open(artifacts_dir()).unwrap();
@@ -283,8 +328,8 @@ mod tests {
 
     #[test]
     fn step_rejects_bad_lengths() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if !have_artifacts() || !cfg!(feature = "pjrt") {
+            eprintln!("skipping: needs artifacts + the `pjrt` feature");
             return;
         }
         let xc = XlaCompute::open(artifacts_dir()).unwrap();
@@ -294,8 +339,8 @@ mod tests {
 
     #[test]
     fn step_works_from_many_threads() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if !have_artifacts() || !cfg!(feature = "pjrt") {
+            eprintln!("skipping: needs artifacts + the `pjrt` feature");
             return;
         }
         let xc = XlaCompute::open(artifacts_dir()).unwrap();
@@ -323,8 +368,8 @@ mod tests {
 
     #[test]
     fn xla_call_counter_increments() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if !have_artifacts() || !cfg!(feature = "pjrt") {
+            eprintln!("skipping: needs artifacts + the `pjrt` feature");
             return;
         }
         let counters = Arc::new(Counters::default());

@@ -1,0 +1,68 @@
+//! Small vendored utilities that substitute for external crates in the
+//! offline build: [`CachePadded`] (for `crossbeam_utils::CachePadded`)
+//! and [`err`] (an `anyhow`-style error type with `anyhow!`/`bail!`/
+//! `ensure!` macros and a `Context` extension trait).
+
+pub mod err;
+
+/// Pads and aligns a value to (at least) one cache line so adjacent
+/// atomics owned by different cores never share a line (false sharing).
+///
+/// 128 bytes covers the common cases: x86_64 prefetches line pairs and
+/// aarch64 big cores use 128-byte lines.
+#[derive(Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value` in cache-line padding.
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    /// Unwrap, discarding the padding.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.value.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_padded_is_aligned_and_transparent() {
+        let c = CachePadded::new(7u64);
+        assert_eq!(*c, 7);
+        assert!(std::mem::align_of::<CachePadded<u64>>() >= 128);
+        assert_eq!(c.into_inner(), 7);
+    }
+
+    #[test]
+    fn cache_padded_deref_mut() {
+        let mut c = CachePadded::new(vec![1, 2]);
+        c.push(3);
+        assert_eq!(c.len(), 3);
+    }
+}

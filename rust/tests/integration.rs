@@ -19,7 +19,8 @@ fn artifacts_dir() -> String {
 }
 
 fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+    cfg!(feature = "pjrt")
+        && std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
 }
 
 fn one_level() -> Hierarchy {
