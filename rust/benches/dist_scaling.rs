@@ -1,0 +1,24 @@
+//! BENCH 2: distributed AMR strong scaling across simulated localities
+//! (slab placement + migration-based load balancing), emitting
+//! `BENCH_2.json` next to `BENCH_1.json`.
+//! Run: `cargo bench --bench dist_scaling` (PX_SCALE=full for paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    match parallex::bench::write_bench2_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[dist_scaling] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[dist_scaling] failed to write BENCH_2.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

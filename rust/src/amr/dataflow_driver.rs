@@ -8,6 +8,19 @@
 //! allow, producing the timestep "cone" of Figs 5/6, while the thread
 //! manager's work queue provides implicit load balancing (§IV).
 //!
+//! Since the distribution refactor the driver is **locality-agnostic**:
+//! the mesh is domain-decomposed into AGAS-named blocks bound across the
+//! runtime's localities (placement policy in [`crate::coordinator`]), a
+//! block-step runs on the locality currently hosting its block, and an
+//! input whose producer and consumer share a locality is delivered as an
+//! `Arc` refcount bump (the PR-1 zero-copy path — `payload_deep_copies`
+//! stays 0) while a true remote edge is serialized into a parcel
+//! ([`crate::px::action::ACT_AMR_PUSH`]) and crosses the simulated wire.
+//! The coordinator's load balancer migrates hot blocks mid-epoch via
+//! `AgasClient::migrate`; parcels already in flight toward the old home
+//! are re-routed by the AGAS stale-cache hop-forwarding path. DESIGN.md
+//! §6 documents the placement, migration and delivery protocols.
+//!
 //! The same driver also implements the conventional *global-barrier*
 //! schedule ("HPX is also capable of implementing the standard AMR
 //! algorithm with global barriers", §III): with [`AmrConfig::barrier`]
@@ -21,8 +34,8 @@
 //! timestep-reached curves.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::util::err::Result;
@@ -31,10 +44,16 @@ use super::backend::ComputeBackend;
 use super::engine::{assemble, restriction_of, shadow_output, split_output, EpochPlan, Input, StateOut};
 use super::mesh::{BlockId, BlockRole, Hierarchy, Region};
 use super::physics::{initial_data, Fields};
+use crate::coordinator::{DistAmrOpts, LoadBalancer};
+use crate::px::action::ACT_AMR_PUSH;
+use crate::px::error::{PxError, PxResult};
+use crate::px::gid::{Gid, GidKind, LocalityId};
 use crate::px::lco::Future as PxFuture;
+use crate::px::locality::LocalityCtx;
 use crate::px::runtime::PxRuntime;
 use crate::px::sched::Priority;
 use crate::px::thread::Spawner;
+use crate::px::wire::{Dec, Enc};
 
 /// Pulse / run configuration on top of the mesh geometry.
 #[derive(Debug, Clone, Copy)]
@@ -85,6 +104,8 @@ pub struct AmrOutcome {
     pub tasks_run: u64,
     /// Tasks that fired after the deadline (frozen, no compute).
     pub tasks_frozen: u64,
+    /// Blocks migrated between localities by the load balancer.
+    pub migrations: u64,
 }
 
 impl AmrOutcome {
@@ -118,6 +139,35 @@ impl AmrOutcome {
             .unwrap_or(0)
     }
 
+    /// Bit-exact equality of the two outcomes' physics: same block set,
+    /// same completed steps, and every interior `f64` identical by bit
+    /// pattern. The distributed-equivalence acceptance check (BENCH_2's
+    /// `bitwise_match_vs_single` column and the driver tests).
+    pub fn bitwise_eq(&self, other: &AmrOutcome) -> bool {
+        if self.blocks.len() != other.blocks.len() {
+            return false;
+        }
+        for (id, x) in &self.blocks {
+            let Some(y) = other.blocks.get(id) else { return false };
+            if x.completed_steps != y.completed_steps {
+                return false;
+            }
+            let (xi, yi) = (&x.state.interior, &y.state.interior);
+            if xi.len() != yi.len() {
+                return false;
+            }
+            for i in 0..xi.len() {
+                if xi.chi[i].to_bits() != yi.chi[i].to_bits()
+                    || xi.phi[i].to_bits() != yi.phi[i].to_bits()
+                    || xi.pi[i].to_bits() != yi.pi[i].to_bits()
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// `(radius, completed_steps, level)` per block — the Fig 5/6 series.
     pub fn timestep_profile(&self, plan: &EpochPlan) -> Vec<(f64, u64, u8)> {
         let mut rows: Vec<(f64, u64, u8)> = self
@@ -144,11 +194,42 @@ struct TaskEntry {
 
 const SHARDS: usize = 64;
 
-struct DriverState {
+/// One locality's slice of the dataflow graph: the partial-input table
+/// for tasks whose block is homed here, plus the locality services the
+/// driver schedules and communicates through.
+struct LocalityShard {
+    ctx: Arc<LocalityCtx>,
+    table: Vec<Mutex<HashMap<TaskKey, TaskEntry>>>,
+}
+
+/// A GID-addressable proxy for one block, registered in each home
+/// locality's component store so `ACT_AMR_PUSH` parcels (and migration)
+/// can reach the driver through AGAS.
+struct BlockHandle {
+    state: Arc<DriverState>,
+    id: BlockId,
+}
+
+/// Shared state of one epoch's dataflow graph across all localities.
+///
+/// Partitioning: the *task table* is per locality (`shards`), and a task
+/// `(block, k)` collects its inputs on — and runs on — the locality that
+/// currently hosts the block (`home`). Progress accounting (`board`,
+/// `remaining`, barrier clock) is process-global, standing in for the
+/// termination-detection LCOs a fully distributed runtime would use
+/// (DESIGN.md §6).
+pub struct DriverState {
     plan: Arc<EpochPlan>,
     backend: Arc<dyn ComputeBackend>,
     config: AmrConfig,
-    table: Vec<Mutex<HashMap<TaskKey, TaskEntry>>>,
+    shards: Vec<LocalityShard>,
+    /// Block → current home locality. The authoritative copy for the
+    /// driver's routing fast path; kept in lockstep with AGAS by the
+    /// migration protocol (AGAS flips first, `home` a few instructions
+    /// later — see [`DriverState::migrate_block`]).
+    home: HashMap<BlockId, AtomicU32>,
+    /// Block → AGAS GID (populated only for multi-locality runs).
+    gids: RwLock<HashMap<BlockId, Gid>>,
     board: Mutex<HashMap<BlockId, BlockOutcome>>,
     tasks_run: AtomicU64,
     tasks_frozen: AtomicU64,
@@ -173,8 +254,104 @@ fn shard(key: &TaskKey) -> usize {
     (h as usize) % SHARDS
 }
 
+// ------------------------------------------------------ input wire codec
+
+const IN_SELF: u8 = 0;
+const IN_GHOST: u8 = 1;
+const IN_TAPER: u8 = 2;
+const IN_RESTRICT: u8 = 3;
+
+fn enc_fields(e: &mut Enc, f: &Fields) {
+    e.f64s(&f.chi);
+    e.f64s(&f.phi);
+    e.f64s(&f.pi);
+}
+
+fn dec_fields(d: &mut Dec) -> PxResult<Fields> {
+    let chi = d.f64s()?;
+    let phi = d.f64s()?;
+    let pi = d.f64s()?;
+    if chi.len() != phi.len() || chi.len() != pi.len() {
+        return Err(PxError::Wire("AMR fragment component lengths differ".into()));
+    }
+    Ok(Fields { chi, phi, pi })
+}
+
+/// Serialize one dataflow input for task step `k`. `f64` bit patterns
+/// survive the round trip exactly, so a remote delivery is bitwise
+/// equivalent to the local `Arc` path (pinned by the equivalence
+/// property tests).
+fn encode_input(k: u64, input: &Input) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(k);
+    match input {
+        Input::SelfState(s) => {
+            e.u8(IN_SELF);
+            e.bool(s.ext_left.is_some());
+            if let Some(el) = &s.ext_left {
+                enc_fields(&mut e, el);
+            }
+            enc_fields(&mut e, &s.interior);
+            e.bool(s.ext_right.is_some());
+            if let Some(er) = &s.ext_right {
+                enc_fields(&mut e, er);
+            }
+        }
+        Input::GhostFrag { lo, f } => {
+            e.u8(IN_GHOST);
+            e.u64(*lo as u64);
+            enc_fields(&mut e, f);
+        }
+        Input::TaperFrag { parent_lo, f } => {
+            e.u8(IN_TAPER);
+            e.u64(*parent_lo as u64);
+            enc_fields(&mut e, f);
+        }
+        Input::RestrictFrag { lo, f } => {
+            e.u8(IN_RESTRICT);
+            e.u64(*lo as u64);
+            enc_fields(&mut e, f);
+        }
+    }
+    e.finish()
+}
+
+fn decode_input(buf: &[u8]) -> PxResult<(u64, Input)> {
+    let mut d = Dec::new(buf);
+    let k = d.u64()?;
+    let input = match d.u8()? {
+        IN_SELF => {
+            let ext_left = if d.bool()? { Some(dec_fields(&mut d)?) } else { None };
+            let interior = Arc::new(dec_fields(&mut d)?);
+            let ext_right = if d.bool()? { Some(dec_fields(&mut d)?) } else { None };
+            Input::SelfState(Arc::new(StateOut { ext_left, interior, ext_right }))
+        }
+        IN_GHOST => {
+            let lo = d.u64()? as usize;
+            Input::GhostFrag { lo, f: Arc::new(dec_fields(&mut d)?) }
+        }
+        IN_TAPER => {
+            let parent_lo = d.u64()? as usize;
+            Input::TaperFrag { parent_lo, f: Arc::new(dec_fields(&mut d)?) }
+        }
+        IN_RESTRICT => {
+            let lo = d.u64()? as usize;
+            Input::RestrictFrag { lo, f: Arc::new(dec_fields(&mut d)?) }
+        }
+        other => return Err(PxError::Wire(format!("unknown AMR input kind {other}"))),
+    };
+    d.expect_end()?;
+    Ok((k, input))
+}
+
 impl DriverState {
-    fn new(plan: Arc<EpochPlan>, backend: Arc<dyn ComputeBackend>, config: AmrConfig) -> Arc<Self> {
+    fn new(
+        plan: Arc<EpochPlan>,
+        backend: Arc<dyn ComputeBackend>,
+        config: AmrConfig,
+        localities: &[Arc<LocalityCtx>],
+        placement: &HashMap<BlockId, LocalityId>,
+    ) -> Arc<Self> {
         let total: u64 = plan.total_tasks();
         // Barrier-mode bookkeeping: tasks due at each global fine tick.
         let finest = plan.hierarchy.n_levels() - 1;
@@ -188,8 +365,25 @@ impl DriverState {
                 }
             }
         }
+        let shards: Vec<LocalityShard> = localities
+            .iter()
+            .map(|ctx| LocalityShard {
+                ctx: ctx.clone(),
+                table: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            })
+            .collect();
+        let home: HashMap<BlockId, AtomicU32> = plan
+            .plans
+            .iter()
+            .map(|p| {
+                let id = p.info.id;
+                (id, AtomicU32::new(*placement.get(&id).unwrap_or(&0)))
+            })
+            .collect();
         Arc::new(DriverState {
-            table: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards,
+            home,
+            gids: RwLock::new(HashMap::new()),
             board: Mutex::new(HashMap::new()),
             tasks_run: AtomicU64::new(0),
             tasks_frozen: AtomicU64::new(0),
@@ -207,26 +401,109 @@ impl DriverState {
         })
     }
 
-    /// Deliver one input to task `(id, k)`; fire it when complete.
+    // -------------------------------------------------- AGAS registration
+
+    /// Register every block as a GID-addressable component on its home
+    /// locality and install the `ACT_AMR_PUSH` action (once per runtime).
+    /// Multi-locality epochs only: the single-locality fast path never
+    /// touches AGAS or the wire.
+    fn register_blocks(self: &Arc<Self>) -> PxResult<()> {
+        self.shards[0].ctx.actions.register_if_absent(ACT_AMR_PUSH, |ctx, p| {
+            match ctx.component::<BlockHandle>(p.dest) {
+                Ok(h) => match decode_input(&p.args) {
+                    Ok((k, input)) => h.state.deliver(ctx, h.id, k, input),
+                    Err(e) => eprintln!("[L{}] AMR push decode failed: {e}", ctx.id),
+                },
+                Err(_) => {
+                    // The block migrated away between dispatch and this
+                    // body running (its handle is already retired here,
+                    // but the parcel was queued while AGAS still said
+                    // "local"). Refresh the stale cache and re-apply so
+                    // the input chases the block instead of being lost —
+                    // dropping it would leave its task short of inputs
+                    // and hang the epoch.
+                    let res = ctx
+                        .agas
+                        .refresh(p.dest)
+                        .and_then(|_| ctx.apply(p.dest, p.action, p.args, p.continuation));
+                    if let Err(e) = res {
+                        eprintln!("[L{}] AMR push re-forward failed: {e}", ctx.id);
+                    }
+                }
+            }
+        });
+        let mut gids = self.gids.write().unwrap();
+        for p in &self.plan.plans {
+            let id = p.info.id;
+            let loc = self.home[&id].load(Ordering::SeqCst) as usize;
+            let gid = self.shards[loc]
+                .ctx
+                .register_component(GidKind::Block, BlockHandle { state: self.clone(), id })?;
+            gids.insert(id, gid);
+        }
+        Ok(())
+    }
+
+    /// Tear down the epoch's AGAS bindings and component handles (also
+    /// breaks the `LocalityCtx` → handle → `DriverState` reference
+    /// cycle). Sweeps every locality, not just the current home: error
+    /// paths and interrupted migrations can leave a handle installed in
+    /// more than one component store, and a missed one would leak the
+    /// whole epoch's `DriverState` into the runtime-lifetime `LocalityCtx`.
+    fn unregister_blocks(&self) {
+        let mut gids = self.gids.write().unwrap();
+        for (_id, gid) in gids.drain() {
+            for sh in &self.shards {
+                let _ = sh.ctx.take_component(gid);
+            }
+            let _ = self.shards[0].ctx.agas.unbind(gid);
+        }
+    }
+
+    // ------------------------------------------------------------ routing
+
+    /// Deliver one input to task `(id, k)` on locality `loc`'s table;
+    /// fire the task when complete. Returns `false` (input **not**
+    /// delivered) when the block's home moved away between routing and
+    /// the table insert — the caller re-routes. `count_push` is false
+    /// only for migration re-delivery, whose inputs were already counted
+    /// when first delivered at the source.
     ///
-    /// Zero-copy contract: `input` arrives `Arc`-shared from the
-    /// producer — this path never deep-copies fragment data (the
+    /// Zero-copy contract: `input` is `Arc`-shared from the producer —
+    /// this path never deep-copies fragment data (the
     /// `payload_deep_copies` counter is the tripwire; the equivalence
-    /// property test pins the physics bitwise).
-    fn push(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, input: Input) {
+    /// property tests pin the physics bitwise).
+    fn push_local(
+        self: &Arc<Self>,
+        loc: usize,
+        id: BlockId,
+        k: u64,
+        input: &Input,
+        count_push: bool,
+    ) -> bool {
         let l = id.level as usize;
         if k >= self.plan.targets[l] {
-            return; // beyond the epoch's horizon
+            return true; // beyond the epoch's horizon
         }
-        sp.counters().amr_pushes.inc();
         let key = (id, k);
+        let multi = self.shards.len() > 1;
         let ready = {
-            let mut sh = self.table[shard(&key)].lock().unwrap();
+            let mut sh = self.shards[loc].table[shard(&key)].lock().unwrap();
+            // Migration race check, under the same lock the migration
+            // drain takes: either this insert lands before the drain
+            // scans this shard (and is moved with the rest), or the home
+            // re-read below observes the flip and the caller re-routes.
+            if multi && self.home[&id].load(Ordering::SeqCst) as usize != loc {
+                return false;
+            }
+            if count_push {
+                self.shards[loc].ctx.counters.amr_pushes.inc();
+            }
             let entry = sh.entry(key).or_insert_with(|| TaskEntry {
                 expected: self.plan.expected_inputs(id, k),
                 inputs: Vec::with_capacity(4),
             });
-            entry.inputs.push(input);
+            entry.inputs.push(input.clone());
             debug_assert!(
                 entry.inputs.len() <= entry.expected,
                 "task {id:?}@{k}: {} inputs > expected {}",
@@ -241,43 +518,135 @@ impl DriverState {
             }
         };
         if let Some(inputs) = ready {
-            self.schedule(sp, id, k, inputs);
+            self.schedule(loc, id, k, inputs);
+        }
+        true
+    }
+
+    /// Route one producer output to its consumer task: same-locality
+    /// consumers get the `Arc` (refcount bump), remote consumers get a
+    /// serialized parcel through AGAS.
+    fn route_push(self: &Arc<Self>, from: usize, id: BlockId, k: u64, input: &Input) {
+        if k >= self.plan.targets[id.level as usize] {
+            return; // beyond the epoch's horizon — never pays for the wire
+        }
+        if self.shards.len() == 1 {
+            self.push_local(0, id, k, input, true);
+            return;
+        }
+        loop {
+            let home = self.home[&id].load(Ordering::SeqCst) as usize;
+            if home == from {
+                if self.push_local(from, id, k, input, true) {
+                    return;
+                }
+                // Home flipped between the load and the insert: re-route.
+            } else {
+                self.send_remote(from, id, k, input);
+                return;
+            }
         }
     }
 
-    /// Barrier gate + spawn.
-    fn schedule(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, inputs: Vec<Input>) {
+    /// Serialize `input` and send it toward the block's home as an
+    /// `ACT_AMR_PUSH` parcel. AGAS picks the destination; a stale cache
+    /// is healed by the hop-forwarding path.
+    fn send_remote(&self, from: usize, id: BlockId, k: u64, input: &Input) {
+        let gid = match self.gids.read().unwrap().get(&id) {
+            Some(g) => *g,
+            None => return, // epoch tearing down
+        };
+        let ctx = &self.shards[from].ctx;
+        ctx.counters.amr_remote_pushes.inc();
+        if let Err(e) = ctx.apply(gid, ACT_AMR_PUSH, encode_input(k, input), Gid::NULL) {
+            eprintln!("[L{}] AMR remote push {id:?}@{k} failed: {e}", ctx.id);
+        }
+    }
+
+    /// Parcel-side delivery (the `ACT_AMR_PUSH` body): insert locally if
+    /// this locality is the block's home, re-forward if the block moved,
+    /// and ride out the few-instruction migration window where AGAS
+    /// already points here but the driver home table does not yet.
+    fn deliver(self: &Arc<Self>, ctx: &Arc<LocalityCtx>, id: BlockId, k: u64, input: Input) {
+        let me = ctx.id as usize;
+        loop {
+            let home = self.home[&id].load(Ordering::SeqCst) as usize;
+            if home == me {
+                if self.push_local(me, id, k, &input, true) {
+                    return;
+                }
+                continue;
+            }
+            let gid = match self.gids.read().unwrap().get(&id) {
+                Some(g) => *g,
+                None => return, // epoch tearing down
+            };
+            match ctx.agas.refresh(gid) {
+                Ok(p) if p.locality as usize != me => {
+                    // AGAS agrees the block lives elsewhere: re-forward.
+                    self.send_remote(me, id, k, &input);
+                    return;
+                }
+                // AGAS says "here" but `home` lags (mid-migration), or the
+                // binding vanished mid-teardown: wait for the flip.
+                _ => std::thread::yield_now(),
+            }
+        }
+    }
+
+    // -------------------------------------------------------- scheduling
+
+    /// Barrier gate + spawn on the hosting locality's thread manager.
+    fn schedule(self: &Arc<Self>, loc: usize, id: BlockId, k: u64, inputs: Vec<Input>) {
         if self.config.barrier {
             let tick = self.plan.barrier_tick(id, k);
             if tick > self.clock.load(Ordering::SeqCst) {
                 self.parked.lock().unwrap().entry(tick).or_default().push((id, k, inputs));
                 // Re-check: the clock may have advanced while parking.
-                self.release_due(sp);
+                self.release_due();
                 return;
             }
         }
         let st = self.clone();
-        sp.spawn(move |sp| st.run_task(sp, id, k, inputs));
+        self.shards[loc].ctx.spawner.spawn(move |sp| st.run_task(loc, sp, id, k, inputs));
     }
 
-    fn release_due(self: &Arc<Self>, sp: &Spawner) {
+    fn release_due(self: &Arc<Self>) {
         let now = self.clock.load(Ordering::SeqCst);
         let due: Vec<(BlockId, u64, Vec<Input>)> = {
             let mut parked = self.parked.lock().unwrap();
             let keys: Vec<u64> = parked.keys().copied().filter(|&t| t <= now).collect();
             keys.into_iter().flat_map(|t| parked.remove(&t).unwrap()).collect()
         };
-        // Batch-spawn the released tasks: one worker wake for the round.
-        let batch = due.into_iter().map(|(id, k, inputs)| {
-            let st = self.clone();
-            Box::new(move |sp: &Spawner| st.run_task(sp, id, k, inputs))
-                as Box<dyn FnOnce(&Spawner) + Send>
-        });
-        sp.spawn_batch(Priority::Normal, batch);
+        if due.is_empty() {
+            return;
+        }
+        // Batch-spawn the released tasks grouped by hosting locality: one
+        // worker wake per locality per round.
+        let mut groups: Vec<Vec<(BlockId, u64, Vec<Input>)>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
+        for item in due {
+            let loc = self.home[&item.0].load(Ordering::SeqCst) as usize;
+            groups[loc].push(item);
+        }
+        for (loc, items) in groups.into_iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let batch: Vec<Box<dyn FnOnce(&Spawner) + Send>> = items
+                .into_iter()
+                .map(|(id, k, inputs)| {
+                    let st = self.clone();
+                    Box::new(move |sp: &Spawner| st.run_task(loc, sp, id, k, inputs))
+                        as Box<dyn FnOnce(&Spawner) + Send>
+                })
+                .collect();
+            self.shards[loc].ctx.spawner.spawn_batch(Priority::Normal, batch);
+        }
     }
 
-    /// Execute one block-step task.
-    fn run_task(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, inputs: Vec<Input>) {
+    /// Execute one block-step task (on locality `loc`).
+    fn run_task(self: &Arc<Self>, loc: usize, sp: &Spawner, id: BlockId, k: u64, inputs: Vec<Input>) {
         let plan = self.plan.clone();
         let p = plan.plan(id);
         let frozen = self
@@ -329,7 +698,7 @@ impl DriverState {
                     *e = BlockOutcome { completed_steps: k + 1, state: out.clone() };
                 }
             }
-            self.route_outputs(sp, id, k, &out);
+            self.route_outputs(loc, id, k, &out);
         }
 
         // Barrier bookkeeping.
@@ -341,7 +710,7 @@ impl DriverState {
                 // the next tick with work and release parked tasks — the
                 // global barrier in action.
                 self.clock.store(tick as u64 + 1, Ordering::SeqCst);
-                self.release_due(sp);
+                self.release_due();
             }
         }
 
@@ -353,8 +722,9 @@ impl DriverState {
 
     /// Push this task's outputs to every dependent task. Every fragment
     /// is built (at most) once and then `Arc`-shared across consumers: a
-    /// push is a refcount bump, not a buffer copy.
-    fn route_outputs(self: &Arc<Self>, sp: &Spawner, id: BlockId, k: u64, out: &Arc<StateOut>) {
+    /// push is a refcount bump for same-locality consumers; only true
+    /// remote edges serialize (once per consumer) onto the wire.
+    fn route_outputs(self: &Arc<Self>, loc: usize, id: BlockId, k: u64, out: &Arc<StateOut>) {
         let plan = self.plan.clone();
         let p = plan.plan(id);
         let b = &p.info;
@@ -362,7 +732,7 @@ impl DriverState {
 
         // Self (Shadow blocks take no self input — pure injection).
         if p.role != BlockRole::Shadow {
-            self.push(sp, id, next, Input::SelfState(out.clone()));
+            self.route_push(loc, id, next, &Input::SelfState(out.clone()));
         }
 
         // Ghost fragments: the full owned range (extension included).
@@ -387,7 +757,7 @@ impl DriverState {
                     (lo, Arc::new(Fields::concat(&parts)))
                 };
             for tgt in &p.ghost_to {
-                self.push(sp, *tgt, next, Input::GhostFrag { lo, f: frag.clone() });
+                self.route_push(loc, *tgt, next, &Input::GhostFrag { lo, f: frag.clone() });
             }
         }
 
@@ -399,7 +769,7 @@ impl DriverState {
             for tgt in &p.restrict_to {
                 let role = plan.plan(*tgt).role;
                 let task_k = if role == BlockRole::Shadow { m - 1 } else { m };
-                self.push(sp, *tgt, task_k, Input::RestrictFrag { lo: plo, f: f.clone() });
+                self.route_push(loc, *tgt, task_k, &Input::RestrictFrag { lo: plo, f: f.clone() });
             }
         }
 
@@ -408,30 +778,39 @@ impl DriverState {
         if !p.taper_to.is_empty() {
             let child_k = 2 * next;
             for (tgt, _side) in &p.taper_to {
-                self.push(
-                    sp,
+                self.route_push(
+                    loc,
                     *tgt,
                     child_k,
-                    Input::TaperFrag { parent_lo: b.lo, f: out.interior.clone() },
+                    &Input::TaperFrag { parent_lo: b.lo, f: out.interior.clone() },
                 );
             }
         }
     }
 
-    /// Seed all k=0 inputs from the initial condition.
-    fn seed(self: &Arc<Self>, sp: &Spawner, init: &HashMap<BlockId, Fields>) {
+    /// Seed the k=0 inputs produced by this locality's blocks (each
+    /// locality evaluates the initial condition for the blocks placed on
+    /// it; pushes to off-locality consumers cross the wire like any other
+    /// edge). `blocks` is the *initial* placement, fixed at epoch setup so
+    /// a concurrent migration cannot double- or un-seed a block.
+    fn seed_local(
+        self: &Arc<Self>,
+        loc: usize,
+        blocks: &[BlockId],
+        init: &HashMap<BlockId, Arc<Fields>>,
+    ) {
         // Mimic the push pattern of a fictitious "task -1" per block.
-        for p in &self.plan.plans {
-            let id = p.info.id;
+        for &id in blocks {
+            let p = self.plan.plan(id);
             // One shared buffer per block; every seed push below shares it.
-            let f = Arc::new(init[&id].clone());
+            let f = init[&id].clone();
             let out = Arc::new(StateOut { ext_left: None, interior: f.clone(), ext_right: None });
             // Self + ghosts (Shadow blocks take no self input).
             if p.role != BlockRole::Shadow {
-                self.push(sp, id, 0, Input::SelfState(out.clone()));
+                self.route_push(loc, id, 0, &Input::SelfState(out.clone()));
             }
             for tgt in &p.ghost_to {
-                self.push(sp, *tgt, 0, Input::GhostFrag { lo: p.info.lo, f: f.clone() });
+                self.route_push(loc, *tgt, 0, &Input::GhostFrag { lo: p.info.lo, f: f.clone() });
             }
             // Restriction @0 to Evolved parents only (Shadow task 0 waits
             // for restriction @2 produced by fine task 1).
@@ -440,15 +819,122 @@ impl DriverState {
                 let rf = Arc::new(rf);
                 for tgt in &p.restrict_to {
                     if self.plan.plan(*tgt).role == BlockRole::Evolved {
-                        self.push(sp, *tgt, 0, Input::RestrictFrag { lo: plo, f: rf.clone() });
+                        self.route_push(loc, *tgt, 0, &Input::RestrictFrag { lo: plo, f: rf.clone() });
                     }
                 }
             }
             // Taper @0 to children.
             for (tgt, _) in &p.taper_to {
-                self.push(sp, *tgt, 0, Input::TaperFrag { parent_lo: p.info.lo, f: f.clone() });
+                self.route_push(loc, *tgt, 0, &Input::TaperFrag { parent_lo: p.info.lo, f: f.clone() });
             }
         }
+    }
+
+    // ------------------------------------------- coordinator-facing API
+
+    /// Whether every task of the epoch has completed.
+    pub fn is_done(&self) -> bool {
+        self.done.is_ready()
+    }
+
+    /// Localities in this epoch's runtime.
+    pub fn n_localities(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The block's current home locality.
+    pub fn home_of(&self, id: BlockId) -> usize {
+        self.home[&id].load(Ordering::SeqCst) as usize
+    }
+
+    /// Remaining work per locality: Σ over hosted blocks of
+    /// `(target_steps − completed_steps) × width` — the load estimate the
+    /// coordinator's balancer samples.
+    pub fn locality_load(&self) -> Vec<u64> {
+        let board = self.board.lock().unwrap();
+        let mut w = vec![0u64; self.shards.len()];
+        for p in &self.plan.plans {
+            let id = p.info.id;
+            let target = self.plan.targets[id.level as usize];
+            let done = board.get(&id).map(|b| b.completed_steps).unwrap_or(0);
+            let remaining = target.saturating_sub(done);
+            w[self.home[&id].load(Ordering::SeqCst) as usize] += remaining * p.info.width() as u64;
+        }
+        w
+    }
+
+    /// The hosted block with the most remaining work on `loc` (migration
+    /// candidate), if any still has work.
+    pub fn hottest_block(&self, loc: usize) -> Option<BlockId> {
+        let board = self.board.lock().unwrap();
+        self.plan
+            .plans
+            .iter()
+            .filter(|p| self.home[&p.info.id].load(Ordering::SeqCst) as usize == loc)
+            .map(|p| {
+                let id = p.info.id;
+                let target = self.plan.targets[id.level as usize];
+                let done = board.get(&id).map(|b| b.completed_steps).unwrap_or(0);
+                (target.saturating_sub(done) * p.info.width() as u64, id)
+            })
+            .filter(|(w, _)| *w > 0)
+            .max_by_key(|&(w, id)| (w, id))
+            .map(|(_, id)| id)
+    }
+
+    /// Migrate one block to `dest` mid-epoch. Only the coordinator's
+    /// balancer thread calls this (migrations are serialized on it).
+    ///
+    /// Protocol (ordering is load-bearing; see DESIGN.md §6):
+    /// 1. install the block's handle at `dest` — parcels forwarded there
+    ///    must find the component before anything else changes;
+    /// 2. flip AGAS (`AgasClient::migrate`, bumping the version) — from
+    ///    here in-flight and new parcels converge on `dest` via the
+    ///    stale-cache hop-forwarding path;
+    /// 3. flip the driver `home` — local `Arc`-path producers now
+    ///    serialize toward `dest`;
+    /// 4. drain the inputs already collected at the source (the shard
+    ///    lock + home re-check in `push_local` close the producer race)
+    ///    and re-deliver them at `dest`;
+    /// 5. retire the stale handle at the source.
+    pub fn migrate_block(self: &Arc<Self>, id: BlockId, dest: usize) -> PxResult<()> {
+        if self.shards.len() < 2 {
+            return Err(PxError::LcoProtocol("cannot migrate on a single locality".into()));
+        }
+        let gid = self
+            .gids
+            .read()
+            .unwrap()
+            .get(&id)
+            .copied()
+            .ok_or_else(|| PxError::Unresolved(format!("block {id:?} not AGAS-registered")))?;
+        let src = self.home[&id].load(Ordering::SeqCst) as usize;
+        if src == dest {
+            return Ok(());
+        }
+        let handle = self.shards[src].ctx.component::<BlockHandle>(gid)?;
+        self.shards[dest].ctx.install_component(gid, handle);
+        self.shards[src].ctx.agas.migrate(gid, dest as LocalityId)?;
+        self.home[&id].store(dest as u32, Ordering::SeqCst);
+        let mut moved: Vec<(TaskKey, TaskEntry)> = Vec::new();
+        for sh in &self.shards[src].table {
+            let mut g = sh.lock().unwrap();
+            let keys: Vec<TaskKey> = g.keys().filter(|(b, _)| *b == id).copied().collect();
+            for key in keys {
+                moved.push((key, g.remove(&key).unwrap()));
+            }
+        }
+        for ((bid, k), entry) in moved {
+            for input in entry.inputs {
+                // Single balancer thread ⇒ `dest` is stable until this
+                // migration completes; the loop guards the invariant.
+                while !self.push_local(dest, bid, k, &input, false) {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        let _ = self.shards[src].ctx.take_component(gid);
+        Ok(())
     }
 }
 
@@ -465,7 +951,10 @@ pub fn initial_block_states(plan: &EpochPlan, cfg: &AmrConfig) -> HashMap<BlockI
 }
 
 /// Run one epoch of the barrier-free (or barrier-mode) AMR evolution on
-/// the given runtime, starting from `init` block states.
+/// the given runtime, starting from `init` block states. Distributes the
+/// blocks over every locality the runtime was booted with (cost-balanced
+/// placement, no load balancer); see [`run_epoch_placed`] for explicit
+/// placement/balancing policy control.
 pub fn run_epoch(
     rt: &PxRuntime,
     plan: Arc<EpochPlan>,
@@ -473,27 +962,95 @@ pub fn run_epoch(
     config: AmrConfig,
     init: &HashMap<BlockId, Fields>,
 ) -> Result<AmrOutcome> {
-    let st = DriverState::new(plan, backend, config);
-    let sp = rt.locality(0).spawner.clone();
-    {
+    run_epoch_placed(rt, plan, backend, config, init, &DistAmrOpts::default())
+}
+
+/// As [`run_epoch`], with an explicit placement policy and optional
+/// migration-based load balancing (the coordinator subsystem).
+pub fn run_epoch_placed(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+) -> Result<AmrOutcome> {
+    let n_loc = rt.localities().len();
+    let placement = opts.policy.assign(&plan, n_loc);
+    let st = DriverState::new(plan, backend, config, rt.localities(), &placement);
+    if n_loc > 1 {
+        if let Err(e) = st.register_blocks() {
+            // Clean up any partial registrations before bailing, or the
+            // installed handles would leak the DriverState cycle.
+            st.unregister_blocks();
+            return Err(crate::anyhow!("block registration failed: {e}"));
+        }
+    }
+    let balancer = if n_loc > 1 {
+        opts.balance.map(|b| LoadBalancer::start(st.clone(), b))
+    } else {
+        None
+    };
+
+    // Per-locality seeding: each locality evaluates/forwards the initial
+    // data of the blocks initially placed on it. One `Arc<Fields>` per
+    // block up front — seeding then shares buffers (refcount bumps)
+    // rather than re-copying the initial state a second time.
+    let init: Arc<HashMap<BlockId, Arc<Fields>>> =
+        Arc::new(init.iter().map(|(id, f)| (*id, Arc::new(f.clone()))).collect());
+    let mut by_loc: Vec<Vec<BlockId>> = vec![Vec::new(); n_loc];
+    for p in &st.plan.plans {
+        by_loc[placement[&p.info.id] as usize].push(p.info.id);
+    }
+    for (loc, blocks) in by_loc.into_iter().enumerate() {
+        if blocks.is_empty() {
+            continue;
+        }
         let st2 = st.clone();
         let init2 = init.clone();
-        sp.spawn_prio(Priority::High, move |sp| st2.seed(sp, &init2));
+        st.shards[loc]
+            .ctx
+            .spawner
+            .spawn_prio(Priority::High, move |_| st2.seed_local(loc, &blocks, &init2));
     }
-    match config.deadline {
-        None => {
-            // Graph runs to exhaustion.
-            st.done.wait().map_err(|e| crate::anyhow!("epoch failed: {e}"))?;
-        }
+
+    let wait_err: Option<String> = match config.deadline {
+        None => loop {
+            // Graph runs to exhaustion — unless the (test-only) failure
+            // injection destroyed a parcel, in which case the graph can
+            // never complete: surface an error instead of hanging.
+            match st.done.wait_timeout(Duration::from_millis(100)) {
+                Some(r) => break r.err().map(|e| format!("epoch failed: {e}")),
+                None => {
+                    let dropped = rt.net().dropped();
+                    if dropped > 0 {
+                        break Some(format!(
+                            "ghost exchange lost {dropped} parcel(s) in flight; dataflow graph cannot complete"
+                        ));
+                    }
+                }
+            }
+        },
         Some(d) => {
             // Wait for completion or deadline + drain.
             if st.done.wait_timeout(d + Duration::from_millis(50)).is_none() {
                 // Frozen tasks drain the graph; wait for quiescence.
                 rt.wait_quiescent();
             }
+            None
         }
-    }
+    };
+    // Stop the balancer before the final quiescence check: a migration in
+    // progress may re-deliver drained inputs (and thereby spawn tasks),
+    // which the wait below must cover before teardown.
+    let migrations = balancer.map(|b| b.stop()).unwrap_or(0);
     rt.wait_quiescent();
+    if n_loc > 1 {
+        st.unregister_blocks();
+    }
+    if let Some(msg) = wait_err {
+        return Err(crate::anyhow!("{msg}"));
+    }
     let blocks = st.board.lock().unwrap().clone();
     crate::ensure!(
         !st.diverged.load(Ordering::Relaxed) || config.deadline.is_some(),
@@ -504,6 +1061,7 @@ pub fn run_epoch(
         elapsed: st.start.elapsed(),
         tasks_run: st.tasks_run.load(Ordering::Relaxed),
         tasks_frozen: st.tasks_frozen.load(Ordering::Relaxed),
+        migrations,
     })
 }
 
@@ -526,11 +1084,51 @@ mod tests {
     use crate::amr::backend::NativeBackend;
     use crate::amr::mesh::MeshConfig;
     use crate::amr::physics::rk3_step;
+    use crate::coordinator::{BalanceConfig, PlacementPolicy};
+    use crate::px::net::NetModel;
     use crate::px::runtime::PxConfig;
     use crate::testkit::prop::{prop_check, Rng};
 
     fn rt(workers: usize) -> PxRuntime {
         PxRuntime::boot(PxConfig::smp(workers))
+    }
+
+    fn rt_dist(localities: usize, workers: usize) -> PxRuntime {
+        PxRuntime::boot(PxConfig {
+            localities,
+            workers_per_locality: workers,
+            net: NetModel::instant(),
+            ..Default::default()
+        })
+    }
+
+    /// Per-index diagnostics on mismatch; the final `bitwise_eq` assert
+    /// keeps this helper honest against the production comparison (the
+    /// one BENCH_2 publishes) if either side changes shape.
+    fn assert_outcomes_bitwise_equal(a: &AmrOutcome, b: &AmrOutcome, tag: &str) {
+        assert_eq!(a.blocks.len(), b.blocks.len(), "{tag}: block count");
+        for (id, x) in &a.blocks {
+            let y = &b.blocks[id];
+            assert_eq!(x.completed_steps, y.completed_steps, "{tag}: {id:?} steps");
+            for i in 0..x.state.interior.len() {
+                assert_eq!(
+                    x.state.interior.chi[i].to_bits(),
+                    y.state.interior.chi[i].to_bits(),
+                    "{tag}: {id:?} chi[{i}]"
+                );
+                assert_eq!(
+                    x.state.interior.phi[i].to_bits(),
+                    y.state.interior.phi[i].to_bits(),
+                    "{tag}: {id:?} phi[{i}]"
+                );
+                assert_eq!(
+                    x.state.interior.pi[i].to_bits(),
+                    y.state.interior.pi[i].to_bits(),
+                    "{tag}: {id:?} pi[{i}]"
+                );
+            }
+        }
+        assert!(a.bitwise_eq(b), "{tag}: bitwise_eq disagrees with per-index comparison");
     }
 
     /// Reference unigrid evolution with the same BC handling: whole-domain
@@ -737,18 +1335,172 @@ mod tests {
             totals.payload_deep_copies, 0,
             "push path must not deep-copy fragment payloads"
         );
+        assert_eq!(
+            totals.amr_remote_pushes, 0,
+            "single locality must never serialize an input"
+        );
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn input_wire_codec_roundtrips_bitwise() {
+        let f = |n: usize, seed: f64| {
+            Fields {
+                chi: (0..n).map(|i| seed + i as f64 * 1e-3).collect(),
+                phi: (0..n).map(|i| -(seed * i as f64)).collect(),
+                pi: (0..n).map(|i| (seed * i as f64).sin()).collect(),
+            }
+        };
+        let cases = vec![
+            (
+                0u64,
+                Input::SelfState(Arc::new(StateOut {
+                    ext_left: Some(f(3, 0.7)),
+                    interior: Arc::new(f(12, 1.3)),
+                    ext_right: None,
+                })),
+            ),
+            (7, Input::GhostFrag { lo: 41, f: Arc::new(f(9, -2.0)) }),
+            (12, Input::TaperFrag { parent_lo: 5, f: Arc::new(f(4, 0.0)) }),
+            (3, Input::RestrictFrag { lo: 60, f: Arc::new(f(6, 9.9)) }),
+        ];
+        for (k, input) in cases {
+            let bytes = encode_input(k, &input);
+            let (k2, got) = decode_input(&bytes).unwrap();
+            assert_eq!(k, k2);
+            let fields_eq = |a: &Fields, b: &Fields| {
+                assert_eq!(a.len(), b.len());
+                for i in 0..a.len() {
+                    assert_eq!(a.chi[i].to_bits(), b.chi[i].to_bits());
+                    assert_eq!(a.phi[i].to_bits(), b.phi[i].to_bits());
+                    assert_eq!(a.pi[i].to_bits(), b.pi[i].to_bits());
+                }
+            };
+            match (&input, &got) {
+                (Input::SelfState(a), Input::SelfState(b)) => {
+                    assert_eq!(a.ext_left.is_some(), b.ext_left.is_some());
+                    assert_eq!(a.ext_right.is_some(), b.ext_right.is_some());
+                    fields_eq(&a.interior, &b.interior);
+                    if let (Some(x), Some(y)) = (&a.ext_left, &b.ext_left) {
+                        fields_eq(x, y);
+                    }
+                }
+                (Input::GhostFrag { lo: a, f: x }, Input::GhostFrag { lo: b, f: y })
+                | (Input::RestrictFrag { lo: a, f: x }, Input::RestrictFrag { lo: b, f: y }) => {
+                    assert_eq!(a, b);
+                    fields_eq(x, y);
+                }
+                (
+                    Input::TaperFrag { parent_lo: a, f: x },
+                    Input::TaperFrag { parent_lo: b, f: y },
+                ) => {
+                    assert_eq!(a, b);
+                    fields_eq(x, y);
+                }
+                other => panic!("input kind changed across the wire: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_epoch_bitwise_identical_on_1_2_4_8_localities() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        for localities in [1usize, 2, 4, 8] {
+            let runtime = rt_dist(localities, 2);
+            let plan = Arc::new(EpochPlan::new(h.clone(), cfg.coarse_steps));
+            let init = initial_block_states(&plan, &cfg);
+            let out = run_epoch(&runtime, plan, Arc::new(NativeBackend), cfg, &init).unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("{localities} localities"));
+            let totals = runtime.counters_total();
+            assert_eq!(totals.payload_deep_copies, 0, "local deliveries must stay zero-copy");
+            if localities > 1 {
+                assert!(
+                    totals.amr_remote_pushes > 0,
+                    "{localities} localities must exercise the wire"
+                );
+                assert!(totals.parcels_sent > 0);
+            }
+            runtime.shutdown();
+        }
+    }
+
+    #[test]
+    fn load_balancer_migrates_hot_blocks_and_preserves_physics() {
+        // Slab placement concentrates the refined region; the balancer
+        // must migrate at least one block (its very first sample sees the
+        // imbalance) and the physics must stay bit-identical.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 6, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(4, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let opts = DistAmrOpts {
+            policy: PlacementPolicy::RadialSlabs,
+            balance: Some(BalanceConfig {
+                interval: Duration::from_millis(1),
+                imbalance_ratio: 1.05,
+                max_migrations: 8,
+            }),
+        };
+        let out =
+            run_epoch_placed(&runtime, plan, Arc::new(NativeBackend), cfg, &init, &opts).unwrap();
+        assert!(out.migrations >= 1, "balancer should have migrated a block");
+        assert_eq!(runtime.counters_total().migrations, out.migrations);
+        assert_outcomes_bitwise_equal(&reference, &out, "balanced 4-locality run");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn dropped_ghost_parcels_surface_an_error_not_a_hang() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let runtime = rt_dist(2, 2);
+        // Destroy every AMR input parcel in flight.
+        runtime.net().set_drop_filter(|p| p.action == ACT_AMR_PUSH);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let t0 = Instant::now();
+        let res = run_epoch(&runtime, plan, Arc::new(NativeBackend), cfg, &init);
+        match res {
+            Err(e) => assert!(
+                e.to_string().contains("lost") && e.to_string().contains("parcel"),
+                "unexpected error text: {e}"
+            ),
+            Ok(_) => panic!("epoch must fail when its ghost parcels are destroyed"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "failure surfaced too slowly (wait_quiescent hang?)"
+        );
+        assert!(runtime.net().dropped() > 0);
         runtime.shutdown();
     }
 
     #[test]
     fn prop_arc_payload_driver_matches_clone_based_path_bitwise() {
-        // The Arc-payload dataflow driver against the CSP driver, whose
-        // local store is the seed's clone-based delivery (deep-copied
-        // `StateOut`s and fragments, synchronous schedule). Identical
-        // physics must come out bit-for-bit, for random geometry, steps,
-        // granularity and worker counts.
+        // The Arc-payload dataflow driver against (a) the CSP driver,
+        // whose local store is the seed's clone-based delivery
+        // (deep-copied `StateOut`s and fragments, synchronous schedule),
+        // and (b) the distributed driver over 2–4 localities with parcel
+        // ghost exchange. Identical physics must come out bit-for-bit,
+        // for random geometry, steps, granularity and worker counts.
         use crate::csp::amr::run_epoch_csp;
-        use crate::px::net::NetModel;
         prop_check("arc payloads vs clone-based path", 6, |rng: &mut Rng| {
             let levels = if rng.chance(0.5) { 1 } else { 0 };
             let granularity = rng.range(6, 24);
@@ -772,9 +1524,28 @@ mod tests {
             let plan = Arc::new(EpochPlan::new(h, steps));
             let init = initial_block_states(&plan, &cfg);
             let ranks = rng.range(1, 4);
-            let csp = run_epoch_csp(plan, Arc::new(NativeBackend), cfg, &init, ranks, NetModel::instant())
+            let csp = run_epoch_csp(plan.clone(), Arc::new(NativeBackend), cfg, &init, ranks, NetModel::instant())
                 .unwrap()
                 .outcome;
+
+            // Distributed run: random locality count and placement policy.
+            let localities = [2usize, 3, 4][rng.below(3) as usize];
+            let policy = if rng.chance(0.5) {
+                PlacementPolicy::RadialSlabs
+            } else {
+                PlacementPolicy::WeightedSlabs
+            };
+            let dist_rt = rt_dist(localities, rng.range(1, 3));
+            let dist = run_epoch_placed(
+                &dist_rt,
+                plan,
+                Arc::new(NativeBackend),
+                cfg,
+                &init,
+                &DistAmrOpts { policy, balance: None },
+            )
+            .unwrap();
+            dist_rt.shutdown();
 
             assert_eq!(px_out.blocks.len(), csp.blocks.len());
             for (id, b) in &px_out.blocks {
@@ -798,6 +1569,7 @@ mod tests {
                     );
                 }
             }
+            assert_outcomes_bitwise_equal(&px_out, &dist, &format!("{localities}-locality dist"));
         });
     }
 

@@ -237,6 +237,15 @@ impl EpochPlan {
         n
     }
 
+    /// Relative compute cost of one block over the whole epoch: interior
+    /// width × steps the level performs. Placement policies balance this
+    /// quantity across localities (a level-`l` block runs `2^l` times as
+    /// many steps as a base block of the same width).
+    pub fn block_cost(&self, id: BlockId) -> u64 {
+        let p = self.plan(id);
+        p.info.width() as u64 * self.targets[id.level as usize]
+    }
+
     /// Total number of tasks in the epoch (for progress accounting).
     pub fn total_tasks(&self) -> u64 {
         self.plans

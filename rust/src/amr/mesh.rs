@@ -159,6 +159,13 @@ impl BlockInfo {
     pub fn width(&self) -> usize {
         self.hi - self.lo
     }
+
+    /// Midpoint of the block in own-level index space. Combined with the
+    /// level's `dx` this gives the radial midpoint used by placement
+    /// policies (coordinator) and the CSP rank decomposition alike.
+    pub fn mid_index(&self) -> f64 {
+        (self.lo + self.hi) as f64 / 2.0
+    }
 }
 
 /// The full static structure for one regrid epoch.

@@ -10,6 +10,12 @@
 //! codes regrid every N steps for the same reason — the paper's own runs
 //! hold the grid structure between adaptations too (Fig 2 shows the
 //! initial hierarchy produced by exactly this estimator).
+//!
+//! Distribution note: block→locality placement is an *epoch* property —
+//! `run_epoch_placed` derives a fresh `coordinator::PlacementPolicy`
+//! assignment from each epoch's plan, so a regrid automatically
+//! re-places the new block set across localities (and the load balancer
+//! re-balances within the epoch from there).
 
 use std::collections::HashMap;
 

@@ -121,17 +121,23 @@ pub struct ThreeDResult {
 /// Run the 3-D workload on an existing runtime; blocks synchronize with
 /// their 26-neighbourhood per substep via the task-table dataflow (same
 /// pattern as the 1-D driver, simplified to "neighbours at same step").
+///
+/// Locality-agnostic: each refinement level's task graph is hosted on
+/// locality `level % n_localities`, so a multi-locality runtime spreads
+/// the levels (whose task counts differ by 2× subcycling) across nodes
+/// instead of pinning everything to locality 0.
 pub fn run_three_d(rt: &PxRuntime, cfg: ThreeDConfig) -> ThreeDResult {
-    let sp = rt.locality(0).spawner.clone();
+    let n_loc = rt.localities().len();
     let start = Instant::now();
     let tasks = Arc::new(AtomicU64::new(0));
     let points = Arc::new(AtomicU64::new(0));
 
-    // Levels run concurrently (their tasks share the work queue); each
-    // level is double-buffered and blocks depend on neighbours' previous
-    // substep through a per-level dependency table.
+    // Levels run concurrently (their tasks share their host locality's
+    // work queue); each level is double-buffered and blocks depend on
+    // neighbours' previous substep through a per-level dependency table.
     let done: Vec<PxFuture<Vec<f64>>> = (0..=cfg.levels)
         .map(|l| {
+            let sp = rt.locality((l % n_loc) as u32).spawner.clone();
             let fut: PxFuture<Vec<f64>> = PxFuture::new();
             let n = cfg.n0;
             let dx = 1.0 / (n as f64 - 1.0) / (1u64 << l) as f64;
@@ -337,6 +343,23 @@ mod tests {
         let cfg = ThreeDConfig { n0: 12, levels: 0, granularity: 12, coarse_steps: 3, cfl: 0.2 };
         let r = run_three_d(&rt, cfg);
         assert_eq!(r.tasks, 3);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn three_d_levels_spread_across_localities() {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 2,
+            workers_per_locality: 2,
+            ..Default::default()
+        });
+        let cfg = ThreeDConfig { n0: 12, levels: 1, granularity: 6, coarse_steps: 2, cfl: 0.2 };
+        let r = run_three_d(&rt, cfg);
+        assert_eq!(r.tasks, 2 * 8 + 4 * 8);
+        // One level hosted per locality: both thread managers saw work.
+        let per = rt.counters_per_locality();
+        assert!(per[0].threads_spawned > 0, "locality 0 idle");
+        assert!(per[1].threads_spawned > 0, "locality 1 idle");
         rt.shutdown();
     }
 

@@ -373,7 +373,7 @@ pub fn run_epoch_csp(
         bytes += by;
     }
     Ok(CspRunStats {
-        outcome: AmrOutcome { blocks, elapsed, tasks_run, tasks_frozen: 0 },
+        outcome: AmrOutcome { blocks, elapsed, tasks_run, tasks_frozen: 0, migrations: 0 },
         busy,
         msgs,
         bytes,

@@ -16,6 +16,10 @@
 pub mod amr;
 pub mod bench;
 pub mod cli;
+/// L3 coordination: block placement policies and the migration-based
+/// load balancer driving the distributed AMR application (see
+/// `DESIGN.md` §6).
+pub mod coordinator;
 pub mod metrics;
 pub mod csp;
 pub mod fpga;

@@ -4,6 +4,7 @@
 //!   run        evolve the semilinear wave with barrier-free AMR (e2e driver)
 //!   fig2..fig9 regenerate the paper's figures (see DESIGN.md §5)
 //!   fpga       §V thread-queue offload study
+//!   dist       distributed AMR strong scaling (1->8 localities), BENCH_2.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -75,6 +76,14 @@ fn main() {
             print!("{}", bench::fpga_fib_table(scale));
             Ok(())
         }
+        "dist" => match bench::write_bench2_json(scale) {
+            Ok((path, table)) => {
+                print!("{table}");
+                println!("BENCH_2.json written to {}", path.display());
+                Ok(())
+            }
+            Err(e) => Err(format!("dist experiment failed: {e}")),
+        },
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -90,7 +99,7 @@ fn main() {
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist> [--options]\n\n\
          run options: --n0 1601 --levels 2 --steps 32 --granularity 16\n\
                       --workers <cores> --backend native|xla --scheduler local|global\n\
                       --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\

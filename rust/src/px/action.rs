@@ -24,6 +24,17 @@ pub const ACT_SET_FUTURE_ERROR: ActionId = RESERVED_ACTION_BASE + 2;
 /// Builtin: liveness ping — replies on the continuation with `[seq]`.
 pub const ACT_PING: ActionId = RESERVED_ACTION_BASE + 3;
 
+/// Application action-id block reserved for the AMR driver (below the
+/// builtin range; ids must agree across every locality, like statically
+/// linked function pointers).
+pub const AMR_ACTION_BASE: ActionId = 0x00A3_0000;
+
+/// AMR: deliver one serialized dataflow input (ghost / taper /
+/// restriction fragment or self state) to a block-step task on the
+/// block's current home locality. Registered by the distributed AMR
+/// driver at epoch setup; the parcel's `dest` GID names the block.
+pub const ACT_AMR_PUSH: ActionId = AMR_ACTION_BASE + 1;
+
 /// The body of an action: runs as a PX-thread on the destination locality.
 pub type ActionFn = dyn Fn(&Arc<LocalityCtx>, Parcel) + Send + Sync;
 
@@ -49,6 +60,22 @@ impl ActionRegistry {
         let mut m = self.map.write().unwrap();
         assert!(!m.contains_key(&id), "action id {id:#x} registered twice");
         m.insert(id, Arc::new(f));
+    }
+
+    /// Register `f` under `id` unless an action already holds that id.
+    /// Returns whether the registration happened. Used by subsystems that
+    /// install the same action once per *runtime* but are entered once
+    /// per *epoch* (e.g. the distributed AMR driver).
+    pub fn register_if_absent<F>(&self, id: ActionId, f: F) -> bool
+    where
+        F: Fn(&Arc<LocalityCtx>, Parcel) + Send + Sync + 'static,
+    {
+        let mut m = self.map.write().unwrap();
+        if m.contains_key(&id) {
+            return false;
+        }
+        m.insert(id, Arc::new(f));
+        true
     }
 
     /// Look up an action body.

@@ -72,6 +72,10 @@ pub struct Counters {
     pub parcels_sent: Counter,
     /// Parcels received and decoded.
     pub parcels_received: Counter,
+    /// Parcels re-sent by the action manager because a stale AGAS cache
+    /// routed them to a locality that no longer hosts the object (the
+    /// migration hop-forwarding path).
+    pub parcels_forwarded: Counter,
     /// Total serialized parcel bytes sent.
     pub parcel_bytes: Counter,
     /// AGAS lookups answered from the local cache.
@@ -84,11 +88,21 @@ pub struct Counters {
     pub lco_triggers: Counter,
     /// XLA executable invocations (the PJRT hot path).
     pub xla_calls: Counter,
-    /// AMR dataflow inputs delivered (each an `Arc` refcount bump).
+    /// AMR dataflow inputs delivered into a task table — same-locality
+    /// `Arc` refcount bumps plus decoded remote arrivals (a remote input
+    /// counts once here, at the receiver, and once in
+    /// `amr_remote_pushes`, at the sender).
     pub amr_pushes: Counter,
-    /// Deep copies of fragment payloads on the dataflow push path.
-    /// Contract: stays 0 — the zero-copy regression tripwire. Any future
-    /// code that must deep-copy a payload on the push path bumps this.
+    /// AMR dataflow inputs whose producer and consumer live on different
+    /// localities: the fragment was serialized into a parcel and crossed
+    /// the wire. Counted at the sender; these are wire transfers, not
+    /// deep copies on the local push path (`payload_deep_copies` stays 0).
+    pub amr_remote_pushes: Counter,
+    /// Deep copies of fragment payloads on the *same-locality* dataflow
+    /// push path. Contract: stays 0 — the zero-copy regression tripwire.
+    /// Any future code that must deep-copy a payload on the local push
+    /// path bumps this. (Remote deliveries serialize by necessity and are
+    /// accounted under `amr_remote_pushes`/`parcel_bytes` instead.)
     pub payload_deep_copies: Counter,
 }
 
@@ -107,6 +121,7 @@ pub struct CounterSnapshot {
     pub queue_hwm: u64,
     pub parcels_sent: u64,
     pub parcels_received: u64,
+    pub parcels_forwarded: u64,
     pub parcel_bytes: u64,
     pub agas_cache_hits: u64,
     pub agas_cache_misses: u64,
@@ -114,6 +129,7 @@ pub struct CounterSnapshot {
     pub lco_triggers: u64,
     pub xla_calls: u64,
     pub amr_pushes: u64,
+    pub amr_remote_pushes: u64,
     pub payload_deep_copies: u64,
 }
 
@@ -133,6 +149,7 @@ impl Counters {
             queue_hwm: self.queue_hwm.get(),
             parcels_sent: self.parcels_sent.get(),
             parcels_received: self.parcels_received.get(),
+            parcels_forwarded: self.parcels_forwarded.get(),
             parcel_bytes: self.parcel_bytes.get(),
             agas_cache_hits: self.agas_cache_hits.get(),
             agas_cache_misses: self.agas_cache_misses.get(),
@@ -140,6 +157,7 @@ impl Counters {
             lco_triggers: self.lco_triggers.get(),
             xla_calls: self.xla_calls.get(),
             amr_pushes: self.amr_pushes.get(),
+            amr_remote_pushes: self.amr_remote_pushes.get(),
             payload_deep_copies: self.payload_deep_copies.get(),
         }
     }
@@ -161,6 +179,7 @@ impl CounterSnapshot {
             queue_hwm: self.queue_hwm.max(earlier.queue_hwm),
             parcels_sent: self.parcels_sent - earlier.parcels_sent,
             parcels_received: self.parcels_received - earlier.parcels_received,
+            parcels_forwarded: self.parcels_forwarded - earlier.parcels_forwarded,
             parcel_bytes: self.parcel_bytes - earlier.parcel_bytes,
             agas_cache_hits: self.agas_cache_hits - earlier.agas_cache_hits,
             agas_cache_misses: self.agas_cache_misses - earlier.agas_cache_misses,
@@ -168,6 +187,7 @@ impl CounterSnapshot {
             lco_triggers: self.lco_triggers - earlier.lco_triggers,
             xla_calls: self.xla_calls - earlier.xla_calls,
             amr_pushes: self.amr_pushes - earlier.amr_pushes,
+            amr_remote_pushes: self.amr_remote_pushes - earlier.amr_remote_pushes,
             payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
         }
     }
@@ -187,6 +207,7 @@ impl CounterSnapshot {
             ("queue_hwm", self.queue_hwm),
             ("parcels_sent", self.parcels_sent),
             ("parcels_received", self.parcels_received),
+            ("parcels_forwarded", self.parcels_forwarded),
             ("parcel_bytes", self.parcel_bytes),
             ("agas_cache_hits", self.agas_cache_hits),
             ("agas_cache_misses", self.agas_cache_misses),
@@ -194,6 +215,7 @@ impl CounterSnapshot {
             ("lco_triggers", self.lco_triggers),
             ("xla_calls", self.xla_calls),
             ("amr_pushes", self.amr_pushes),
+            ("amr_remote_pushes", self.amr_remote_pushes),
             ("payload_deep_copies", self.payload_deep_copies),
         ];
         let mut out = String::new();

@@ -181,6 +181,7 @@ impl LocalityCtx {
                 }
                 let mut fwd = p;
                 fwd.hops += 1;
+                self.counters.parcels_forwarded.inc();
                 let _ = self.send_parcel(pl.locality, &fwd);
                 return;
             }

@@ -102,6 +102,24 @@ mod tests {
     }
 
     #[test]
+    fn wire_size_equals_encoded_len_for_empty_small_and_multikb_args() {
+        // The hand-summed framing constant in `wire_size` is easy to
+        // desync from `wire.rs`; pin it across the payload-size range the
+        // AMR drivers actually produce (empty control parcels up to
+        // multi-KB ghost fragments).
+        for n in [0usize, 1, 3, 17, 1024, 4 * 1024, 64 * 1024] {
+            for (k, hops) in [(Gid::NULL, 0u8), (Gid::new(2, GidKind::Future, 11), 3)] {
+                let mut p = Parcel::new(Gid::new(1, GidKind::Block, 5), 9, vec![0xAB; n], 1)
+                    .with_continuation(k);
+                p.hops = hops;
+                let buf = p.encode();
+                assert_eq!(buf.len(), p.wire_size(), "args len {n}");
+                assert_eq!(Parcel::decode(&buf).unwrap(), p, "args len {n}");
+            }
+        }
+    }
+
+    #[test]
     fn prop_any_parcel_roundtrips() {
         prop_check("parcel roundtrip", 300, |rng: &mut Rng| {
             let p = Parcel {

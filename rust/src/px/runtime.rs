@@ -218,6 +218,7 @@ impl PxRuntime {
             total.queue_hwm = total.queue_hwm.max(s.queue_hwm);
             total.parcels_sent += s.parcels_sent;
             total.parcels_received += s.parcels_received;
+            total.parcels_forwarded += s.parcels_forwarded;
             total.parcel_bytes += s.parcel_bytes;
             total.agas_cache_hits += s.agas_cache_hits;
             total.agas_cache_misses += s.agas_cache_misses;
@@ -225,9 +226,16 @@ impl PxRuntime {
             total.lco_triggers += s.lco_triggers;
             total.xla_calls += s.xla_calls;
             total.amr_pushes += s.amr_pushes;
+            total.amr_remote_pushes += s.amr_remote_pushes;
             total.payload_deep_copies += s.payload_deep_copies;
         }
         total
+    }
+
+    /// Per-locality counter snapshots (index = locality id) — the series
+    /// `BENCH_2.json` reports for the distributed AMR experiments.
+    pub fn counters_per_locality(&self) -> Vec<CounterSnapshot> {
+        self.localities.iter().map(|l| l.counters.snapshot()).collect()
     }
 
     /// Graceful shutdown: drain thread managers, stop the net.

@@ -13,8 +13,9 @@
 //! * [`GlobalQueue`] — one shared Vyukov MPMC ring per priority class.
 //!   Still the paper's contention demonstrator: every core hammers the
 //!   same enqueue/dequeue cursors, and each CAS lost to another core is
-//!   recorded in `queue_contended` (the same "had to fight for the
-//!   queue" meaning the old `try_lock` accounting had).
+//!   recorded in `queue_cas_retries` (the lock-free analogue of the old
+//!   `try_lock` accounting; `queue_contended` now only counts lock
+//!   acquisitions that contended, i.e. the overflow spillover).
 //! * [`LocalPriority`] — per-worker Chase–Lev deques (one per priority)
 //!   plus a shared injector for off-pool spawns. On-pool spawn/pop touch
 //!   only the owner's deque ends; thieves take the victim's *oldest*
