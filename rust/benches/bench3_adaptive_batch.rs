@@ -1,0 +1,27 @@
+//! BENCH 3: bandwidth-aware ghost batching (per-fragment vs coalesced
+//! `ACT_AMR_PUSH_BATCH` parcels) and adaptive placement (static cost
+//! model vs observed-cost feedback on a skewed workload) across
+//! 1/2/4/8 simulated localities, emitting `BENCH_3.json` next to
+//! `BENCH_1.json` / `BENCH_2.json`.
+//! Run: `cargo bench --bench bench3_adaptive_batch` (PX_SCALE=full for
+//! paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    match parallex::bench::write_bench3_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[bench3_adaptive_batch] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[bench3_adaptive_batch] failed to write BENCH_3.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -7,7 +7,10 @@ fn main() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
     }
     let t0 = std::time::Instant::now();
-    match parallex::bench::write_bench2_json(parallex::bench::Scale::from_env()) {
+    match parallex::bench::write_bench2_json(
+        parallex::bench::Scale::from_env(),
+        parallex::coordinator::PlacementPolicy::RadialSlabs,
+    ) {
         Ok((path, table)) => {
             print!("{table}");
             eprintln!(

@@ -14,12 +14,22 @@
 //! block-step runs on the locality currently hosting its block, and an
 //! input whose producer and consumer share a locality is delivered as an
 //! `Arc` refcount bump (the PR-1 zero-copy path — `payload_deep_copies`
-//! stays 0) while a true remote edge is serialized into a parcel
-//! ([`crate::px::action::ACT_AMR_PUSH`]) and crosses the simulated wire.
+//! stays 0) while a true remote edge is serialized and crosses the
+//! simulated wire. Remote fragments are *batched*: everything one
+//! producer step emits toward one destination locality coalesces into a
+//! single [`crate::px::action::ACT_AMR_PUSH_BATCH`] parcel (one wire
+//! base latency per neighbour exchange instead of per fragment;
+//! `amr_batched_pushes` counts the riders), with the per-fragment
+//! [`crate::px::action::ACT_AMR_PUSH`] kept as the unbatched fallback
+//! and the migration re-forward path.
 //! The coordinator's load balancer migrates hot blocks mid-epoch via
 //! `AgasClient::migrate`; parcels already in flight toward the old home
-//! are re-routed by the AGAS stale-cache hop-forwarding path. DESIGN.md
-//! §6 documents the placement, migration and delivery protocols.
+//! are re-routed by the AGAS stale-cache hop-forwarding path. The driver
+//! also samples every block's compute nanoseconds, feeding the
+//! coordinator's [`CostModel`] so [`run_epoch_adaptive`] can re-place
+//! blocks from *observed* rather than assumed costs at each epoch
+//! boundary. DESIGN.md §6/§7 document the placement, batching, migration
+//! and delivery protocols.
 //!
 //! The same driver also implements the conventional *global-barrier*
 //! schedule ("HPX is also capable of implementing the standard AMR
@@ -44,8 +54,8 @@ use super::backend::ComputeBackend;
 use super::engine::{assemble, restriction_of, shadow_output, split_output, EpochPlan, Input, StateOut};
 use super::mesh::{BlockId, BlockRole, Hierarchy, Region};
 use super::physics::{initial_data, Fields};
-use crate::coordinator::{DistAmrOpts, LoadBalancer};
-use crate::px::action::ACT_AMR_PUSH;
+use crate::coordinator::{CostModel, DistAmrOpts, LoadBalancer};
+use crate::px::action::{ACT_AMR_PUSH, ACT_AMR_PUSH_BATCH};
 use crate::px::error::{PxError, PxResult};
 use crate::px::gid::{Gid, GidKind, LocalityId};
 use crate::px::lco::Future as PxFuture;
@@ -185,6 +195,20 @@ impl AmrOutcome {
     }
 }
 
+/// One block's accumulated compute cost within an epoch — what the
+/// driver observed, not what a static model assumed. Consumed by
+/// [`CostModel::observe`](crate::coordinator::CostModel::observe).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockCostSample {
+    pub id: BlockId,
+    /// Interior width in points (for the per-point fallback estimate).
+    pub width: usize,
+    /// Total compute nanoseconds spent on this block's tasks.
+    pub ns: u64,
+    /// Steps the block completed (ns/steps = observed per-step cost).
+    pub steps: u64,
+}
+
 type TaskKey = (BlockId, u64);
 
 struct TaskEntry {
@@ -210,6 +234,15 @@ struct BlockHandle {
     id: BlockId,
 }
 
+/// One locality's ingress for coalesced ghost exchange: the
+/// `ACT_AMR_PUSH_BATCH` parcel is addressed to this component's GID
+/// (never migrated), and each decoded entry is then routed to its block
+/// individually — so a block that moved while the batch was in flight is
+/// chased by a per-fragment re-forward, not by re-sending the batch.
+struct BatchSink {
+    state: Arc<DriverState>,
+}
+
 /// Shared state of one epoch's dataflow graph across all localities.
 ///
 /// Partitioning: the *task table* is per locality (`shards`), and a task
@@ -230,6 +263,17 @@ pub struct DriverState {
     home: HashMap<BlockId, AtomicU32>,
     /// Block → AGAS GID (populated only for multi-locality runs).
     gids: RwLock<HashMap<BlockId, Gid>>,
+    /// Per-locality batch-sink GIDs (indexed by locality id; populated
+    /// only for multi-locality runs with batching enabled).
+    sinks: RwLock<Vec<Gid>>,
+    /// Coalesce remote pushes into `ACT_AMR_PUSH_BATCH` parcels
+    /// ([`DistAmrOpts::batch_pushes`]); off = the per-fragment wire path,
+    /// kept for the BENCH_3 comparison.
+    batch: bool,
+    /// Accumulated compute nanoseconds per block — the observed-cost
+    /// feedback [`run_epoch_adaptive`] hands to the coordinator's
+    /// [`CostModel`] at the epoch boundary.
+    cost_ns: HashMap<BlockId, AtomicU64>,
     board: Mutex<HashMap<BlockId, BlockOutcome>>,
     tasks_run: AtomicU64,
     tasks_frozen: AtomicU64,
@@ -283,65 +327,151 @@ fn dec_fields(d: &mut Dec) -> PxResult<Fields> {
 /// property tests).
 fn encode_input(k: u64, input: &Input) -> Vec<u8> {
     let mut e = Enc::new();
+    enc_input_into(&mut e, k, input);
+    e.finish()
+}
+
+/// Append one `(k, input)` record to an encoder — shared by the
+/// single-push codec above and the `ACT_AMR_PUSH_BATCH` entry stream,
+/// so a batched fragment is byte-identical to its unbatched form.
+fn enc_input_into(e: &mut Enc, k: u64, input: &Input) {
     e.u64(k);
     match input {
         Input::SelfState(s) => {
             e.u8(IN_SELF);
             e.bool(s.ext_left.is_some());
             if let Some(el) = &s.ext_left {
-                enc_fields(&mut e, el);
+                enc_fields(e, el);
             }
-            enc_fields(&mut e, &s.interior);
+            enc_fields(e, &s.interior);
             e.bool(s.ext_right.is_some());
             if let Some(er) = &s.ext_right {
-                enc_fields(&mut e, er);
+                enc_fields(e, er);
             }
         }
         Input::GhostFrag { lo, f } => {
             e.u8(IN_GHOST);
             e.u64(*lo as u64);
-            enc_fields(&mut e, f);
+            enc_fields(e, f);
         }
         Input::TaperFrag { parent_lo, f } => {
             e.u8(IN_TAPER);
             e.u64(*parent_lo as u64);
-            enc_fields(&mut e, f);
+            enc_fields(e, f);
         }
         Input::RestrictFrag { lo, f } => {
             e.u8(IN_RESTRICT);
             e.u64(*lo as u64);
-            enc_fields(&mut e, f);
+            enc_fields(e, f);
         }
     }
-    e.finish()
 }
 
 fn decode_input(buf: &[u8]) -> PxResult<(u64, Input)> {
     let mut d = Dec::new(buf);
+    let out = dec_input_from(&mut d)?;
+    d.expect_end()?;
+    Ok(out)
+}
+
+/// Decode one `(k, input)` record from a cursor (no end-of-buffer
+/// assumption — batch decoding reads several in sequence).
+fn dec_input_from(d: &mut Dec) -> PxResult<(u64, Input)> {
     let k = d.u64()?;
     let input = match d.u8()? {
         IN_SELF => {
-            let ext_left = if d.bool()? { Some(dec_fields(&mut d)?) } else { None };
-            let interior = Arc::new(dec_fields(&mut d)?);
-            let ext_right = if d.bool()? { Some(dec_fields(&mut d)?) } else { None };
+            let ext_left = if d.bool()? { Some(dec_fields(d)?) } else { None };
+            let interior = Arc::new(dec_fields(d)?);
+            let ext_right = if d.bool()? { Some(dec_fields(d)?) } else { None };
             Input::SelfState(Arc::new(StateOut { ext_left, interior, ext_right }))
         }
         IN_GHOST => {
             let lo = d.u64()? as usize;
-            Input::GhostFrag { lo, f: Arc::new(dec_fields(&mut d)?) }
+            Input::GhostFrag { lo, f: Arc::new(dec_fields(d)?) }
         }
         IN_TAPER => {
             let parent_lo = d.u64()? as usize;
-            Input::TaperFrag { parent_lo, f: Arc::new(dec_fields(&mut d)?) }
+            Input::TaperFrag { parent_lo, f: Arc::new(dec_fields(d)?) }
         }
         IN_RESTRICT => {
             let lo = d.u64()? as usize;
-            Input::RestrictFrag { lo, f: Arc::new(dec_fields(&mut d)?) }
+            Input::RestrictFrag { lo, f: Arc::new(dec_fields(d)?) }
         }
         other => return Err(PxError::Wire(format!("unknown AMR input kind {other}"))),
     };
-    d.expect_end()?;
     Ok((k, input))
+}
+
+// ------------------------------------------------ batched-push wire codec
+//
+// `ACT_AMR_PUSH_BATCH` args: `u32` entry count, then per entry the
+// destination `BlockId` (`u8` level, `u16` region, `u32` block) followed
+// by the same `(k, input)` record the single-push codec writes. The
+// count is back-patched (`Enc::patch_u32`) once the producer step knows
+// how many fragments shared the destination locality.
+
+fn enc_block_id(e: &mut Enc, id: BlockId) {
+    e.u8(id.level).u16(id.region).u32(id.block);
+}
+
+fn dec_block_id(d: &mut Dec) -> PxResult<BlockId> {
+    Ok(BlockId { level: d.u8()?, region: d.u16()?, block: d.u32()? })
+}
+
+fn decode_batch(buf: &[u8]) -> PxResult<Vec<(BlockId, u64, Input)>> {
+    let mut d = Dec::new(buf);
+    let n = d.u32()? as usize;
+    // Clamp the pre-allocation by what the buffer could possibly hold
+    // (the smallest entry is 7 id bytes + 8 k bytes + a 1-byte kind tag
+    // + three 4-byte length prefixes): a corrupt count then fails in the
+    // decode loop with a Wire error instead of aborting on a huge alloc.
+    const MIN_ENTRY_BYTES: usize = 7 + 8 + 1 + 12;
+    let mut out = Vec::with_capacity(n.min(d.remaining() / MIN_ENTRY_BYTES));
+    for _ in 0..n {
+        let id = dec_block_id(&mut d)?;
+        let (k, input) = dec_input_from(&mut d)?;
+        out.push((id, k, input));
+    }
+    d.expect_end()?;
+    Ok(out)
+}
+
+/// Per-producer-step coalescing buffers: one pending
+/// `ACT_AMR_PUSH_BATCH` payload per destination locality. The batching
+/// key is the (source locality, destination locality) pair; the "step"
+/// is the scope of one `route_outputs` (or `seed_local`) call, so a
+/// batch never waits on anything — it is flushed synchronously before
+/// the producing task returns.
+struct PushBatcher {
+    /// Indexed by destination locality: encoder (count header already
+    /// reserved) plus the entry count to patch in on flush.
+    dests: Vec<Option<(Enc, u32)>>,
+}
+
+impl PushBatcher {
+    /// Batcher for one producer step. Zero-capacity (no allocation) when
+    /// the run cannot batch — single locality or batching disabled — so
+    /// the single-locality hot path stays allocation-free here.
+    fn for_step(state: &DriverState) -> PushBatcher {
+        let n = if state.batch && state.shards.len() > 1 { state.shards.len() } else { 0 };
+        PushBatcher { dests: (0..n).map(|_| None).collect() }
+    }
+
+    #[cfg(test)]
+    fn new(n_localities: usize) -> PushBatcher {
+        PushBatcher { dests: (0..n_localities).map(|_| None).collect() }
+    }
+
+    fn add(&mut self, dest: usize, id: BlockId, k: u64, input: &Input) {
+        let (e, count) = self.dests[dest].get_or_insert_with(|| {
+            let mut e = Enc::new();
+            e.u32(0); // entry count, patched on flush
+            (e, 0)
+        });
+        enc_block_id(e, id);
+        enc_input_into(e, k, input);
+        *count += 1;
+    }
 }
 
 impl DriverState {
@@ -351,6 +481,7 @@ impl DriverState {
         config: AmrConfig,
         localities: &[Arc<LocalityCtx>],
         placement: &HashMap<BlockId, LocalityId>,
+        batch: bool,
     ) -> Arc<Self> {
         let total: u64 = plan.total_tasks();
         // Barrier-mode bookkeeping: tasks due at each global fine tick.
@@ -380,10 +511,15 @@ impl DriverState {
                 (id, AtomicU32::new(*placement.get(&id).unwrap_or(&0)))
             })
             .collect();
+        let cost_ns: HashMap<BlockId, AtomicU64> =
+            plan.plans.iter().map(|p| (p.info.id, AtomicU64::new(0))).collect();
         Arc::new(DriverState {
             shards,
             home,
             gids: RwLock::new(HashMap::new()),
+            sinks: RwLock::new(Vec::new()),
+            batch,
+            cost_ns,
             board: Mutex::new(HashMap::new()),
             tasks_run: AtomicU64::new(0),
             tasks_frozen: AtomicU64::new(0),
@@ -432,14 +568,41 @@ impl DriverState {
                 }
             }
         });
-        let mut gids = self.gids.write().unwrap();
-        for p in &self.plan.plans {
-            let id = p.info.id;
-            let loc = self.home[&id].load(Ordering::SeqCst) as usize;
-            let gid = self.shards[loc]
-                .ctx
-                .register_component(GidKind::Block, BlockHandle { state: self.clone(), id })?;
-            gids.insert(id, gid);
+        self.shards[0].ctx.actions.register_if_absent(ACT_AMR_PUSH_BATCH, |ctx, p| {
+            // The sink never migrates, so unlike the single-push body
+            // there is no re-forward arm: a missing component only means
+            // the epoch is tearing down after quiescence.
+            match ctx.component::<BatchSink>(p.dest) {
+                Ok(h) => match decode_batch(&p.args) {
+                    Ok(entries) => {
+                        for (id, k, input) in entries {
+                            h.state.deliver(ctx, id, k, input);
+                        }
+                    }
+                    Err(e) => eprintln!("[L{}] AMR batch decode failed: {e}", ctx.id),
+                },
+                Err(e) => eprintln!("[L{}] AMR batch sink missing: {e}", ctx.id),
+            }
+        });
+        {
+            let mut gids = self.gids.write().unwrap();
+            for p in &self.plan.plans {
+                let id = p.info.id;
+                let loc = self.home[&id].load(Ordering::SeqCst) as usize;
+                let gid = self.shards[loc]
+                    .ctx
+                    .register_component(GidKind::Block, BlockHandle { state: self.clone(), id })?;
+                gids.insert(id, gid);
+            }
+        }
+        if self.batch {
+            let mut sinks = self.sinks.write().unwrap();
+            for sh in &self.shards {
+                let gid = sh
+                    .ctx
+                    .register_component(GidKind::Component, BatchSink { state: self.clone() })?;
+                sinks.push(gid);
+            }
         }
         Ok(())
     }
@@ -453,6 +616,16 @@ impl DriverState {
     fn unregister_blocks(&self) {
         let mut gids = self.gids.write().unwrap();
         for (_id, gid) in gids.drain() {
+            for sh in &self.shards {
+                let _ = sh.ctx.take_component(gid);
+            }
+            let _ = self.shards[0].ctx.agas.unbind(gid);
+        }
+        drop(gids);
+        // The batch sinks hold the same DriverState cycle the block
+        // handles do — sweep them with the same rigor.
+        let mut sinks = self.sinks.write().unwrap();
+        for gid in sinks.drain(..) {
             for sh in &self.shards {
                 let _ = sh.ctx.take_component(gid);
             }
@@ -524,9 +697,18 @@ impl DriverState {
     }
 
     /// Route one producer output to its consumer task: same-locality
-    /// consumers get the `Arc` (refcount bump), remote consumers get a
-    /// serialized parcel through AGAS.
-    fn route_push(self: &Arc<Self>, from: usize, id: BlockId, k: u64, input: &Input) {
+    /// consumers get the `Arc` (refcount bump), remote consumers are
+    /// appended to the step's per-destination batch (flushed by the
+    /// caller) or — with batching off — serialized into their own parcel
+    /// through AGAS.
+    fn route_push(
+        self: &Arc<Self>,
+        b: &mut PushBatcher,
+        from: usize,
+        id: BlockId,
+        k: u64,
+        input: &Input,
+    ) {
         if k >= self.plan.targets[id.level as usize] {
             return; // beyond the epoch's horizon — never pays for the wire
         }
@@ -541,9 +723,35 @@ impl DriverState {
                     return;
                 }
                 // Home flipped between the load and the insert: re-route.
+            } else if self.batch {
+                // If the home flips again before the flush, the stale
+                // destination's sink re-routes the entry block-by-block.
+                let ctx = &self.shards[from].ctx;
+                ctx.counters.amr_remote_pushes.inc();
+                ctx.counters.amr_batched_pushes.inc();
+                b.add(home, id, k, input);
+                return;
             } else {
                 self.send_remote(from, id, k, input);
                 return;
+            }
+        }
+    }
+
+    /// Send every batch the step accumulated: one `ACT_AMR_PUSH_BATCH`
+    /// parcel per destination locality, addressed to that locality's
+    /// sink component — one wire base latency per neighbour exchange.
+    fn flush_batches(self: &Arc<Self>, from: usize, b: PushBatcher) {
+        for (dest, slot) in b.dests.into_iter().enumerate() {
+            let Some((mut e, count)) = slot else { continue };
+            let gid = match self.sinks.read().unwrap().get(dest) {
+                Some(g) => *g,
+                None => continue, // epoch tearing down
+            };
+            e.patch_u32(0, count);
+            let ctx = &self.shards[from].ctx;
+            if let Err(err) = ctx.apply(gid, ACT_AMR_PUSH_BATCH, e.finish(), Gid::NULL) {
+                eprintln!("[L{}] AMR batched push to L{dest} failed: {err}", ctx.id);
             }
         }
     }
@@ -656,6 +864,7 @@ impl DriverState {
             .unwrap_or(false)
             || self.diverged.load(Ordering::Relaxed);
 
+        let t_task = Instant::now();
         let out: Option<Arc<StateOut>> = if frozen {
             self.tasks_frozen.fetch_add(1, Ordering::Relaxed);
             None
@@ -683,6 +892,12 @@ impl DriverState {
                 }
             }
         };
+
+        if !frozen {
+            // Observed per-block step cost — the adaptive-placement
+            // feedback signal (one relaxed add per task; DESIGN.md §7).
+            self.cost_ns[&id].fetch_add(t_task.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
 
         if let Some(out) = out {
             // Record progress (monotonic: shadow tasks j and j+1 may run
@@ -729,10 +944,13 @@ impl DriverState {
         let p = plan.plan(id);
         let b = &p.info;
         let next = k + 1;
+        // One batcher per producer step: every remote fragment this task
+        // emits toward one locality shares a single parcel.
+        let mut batch = PushBatcher::for_step(self);
 
         // Self (Shadow blocks take no self input — pure injection).
         if p.role != BlockRole::Shadow {
-            self.route_push(loc, id, next, &Input::SelfState(out.clone()));
+            self.route_push(&mut batch, loc, id, next, &Input::SelfState(out.clone()));
         }
 
         // Ghost fragments: the full owned range (extension included).
@@ -757,7 +975,7 @@ impl DriverState {
                     (lo, Arc::new(Fields::concat(&parts)))
                 };
             for tgt in &p.ghost_to {
-                self.route_push(loc, *tgt, next, &Input::GhostFrag { lo, f: frag.clone() });
+                self.route_push(&mut batch, loc, *tgt, next, &Input::GhostFrag { lo, f: frag.clone() });
             }
         }
 
@@ -769,7 +987,13 @@ impl DriverState {
             for tgt in &p.restrict_to {
                 let role = plan.plan(*tgt).role;
                 let task_k = if role == BlockRole::Shadow { m - 1 } else { m };
-                self.route_push(loc, *tgt, task_k, &Input::RestrictFrag { lo: plo, f: f.clone() });
+                self.route_push(
+                    &mut batch,
+                    loc,
+                    *tgt,
+                    task_k,
+                    &Input::RestrictFrag { lo: plo, f: f.clone() },
+                );
             }
         }
 
@@ -779,6 +1003,7 @@ impl DriverState {
             let child_k = 2 * next;
             for (tgt, _side) in &p.taper_to {
                 self.route_push(
+                    &mut batch,
                     loc,
                     *tgt,
                     child_k,
@@ -786,6 +1011,7 @@ impl DriverState {
                 );
             }
         }
+        self.flush_batches(loc, batch);
     }
 
     /// Seed the k=0 inputs produced by this locality's blocks (each
@@ -799,7 +1025,10 @@ impl DriverState {
         blocks: &[BlockId],
         init: &HashMap<BlockId, Arc<Fields>>,
     ) {
-        // Mimic the push pattern of a fictitious "task -1" per block.
+        // Mimic the push pattern of a fictitious "task -1" per block. One
+        // batcher spans the whole seeding sweep: every remote k=0 input
+        // this locality produces for one destination rides one parcel.
+        let mut batch = PushBatcher::for_step(self);
         for &id in blocks {
             let p = self.plan.plan(id);
             // One shared buffer per block; every seed push below shares it.
@@ -807,10 +1036,16 @@ impl DriverState {
             let out = Arc::new(StateOut { ext_left: None, interior: f.clone(), ext_right: None });
             // Self + ghosts (Shadow blocks take no self input).
             if p.role != BlockRole::Shadow {
-                self.route_push(loc, id, 0, &Input::SelfState(out.clone()));
+                self.route_push(&mut batch, loc, id, 0, &Input::SelfState(out.clone()));
             }
             for tgt in &p.ghost_to {
-                self.route_push(loc, *tgt, 0, &Input::GhostFrag { lo: p.info.lo, f: f.clone() });
+                self.route_push(
+                    &mut batch,
+                    loc,
+                    *tgt,
+                    0,
+                    &Input::GhostFrag { lo: p.info.lo, f: f.clone() },
+                );
             }
             // Restriction @0 to Evolved parents only (Shadow task 0 waits
             // for restriction @2 produced by fine task 1).
@@ -819,15 +1054,28 @@ impl DriverState {
                 let rf = Arc::new(rf);
                 for tgt in &p.restrict_to {
                     if self.plan.plan(*tgt).role == BlockRole::Evolved {
-                        self.route_push(loc, *tgt, 0, &Input::RestrictFrag { lo: plo, f: rf.clone() });
+                        self.route_push(
+                            &mut batch,
+                            loc,
+                            *tgt,
+                            0,
+                            &Input::RestrictFrag { lo: plo, f: rf.clone() },
+                        );
                     }
                 }
             }
             // Taper @0 to children.
             for (tgt, _) in &p.taper_to {
-                self.route_push(loc, *tgt, 0, &Input::TaperFrag { parent_lo: p.info.lo, f: f.clone() });
+                self.route_push(
+                    &mut batch,
+                    loc,
+                    *tgt,
+                    0,
+                    &Input::TaperFrag { parent_lo: p.info.lo, f: f.clone() },
+                );
             }
         }
+        self.flush_batches(loc, batch);
     }
 
     // ------------------------------------------- coordinator-facing API
@@ -861,6 +1109,37 @@ impl DriverState {
             w[self.home[&id].load(Ordering::SeqCst) as usize] += remaining * p.info.width() as u64;
         }
         w
+    }
+
+    /// Observed per-block compute cost so far this epoch: accumulated
+    /// nanoseconds and completed steps per block. This is the feedback
+    /// signal the coordinator's [`CostModel`] folds into the next
+    /// epoch's placement (DESIGN.md §7).
+    pub fn observed_costs(&self) -> Vec<BlockCostSample> {
+        let board = self.board.lock().unwrap();
+        self.plan
+            .plans
+            .iter()
+            .map(|p| {
+                let id = p.info.id;
+                BlockCostSample {
+                    id,
+                    width: p.info.width(),
+                    ns: self.cost_ns[&id].load(Ordering::Relaxed),
+                    steps: board.get(&id).map(|b| b.completed_steps).unwrap_or(0),
+                }
+            })
+            .collect()
+    }
+
+    /// Every block's current home locality — after an epoch this is the
+    /// post-migration truth the adaptive placer diffs its next map
+    /// against (a moved block = one `placement_rebalances` event).
+    pub fn homes(&self) -> HashMap<BlockId, LocalityId> {
+        self.home
+            .iter()
+            .map(|(id, l)| (*id, l.load(Ordering::SeqCst)))
+            .collect()
     }
 
     /// The hosted block with the most remaining work on `loc` (migration
@@ -966,7 +1245,10 @@ pub fn run_epoch(
 }
 
 /// As [`run_epoch`], with an explicit placement policy and optional
-/// migration-based load balancing (the coordinator subsystem).
+/// migration-based load balancing (the coordinator subsystem). The
+/// [`PlacementPolicy::Adaptive`](crate::coordinator::PlacementPolicy::Adaptive)
+/// policy degenerates to its cold-start (cost-weighted) map here; use
+/// [`run_epoch_adaptive`] to carry observed-cost feedback across epochs.
 pub fn run_epoch_placed(
     rt: &PxRuntime,
     plan: Arc<EpochPlan>,
@@ -975,9 +1257,48 @@ pub fn run_epoch_placed(
     init: &HashMap<BlockId, Fields>,
     opts: &DistAmrOpts,
 ) -> Result<AmrOutcome> {
+    let placement = opts.policy.assign(&plan, rt.localities().len());
+    run_epoch_at(rt, plan, backend, config, init, placement, opts).map(|(out, _)| out)
+}
+
+/// As [`run_epoch_placed`], but the placement map comes from — and the
+/// epoch's observed per-block costs feed back into — a [`CostModel`]
+/// carried across epoch/regrid boundaries. When the model's map moves a
+/// block relative to where it actually ended the previous epoch, the
+/// `placement_rebalances` counter records the feedback loop firing.
+pub fn run_epoch_adaptive(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+    model: &mut CostModel,
+) -> Result<AmrOutcome> {
+    let (placement, rebalanced) = model.place(&plan, rt.localities().len());
+    if rebalanced {
+        rt.localities()[0].counters.placement_rebalances.inc();
+    }
+    let (outcome, st) = run_epoch_at(rt, plan, backend, config, init, placement, opts)?;
+    model.observe(&st.observed_costs(), &st.homes());
+    Ok(outcome)
+}
+
+/// Shared epoch body: run the dataflow graph under an explicit
+/// block → locality map, returning the driver state alongside the
+/// outcome so adaptive callers can harvest observed costs/homes.
+fn run_epoch_at(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    placement: HashMap<BlockId, LocalityId>,
+    opts: &DistAmrOpts,
+) -> Result<(AmrOutcome, Arc<DriverState>)> {
     let n_loc = rt.localities().len();
-    let placement = opts.policy.assign(&plan, n_loc);
-    let st = DriverState::new(plan, backend, config, rt.localities(), &placement);
+    let st =
+        DriverState::new(plan, backend, config, rt.localities(), &placement, opts.batch_pushes);
     if n_loc > 1 {
         if let Err(e) = st.register_blocks() {
             // Clean up any partial registrations before bailing, or the
@@ -1056,13 +1377,14 @@ pub fn run_epoch_placed(
         !st.diverged.load(Ordering::Relaxed) || config.deadline.is_some(),
         "evolution diverged (supercritical or unstable)"
     );
-    Ok(AmrOutcome {
+    let outcome = AmrOutcome {
         blocks,
         elapsed: st.start.elapsed(),
         tasks_run: st.tasks_run.load(Ordering::Relaxed),
         tasks_frozen: st.tasks_frozen.load(Ordering::Relaxed),
         migrations,
-    })
+    };
+    Ok((outcome, st))
 }
 
 /// Convenience: full run (build plan from hierarchy, init from pulse).
@@ -1402,6 +1724,178 @@ mod tests {
         }
     }
 
+    /// Satellite coverage for the batched-parcel wire format: empty,
+    /// single-fragment, and multi-KB multi-fragment batches round-trip
+    /// through `Parcel` encode/decode with `wire_size` exact, and every
+    /// `f64` bit pattern survives.
+    #[test]
+    fn batch_parcel_wire_size_and_decode_roundtrip() {
+        use crate::px::gid::{Gid, GidKind};
+        use crate::px::parcel::Parcel;
+
+        let fields = |n: usize, seed: f64| Fields {
+            chi: (0..n).map(|i| seed + i as f64 * 1e-3).collect(),
+            phi: (0..n).map(|i| -(seed * i as f64)).collect(),
+            pi: (0..n).map(|i| (seed * i as f64).sin()).collect(),
+        };
+        let id = |level: u8, block: u32| BlockId { level, region: 0, block };
+
+        // Multi-KB case: 24 fragments × 64 points × 3 components × 8 B
+        // ≈ 37 KB of payload in one batch.
+        let big: Vec<(BlockId, u64, Input)> = (0..24)
+            .map(|i| {
+                (
+                    id(1, i),
+                    u64::from(i) + 3,
+                    Input::GhostFrag { lo: 7 * i as usize, f: Arc::new(fields(64, 0.1 * i as f64)) },
+                )
+            })
+            .collect();
+        let cases: Vec<Vec<(BlockId, u64, Input)>> = vec![
+            vec![], // empty batch (never sent, but the codec must not care)
+            vec![(id(0, 5), 2, Input::TaperFrag { parent_lo: 11, f: Arc::new(fields(9, 1.5)) })],
+            big,
+        ];
+        for entries in cases {
+            let mut b = PushBatcher::new(2);
+            for (bid, k, input) in &entries {
+                b.add(1, *bid, *k, input);
+            }
+            let args = match b.dests.into_iter().nth(1).unwrap() {
+                Some((mut e, count)) => {
+                    e.patch_u32(0, count);
+                    e.finish()
+                }
+                None => {
+                    // Empty batch: encode the bare count header.
+                    let mut e = Enc::new();
+                    e.u32(0);
+                    e.finish()
+                }
+            };
+            let p = Parcel::new(Gid::new(1, GidKind::Component, 9), ACT_AMR_PUSH_BATCH, args, 0);
+            let buf = p.encode();
+            assert_eq!(buf.len(), p.wire_size(), "batch of {} entries", entries.len());
+            let decoded_parcel = Parcel::decode(&buf).unwrap();
+            assert_eq!(decoded_parcel, p);
+            let got = decode_batch(&decoded_parcel.args).unwrap();
+            assert_eq!(got.len(), entries.len());
+            for ((id_a, k_a, in_a), (id_b, k_b, in_b)) in entries.iter().zip(&got) {
+                assert_eq!(id_a, id_b);
+                assert_eq!(k_a, k_b);
+                // Compare through the single-push codec: a batched entry
+                // must be byte-identical to its unbatched form.
+                assert_eq!(encode_input(*k_a, in_a), encode_input(*k_b, in_b));
+            }
+        }
+
+        // Truncation inside an entry is an error, not a panic.
+        let mut b = PushBatcher::new(1);
+        b.add(0, id(0, 1), 4, Input::GhostFrag { lo: 3, f: Arc::new(fields(8, 2.0)) });
+        let (mut e, count) = b.dests.into_iter().next().unwrap().unwrap();
+        e.patch_u32(0, count);
+        let args = e.finish();
+        assert!(decode_batch(&args[..args.len() - 3]).is_err());
+        // A count header promising more entries than present, too.
+        let mut e = Enc::new();
+        e.u32(2);
+        assert!(decode_batch(&e.finish()).is_err());
+    }
+
+    #[test]
+    fn batched_exchange_sends_fewer_parcels_and_identical_physics() {
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let mut parcels = Vec::new();
+        for batch in [false, true] {
+            let runtime = rt_dist(4, 2);
+            let plan = Arc::new(EpochPlan::new(h.clone(), cfg.coarse_steps));
+            let init = initial_block_states(&plan, &cfg);
+            let opts = DistAmrOpts { batch_pushes: batch, ..Default::default() };
+            let out = run_epoch_placed(&runtime, plan, Arc::new(NativeBackend), cfg, &init, &opts)
+                .unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("batch={batch}"));
+            let totals = runtime.counters_total();
+            assert_eq!(totals.payload_deep_copies, 0, "batching must stay zero-copy locally");
+            assert!(totals.amr_remote_pushes > 0, "4 localities must exercise the wire");
+            if batch {
+                assert!(
+                    totals.amr_batched_pushes > 0,
+                    "batched run must coalesce remote pushes"
+                );
+                // Every remote push coalesced (no migrations here, so no
+                // unbatched re-forwards).
+                assert_eq!(totals.amr_batched_pushes, totals.amr_remote_pushes);
+            } else {
+                assert_eq!(totals.amr_batched_pushes, 0);
+            }
+            parcels.push(totals.parcels_sent);
+            runtime.shutdown();
+        }
+        assert!(
+            parcels[1] < parcels[0],
+            "batching must send strictly fewer parcels: {} vs {}",
+            parcels[1],
+            parcels[0]
+        );
+    }
+
+    #[test]
+    fn adaptive_placement_rebalances_on_skewed_costs_and_preserves_physics() {
+        // The same skewed-cost workload BENCH_3b runs: blocks at small
+        // radius busy-spin extra, so the static `width × 2^level` cost
+        // model mispredicts while the physics stays bit-identical.
+        use crate::bench::SkewedBackend;
+        let skew = || Arc::new(SkewedBackend { r_split: 5.0, spin_us_base: 20 });
+
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(2, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let opts = DistAmrOpts { policy: PlacementPolicy::Adaptive, ..Default::default() };
+        let mut model = CostModel::new();
+        for epoch in 0..3 {
+            // Same plan + init each epoch: only the placement adapts, so
+            // every epoch must reproduce the reference bit-for-bit.
+            let out = run_epoch_adaptive(
+                &runtime,
+                plan.clone(),
+                skew(),
+                cfg,
+                &init,
+                &opts,
+                &mut model,
+            )
+            .unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("adaptive epoch {epoch}"));
+        }
+        assert!(
+            model.rebalances >= 1,
+            "observed cost skew must trigger at least one placement rebalance"
+        );
+        assert_eq!(
+            runtime.counters_total().placement_rebalances,
+            model.rebalances,
+            "counter must mirror the model's rebalance count"
+        );
+        runtime.shutdown();
+    }
+
     #[test]
     fn distributed_epoch_bitwise_identical_on_1_2_4_8_localities() {
         let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
@@ -1456,6 +1950,7 @@ mod tests {
                 imbalance_ratio: 1.05,
                 max_migrations: 8,
             }),
+            ..Default::default()
         };
         let out =
             run_epoch_placed(&runtime, plan, Arc::new(NativeBackend), cfg, &init, &opts).unwrap();
@@ -1471,8 +1966,10 @@ mod tests {
         let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
         let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
         let runtime = rt_dist(2, 2);
-        // Destroy every AMR input parcel in flight.
-        runtime.net().set_drop_filter(|p| p.action == ACT_AMR_PUSH);
+        // Destroy every AMR input parcel in flight — batched and not.
+        runtime
+            .net()
+            .set_drop_filter(|p| p.action == ACT_AMR_PUSH || p.action == ACT_AMR_PUSH_BATCH);
         let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
         let init = initial_block_states(&plan, &cfg);
         let t0 = Instant::now();
@@ -1542,7 +2039,7 @@ mod tests {
                 Arc::new(NativeBackend),
                 cfg,
                 &init,
-                &DistAmrOpts { policy, balance: None },
+                &DistAmrOpts { policy, balance: None, ..Default::default() },
             )
             .unwrap();
             dist_rt.shutdown();

@@ -5,20 +5,20 @@
 //! CLI and from the `cargo bench` targets (`rust/benches/*.rs`). Scale is
 //! controlled by `PX_SCALE` (`quick` default, `full` for paper-scale
 //! parameters) — absolute numbers shift, the *shapes* are the deliverable
-//! (DESIGN.md §5, EXPERIMENTS.md).
+//! (DESIGN.md §5; machine-readable results land in `BENCH_*.json`).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::amr::backend::{make_backend, BackendKind, ComputeBackend};
 use crate::amr::dataflow_driver::{
-    initial_block_states, run, run_epoch, run_epoch_placed, AmrConfig,
+    initial_block_states, run, run_epoch, run_epoch_adaptive, run_epoch_placed, AmrConfig,
 };
 use crate::amr::engine::EpochPlan;
 use crate::amr::mesh::{Hierarchy, MeshConfig, Region};
 use crate::amr::regrid::{initial_hierarchy, RegridConfig};
 use crate::amr::three_d::{run_three_d, ThreeDConfig};
-use crate::coordinator::{BalanceConfig, DistAmrOpts, PlacementPolicy};
+use crate::coordinator::{BalanceConfig, CostModel, DistAmrOpts, PlacementPolicy};
 use crate::csp::amr::run_epoch_csp;
 use crate::fpga::fib::{fib_value, run_fib};
 use crate::fpga::{FpgaQueue, PcieModel};
@@ -950,6 +950,7 @@ fn dist_rows(
     workers: usize,
     locality_set: &[usize],
     backend: Arc<dyn ComputeBackend>,
+    policy: PlacementPolicy,
 ) -> Vec<DistRow> {
     let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
     // Refine r in [6, 10] (the pulse), in level-1 indices.
@@ -982,15 +983,17 @@ fn dist_rows(
             net: NetModel::cluster_like(),
         });
         let opts = if localities > 1 {
-            // The paper's demonstration: slab placement concentrates the
-            // refined region; runtime migration repairs it.
+            // The paper's demonstration (with the default `--placement
+            // slabs`): slab placement concentrates the refined region;
+            // runtime migration repairs it.
             DistAmrOpts {
-                policy: PlacementPolicy::RadialSlabs,
+                policy,
                 balance: Some(BalanceConfig {
                     interval: Duration::from_millis(1),
                     imbalance_ratio: 1.05,
                     max_migrations: 16,
                 }),
+                ..Default::default()
             }
         } else {
             DistAmrOpts::default()
@@ -1012,9 +1015,12 @@ fn dist_rows(
     rows
 }
 
-fn render_dist_table(rows: &[DistRow]) -> String {
+fn render_dist_table(rows: &[DistRow], policy: PlacementPolicy) -> String {
     let mut out = String::new();
-    out.push_str("== BENCH 2: distributed AMR, 1->8 localities, slab placement + migration LB ==\n");
+    out.push_str(&format!(
+        "== BENCH 2: distributed AMR, 1->8 localities, `{}` placement + migration LB ==\n",
+        policy.name()
+    ));
     out.push_str("(cluster-like wire; remote ghost edges serialize into parcels, same-locality\n deliveries stay Arc refcount bumps; physics must match 1-locality bit-for-bit)\n");
     let mut t = Table::new(&[
         "localities",
@@ -1049,10 +1055,11 @@ fn render_dist_table(rows: &[DistRow]) -> String {
     out
 }
 
-fn render_dist_json(scale: Scale, rows: &[DistRow]) -> String {
+fn render_dist_json(scale: Scale, rows: &[DistRow], policy: PlacementPolicy) -> String {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"dist_amr_scaling\",\n");
     out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!("  \"placement_policy\": \"{}\",\n", policy.name()));
     out.push_str(&format!(
         "  \"scale\": \"{}\",\n",
         if scale == Scale::Full { "full" } else { "quick" }
@@ -1097,24 +1104,338 @@ fn render_dist_json(scale: Scale, rows: &[DistRow]) -> String {
 
 /// The distributed strong-scaling experiment: human-readable table plus
 /// the machine-readable `BENCH_2.json` body, from one measurement pass.
-pub fn dist_scaling_report(scale: Scale) -> (String, String) {
+/// `policy` is the placement used for the multi-locality rows (the CLI's
+/// `px-amr dist --placement {slabs,weighted,adaptive}`; the single-epoch
+/// rows run `adaptive` at its cold start).
+pub fn dist_scaling_report(scale: Scale, policy: PlacementPolicy) -> (String, String) {
     let (n0, steps, workers): (usize, u64, usize) = match scale {
         Scale::Quick => (401, 6, 2),
         Scale::Full => (1601, 12, 4),
     };
-    let rows = dist_rows(n0, steps, workers, &[1, 2, 4, 8], backend_from_env());
-    (render_dist_table(&rows), render_dist_json(scale, &rows))
+    let rows = dist_rows(n0, steps, workers, &[1, 2, 4, 8], backend_from_env(), policy);
+    (render_dist_table(&rows, policy), render_dist_json(scale, &rows, policy))
 }
 
 /// Run the distributed scaling experiment and write `BENCH_2.json` to
 /// `PX_BENCH2_JSON` (or `<repo>/BENCH_2.json`, next to `BENCH_1.json`).
 /// Returns the path written and the human-readable table.
-pub fn write_bench2_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, String)> {
-    let (table, json) = dist_scaling_report(scale);
+pub fn write_bench2_json(
+    scale: Scale,
+    policy: PlacementPolicy,
+) -> std::io::Result<(std::path::PathBuf, String)> {
+    let (table, json) = dist_scaling_report(scale, policy);
     let path = std::env::var("PX_BENCH2_JSON")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| {
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_2.json")
+        });
+    std::fs::write(&path, json)?;
+    Ok((path, table))
+}
+
+// ------------------- BENCH 3: ghost batching + adaptive placement
+
+/// [`crate::amr::backend::NativeBackend`] plus an artificial compute-cost
+/// skew: segments whose radius starts below `r_split` busy-spin an extra
+/// `spin_us_base + width` microseconds per task. The *physics is
+/// bit-identical* to the native backend (the spin touches no data), but
+/// the static `width × 2^level` placement model now mispredicts — the
+/// workload the adaptive placer exists for.
+pub struct SkewedBackend {
+    pub r_split: f64,
+    pub spin_us_base: u64,
+}
+
+impl ComputeBackend for SkewedBackend {
+    fn step_exact(
+        &self,
+        m: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> crate::util::err::Result<crate::amr::physics::Fields> {
+        let out = crate::amr::backend::NativeBackend.step_exact(m, chi, phi, pi, r, dx, dt)?;
+        if r[0] < self.r_split {
+            let spin = Duration::from_micros(self.spin_us_base + m as u64);
+            let t0 = Instant::now();
+            while t0.elapsed() < spin {
+                std::hint::spin_loop();
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-skewed"
+    }
+}
+
+/// One row of the batched-vs-unbatched ghost-exchange comparison.
+struct BatchRow {
+    localities: usize,
+    batched: bool,
+    wall: Duration,
+    bitwise_match: bool,
+    totals: CounterSnapshot,
+}
+
+/// One row of the static-vs-adaptive placement comparison (multi-epoch,
+/// skewed-cost workload).
+struct AdaptRow {
+    localities: usize,
+    policy: &'static str,
+    epoch_wall_ms: Vec<f64>,
+    rebalances: u64,
+    migrations: u64,
+    bitwise_match: bool,
+}
+
+/// Measure both BENCH_3 axes on the one-level pulse problem:
+///
+/// * **batching** — the same epoch, per-fragment vs coalesced ghost
+///   exchange, per locality count (slab placement, no balancer, so the
+///   parcel counts compare cleanly);
+/// * **placement** — `epochs` repeats of the epoch on the *skewed-cost*
+///   backend, static cost-weighted placement vs the adaptive feedback
+///   loop ([`CostModel`]), per locality count.
+///
+/// Physics must match the single-locality native run bit-for-bit in
+/// every cell of both grids.
+fn bench3_rows(
+    n0: usize,
+    steps: u64,
+    workers: usize,
+    locality_set: &[usize],
+    epochs: u64,
+) -> (Vec<BatchRow>, Vec<AdaptRow>) {
+    let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+    let reg = Region { lo: 6 * (n0 - 1) / 10, hi: 10 * (n0 - 1) / 10 };
+    let h = Hierarchy::build(mesh, &[vec![reg]]).expect("bench3 mesh");
+    let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, steps));
+    let init = initial_block_states(&plan, &cfg);
+    let skew = || Arc::new(SkewedBackend { r_split: 5.0, spin_us_base: 20 });
+
+    // Bitwise baseline: the single-locality driver on the native backend
+    // (the skewed backend's physics is identical by construction).
+    let reference = {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 1,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::instant(),
+        });
+        let out = run_epoch(&rt, plan.clone(), Arc::new(crate::amr::backend::NativeBackend), cfg, &init)
+            .expect("bench3 reference epoch");
+        rt.shutdown();
+        out
+    };
+    let boot = |localities: usize| {
+        PxRuntime::boot(PxConfig {
+            localities,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::cluster_like(),
+        })
+    };
+
+    let mut batch_rows = Vec::new();
+    for &localities in locality_set {
+        for batched in [false, true] {
+            let rt = boot(localities);
+            let opts = DistAmrOpts {
+                policy: PlacementPolicy::RadialSlabs,
+                balance: None,
+                batch_pushes: batched,
+            };
+            let t0 = Instant::now();
+            let out = run_epoch_placed(
+                &rt,
+                plan.clone(),
+                Arc::new(crate::amr::backend::NativeBackend),
+                cfg,
+                &init,
+                &opts,
+            )
+            .expect("bench3 batching epoch");
+            batch_rows.push(BatchRow {
+                localities,
+                batched,
+                wall: t0.elapsed(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+    }
+
+    let mut adapt_rows = Vec::new();
+    for &localities in locality_set {
+        for adaptive in [false, true] {
+            let rt = boot(localities);
+            let mut model = CostModel::new();
+            let mut walls = Vec::new();
+            let mut last = None;
+            for _ in 0..epochs {
+                let t0 = Instant::now();
+                let out = if adaptive {
+                    let opts =
+                        DistAmrOpts { policy: PlacementPolicy::Adaptive, ..Default::default() };
+                    run_epoch_adaptive(&rt, plan.clone(), skew(), cfg, &init, &opts, &mut model)
+                } else {
+                    let opts = DistAmrOpts::default(); // static WeightedSlabs
+                    run_epoch_placed(&rt, plan.clone(), skew(), cfg, &init, &opts)
+                }
+                .expect("bench3 placement epoch");
+                walls.push(t0.elapsed().as_secs_f64() * 1e3);
+                last = Some(out);
+            }
+            let totals = rt.counters_total();
+            adapt_rows.push(AdaptRow {
+                localities,
+                policy: if adaptive { "adaptive" } else { "weighted" },
+                epoch_wall_ms: walls,
+                rebalances: totals.placement_rebalances,
+                migrations: totals.migrations,
+                bitwise_match: last
+                    .map(|o| reference.bitwise_eq(&o))
+                    .unwrap_or(false),
+            });
+            rt.shutdown();
+        }
+    }
+    (batch_rows, adapt_rows)
+}
+
+fn render_bench3_table(batch: &[BatchRow], adapt: &[AdaptRow]) -> String {
+    let mut out = String::new();
+    out.push_str("== BENCH 3a: ghost exchange, per-fragment vs batched parcels ==\n");
+    out.push_str("(slab placement, no balancer; a batch coalesces one producer step's\n fragments per destination locality — one wire base latency per exchange)\n");
+    let mut t = Table::new(&[
+        "localities",
+        "batched",
+        "wall",
+        "parcels",
+        "parcel KB",
+        "remote pushes",
+        "batched pushes",
+        "deep copies",
+        "bitwise",
+    ]);
+    for r in batch {
+        t.row(&[
+            r.localities.to_string(),
+            r.batched.to_string(),
+            fmt_dur(r.wall),
+            r.totals.parcels_sent.to_string(),
+            format!("{:.1}", r.totals.parcel_bytes as f64 / 1024.0),
+            r.totals.amr_remote_pushes.to_string(),
+            r.totals.amr_batched_pushes.to_string(),
+            r.totals.payload_deep_copies.to_string(),
+            r.bitwise_match.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\n== BENCH 3b: placement, static cost model vs observed-cost feedback ==\n");
+    out.push_str("(skewed-cost workload: inner-radius blocks spin extra, so width*2^level\n mispredicts; the adaptive map re-packs from measured ns/step each epoch)\n");
+    let mut t = Table::new(&[
+        "localities",
+        "policy",
+        "epoch walls (ms)",
+        "rebalances",
+        "migrations",
+        "bitwise",
+    ]);
+    for r in adapt {
+        let walls: Vec<String> = r.epoch_wall_ms.iter().map(|w| format!("{w:.0}")).collect();
+        t.row(&[
+            r.localities.to_string(),
+            r.policy.to_string(),
+            walls.join(" "),
+            r.rebalances.to_string(),
+            r.migrations.to_string(),
+            r.bitwise_match.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\nreading: batched rows must send strictly fewer parcels at every locality\ncount > 1; adaptive rows must show >= 1 rebalance once the skew is observed,\nand both transformations leave the physics bit-identical.\n",
+    );
+    out
+}
+
+fn render_bench3_json(scale: Scale, batch: &[BatchRow], adapt: &[AdaptRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"adaptive_placement_batched_exchange\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!(
+        "  \"scale\": \"{}\",\n",
+        if scale == Scale::Full { "full" } else { "quick" }
+    ));
+    out.push_str("  \"batching\": [\n");
+    for (i, r) in batch.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"localities\": {}, \"batched\": {}, \"wall_ms\": {:.3}, \
+             \"parcels_sent\": {}, \"parcel_bytes\": {}, \"amr_remote_pushes\": {}, \
+             \"amr_batched_pushes\": {}, \"payload_deep_copies\": {}, \
+             \"bitwise_match_vs_single\": {}}}{}\n",
+            r.localities,
+            r.batched,
+            r.wall.as_secs_f64() * 1e3,
+            r.totals.parcels_sent,
+            r.totals.parcel_bytes,
+            r.totals.amr_remote_pushes,
+            r.totals.amr_batched_pushes,
+            r.totals.payload_deep_copies,
+            r.bitwise_match,
+            if i + 1 == batch.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"placement\": [\n");
+    for (i, r) in adapt.iter().enumerate() {
+        let walls: Vec<String> =
+            r.epoch_wall_ms.iter().map(|w| format!("{w:.3}")).collect();
+        out.push_str(&format!(
+            "    {{\"localities\": {}, \"policy\": \"{}\", \"epoch_wall_ms\": [{}], \
+             \"placement_rebalances\": {}, \"migrations\": {}, \
+             \"bitwise_match_vs_single\": {}}}{}\n",
+            r.localities,
+            r.policy,
+            walls.join(", "),
+            r.rebalances,
+            r.migrations,
+            r.bitwise_match,
+            if i + 1 == adapt.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The BENCH 3 experiment: human-readable tables plus the
+/// machine-readable `BENCH_3.json` body, from one measurement pass.
+pub fn bench3_report(scale: Scale) -> (String, String) {
+    let (n0, steps, workers, epochs): (usize, u64, usize, u64) = match scale {
+        Scale::Quick => (401, 6, 2, 3),
+        Scale::Full => (1601, 12, 4, 4),
+    };
+    let (batch, adapt) = bench3_rows(n0, steps, workers, &[1, 2, 4, 8], epochs);
+    (render_bench3_table(&batch, &adapt), render_bench3_json(scale, &batch, &adapt))
+}
+
+/// Run the BENCH 3 experiment and write `BENCH_3.json` to
+/// `PX_BENCH3_JSON` (or `<repo>/BENCH_3.json`, next to its siblings).
+/// Returns the path written and the human-readable tables.
+pub fn write_bench3_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, String)> {
+    let (table, json) = bench3_report(scale);
+    let path = std::env::var("PX_BENCH3_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_3.json")
         });
     std::fs::write(&path, json)?;
     Ok((path, table))
@@ -1191,21 +1512,74 @@ mod tests {
         // coarse steps) — enough to exercise the wire without slowing the
         // unit suite; the full 1..8 sweep runs in the bench target / CI.
         use crate::amr::backend::NativeBackend;
-        let rows = dist_rows(201, 2, 1, &[1, 2], Arc::new(NativeBackend));
+        let rows =
+            dist_rows(201, 2, 1, &[1, 2], Arc::new(NativeBackend), PlacementPolicy::RadialSlabs);
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|r| r.bitwise_match), "distributed physics drifted");
         assert_eq!(rows[0].totals.amr_remote_pushes, 0);
         assert!(rows[1].totals.amr_remote_pushes > 0, "2 localities must cross the wire");
         assert!(rows[1].totals.parcels_sent > 0);
         assert_eq!(rows[1].totals.payload_deep_copies, 0);
-        let j = render_dist_json(Scale::Quick, &rows);
+        let j = render_dist_json(Scale::Quick, &rows, PlacementPolicy::RadialSlabs);
         for key in [
             "\"bench\": \"dist_amr_scaling\"",
+            "\"placement_policy\": \"slabs\"",
             "\"localities\": 1",
             "\"localities\": 2",
             "\"migrations\"",
             "\"bitwise_match_vs_single\": true",
             "\"per_locality\": [",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "unbalanced braces");
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn bench3_shows_fewer_parcels_batched_and_adaptive_rebalances() {
+        // Tiny instance of BENCH 3 (2 localities, 2 coarse steps, 2
+        // epochs): the acceptance properties must already hold here —
+        // batching strictly reduces parcels, the skewed workload makes
+        // the adaptive placer rebalance, and the physics stays bitwise.
+        let (batch, adapt) = bench3_rows(201, 2, 1, &[1, 2], 2);
+        assert!(batch.iter().all(|r| r.bitwise_match), "batching drifted the physics");
+        assert!(adapt.iter().all(|r| r.bitwise_match), "placement drifted the physics");
+        assert!(batch.iter().all(|r| r.totals.payload_deep_copies == 0));
+        let parcels = |localities: usize, batched: bool| {
+            batch
+                .iter()
+                .find(|r| r.localities == localities && r.batched == batched)
+                .map(|r| r.totals.parcels_sent)
+                .unwrap()
+        };
+        assert!(
+            parcels(2, true) < parcels(2, false),
+            "batched exchange must send strictly fewer parcels: {} vs {}",
+            parcels(2, true),
+            parcels(2, false)
+        );
+        let batched2 = batch.iter().find(|r| r.localities == 2 && r.batched).unwrap();
+        assert!(batched2.totals.amr_batched_pushes > 0);
+        let adaptive2 =
+            adapt.iter().find(|r| r.localities == 2 && r.policy == "adaptive").unwrap();
+        assert!(
+            adaptive2.rebalances >= 1,
+            "skewed costs must trigger a placement rebalance"
+        );
+        let weighted2 =
+            adapt.iter().find(|r| r.localities == 2 && r.policy == "weighted").unwrap();
+        assert_eq!(weighted2.rebalances, 0, "static placement never rebalances");
+
+        let j = render_bench3_json(Scale::Quick, &batch, &adapt);
+        for key in [
+            "\"bench\": \"adaptive_placement_batched_exchange\"",
+            "\"batching\": [",
+            "\"placement\": [",
+            "\"amr_batched_pushes\"",
+            "\"placement_rebalances\"",
+            "\"policy\": \"adaptive\"",
+            "\"bitwise_match_vs_single\": true",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -69,6 +69,24 @@ impl Args {
         }
     }
 
+    /// String option constrained to a closed set of names (e.g.
+    /// `--placement {slabs,weighted,adaptive}`): rejects anything not in
+    /// `allowed` with a message listing the choices.
+    pub fn get_choice(
+        &self,
+        key: &str,
+        allowed: &[&str],
+        default: &str,
+    ) -> Result<String, String> {
+        debug_assert!(allowed.contains(&default));
+        let v = self.get(key, default);
+        if allowed.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(format!("--{key} {v}: expected one of {}", allowed.join("|")))
+        }
+    }
+
     /// Boolean flag (present or `--key true/false`).
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
@@ -106,6 +124,25 @@ mod tests {
         assert_eq!(a.get("backend", "native"), "native");
         assert_eq!(a.get_parse("steps", 16u64).unwrap(), 16);
         assert!(!a.flag("barrier"));
+    }
+
+    #[test]
+    fn get_choice_accepts_listed_values_and_rejects_others() {
+        let a = args("dist --placement adaptive");
+        assert_eq!(
+            a.get_choice("placement", &["slabs", "weighted", "adaptive"], "slabs").unwrap(),
+            "adaptive"
+        );
+        assert!(a.unknown().is_empty());
+        let b = args("dist --placement radial");
+        let err = b.get_choice("placement", &["slabs", "weighted", "adaptive"], "slabs");
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("slabs|weighted|adaptive"));
+        let c = args("dist");
+        assert_eq!(
+            c.get_choice("placement", &["slabs", "weighted", "adaptive"], "slabs").unwrap(),
+            "slabs"
+        );
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //!   refined (2× subcycled) work on few localities.
 //!   [`PlacementPolicy::WeightedSlabs`] balances the epoch's *compute
 //!   cost* (`width × 2^level` steps) instead.
+//!   [`PlacementPolicy::Adaptive`] closes the loop: a [`CostModel`]
+//!   carries each epoch's *observed* per-block step costs (measured by
+//!   the driver, EWMA-smoothed) into the next epoch's map, packing by
+//!   longest-processing-time instead of recomputing a static slab —
+//!   the runtime adapting placement to what the work actually cost,
+//!   which is the paper's central claim against CSP's frozen
+//!   decomposition (DESIGN.md §7).
 //! * **Load balancing** ([`LoadBalancer`]): a monitor thread that reads
 //!   the driver's per-locality remaining-work estimate (derived from the
 //!   same counters the paper's "generic monitoring framework" exposes)
@@ -30,12 +37,12 @@
 //! so a migration can briefly pause delivery of a block's inputs without
 //! risking a scheduling deadlock on a one-worker locality.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::amr::dataflow_driver::DriverState;
+use crate::amr::dataflow_driver::{BlockCostSample, DriverState};
 use crate::amr::engine::EpochPlan;
 use crate::amr::mesh::BlockId;
 use crate::px::gid::LocalityId;
@@ -52,9 +59,48 @@ pub enum PlacementPolicy {
     /// ([`EpochPlan::block_cost`]): a level-`l` block counts `2^l` times
     /// its width, so refined work spreads across localities up front.
     WeightedSlabs,
+    /// Placement driven by *observed* per-block step costs fed back from
+    /// the previous epoch (a [`CostModel`] carried across epoch/regrid
+    /// boundaries by
+    /// [`run_epoch_adaptive`](crate::amr::dataflow_driver::run_epoch_adaptive)),
+    /// instead of the static `width × 2^level` assumption. Cold start
+    /// (no observations yet, e.g. under
+    /// [`assign`](PlacementPolicy::assign) directly) degenerates to the
+    /// [`WeightedSlabs`](PlacementPolicy::WeightedSlabs) map.
+    Adaptive,
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = String;
+
+    /// CLI names: `slabs`, `weighted`, `adaptive`.
+    fn from_str(s: &str) -> Result<PlacementPolicy, String> {
+        match s {
+            "slabs" => Ok(PlacementPolicy::RadialSlabs),
+            "weighted" => Ok(PlacementPolicy::WeightedSlabs),
+            "adaptive" => Ok(PlacementPolicy::Adaptive),
+            other => Err(format!(
+                "unknown placement policy `{other}` (expected slabs|weighted|adaptive)"
+            )),
+        }
+    }
 }
 
 impl PlacementPolicy {
+    /// Every CLI name, for closed-set option validation
+    /// (`Args::get_choice`) — the single source the launcher quotes, so
+    /// a new policy only needs this impl block and the help text.
+    pub const CLI_NAMES: [&'static str; 3] = ["slabs", "weighted", "adaptive"];
+
+    /// The CLI/JSON name (inverse of [`FromStr`](std::str::FromStr)).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RadialSlabs => "slabs",
+            PlacementPolicy::WeightedSlabs => "weighted",
+            PlacementPolicy::Adaptive => "adaptive",
+        }
+    }
+
     /// Compute the block → locality map for `n_localities`.
     ///
     /// Deterministic: blocks are ordered by radial midpoint (ties broken
@@ -71,7 +117,12 @@ impl PlacementPolicy {
                 let mid_r = plan.hierarchy.config.dx(id.level as usize) * p.info.mid_index();
                 let w = match self {
                     PlacementPolicy::RadialSlabs => p.info.width() as u64,
-                    PlacementPolicy::WeightedSlabs => plan.block_cost(id),
+                    // Adaptive without observations = the static cost
+                    // model; with observations, CostModel::place is used
+                    // instead of this method.
+                    PlacementPolicy::WeightedSlabs | PlacementPolicy::Adaptive => {
+                        plan.block_cost(id)
+                    }
                 };
                 (mid_r, id, w)
             })
@@ -117,16 +168,26 @@ impl Default for BalanceConfig {
     }
 }
 
-/// Options for a distributed AMR epoch (placement + optional balancing).
+/// Options for a distributed AMR epoch (placement + optional balancing
+/// + ghost-exchange batching).
 #[derive(Debug, Clone, Copy)]
 pub struct DistAmrOpts {
     pub policy: PlacementPolicy,
     pub balance: Option<BalanceConfig>,
+    /// Coalesce each producer step's remote fragments into one
+    /// `ACT_AMR_PUSH_BATCH` parcel per destination locality (one wire
+    /// base latency per neighbour exchange). On by default; turn off
+    /// only to measure the per-fragment baseline (BENCH_3).
+    pub batch_pushes: bool,
 }
 
 impl Default for DistAmrOpts {
     fn default() -> Self {
-        DistAmrOpts { policy: PlacementPolicy::WeightedSlabs, balance: None }
+        DistAmrOpts {
+            policy: PlacementPolicy::WeightedSlabs,
+            balance: None,
+            batch_pushes: true,
+        }
     }
 }
 
@@ -138,7 +199,169 @@ impl DistAmrOpts {
         DistAmrOpts {
             policy: PlacementPolicy::RadialSlabs,
             balance: Some(BalanceConfig::default()),
+            ..Default::default()
         }
+    }
+}
+
+// --------------------------------------------------- adaptive placement
+
+/// EWMA smoothing for observed costs: new epochs dominate (an epoch is
+/// long relative to measurement noise), old history decays fast enough
+/// to track a moving pulse.
+const COST_EWMA_ALPHA: f64 = 0.5;
+
+/// Observed-cost feedback carried across epoch/regrid boundaries — the
+/// state behind [`PlacementPolicy::Adaptive`].
+///
+/// The driver reports every block's measured compute nanoseconds
+/// ([`BlockCostSample`]) and post-migration home at the end of each
+/// epoch. [`CostModel::place`] then packs the next epoch's blocks onto
+/// localities by *observed* cost — longest-processing-time greedy, not
+/// contiguous slabs — falling back per block to the observed per-point
+/// cost of its level (fresh ids after a regrid) and finally to the
+/// static `width × 2^level` model (cold start). A placement that moves
+/// at least one block relative to where it actually ended the previous
+/// epoch counts as a rebalance (`placement_rebalances`). DESIGN.md §7.
+#[derive(Debug, Default)]
+pub struct CostModel {
+    /// Observed nanoseconds per completed step, per block (EWMA).
+    block_ns: HashMap<BlockId, f64>,
+    /// Observed nanoseconds per point·step, per level (EWMA): the
+    /// fallback for blocks with no history of their own.
+    level_ns_per_point: Vec<f64>,
+    /// Where every block actually ended the previous epoch
+    /// (post-migration) — the diff base for rebalance detection.
+    prev_homes: Option<HashMap<BlockId, LocalityId>>,
+    /// Epochs observed so far (0 ⇒ the next `place` is a cold start).
+    pub epochs_observed: u64,
+    /// Rebalances performed (mirrors the `placement_rebalances` counter).
+    pub rebalances: u64,
+}
+
+impl CostModel {
+    /// Fresh model with no observations.
+    pub fn new() -> CostModel {
+        CostModel::default()
+    }
+
+    /// Estimated whole-epoch cost of one block under `plan`, in
+    /// nanoseconds. Every branch returns the same unit so the LPT pack
+    /// compares like with like: a block with no history of its own uses
+    /// its level's observed per-point cost, a level with no history at
+    /// all uses the mean observed per-point cost across levels (the
+    /// static `block_cost` shape times an observed scale) — raw
+    /// `block_cost` units never mix with measured nanoseconds.
+    fn weight(&self, plan: &EpochPlan, id: BlockId, width: usize) -> f64 {
+        let steps = plan.targets[id.level as usize] as f64;
+        if let Some(ns) = self.block_ns.get(&id) {
+            return ns * steps;
+        }
+        let per_pt = self.level_ns_per_point.get(id.level as usize).copied().unwrap_or(0.0);
+        if per_pt > 0.0 {
+            return per_pt * width as f64 * steps;
+        }
+        let known: Vec<f64> =
+            self.level_ns_per_point.iter().copied().filter(|&v| v > 0.0).collect();
+        if known.is_empty() {
+            // Nothing observed anywhere (every block froze): every block
+            // takes this branch, so the static units stay consistent.
+            plan.block_cost(id) as f64
+        } else {
+            let mean = known.iter().sum::<f64>() / known.len() as f64;
+            mean * width as f64 * steps
+        }
+    }
+
+    /// Compute the next epoch's block → locality map and whether it
+    /// rebalances (moves ≥ 1 block relative to the previous epoch's
+    /// final homes). Deterministic: ties in both the cost sort and the
+    /// least-loaded pick break by block id / locality index.
+    pub fn place(
+        &mut self,
+        plan: &EpochPlan,
+        n_localities: usize,
+    ) -> (HashMap<BlockId, LocalityId>, bool) {
+        assert!(n_localities >= 1);
+        let map = if self.epochs_observed == 0 {
+            // Cold start: no observations — the static cost-weighted map.
+            PlacementPolicy::WeightedSlabs.assign(plan, n_localities)
+        } else {
+            let mut blocks: Vec<(f64, BlockId)> = plan
+                .plans
+                .iter()
+                .map(|p| (self.weight(plan, p.info.id, p.info.width()), p.info.id))
+                .collect();
+            blocks.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut load = vec![0.0f64; n_localities];
+            let mut map = HashMap::with_capacity(blocks.len());
+            for (w, id) in blocks {
+                let dest = load
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .expect("n_localities >= 1")
+                    .0;
+                map.insert(id, dest as LocalityId);
+                load[dest] += w.max(1.0);
+            }
+            map
+        };
+        let rebalanced = match &self.prev_homes {
+            Some(prev) => map
+                .iter()
+                .any(|(id, loc)| prev.get(id).map(|p| p != loc).unwrap_or(false)),
+            None => false,
+        };
+        if rebalanced {
+            self.rebalances += 1;
+        }
+        (map, rebalanced)
+    }
+
+    /// Fold one finished epoch's observations into the model: per-block
+    /// EWMA of ns/step, per-level EWMA of ns/(point·step), and the
+    /// post-migration homes. Blocks absent from `samples` (regridded
+    /// away) are dropped so a reused id never inherits stale history.
+    pub fn observe(
+        &mut self,
+        samples: &[BlockCostSample],
+        final_homes: &HashMap<BlockId, LocalityId>,
+    ) {
+        let n_levels =
+            samples.iter().map(|s| s.id.level as usize + 1).max().unwrap_or(0);
+        let mut lvl_ns = vec![0.0f64; n_levels];
+        let mut lvl_pt_steps = vec![0.0f64; n_levels];
+        let mut seen: HashSet<BlockId> = HashSet::with_capacity(samples.len());
+        for s in samples {
+            seen.insert(s.id);
+            if s.steps == 0 {
+                continue; // frozen before its first task — nothing observed
+            }
+            let per_step = s.ns as f64 / s.steps as f64;
+            let e = self.block_ns.entry(s.id).or_insert(per_step);
+            *e = COST_EWMA_ALPHA * per_step + (1.0 - COST_EWMA_ALPHA) * *e;
+            let l = s.id.level as usize;
+            lvl_ns[l] += s.ns as f64;
+            lvl_pt_steps[l] += (s.width as u64 * s.steps) as f64;
+        }
+        self.block_ns.retain(|id, _| seen.contains(id));
+        if self.level_ns_per_point.len() < n_levels {
+            self.level_ns_per_point.resize(n_levels, 0.0);
+        }
+        for l in 0..n_levels {
+            if lvl_pt_steps[l] > 0.0 {
+                let per_pt = lvl_ns[l] / lvl_pt_steps[l];
+                let e = &mut self.level_ns_per_point[l];
+                *e = if *e == 0.0 {
+                    per_pt
+                } else {
+                    COST_EWMA_ALPHA * per_pt + (1.0 - COST_EWMA_ALPHA) * *e
+                };
+            }
+        }
+        self.prev_homes = Some(final_homes.clone());
+        self.epochs_observed += 1;
     }
 }
 
@@ -227,7 +450,11 @@ mod tests {
     #[test]
     fn assign_covers_every_block_and_is_deterministic() {
         let plan = plan_1level();
-        for policy in [PlacementPolicy::RadialSlabs, PlacementPolicy::WeightedSlabs] {
+        for policy in [
+            PlacementPolicy::RadialSlabs,
+            PlacementPolicy::WeightedSlabs,
+            PlacementPolicy::Adaptive,
+        ] {
             for n in [1usize, 2, 3, 8] {
                 let a = policy.assign(&plan, n);
                 let b = policy.assign(&plan, n);
@@ -265,6 +492,106 @@ mod tests {
             "weighted slabs imbalance {diff} exceeds 2x max block cost {max_block} (w={w:?})"
         );
         assert!(w[0] > 0 && w[1] > 0, "both localities must get work: {w:?}");
+    }
+
+    #[test]
+    fn placement_policy_parses_cli_names() {
+        assert_eq!("slabs".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::RadialSlabs);
+        assert_eq!(
+            "weighted".parse::<PlacementPolicy>().unwrap(),
+            PlacementPolicy::WeightedSlabs
+        );
+        assert_eq!("adaptive".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::Adaptive);
+        assert!("banana".parse::<PlacementPolicy>().is_err());
+        for p in [
+            PlacementPolicy::RadialSlabs,
+            PlacementPolicy::WeightedSlabs,
+            PlacementPolicy::Adaptive,
+        ] {
+            assert_eq!(p.name().parse::<PlacementPolicy>().unwrap(), p);
+            assert!(PlacementPolicy::CLI_NAMES.contains(&p.name()));
+        }
+        for n in PlacementPolicy::CLI_NAMES {
+            assert!(n.parse::<PlacementPolicy>().is_ok(), "CLI name {n} must parse");
+        }
+    }
+
+    #[test]
+    fn adaptive_cold_start_matches_weighted_slabs() {
+        let plan = plan_1level();
+        let mut model = CostModel::new();
+        let (map, rebalanced) = model.place(&plan, 3);
+        assert!(!rebalanced, "cold start has nothing to rebalance against");
+        assert_eq!(map, PlacementPolicy::WeightedSlabs.assign(&plan, 3));
+        assert_eq!(map, PlacementPolicy::Adaptive.assign(&plan, 3));
+    }
+
+    #[test]
+    fn cost_model_rebalances_on_skewed_observations() {
+        // Feed the model observations where the radially-innermost
+        // level-0 blocks are 20x more expensive than the static model
+        // assumes. The next placement must (a) differ from where the
+        // blocks sat (a rebalance), and (b) balance *observed* cost far
+        // better than the static weighted map does.
+        let plan = plan_1level();
+        let n = 2usize;
+        let mut model = CostModel::new();
+        let (cold, _) = model.place(&plan, n);
+
+        let skew_ns = |id: &BlockId, width: usize| -> u64 {
+            let base = 1_000 * width as u64;
+            if id.level == 0 && id.block < 4 {
+                20 * base
+            } else {
+                base
+            }
+        };
+        let samples: Vec<BlockCostSample> = plan
+            .plans
+            .iter()
+            .map(|p| {
+                let id = p.info.id;
+                let steps = plan.targets[id.level as usize];
+                BlockCostSample {
+                    id,
+                    width: p.info.width(),
+                    ns: skew_ns(&id, p.info.width()) * steps,
+                    steps,
+                }
+            })
+            .collect();
+        model.observe(&samples, &cold);
+        let (adapted, rebalanced) = model.place(&plan, n);
+        assert!(rebalanced, "skewed costs must move at least one block");
+        assert_eq!(model.rebalances, 1);
+        assert_eq!(adapted.len(), plan.plans.len(), "every block placed");
+
+        let observed_load = |map: &HashMap<BlockId, LocalityId>| -> Vec<f64> {
+            let mut w = vec![0.0f64; n];
+            for p in &plan.plans {
+                let id = p.info.id;
+                let steps = plan.targets[id.level as usize];
+                w[map[&id] as usize] += (skew_ns(&id, p.info.width()) * steps) as f64;
+            }
+            w
+        };
+        let imbalance = |w: &[f64]| {
+            let max = w.iter().cloned().fold(0.0f64, f64::max);
+            let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+            max / min.max(1.0)
+        };
+        let cold_imb = imbalance(&observed_load(&cold));
+        let adapt_imb = imbalance(&observed_load(&adapted));
+        assert!(
+            adapt_imb < cold_imb,
+            "adaptive map must balance observed cost better: {adapt_imb:.2} vs {cold_imb:.2}"
+        );
+
+        // A second epoch with the same observations converges: no move.
+        model.observe(&samples, &adapted);
+        let (again, rebalanced2) = model.place(&plan, n);
+        assert_eq!(again, adapted, "stable observations must give a stable map");
+        assert!(!rebalanced2);
     }
 
     #[test]

@@ -10,15 +10,18 @@
 //! that executes JAX/Pallas-compiled kernels on the request path with
 //! Python nowhere at runtime.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the repo's `README.md` for the architecture map and how to build,
+//! run, and regenerate the bench artifacts; `DESIGN.md` for the system
+//! inventory, the per-figure experiment index, and the distribution /
+//! adaptive-placement / ghost-batching design notes (§6–§7); and the
+//! `BENCH_*.json` artifacts for measured results.
 
 pub mod amr;
 pub mod bench;
 pub mod cli;
-/// L3 coordination: block placement policies and the migration-based
-/// load balancer driving the distributed AMR application (see
-/// `DESIGN.md` §6).
+/// L3 coordination: block placement policies (static slabs and the
+/// observed-cost adaptive placer) and the migration-based load balancer
+/// driving the distributed AMR application (see `DESIGN.md` §6–§7).
 pub mod coordinator;
 pub mod metrics;
 pub mod csp;

@@ -5,6 +5,7 @@
 //!   fig2..fig9 regenerate the paper's figures (see DESIGN.md §5)
 //!   fpga       §V thread-queue offload study
 //!   dist       distributed AMR strong scaling (1->8 localities), BENCH_2.json
+//!   bench3     ghost batching + adaptive placement study, BENCH_3.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -12,12 +13,17 @@
 //!   --backend native|xla --scheduler local|global --barrier
 //!   --epochs E (regrid between epochs) --amplitude A --deadline-ms MS
 //!   --localities K (distributed localities with a simulated wire)
+//!   --placement slabs|weighted|adaptive (block -> locality policy;
+//!     adaptive feeds each epoch's observed costs into the next map)
 
 use std::sync::Arc;
 
 use parallex::amr::backend::{make_backend, BackendKind};
-use parallex::amr::dataflow_driver::{initial_block_states, run_epoch, AmrConfig};
+use parallex::amr::dataflow_driver::{
+    initial_block_states, run_epoch_adaptive, run_epoch_placed, AmrConfig,
+};
 use parallex::amr::engine::EpochPlan;
+use parallex::coordinator::{CostModel, DistAmrOpts, PlacementPolicy};
 use parallex::amr::mesh::MeshConfig;
 use parallex::amr::physics::energy_norm;
 use parallex::amr::regrid::{initial_hierarchy, regrid_hierarchy, remap, Composite, RegridConfig};
@@ -76,13 +82,14 @@ fn main() {
             print!("{}", bench::fpga_fib_table(scale));
             Ok(())
         }
-        "dist" => match bench::write_bench2_json(scale) {
+        "dist" => cmd_dist(&args, scale),
+        "bench3" => match bench::write_bench3_json(scale) {
             Ok((path, table)) => {
                 print!("{table}");
-                println!("BENCH_2.json written to {}", path.display());
+                println!("BENCH_3.json written to {}", path.display());
                 Ok(())
             }
-            Err(e) => Err(format!("dist experiment failed: {e}")),
+            Err(e) => Err(format!("bench3 experiment failed: {e}")),
         },
         "help" | "--help" => {
             print_help();
@@ -99,12 +106,34 @@ fn main() {
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist> [--options]\n\n\
-         run options: --n0 1601 --levels 2 --steps 32 --granularity 16\n\
-                      --workers <cores> --backend native|xla --scheduler local|global\n\
-                      --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3> [--options]\n\n\
+         run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
+                       --workers <cores> --backend native|xla --scheduler local|global\n\
+                       --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
+                       --localities 1 --placement slabs|weighted|adaptive\n\
+         dist options: --placement slabs|weighted|adaptive (default slabs + balancer)\n\
+         bench3:       batched vs per-fragment ghost exchange and static vs\n\
+                       adaptive placement across 1/2/4/8 localities (BENCH_3.json)\n\
          env: PX_SCALE=quick|full  PX_BACKEND=native|xla  PX_ARTIFACTS=<dir>"
     );
+}
+
+fn cmd_dist(args: &Args, scale: bench::Scale) -> Result<(), String> {
+    let placement: PlacementPolicy = args
+        .get_choice("placement", &PlacementPolicy::CLI_NAMES, "slabs")?
+        .parse()?;
+    let unknown = args.unknown();
+    if !unknown.is_empty() {
+        return Err(format!("unknown options: {}", unknown.join(", ")));
+    }
+    match bench::write_bench2_json(scale, placement) {
+        Ok((path, table)) => {
+            print!("{table}");
+            println!("BENCH_2.json written to {}", path.display());
+            Ok(())
+        }
+        Err(e) => Err(format!("dist experiment failed: {e}")),
+    }
 }
 
 fn cmd_info() -> Result<(), String> {
@@ -145,6 +174,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let amplitude: f64 = args.get_parse("amplitude", 0.05)?;
     let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
     let localities: usize = args.get_parse("localities", 1)?;
+    let placement: PlacementPolicy = args
+        .get_choice("placement", &PlacementPolicy::CLI_NAMES, "weighted")?
+        .parse()?;
     let unknown = args.unknown();
     if !unknown.is_empty() {
         return Err(format!("unknown options: {}", unknown.join(", ")));
@@ -162,10 +194,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 
     println!(
         "px-amr run: n0={n0} levels={} (built {}) steps={steps} g={granularity} workers={workers} \
-         backend={} scheduler={scheduler:?} barrier={barrier} epochs={epochs}",
+         backend={} scheduler={scheduler:?} barrier={barrier} epochs={epochs} placement={}",
         levels,
         hierarchy_current.n_levels() - 1,
-        backend.name()
+        backend.name(),
+        placement.name()
     );
 
     let rt = PxRuntime::boot(PxConfig {
@@ -184,6 +217,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
     };
 
+    let opts = DistAmrOpts { policy: placement, ..Default::default() };
+    // The adaptive feedback loop: one cost model carried across every
+    // epoch/regrid boundary of this run.
+    let mut model = CostModel::new();
     let mut init = None;
     let t0 = std::time::Instant::now();
     for epoch in 0..epochs {
@@ -192,8 +229,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             Some(s) => s,
             None => initial_block_states(&plan, &cfg),
         };
-        let outcome = run_epoch(&rt, plan.clone(), backend.clone(), cfg, &init_states)
-            .map_err(|e| e.to_string())?;
+        let outcome = if placement == PlacementPolicy::Adaptive {
+            run_epoch_adaptive(&rt, plan.clone(), backend.clone(), cfg, &init_states, &opts, &mut model)
+        } else {
+            run_epoch_placed(&rt, plan.clone(), backend.clone(), cfg, &init_states, &opts)
+        }
+        .map_err(|e| e.to_string())?;
         // Per-epoch report.
         let counters = rt.counters_total();
         let (reg0, f0) = outcome.region_state(&plan, 0, 0);

@@ -33,7 +33,18 @@ pub const AMR_ACTION_BASE: ActionId = 0x00A3_0000;
 /// restriction fragment or self state) to a block-step task on the
 /// block's current home locality. Registered by the distributed AMR
 /// driver at epoch setup; the parcel's `dest` GID names the block.
+/// Since ghost batching landed this is the *re-forward* path (a batch
+/// entry chasing a migrated block) and the unbatched fallback.
 pub const ACT_AMR_PUSH: ActionId = AMR_ACTION_BASE + 1;
+
+/// AMR: deliver a *coalesced* set of dataflow inputs — every fragment
+/// one producer step emitted toward one destination locality, in one
+/// parcel, so a neighbour exchange pays the wire's base latency once
+/// rather than per fragment (DESIGN.md §7). The parcel's `dest` GID
+/// names the destination locality's batch-sink component, not a block;
+/// each entry carries its own `BlockId` and is re-routed individually
+/// if its block migrated while the batch was in flight.
+pub const ACT_AMR_PUSH_BATCH: ActionId = AMR_ACTION_BASE + 2;
 
 /// The body of an action: runs as a PX-thread on the destination locality.
 pub type ActionFn = dyn Fn(&Arc<LocalityCtx>, Parcel) + Send + Sync;

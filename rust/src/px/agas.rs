@@ -13,6 +13,13 @@
 //! partitions share one process, but all accesses go through the same
 //! resolve/bind/migrate protocol a distributed AGAS would use, and the
 //! cache-hit/miss counters feed the Fig 9-style overhead analysis.
+//!
+//! Migration is what makes the address space *active*: the coordinator's
+//! load balancer calls [`AgasClient::migrate`] to move a hot AMR block,
+//! in-flight parcels that reach the old home are hop-forwarded
+//! (`parcels_forwarded`), and stale sender caches self-heal on their next
+//! resolve. The full ordering of the migration protocol — handle
+//! install, AGAS flip, driver re-route, drain — is DESIGN.md §6.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};

@@ -104,6 +104,15 @@ pub struct Counters {
     /// path bumps this. (Remote deliveries serialize by necessity and are
     /// accounted under `amr_remote_pushes`/`parcel_bytes` instead.)
     pub payload_deep_copies: Counter,
+    /// Remote AMR pushes that travelled inside a coalesced
+    /// `ACT_AMR_PUSH_BATCH` parcel instead of paying their own wire
+    /// latency (counted at the sender; a subset of `amr_remote_pushes`).
+    /// Zero when ghost batching is disabled.
+    pub amr_batched_pushes: Counter,
+    /// Epoch boundaries at which the adaptive placement policy moved at
+    /// least one block relative to where it ended the previous epoch —
+    /// the coordinator's cost-feedback loop firing (DESIGN.md §7).
+    pub placement_rebalances: Counter,
 }
 
 /// A plain snapshot of all counters, for diffing across a run.
@@ -131,6 +140,8 @@ pub struct CounterSnapshot {
     pub amr_pushes: u64,
     pub amr_remote_pushes: u64,
     pub payload_deep_copies: u64,
+    pub amr_batched_pushes: u64,
+    pub placement_rebalances: u64,
 }
 
 impl Counters {
@@ -159,6 +170,8 @@ impl Counters {
             amr_pushes: self.amr_pushes.get(),
             amr_remote_pushes: self.amr_remote_pushes.get(),
             payload_deep_copies: self.payload_deep_copies.get(),
+            amr_batched_pushes: self.amr_batched_pushes.get(),
+            placement_rebalances: self.placement_rebalances.get(),
         }
     }
 }
@@ -189,10 +202,12 @@ impl CounterSnapshot {
             amr_pushes: self.amr_pushes - earlier.amr_pushes,
             amr_remote_pushes: self.amr_remote_pushes - earlier.amr_remote_pushes,
             payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
+            amr_batched_pushes: self.amr_batched_pushes - earlier.amr_batched_pushes,
+            placement_rebalances: self.placement_rebalances - earlier.placement_rebalances,
         }
     }
 
-    /// Render as aligned `name value` lines for logs / EXPERIMENTS.md.
+    /// Render as aligned `name value` lines for logs and reports.
     pub fn render(&self) -> String {
         let rows = [
             ("threads_spawned", self.threads_spawned),
@@ -217,6 +232,8 @@ impl CounterSnapshot {
             ("amr_pushes", self.amr_pushes),
             ("amr_remote_pushes", self.amr_remote_pushes),
             ("payload_deep_copies", self.payload_deep_copies),
+            ("amr_batched_pushes", self.amr_batched_pushes),
+            ("placement_rebalances", self.placement_rebalances),
         ];
         let mut out = String::new();
         for (k, v) in rows {

@@ -18,6 +18,10 @@
 //!
 //! Payloads are `T: Clone` because one LCO may feed many continuations
 //! (the AMR payloads are small `Vec<f64>` ghost zones and scalars).
+//! Payload discipline follows DESIGN.md §4: `Dataflow` moves inputs into
+//! the action, and `Future` moves its value into the last registered
+//! continuation (single-consumer fast path), batch-spawning fan-out with
+//! a single worker wake.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

@@ -1,4 +1,6 @@
-//! Lock-free scheduling structures for the HPX-thread manager hot path.
+//! Lock-free scheduling structures for the HPX-thread manager hot path
+//! (DESIGN.md §2.1; the park/wake eventcount built on top of these is
+//! §2.2, and what each contention counter means afterwards is §2.3).
 //!
 //! Two primitives, both hand-rolled on std atomics (no `crossbeam-deque`
 //! in the offline build):

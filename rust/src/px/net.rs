@@ -14,6 +14,12 @@
 //! latency approximating the paper's gigabit-Ethernet era testbed).
 //! Failure injection: a drop predicate can be installed to test parcel
 //! loss handling in integration tests.
+//!
+//! The per-parcel `base_latency` term is the lever behind the AMR
+//! driver's ghost batching (DESIGN.md §7): `n` fragments coalesced into
+//! one parcel pay the base latency once and the bandwidth term for the
+//! same payload bytes, so BENCH_3's batched rows send strictly fewer
+//! parcels for identical physics.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

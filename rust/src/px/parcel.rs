@@ -6,6 +6,16 @@
 //! remote semantic equivalent to creating a local HPX-thread": the
 //! receiving locality's action manager decodes the parcel and spawns a
 //! PX-thread running the registered action.
+//!
+//! Envelope framing is the fixed-size header summed by
+//! [`Parcel::wire_size`] plus the length-prefixed `args` (encoded with
+//! [`crate::px::wire`]); the simulated interconnect
+//! ([`crate::px::net`]) charges `base_latency + bytes/bandwidth` per
+//! parcel, which is why the AMR driver coalesces a step's fragments into
+//! one [`crate::px::action::ACT_AMR_PUSH_BATCH`] parcel per destination
+//! locality — one envelope, one base latency, same payload bytes
+//! (DESIGN.md §6–§7). Delivery after a migration is repaired per parcel
+//! by the AGAS hop-forwarding path (`hops` records the detours).
 
 use super::error::PxResult;
 use super::gid::{Gid, LocalityId};

@@ -26,6 +26,12 @@
 //! * [`MutexQueue`] — the pre-refactor `Mutex<VecDeque>` global queue,
 //!   retained verbatim as the perf-trajectory baseline for
 //!   `BENCH_1.json` (and as a behavioural reference in tests).
+//!
+//! The primitives behind both lock-free policies live in
+//! [`crate::px::lockfree`]; the park/wake eventcount that lets idle
+//! workers sleep without a poll loop is in [`crate::px::thread`]
+//! (DESIGN.md §2.2), and DESIGN.md §2.3 tabulates what every counter
+//! measures after the rebuild.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -56,6 +56,15 @@ impl Enc {
         self
     }
 
+    /// Overwrite a previously written `u32` at byte `offset` — the
+    /// back-patch idiom for count/length headers whose value is only
+    /// known after the payload is encoded (e.g. the `ACT_AMR_PUSH_BATCH`
+    /// entry count). Panics if the offset was never written.
+    pub fn patch_u32(&mut self, offset: usize, v: u32) -> &mut Self {
+        self.buf[offset..offset + 4].copy_from_slice(&v.to_le_bytes());
+        self
+    }
+
     pub fn u64(&mut self, v: u64) -> &mut Self {
         self.buf.extend_from_slice(&v.to_le_bytes());
         self
@@ -242,6 +251,20 @@ mod tests {
         let buf = e.finish();
         let mut d = Dec::new(&buf[..5]);
         assert!(matches!(d.u64(), Err(PxError::Wire(_))));
+    }
+
+    #[test]
+    fn patch_u32_rewrites_a_header_in_place() {
+        let mut e = Enc::new();
+        let at = e.len();
+        e.u32(0); // placeholder count
+        e.u64(7).u64(9);
+        e.patch_u32(at, 2);
+        let mut d = Dec::new(&e.finish());
+        assert_eq!(d.u32().unwrap(), 2);
+        assert_eq!(d.u64().unwrap(), 7);
+        assert_eq!(d.u64().unwrap(), 9);
+        d.expect_end().unwrap();
     }
 
     #[test]
