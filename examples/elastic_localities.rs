@@ -1,0 +1,87 @@
+//! Elastic localities: the machine shrinks and grows *while* the AMR
+//! dataflow graph runs — the ParalleX answer to CSP's frozen process
+//! grid taken one step further than migration (DESIGN.md §8).
+//!
+//!     cargo run --release --example elastic_localities
+//!
+//! Boots a 4-locality runtime, starts a one-level AMR epoch, retires
+//! localities 3 and 2 once ~30% of the tasks have completed (their
+//! blocks drain onto the survivors through the AGAS migration protocol,
+//! the wire drains, their parcel ports detach), then boots them back at
+//! ~65% and repacks the remaining work across the full machine. The
+//! physics is bitwise-identical to a run on a fixed machine.
+
+use std::sync::Arc;
+
+use parallex::amr::backend::NativeBackend;
+use parallex::amr::dataflow_driver::{
+    initial_block_states, run_epoch_elastic, AmrConfig,
+};
+use parallex::amr::engine::EpochPlan;
+use parallex::amr::mesh::{Hierarchy, MeshConfig, Region};
+use parallex::coordinator::{DistAmrOpts, MembershipPlan};
+use parallex::metrics::Table;
+use parallex::px::runtime::{PxConfig, PxRuntime};
+
+fn main() {
+    let rt = PxRuntime::boot(PxConfig::cluster(4, 2));
+    println!(
+        "booted roster of {} localities, members {:?}",
+        rt.membership().capacity(),
+        rt.membership().members()
+    );
+
+    let mesh = MeshConfig { r_max: 20.0, n0: 401, levels: 1, cfl: 0.25, granularity: 12 };
+    let h = Hierarchy::build(mesh, &[vec![Region { lo: 240, hi: 400 }]]).expect("mesh");
+    let cfg = AmrConfig { coarse_steps: 6, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+    let init = initial_block_states(&plan, &cfg);
+
+    // Retire L3+L2 at 30% of tasks done, boot them back at 65% — the
+    // same script `px-amr dist --elastic "30:-3,30:-2,65:+2,65:+3"` runs.
+    let mplan = MembershipPlan::parse("30:-3,30:-2,65:+2,65:+3").expect("script");
+    let (out, stats) = run_epoch_elastic(
+        &rt,
+        plan,
+        Arc::new(NativeBackend),
+        cfg,
+        &init,
+        &DistAmrOpts::default(),
+        &mplan,
+    )
+    .expect("elastic epoch");
+
+    let mut t = Table::new(&["event", "at tasks", "blocks moved", "latency ms", "residents after"]);
+    for ev in &stats.applied {
+        t.row(&[
+            ev.event.to_string(),
+            ev.at_tasks.to_string(),
+            ev.blocks_moved.to_string(),
+            format!("{:.2}", ev.latency.as_secs_f64() * 1e3),
+            ev.residents_after.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let totals = rt.counters_total();
+    println!(
+        "epoch done: tasks={} membership back to {:?}; {} blocks moved in {:.1} ms of rebalancing",
+        out.tasks_run,
+        rt.membership().members(),
+        stats.blocks_moved,
+        stats.rebalance_total.as_secs_f64() * 1e3,
+    );
+    println!(
+        "parcels sent={} forwarded={} bounced={} dead_letters={} deep_copies={}",
+        totals.parcels_sent,
+        totals.parcels_forwarded,
+        rt.net().bounced(),
+        rt.net().dead_letters(),
+        totals.payload_deep_copies,
+    );
+    assert_eq!(rt.membership().n_active(), 4, "grow events must restore the machine");
+    assert_eq!(rt.net().dead_letters(), 0, "retirement must not lose parcels");
+    assert_eq!(totals.payload_deep_copies, 0, "local pushes stay zero-copy");
+    rt.shutdown();
+    println!("ok");
+}

@@ -1,0 +1,24 @@
+//! BENCH 4: elastic localities — steady vs shrink-mid-run vs
+//! grow-mid-run throughput and rebalance latency across 1/2/4/8
+//! localities, emitting `BENCH_4.json` next to its siblings.
+//! Run: `cargo bench --bench bench4_elastic` (PX_SCALE=full for paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    match parallex::bench::write_bench4_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[bench4_elastic] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[bench4_elastic] failed to write BENCH_4.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

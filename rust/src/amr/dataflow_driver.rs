@@ -42,6 +42,24 @@
 //! tasks complete without computing or pushing, freezing the graph; the
 //! per-block completed-step counts are then snapshot for the Fig 5/6
 //! timestep-reached curves.
+//!
+//! **Elastic membership** ([`run_epoch_elastic`], DESIGN.md §8): the
+//! machine itself can change mid-epoch. A scripted
+//! [`MembershipPlan`](crate::coordinator::MembershipPlan) (or its load
+//! trigger) retires a locality — every resident block is LPT-repacked
+//! onto the survivors through the ordinary migration protocol, its
+//! batch sink relocates, and the runtime then purges caches, drains the
+//! wire and detaches its port — or boots one back, after which the
+//! remaining work is repacked across the grown member set. The physics
+//! is bitwise-invariant through any shrink/grow cycle (pinned by the
+//! 8→4→8 equivalence test), because membership changes reuse the same
+//! drain/hop-forward machinery as load-balancing migration.
+//!
+//! **Batch-aware receiver scheduling**: an `ACT_AMR_PUSH_BATCH` arrival
+//! already runs as one High-priority PX-thread; since the elastic
+//! refactor it also drains every task the batch completes into a single
+//! [`Spawner::spawn_batch`] call — one worker wake per batch, counted by
+//! `amr_batch_spawns`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
@@ -54,13 +72,15 @@ use super::backend::ComputeBackend;
 use super::engine::{assemble, restriction_of, shadow_output, split_output, EpochPlan, Input, StateOut};
 use super::mesh::{BlockId, BlockRole, Hierarchy, Region};
 use super::physics::{initial_data, Fields};
-use crate::coordinator::{CostModel, DistAmrOpts, LoadBalancer};
+use crate::coordinator::{
+    CostModel, DistAmrOpts, LoadBalancer, MembershipEvent, MembershipPlan,
+};
 use crate::px::action::{ACT_AMR_PUSH, ACT_AMR_PUSH_BATCH};
 use crate::px::error::{PxError, PxResult};
 use crate::px::gid::{Gid, GidKind, LocalityId};
 use crate::px::lco::Future as PxFuture;
 use crate::px::locality::LocalityCtx;
-use crate::px::runtime::PxRuntime;
+use crate::px::runtime::{Membership, PxRuntime};
 use crate::px::sched::Priority;
 use crate::px::thread::Spawner;
 use crate::px::wire::{Dec, Enc};
@@ -114,7 +134,8 @@ pub struct AmrOutcome {
     pub tasks_run: u64,
     /// Tasks that fired after the deadline (frozen, no compute).
     pub tasks_frozen: u64,
-    /// Blocks migrated between localities by the load balancer.
+    /// Blocks migrated between localities at runtime — by the load
+    /// balancer, or (for elastic epochs) by membership repacks.
     pub migrations: u64,
 }
 
@@ -216,6 +237,19 @@ struct TaskEntry {
     inputs: Vec<Input>,
 }
 
+/// Result of one task-table insert attempt
+/// ([`DriverState::insert_input`]).
+enum InsertOutcome {
+    /// The block's home moved away between routing and the insert — the
+    /// caller re-routes toward the new home.
+    NotHome,
+    /// Recorded; the task still waits on more inputs (or the input was
+    /// beyond the epoch horizon).
+    Pending,
+    /// This input completed the task's dependence set — schedule it.
+    Ready(Vec<Input>),
+}
+
 const SHARDS: usize = 64;
 
 /// One locality's slice of the dataflow graph: the partial-input table
@@ -235,10 +269,13 @@ struct BlockHandle {
 }
 
 /// One locality's ingress for coalesced ghost exchange: the
-/// `ACT_AMR_PUSH_BATCH` parcel is addressed to this component's GID
-/// (never migrated), and each decoded entry is then routed to its block
-/// individually — so a block that moved while the batch was in flight is
-/// chased by a per-fragment re-forward, not by re-sending the batch.
+/// `ACT_AMR_PUSH_BATCH` parcel is addressed to this component's GID, and
+/// each decoded entry is then routed to its block individually — so a
+/// block that moved while the batch was in flight is chased by a
+/// per-fragment re-forward, not by re-sending the batch. The sink only
+/// moves when its locality's membership changes: retirement relocates it
+/// to a surviving member (so late batches still land on a live sink and
+/// re-route entry by entry), and boot brings a fresh one home.
 struct BatchSink {
     state: Arc<DriverState>,
 }
@@ -256,6 +293,12 @@ pub struct DriverState {
     backend: Arc<dyn ComputeBackend>,
     config: AmrConfig,
     shards: Vec<LocalityShard>,
+    /// Which roster localities currently participate in this epoch
+    /// (indexed by locality id). Mirrors the runtime
+    /// [`Membership`](crate::px::runtime::Membership) — membership
+    /// changes flip the flag here first so repack destination choices
+    /// never pick a leaving locality.
+    active: Vec<AtomicBool>,
     /// Block → current home locality. The authoritative copy for the
     /// driver's routing fast path; kept in lockstep with AGAS by the
     /// migration protocol (AGAS flips first, `home` a few instructions
@@ -514,6 +557,7 @@ impl DriverState {
         let cost_ns: HashMap<BlockId, AtomicU64> =
             plan.plans.iter().map(|p| (p.info.id, AtomicU64::new(0))).collect();
         Arc::new(DriverState {
+            active: (0..localities.len()).map(|_| AtomicBool::new(true)).collect(),
             shards,
             home,
             gids: RwLock::new(HashMap::new()),
@@ -569,16 +613,15 @@ impl DriverState {
             }
         });
         self.shards[0].ctx.actions.register_if_absent(ACT_AMR_PUSH_BATCH, |ctx, p| {
-            // The sink never migrates, so unlike the single-push body
-            // there is no re-forward arm: a missing component only means
-            // the epoch is tearing down after quiescence.
+            // The sink only moves when its locality retires (relocated to
+            // a surviving member ahead of the port detach), so there is
+            // no per-parcel re-forward arm: a missing component only
+            // means the epoch is tearing down after quiescence. All
+            // entries are delivered from this one High-priority
+            // PX-thread; completed tasks drain into one spawn_batch.
             match ctx.component::<BatchSink>(p.dest) {
                 Ok(h) => match decode_batch(&p.args) {
-                    Ok(entries) => {
-                        for (id, k, input) in entries {
-                            h.state.deliver(ctx, id, k, input);
-                        }
-                    }
+                    Ok(entries) => h.state.deliver_batch(ctx, entries),
                     Err(e) => eprintln!("[L{}] AMR batch decode failed: {e}", ctx.id),
                 },
                 Err(e) => eprintln!("[L{}] AMR batch sink missing: {e}", ctx.id),
@@ -635,17 +678,68 @@ impl DriverState {
 
     // ------------------------------------------------------------ routing
 
+    /// Record one input in locality `loc`'s task table without
+    /// scheduling — the collecting core shared by [`push_local`]
+    /// (schedules immediately) and [`deliver_batch`] (drains every
+    /// completed task of a batch into one `spawn_batch`).
+    ///
+    /// Zero-copy contract: `input` is `Arc`-shared from the producer —
+    /// this path never deep-copies fragment data (the
+    /// `payload_deep_copies` counter is the tripwire; the equivalence
+    /// property tests pin the physics bitwise).
+    ///
+    /// [`push_local`]: DriverState::push_local
+    /// [`deliver_batch`]: DriverState::deliver_batch
+    fn insert_input(
+        &self,
+        loc: usize,
+        id: BlockId,
+        k: u64,
+        input: &Input,
+        count_push: bool,
+    ) -> InsertOutcome {
+        let l = id.level as usize;
+        if k >= self.plan.targets[l] {
+            return InsertOutcome::Pending; // beyond the epoch's horizon
+        }
+        let key = (id, k);
+        let multi = self.shards.len() > 1;
+        let mut sh = self.shards[loc].table[shard(&key)].lock().unwrap();
+        // Migration race check, under the same lock the migration
+        // drain takes: either this insert lands before the drain
+        // scans this shard (and is moved with the rest), or the home
+        // re-read below observes the flip and the caller re-routes.
+        if multi && self.home[&id].load(Ordering::SeqCst) as usize != loc {
+            return InsertOutcome::NotHome;
+        }
+        if count_push {
+            self.shards[loc].ctx.counters.amr_pushes.inc();
+        }
+        let entry = sh.entry(key).or_insert_with(|| TaskEntry {
+            expected: self.plan.expected_inputs(id, k),
+            inputs: Vec::with_capacity(4),
+        });
+        entry.inputs.push(input.clone());
+        debug_assert!(
+            entry.inputs.len() <= entry.expected,
+            "task {id:?}@{k}: {} inputs > expected {}",
+            entry.inputs.len(),
+            entry.expected
+        );
+        if entry.inputs.len() == entry.expected {
+            let e = sh.remove(&key).unwrap();
+            InsertOutcome::Ready(e.inputs)
+        } else {
+            InsertOutcome::Pending
+        }
+    }
+
     /// Deliver one input to task `(id, k)` on locality `loc`'s table;
     /// fire the task when complete. Returns `false` (input **not**
     /// delivered) when the block's home moved away between routing and
     /// the table insert — the caller re-routes. `count_push` is false
     /// only for migration re-delivery, whose inputs were already counted
     /// when first delivered at the source.
-    ///
-    /// Zero-copy contract: `input` is `Arc`-shared from the producer —
-    /// this path never deep-copies fragment data (the
-    /// `payload_deep_copies` counter is the tripwire; the equivalence
-    /// property tests pin the physics bitwise).
     fn push_local(
         self: &Arc<Self>,
         loc: usize,
@@ -654,46 +748,14 @@ impl DriverState {
         input: &Input,
         count_push: bool,
     ) -> bool {
-        let l = id.level as usize;
-        if k >= self.plan.targets[l] {
-            return true; // beyond the epoch's horizon
+        match self.insert_input(loc, id, k, input, count_push) {
+            InsertOutcome::NotHome => false,
+            InsertOutcome::Pending => true,
+            InsertOutcome::Ready(inputs) => {
+                self.schedule(loc, id, k, inputs);
+                true
+            }
         }
-        let key = (id, k);
-        let multi = self.shards.len() > 1;
-        let ready = {
-            let mut sh = self.shards[loc].table[shard(&key)].lock().unwrap();
-            // Migration race check, under the same lock the migration
-            // drain takes: either this insert lands before the drain
-            // scans this shard (and is moved with the rest), or the home
-            // re-read below observes the flip and the caller re-routes.
-            if multi && self.home[&id].load(Ordering::SeqCst) as usize != loc {
-                return false;
-            }
-            if count_push {
-                self.shards[loc].ctx.counters.amr_pushes.inc();
-            }
-            let entry = sh.entry(key).or_insert_with(|| TaskEntry {
-                expected: self.plan.expected_inputs(id, k),
-                inputs: Vec::with_capacity(4),
-            });
-            entry.inputs.push(input.clone());
-            debug_assert!(
-                entry.inputs.len() <= entry.expected,
-                "task {id:?}@{k}: {} inputs > expected {}",
-                entry.inputs.len(),
-                entry.expected
-            );
-            if entry.inputs.len() == entry.expected {
-                let e = sh.remove(&key).unwrap();
-                Some(e.inputs)
-            } else {
-                None
-            }
-        };
-        if let Some(inputs) = ready {
-            self.schedule(loc, id, k, inputs);
-        }
-        true
     }
 
     /// Route one producer output to its consumer task: same-locality
@@ -802,6 +864,51 @@ impl DriverState {
         }
     }
 
+    /// Batched ingress (the `ACT_AMR_PUSH_BATCH` body): every entry of
+    /// one coalesced parcel is delivered from the one High-priority
+    /// PX-thread the parcel spawned, and all tasks the batch completes
+    /// drain straight into a single [`Spawner::spawn_batch`] — one
+    /// worker wake for the whole batch instead of one per completed
+    /// task (`amr_batch_spawns` counts the riders; ROADMAP
+    /// "batch-aware receiver scheduling"). Entries whose block migrated
+    /// while the batch was in flight re-forward individually, exactly
+    /// as [`deliver`](DriverState::deliver) does.
+    fn deliver_batch(
+        self: &Arc<Self>,
+        ctx: &Arc<LocalityCtx>,
+        entries: Vec<(BlockId, u64, Input)>,
+    ) {
+        let me = ctx.id as usize;
+        let mut ready: Vec<(BlockId, u64, Vec<Input>)> = Vec::new();
+        'entries: for (id, k, input) in entries {
+            loop {
+                let home = self.home[&id].load(Ordering::SeqCst) as usize;
+                if home == me {
+                    match self.insert_input(me, id, k, &input, true) {
+                        InsertOutcome::NotHome => continue, // home flipped: re-route
+                        InsertOutcome::Pending => continue 'entries,
+                        InsertOutcome::Ready(inputs) => {
+                            ready.push((id, k, inputs));
+                            continue 'entries;
+                        }
+                    }
+                }
+                let gid = match self.gids.read().unwrap().get(&id) {
+                    Some(g) => *g,
+                    None => continue 'entries, // epoch tearing down
+                };
+                match ctx.agas.refresh(gid) {
+                    Ok(p) if p.locality as usize != me => {
+                        self.send_remote(me, id, k, &input);
+                        continue 'entries;
+                    }
+                    _ => std::thread::yield_now(),
+                }
+            }
+        }
+        self.schedule_batch(me, ready);
+    }
+
     // -------------------------------------------------------- scheduling
 
     /// Barrier gate + spawn on the hosting locality's thread manager.
@@ -817,6 +924,41 @@ impl DriverState {
         }
         let st = self.clone();
         self.shards[loc].ctx.spawner.spawn(move |sp| st.run_task(loc, sp, id, k, inputs));
+    }
+
+    /// Spawn a set of completed tasks with one queue publication and one
+    /// worker wake (barrier-gated tasks park exactly as in
+    /// [`schedule`](DriverState::schedule)). The batched-receiver tail
+    /// of the ghost-batching story: coalesced arrival, coalesced spawn.
+    fn schedule_batch(self: &Arc<Self>, loc: usize, ready: Vec<(BlockId, u64, Vec<Input>)>) {
+        if ready.is_empty() {
+            return;
+        }
+        let mut run_now = Vec::with_capacity(ready.len());
+        for (id, k, inputs) in ready {
+            if self.config.barrier {
+                let tick = self.plan.barrier_tick(id, k);
+                if tick > self.clock.load(Ordering::SeqCst) {
+                    self.parked.lock().unwrap().entry(tick).or_default().push((id, k, inputs));
+                    self.release_due();
+                    continue;
+                }
+            }
+            run_now.push((id, k, inputs));
+        }
+        if run_now.is_empty() {
+            return;
+        }
+        self.shards[loc].ctx.counters.amr_batch_spawns.add(run_now.len() as u64);
+        let batch: Vec<Box<dyn FnOnce(&Spawner) + Send>> = run_now
+            .into_iter()
+            .map(|(id, k, inputs)| {
+                let st = self.clone();
+                Box::new(move |sp: &Spawner| st.run_task(loc, sp, id, k, inputs))
+                    as Box<dyn FnOnce(&Spawner) + Send>
+            })
+            .collect();
+        self.shards[loc].ctx.spawner.spawn_batch(Priority::Normal, batch);
     }
 
     fn release_due(self: &Arc<Self>) {
@@ -1215,6 +1357,388 @@ impl DriverState {
         let _ = self.shards[src].ctx.take_component(gid);
         Ok(())
     }
+
+    // ------------------------------------------------ elastic membership
+
+    /// Tasks finished so far (computed + frozen) — the progress signal
+    /// the membership controller's scripted fractions key on.
+    pub fn tasks_done(&self) -> u64 {
+        self.tasks_run.load(Ordering::Relaxed) + self.tasks_frozen.load(Ordering::Relaxed)
+    }
+
+    /// Localities currently participating in this epoch, ascending.
+    /// Public because the coordinator's balancer must pick migration
+    /// destinations from this set — a retired locality always reports
+    /// zero load and would otherwise look like the idlest target.
+    pub fn members(&self) -> Vec<usize> {
+        (0..self.active.len()).filter(|&l| self.active[l].load(Ordering::SeqCst)).collect()
+    }
+
+    /// Move locality `sink_of`'s batch sink to `to`: install a *fresh*
+    /// [`BatchSink`] component at the destination, flip AGAS, retire the
+    /// stale copy. Used on retirement (sink takes refuge on a surviving
+    /// member, so a batch flushed toward the leaving locality in the
+    /// detach window is hop-forwarded/bounced there and every entry
+    /// re-routes individually — nothing is stranded) and on boot (the
+    /// fresh sink comes home). No-op when batching is off or the sink is
+    /// already at `to`.
+    fn relocate_sink(self: &Arc<Self>, sink_of: usize, to: usize) -> PxResult<()> {
+        if !self.batch {
+            return Ok(());
+        }
+        let gid = match self.sinks.read().unwrap().get(sink_of) {
+            Some(g) => *g,
+            None => return Ok(()), // epoch tearing down / batching off
+        };
+        let cur = self.shards[to].ctx.agas.refresh(gid)?.locality as usize;
+        if cur == to {
+            return Ok(());
+        }
+        self.shards[to]
+            .ctx
+            .install_component(gid, Arc::new(BatchSink { state: self.clone() }));
+        self.shards[cur].ctx.agas.migrate(gid, to as LocalityId)?;
+        let _ = self.shards[cur].ctx.take_component(gid);
+        Ok(())
+    }
+
+    /// Drain every block off locality `l` (elastic retirement): the
+    /// leaving locality's residents are LPT-packed by remaining work
+    /// onto the surviving members through the ordinary per-block
+    /// migration protocol, and its batch sink relocates to a survivor.
+    /// *All* resident blocks move — completed ones too — so the locality
+    /// ends with zero AGAS-resident blocks (pinned by the retirement
+    /// property test). The caller completes retirement with
+    /// [`Membership::retire`] (cache purge, wire drain, port detach).
+    /// Returns the number of blocks migrated.
+    ///
+    /// Like the load balancer, membership changes are serialized on one
+    /// controller thread — never run both against one epoch.
+    pub fn retire_locality(self: &Arc<Self>, l: usize) -> PxResult<u64> {
+        if self.shards.len() < 2 {
+            return Err(PxError::LcoProtocol("cannot retire on a single-locality runtime".into()));
+        }
+        if !self.active.get(l).map(|a| a.load(Ordering::SeqCst)).unwrap_or(false) {
+            return Err(PxError::LcoProtocol(format!("locality {l} not active in this epoch")));
+        }
+        self.active[l].store(false, Ordering::SeqCst);
+        let members = self.members();
+        if members.is_empty() {
+            self.active[l].store(true, Ordering::SeqCst);
+            return Err(PxError::LcoProtocol("cannot retire the last active locality".into()));
+        }
+        // Restore the flag on any mid-drain failure: a half-drained
+        // locality must stay a member of *both* layers so the caller (or
+        // a later scripted event) can retry — otherwise the driver and
+        // runtime member sets diverge permanently.
+        let drain = || -> PxResult<u64> {
+            let mut loads: HashMap<usize, u64> = members.iter().map(|&m| (m, 0)).collect();
+            let mut moving: Vec<(u64, BlockId)> = Vec::new();
+            for (w, id, home) in self.remaining_rows() {
+                if home == l {
+                    moving.push((w, id)); // keeps remaining_rows' LPT order
+                } else if let Some(e) = loads.get_mut(&home) {
+                    *e += w;
+                }
+            }
+            let mut moved = 0u64;
+            for (w, id) in moving {
+                let dest = lpt_pick(&members, &loads);
+                self.migrate_block(id, dest)?;
+                if let Some(e) = loads.get_mut(&dest) {
+                    *e += w.max(1);
+                }
+                moved += 1;
+            }
+            self.relocate_sink(l, members[0])?;
+            Ok(moved)
+        };
+        let res = drain();
+        if res.is_err() {
+            self.active[l].store(true, Ordering::SeqCst);
+        }
+        res
+    }
+
+    /// Bring locality `l` (back) into the epoch: mark it active, bring a
+    /// fresh batch-sink component home, and LPT-repack all remaining
+    /// work across the grown member set. The caller must have completed
+    /// [`Membership::boot`] first (port re-attached). Returns the number
+    /// of blocks migrated by the repack.
+    ///
+    /// The active flag flips *before* the fallible sink/repack work and
+    /// deliberately stays set if that work errors: by then blocks may
+    /// already home on `l`, and an active-but-degraded member (its sink
+    /// possibly still remote, its share of work partial) is both safe —
+    /// routing goes by `home`, the port is attached — and consistent
+    /// with the runtime's member set.
+    pub fn boot_locality(self: &Arc<Self>, l: usize) -> PxResult<u64> {
+        if l >= self.shards.len() {
+            return Err(PxError::LcoProtocol(format!(
+                "locality {l} outside this epoch's roster of {}",
+                self.shards.len()
+            )));
+        }
+        if self.active[l].load(Ordering::SeqCst) {
+            return Err(PxError::LcoProtocol(format!("locality {l} is already active")));
+        }
+        self.active[l].store(true, Ordering::SeqCst);
+        self.relocate_sink(l, l)?;
+        self.repack_lpt()
+    }
+
+    /// Remaining-work rows `(weight, block, home)` for every block —
+    /// `weight = (target − completed) × width` — pre-sorted for LPT
+    /// packing (descending weight, block-id tie-break). The one source
+    /// of the load formula both membership repack paths share.
+    fn remaining_rows(&self) -> Vec<(u64, BlockId, usize)> {
+        let mut rows: Vec<(u64, BlockId, usize)> = {
+            let board = self.board.lock().unwrap();
+            self.plan
+                .plans
+                .iter()
+                .map(|p| {
+                    let id = p.info.id;
+                    let target = self.plan.targets[id.level as usize];
+                    let done = board.get(&id).map(|b| b.completed_steps).unwrap_or(0);
+                    let w = target.saturating_sub(done) * p.info.width() as u64;
+                    (w, id, self.home[&id].load(Ordering::SeqCst) as usize)
+                })
+                .collect()
+        };
+        rows.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        rows
+    }
+
+    /// LPT-repack every block that still has remaining work onto the
+    /// current member set, migrating only blocks whose assigned member
+    /// differs from their current home. The mid-epoch analogue of
+    /// [`CostModel::place_on`], weighted by observed remaining work
+    /// rather than projected cost.
+    fn repack_lpt(self: &Arc<Self>) -> PxResult<u64> {
+        let members = self.members();
+        if members.is_empty() {
+            return Err(PxError::LcoProtocol("repack with no active localities".into()));
+        }
+        let mut loads: HashMap<usize, u64> = members.iter().map(|&m| (m, 0)).collect();
+        let mut moved = 0u64;
+        for (w, id, cur) in self.remaining_rows() {
+            if w == 0 {
+                continue; // completed: not worth the drain
+            }
+            let dest = lpt_pick(&members, &loads);
+            if let Some(e) = loads.get_mut(&dest) {
+                *e += w.max(1);
+            }
+            if dest != cur {
+                self.migrate_block(id, dest)?;
+                moved += 1;
+            }
+        }
+        Ok(moved)
+    }
+}
+
+/// Least-loaded member (ties break toward the lower locality id) — the
+/// deterministic LPT destination pick shared by the membership repack
+/// paths.
+fn lpt_pick(members: &[usize], loads: &HashMap<usize, u64>) -> usize {
+    *members
+        .iter()
+        .min_by_key(|&&m| (loads.get(&m).copied().unwrap_or(0), m))
+        .expect("members is nonempty")
+}
+
+/// What one applied membership event did — BENCH_4's rebalance series.
+#[derive(Debug, Clone)]
+pub struct AppliedEvent {
+    pub event: MembershipEvent,
+    /// Tasks the epoch had completed when the event fired.
+    pub at_tasks: u64,
+    /// Blocks migrated by the event's repack.
+    pub blocks_moved: u64,
+    /// Wallclock from trigger to completed repack + drain — the
+    /// rebalance latency BENCH_4 reports.
+    pub latency: Duration,
+    /// AGAS-resident `Block` bindings on the locality after the event:
+    /// 0 after a leave (the retirement drain invariant); after a join,
+    /// however many blocks the repack pulled in.
+    pub residents_after: usize,
+}
+
+/// Aggregate elastic-membership telemetry for one epoch.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticStats {
+    /// Every membership change applied, in order.
+    pub applied: Vec<AppliedEvent>,
+    /// Total blocks migrated by membership changes.
+    pub blocks_moved: u64,
+    /// Total wallclock spent rebalancing (sum of event latencies).
+    pub rebalance_total: Duration,
+}
+
+/// Applies one membership change end-to-end: driver drain/repack plus
+/// runtime membership flip, in the order DESIGN.md §8 prescribes.
+fn apply_membership_event(
+    state: &Arc<DriverState>,
+    membership: &Arc<Membership>,
+    event: MembershipEvent,
+    at_tasks: u64,
+    stats: &mut ElasticStats,
+) {
+    let t0 = Instant::now();
+    let block_residents = |l: LocalityId| {
+        state.shards[0]
+            .ctx
+            .agas
+            .service()
+            .residents(l)
+            .into_iter()
+            .filter(|g| g.kind() == GidKind::Block)
+            .count()
+    };
+    let res: PxResult<(u64, usize)> = match event {
+        // Leave: drain the driver first (blocks + sink off the leaving
+        // locality), then let the runtime purge caches, drain the wire
+        // and detach the port. The runtime's membership rules are
+        // checked *before* the driver drain — a rejected event must
+        // leave both layers untouched, not strand the driver with a
+        // locality the runtime still counts as a member.
+        MembershipEvent::Leave(l) => {
+            let drained: PxResult<u64> = membership.check_retirable(l).and_then(|()| {
+                state.retire_locality(l as usize).and_then(|moved| {
+                    membership.retire(l).map(|()| moved).map_err(|e| {
+                        // Rules were pre-checked, so only the wire drain
+                        // can fail here — and it rolls its flip back,
+                        // leaving the port attached. Bring the driver
+                        // back in sync: re-activate the locality and
+                        // repack work onto it.
+                        if let Err(heal) = state.boot_locality(l as usize) {
+                            eprintln!(
+                                "[coordinator] failed to restore L{l} after aborted retire: {heal}"
+                            );
+                        }
+                        e
+                    })
+                })
+            });
+            drained.map(|moved| (moved, block_residents(l)))
+        }
+        // Join: the runtime re-attaches the port first, then the driver
+        // brings the sink home and repacks onto the grown set.
+        MembershipEvent::Join(l) => membership
+            .boot(l)
+            .and_then(|()| state.boot_locality(l as usize))
+            .map(|moved| (moved, block_residents(l))),
+    };
+    match res {
+        Ok((moved, residents_after)) => {
+            let latency = t0.elapsed();
+            stats.blocks_moved += moved;
+            stats.rebalance_total += latency;
+            stats.applied.push(AppliedEvent {
+                event,
+                at_tasks,
+                blocks_moved: moved,
+                latency,
+                residents_after,
+            });
+        }
+        Err(e) => eprintln!("[coordinator] membership event {event} failed: {e}"),
+    }
+}
+
+/// Monitor thread driving a [`MembershipPlan`] against a running epoch:
+/// fires each scripted event once its task-completion fraction is
+/// reached, evaluates the optional load trigger, and — like the load
+/// balancer — is the *single* thread performing migrations for the
+/// epoch (the two are mutually exclusive; `run_epoch_elastic` never
+/// starts a balancer).
+struct ElasticController {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<ElasticStats>>,
+}
+
+impl ElasticController {
+    fn start(
+        state: Arc<DriverState>,
+        membership: Arc<Membership>,
+        mplan: MembershipPlan,
+    ) -> ElasticController {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("px-coordinator-membership".into())
+            .spawn(move || {
+                let total = state.plan.total_tasks().max(1);
+                let mut stats = ElasticStats::default();
+                let mut next = 0usize;
+                loop {
+                    let done = state.tasks_done();
+                    while next < mplan.events.len() {
+                        let ev = mplan.events[next];
+                        let due = (ev.at_fraction * total as f64).ceil() as u64;
+                        if done < due {
+                            break;
+                        }
+                        apply_membership_event(&state, &membership, ev.event, done, &mut stats);
+                        next += 1;
+                    }
+                    if let Some(tr) = &mplan.load_trigger {
+                        let members = membership.members();
+                        if let Some(ev) = MembershipPlan::decide_load_trigger(
+                            tr,
+                            &state.locality_load(),
+                            &members,
+                        ) {
+                            apply_membership_event(
+                                &state,
+                                &membership,
+                                ev,
+                                state.tasks_done(),
+                                &mut stats,
+                            );
+                        }
+                    }
+                    if stop2.load(Ordering::SeqCst) {
+                        // Epoch over: apply any leftover scripted events
+                        // (all due by construction once the graph
+                        // completed; after a *failed* epoch this still
+                        // restores the membership the script promised,
+                        // so the next epoch starts from a known set).
+                        while next < mplan.events.len() {
+                            let ev = mplan.events[next];
+                            apply_membership_event(
+                                &state,
+                                &membership,
+                                ev.event,
+                                state.tasks_done(),
+                                &mut stats,
+                            );
+                            next += 1;
+                        }
+                        return stats;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            })
+            .expect("spawn membership controller");
+        ElasticController { stop, handle: Some(handle) }
+    }
+
+    fn stop(mut self) -> ElasticStats {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for ElasticController {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Build the initial per-block states from the analytic pulse.
@@ -1231,9 +1755,10 @@ pub fn initial_block_states(plan: &EpochPlan, cfg: &AmrConfig) -> HashMap<BlockI
 
 /// Run one epoch of the barrier-free (or barrier-mode) AMR evolution on
 /// the given runtime, starting from `init` block states. Distributes the
-/// blocks over every locality the runtime was booted with (cost-balanced
-/// placement, no load balancer); see [`run_epoch_placed`] for explicit
-/// placement/balancing policy control.
+/// blocks over every *current member* locality (cost-balanced placement,
+/// no load balancer); see [`run_epoch_placed`] for explicit
+/// placement/balancing policy control and [`run_epoch_elastic`] for
+/// epochs whose membership changes mid-run.
 pub fn run_epoch(
     rt: &PxRuntime,
     plan: Arc<EpochPlan>,
@@ -1257,8 +1782,33 @@ pub fn run_epoch_placed(
     init: &HashMap<BlockId, Fields>,
     opts: &DistAmrOpts,
 ) -> Result<AmrOutcome> {
-    let placement = opts.policy.assign(&plan, rt.localities().len());
-    run_epoch_at(rt, plan, backend, config, init, placement, opts).map(|(out, _)| out)
+    // Place onto the runtime's *current* member set, not the boot roster
+    // — a runtime that shrank keeps working, and one that grew is used.
+    let placement = opts.policy.assign_on(&plan, &rt.membership().members());
+    run_epoch_at(rt, plan, backend, config, init, placement, opts, None).map(|(out, _, _)| out)
+}
+
+/// As [`run_epoch_placed`], with the machine itself changing mid-epoch
+/// under a [`MembershipPlan`]: scripted join/leave events (by
+/// task-completion fraction) and/or a load-threshold trigger retire and
+/// boot localities while the dataflow graph runs, re-placing live work
+/// through the AGAS migration drain. `opts.balance` is ignored —
+/// membership changes and load balancing share the single-migrator
+/// invariant, and the membership controller owns it for elastic epochs.
+/// Returns the outcome plus per-event rebalance telemetry.
+pub fn run_epoch_elastic(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+    mplan: &MembershipPlan,
+) -> Result<(AmrOutcome, ElasticStats)> {
+    let placement = opts.policy.assign_on(&plan, &rt.membership().members());
+    let (outcome, _st, stats) =
+        run_epoch_at(rt, plan, backend, config, init, placement, opts, Some(mplan))?;
+    Ok((outcome, stats.unwrap_or_default()))
 }
 
 /// As [`run_epoch_placed`], but the placement map comes from — and the
@@ -1275,18 +1825,22 @@ pub fn run_epoch_adaptive(
     opts: &DistAmrOpts,
     model: &mut CostModel,
 ) -> Result<AmrOutcome> {
-    let (placement, rebalanced) = model.place(&plan, rt.localities().len());
+    // The LPT map packs onto the *current* member set — after a
+    // membership change the model repacks onto whatever machine is
+    // actually there (DESIGN.md §8).
+    let (placement, rebalanced) = model.place_on(&plan, &rt.membership().members());
     if rebalanced {
         rt.localities()[0].counters.placement_rebalances.inc();
     }
-    let (outcome, st) = run_epoch_at(rt, plan, backend, config, init, placement, opts)?;
+    let (outcome, st, _) = run_epoch_at(rt, plan, backend, config, init, placement, opts, None)?;
     model.observe(&st.observed_costs(), &st.homes());
     Ok(outcome)
 }
 
 /// Shared epoch body: run the dataflow graph under an explicit
 /// block → locality map, returning the driver state alongside the
-/// outcome so adaptive callers can harvest observed costs/homes.
+/// outcome so adaptive callers can harvest observed costs/homes, plus
+/// the membership controller's telemetry for elastic epochs.
 fn run_epoch_at(
     rt: &PxRuntime,
     plan: Arc<EpochPlan>,
@@ -1295,10 +1849,18 @@ fn run_epoch_at(
     init: &HashMap<BlockId, Fields>,
     placement: HashMap<BlockId, LocalityId>,
     opts: &DistAmrOpts,
-) -> Result<(AmrOutcome, Arc<DriverState>)> {
+    mplan: Option<&MembershipPlan>,
+) -> Result<(AmrOutcome, Arc<DriverState>, Option<ElasticStats>)> {
     let n_loc = rt.localities().len();
     let st =
         DriverState::new(plan, backend, config, rt.localities(), &placement, opts.batch_pushes);
+    // The epoch starts from the runtime's current member set (a roster
+    // locality may already be retired — the grow-mid-run scenario).
+    for l in 0..n_loc {
+        if !rt.membership().is_member(l as LocalityId) {
+            st.active[l].store(false, Ordering::SeqCst);
+        }
+    }
     if n_loc > 1 {
         if let Err(e) = st.register_blocks() {
             // Clean up any partial registrations before bailing, or the
@@ -1307,7 +1869,19 @@ fn run_epoch_at(
             return Err(crate::anyhow!("block registration failed: {e}"));
         }
     }
-    let balancer = if n_loc > 1 {
+    let elastic = match mplan {
+        Some(mp) if n_loc > 1 => {
+            Some(ElasticController::start(st.clone(), rt.membership().clone(), mp.clone()))
+        }
+        Some(_) => {
+            st.unregister_blocks();
+            return Err(crate::anyhow!("elastic membership requires a multi-locality runtime"));
+        }
+        None => None,
+    };
+    // Membership changes and the balancer share the single-migrator
+    // invariant: elastic epochs never start a balancer.
+    let balancer = if n_loc > 1 && elastic.is_none() {
         opts.balance.map(|b| LoadBalancer::start(st.clone(), b))
     } else {
         None
@@ -1361,10 +1935,14 @@ fn run_epoch_at(
             None
         }
     };
-    // Stop the balancer before the final quiescence check: a migration in
-    // progress may re-deliver drained inputs (and thereby spawn tasks),
-    // which the wait below must cover before teardown.
+    // Stop the balancer / membership controller before the final
+    // quiescence check: a migration in progress may re-deliver drained
+    // inputs (and thereby spawn tasks), which the wait below must cover
+    // before teardown. The controller also applies any leftover scripted
+    // events here, so the epoch always ends on the membership the script
+    // promised.
     let migrations = balancer.map(|b| b.stop()).unwrap_or(0);
+    let estats = elastic.map(|c| c.stop());
     rt.wait_quiescent();
     if n_loc > 1 {
         st.unregister_blocks();
@@ -1382,9 +1960,9 @@ fn run_epoch_at(
         elapsed: st.start.elapsed(),
         tasks_run: st.tasks_run.load(Ordering::Relaxed),
         tasks_frozen: st.tasks_frozen.load(Ordering::Relaxed),
-        migrations,
+        migrations: estats.as_ref().map(|s| s.blocks_moved).unwrap_or(migrations),
     };
-    Ok((outcome, st))
+    Ok((outcome, st, estats))
 }
 
 /// Convenience: full run (build plan from hierarchy, init from pulse).
@@ -1833,8 +2411,15 @@ mod tests {
                 // Every remote push coalesced (no migrations here, so no
                 // unbatched re-forwards).
                 assert_eq!(totals.amr_batched_pushes, totals.amr_remote_pushes);
+                // Batch-aware receiver scheduling: tasks completed by a
+                // batch arrival drain into spawn_batch (one wake/batch).
+                assert!(
+                    totals.amr_batch_spawns > 0,
+                    "batch arrivals must complete tasks via the batched spawn path"
+                );
             } else {
                 assert_eq!(totals.amr_batched_pushes, 0);
+                assert_eq!(totals.amr_batch_spawns, 0, "per-fragment path never batch-spawns");
             }
             parcels.push(totals.parcels_sent);
             runtime.shutdown();
@@ -1957,6 +2542,301 @@ mod tests {
         assert!(out.migrations >= 1, "balancer should have migrated a block");
         assert_eq!(runtime.counters_total().migrations, out.migrations);
         assert_outcomes_bitwise_equal(&reference, &out, "balanced 4-locality run");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn elastic_shrink_grow_cycle_bitwise_identical() {
+        // The acceptance check: a scripted 8→4→8 shrink/grow cycle
+        // mid-run must reproduce the static 8-locality (and single-
+        // locality) physics bit-for-bit, retire every scripted locality
+        // cleanly (no AGAS residents left behind), and lose no parcels.
+        use crate::coordinator::MembershipPlan;
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 6, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(8, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let mplan = MembershipPlan::shrink_grow(8, 4, 0.25, 0.6);
+        let (out, stats) = run_epoch_elastic(
+            &runtime,
+            plan,
+            Arc::new(NativeBackend),
+            cfg,
+            &init,
+            &DistAmrOpts::default(),
+            &mplan,
+        )
+        .unwrap();
+        assert_outcomes_bitwise_equal(&reference, &out, "8→4→8 elastic cycle");
+        assert_eq!(stats.applied.len(), 8, "all scripted events must apply: {stats:?}");
+        for ev in &stats.applied {
+            if let MembershipEvent::Leave(_) = ev.event {
+                assert_eq!(
+                    ev.residents_after, 0,
+                    "retired locality must shed every AGAS-resident block: {ev:?}"
+                );
+                assert!(ev.blocks_moved >= 1, "each leaver hosted at least one block: {ev:?}");
+            }
+        }
+        assert!(stats.blocks_moved >= 4, "shrink must move blocks: {stats:?}");
+        assert_eq!(out.migrations, stats.blocks_moved);
+        assert_eq!(
+            runtime.membership().n_active(),
+            8,
+            "the grow events must restore full membership"
+        );
+        // Counter-balance: nothing lost on the wire, zero-copy preserved.
+        let totals = runtime.counters_total();
+        assert_eq!(totals.payload_deep_copies, 0);
+        assert_eq!(runtime.net().dropped(), 0);
+        assert_eq!(runtime.net().dead_letters(), 0);
+        assert_eq!(
+            totals.parcels_sent, totals.parcels_received,
+            "every parcel sent must have been delivered (bounced={})",
+            runtime.net().bounced()
+        );
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn balancer_on_shrunk_runtime_never_targets_retired_locality() {
+        // Regression: the load balancer must pick destinations from the
+        // *member* set. A retired locality reports zero load; before the
+        // membership-aware fix it was always "idlest", the balancer
+        // migrated a block behind its detached port, and the epoch
+        // livelocked on the bounce/forward loop.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 6, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(4, 2);
+        runtime.retire_locality(3).unwrap();
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let opts = DistAmrOpts {
+            policy: PlacementPolicy::RadialSlabs,
+            balance: Some(BalanceConfig {
+                interval: Duration::from_millis(1),
+                imbalance_ratio: 1.05,
+                max_migrations: 8,
+            }),
+            ..Default::default()
+        };
+        let out =
+            run_epoch_placed(&runtime, plan, Arc::new(NativeBackend), cfg, &init, &opts).unwrap();
+        assert_outcomes_bitwise_equal(&reference, &out, "3-member run on a 4-roster runtime");
+        assert_eq!(runtime.net().dead_letters(), 0);
+        assert_eq!(runtime.net().bounced(), 0, "no parcel may target the retired locality");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn elastic_grow_from_half_roster_bitwise_identical() {
+        // Grow-mid-run: boot an 8-roster runtime, pre-retire 4..8, and
+        // let scripted joins bring them in while the epoch runs.
+        use crate::coordinator::{MembershipEvent, MembershipPlan, ScriptedEvent};
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(8, 2);
+        for l in 4..8u32 {
+            runtime.retire_locality(l).unwrap();
+        }
+        assert_eq!(runtime.membership().members(), vec![0, 1, 2, 3]);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let mplan = MembershipPlan {
+            events: (4..8)
+                .map(|l| ScriptedEvent { at_fraction: 0.4, event: MembershipEvent::Join(l) })
+                .collect(),
+            load_trigger: None,
+        };
+        let (out, stats) = run_epoch_elastic(
+            &runtime,
+            plan,
+            Arc::new(NativeBackend),
+            cfg,
+            &init,
+            &DistAmrOpts::default(),
+            &mplan,
+        )
+        .unwrap();
+        assert_outcomes_bitwise_equal(&reference, &out, "grow 4→8 mid-run");
+        assert_eq!(stats.applied.len(), 4);
+        assert_eq!(runtime.membership().n_active(), 8);
+        assert_eq!(runtime.counters_total().payload_deep_copies, 0);
+        assert_eq!(runtime.net().dead_letters(), 0);
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn prop_retirement_sheds_blocks_and_loses_no_parcels() {
+        // Satellite property test: for random geometry and random retire
+        // scripts, a locality retired mid-epoch ends with zero
+        // AGAS-resident blocks, same-locality deliveries stay zero-copy
+        // after the repack, and no parcel is dropped (counter-balance:
+        // sent == received, nothing dead-lettered).
+        use crate::coordinator::{MembershipEvent, MembershipPlan, ScriptedEvent};
+        prop_check("elastic retirement invariants", 5, |rng: &mut Rng| {
+            let localities = rng.range(3, 7); // capacity 3..6
+            let n_retire = rng.range(1, localities - 1); // keep ≥ 2 members
+            let steps = rng.range(2, 5) as u64;
+            let granularity = rng.range(8, 16);
+            let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity };
+            let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+            let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+            let reference = {
+                let runtime = rt(2);
+                let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+                runtime.shutdown();
+                out
+            };
+            // Retire the top n_retire localities at random fractions.
+            let events: Vec<ScriptedEvent> = (0..n_retire)
+                .map(|i| ScriptedEvent {
+                    at_fraction: rng.range(10, 80) as f64 / 100.0,
+                    event: MembershipEvent::Leave((localities - 1 - i) as LocalityId),
+                })
+                .collect();
+            let mut mplan = MembershipPlan { events, load_trigger: None };
+            mplan.events.sort_by(|a, b| a.at_fraction.total_cmp(&b.at_fraction));
+            let runtime = rt_dist(localities, rng.range(1, 3));
+            let plan = Arc::new(EpochPlan::new(h, steps));
+            let init = initial_block_states(&plan, &cfg);
+            let (out, stats) = run_epoch_elastic(
+                &runtime,
+                plan,
+                Arc::new(NativeBackend),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+                &mplan,
+            )
+            .unwrap();
+            assert_outcomes_bitwise_equal(
+                &reference,
+                &out,
+                &format!("{localities} localities, {n_retire} retired"),
+            );
+            assert_eq!(stats.applied.len(), n_retire, "every scripted leave applies");
+            for ev in &stats.applied {
+                assert_eq!(ev.residents_after, 0, "retired locality kept blocks: {ev:?}");
+            }
+            assert_eq!(runtime.membership().n_active(), localities - n_retire);
+            let totals = runtime.counters_total();
+            assert_eq!(
+                totals.payload_deep_copies, 0,
+                "same-locality deliveries must stay zero-copy after repacking"
+            );
+            assert_eq!(runtime.net().dropped(), 0);
+            assert_eq!(runtime.net().dead_letters(), 0);
+            assert_eq!(
+                totals.parcels_sent, totals.parcels_received,
+                "parcel counter balance (bounced={})",
+                runtime.net().bounced()
+            );
+            runtime.shutdown();
+        });
+    }
+
+    #[test]
+    fn adaptive_replaces_onto_current_members_after_hotspot_shift() {
+        // Satellite pin (CostModel decay fix): run the skewed-cost
+        // workload, then *move* the hotspot (inner-hot → outer-hot
+        // backends with bit-identical physics) and keep running. The
+        // adaptive placer must rebalance again after the shift — the
+        // EWMA re-tracks — and every epoch stays bitwise-exact.
+        use crate::bench::SkewedBackend;
+
+        /// Outer-radius hotspot: spins where `SkewedBackend` does not.
+        struct OuterHotBackend {
+            r_split: f64,
+            spin_us_base: u64,
+        }
+        impl ComputeBackend for OuterHotBackend {
+            fn step_exact(
+                &self,
+                m: usize,
+                chi: &[f64],
+                phi: &[f64],
+                pi: &[f64],
+                r: &[f64],
+                dx: f64,
+                dt: f64,
+            ) -> Result<Fields> {
+                let out = NativeBackend.step_exact(m, chi, phi, pi, r, dx, dt)?;
+                if r[0] >= self.r_split {
+                    let spin = Duration::from_micros(self.spin_us_base + m as u64);
+                    let t0 = Instant::now();
+                    while t0.elapsed() < spin {
+                        std::hint::spin_loop();
+                    }
+                }
+                Ok(out)
+            }
+            fn name(&self) -> &'static str {
+                "native-outer-hot"
+            }
+        }
+
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(2, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let opts = DistAmrOpts { policy: PlacementPolicy::Adaptive, ..Default::default() };
+        let mut model = CostModel::new();
+        let inner: Arc<dyn ComputeBackend> =
+            Arc::new(SkewedBackend { r_split: 5.0, spin_us_base: 40 });
+        let outer: Arc<dyn ComputeBackend> =
+            Arc::new(OuterHotBackend { r_split: 14.0, spin_us_base: 40 });
+        for epoch in 0..2 {
+            let out = run_epoch_adaptive(
+                &runtime, plan.clone(), inner.clone(), cfg, &init, &opts, &mut model,
+            )
+            .unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("inner epoch {epoch}"));
+        }
+        let before_shift = model.rebalances;
+        assert!(before_shift >= 1, "inner-hot skew must trigger a rebalance");
+        for epoch in 0..2 {
+            let out = run_epoch_adaptive(
+                &runtime, plan.clone(), outer.clone(), cfg, &init, &opts, &mut model,
+            )
+            .unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("outer epoch {epoch}"));
+        }
+        assert!(
+            model.rebalances > before_shift,
+            "moving the hotspot must trigger a fresh rebalance ({} vs {before_shift})",
+            model.rebalances
+        );
         runtime.shutdown();
     }
 

@@ -12,13 +12,17 @@ use std::time::{Duration, Instant};
 
 use crate::amr::backend::{make_backend, BackendKind, ComputeBackend};
 use crate::amr::dataflow_driver::{
-    initial_block_states, run, run_epoch, run_epoch_adaptive, run_epoch_placed, AmrConfig,
+    initial_block_states, run, run_epoch, run_epoch_adaptive, run_epoch_elastic,
+    run_epoch_placed, AmrConfig, ElasticStats,
 };
 use crate::amr::engine::EpochPlan;
 use crate::amr::mesh::{Hierarchy, MeshConfig, Region};
 use crate::amr::regrid::{initial_hierarchy, RegridConfig};
 use crate::amr::three_d::{run_three_d, ThreeDConfig};
-use crate::coordinator::{BalanceConfig, CostModel, DistAmrOpts, PlacementPolicy};
+use crate::coordinator::{
+    BalanceConfig, CostModel, DistAmrOpts, MembershipEvent, MembershipPlan, PlacementPolicy,
+    ScriptedEvent,
+};
 use crate::csp::amr::run_epoch_csp;
 use crate::fpga::fib::{fib_value, run_fib};
 use crate::fpga::{FpgaQueue, PcieModel};
@@ -1439,6 +1443,373 @@ pub fn write_bench3_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, S
         });
     std::fs::write(&path, json)?;
     Ok((path, table))
+}
+
+// --------------------------- BENCH 4: elastic localities (DESIGN.md §8)
+
+/// One row of the elastic-localities experiment: one epoch at a given
+/// roster capacity, in one of three modes — `steady` (fixed membership),
+/// `shrink` (retire half the machine at 50% task completion) or `grow`
+/// (start on half the roster, boot the rest at 50%).
+struct ElasticRow {
+    capacity: usize,
+    mode: &'static str,
+    members_start: usize,
+    members_end: usize,
+    wall: Duration,
+    tasks_run: u64,
+    stats: ElasticStats,
+    bounced: u64,
+    bitwise_match: bool,
+    totals: CounterSnapshot,
+}
+
+impl ElasticRow {
+    fn tasks_per_sec(&self) -> f64 {
+        self.tasks_run as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Leave events for localities `down_to..capacity` at `at`.
+fn leave_events(capacity: usize, down_to: usize, at: f64) -> Vec<ScriptedEvent> {
+    (down_to..capacity)
+        .map(|l| ScriptedEvent { at_fraction: at, event: MembershipEvent::Leave(l as u32) })
+        .collect()
+}
+
+/// Join events for localities `down_to..capacity` at `at`.
+fn join_events(capacity: usize, down_to: usize, at: f64) -> Vec<ScriptedEvent> {
+    (down_to..capacity)
+        .map(|l| ScriptedEvent { at_fraction: at, event: MembershipEvent::Join(l as u32) })
+        .collect()
+}
+
+/// Measure steady vs shrink-mid-run vs grow-mid-run on the one-level
+/// pulse problem, per roster capacity. Physics must match the
+/// single-locality run bit-for-bit in every row — membership changes
+/// re-place work, never alter it.
+fn bench4_rows(
+    n0: usize,
+    steps: u64,
+    workers: usize,
+    locality_set: &[usize],
+    backend: Arc<dyn ComputeBackend>,
+) -> Vec<ElasticRow> {
+    let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+    let reg = Region { lo: 6 * (n0 - 1) / 10, hi: 10 * (n0 - 1) / 10 };
+    let h = Hierarchy::build(mesh, &[vec![reg]]).expect("bench4 mesh");
+    let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, steps));
+    let init = initial_block_states(&plan, &cfg);
+
+    let reference = {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 1,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::instant(),
+        });
+        let out =
+            run_epoch(&rt, plan.clone(), backend.clone(), cfg, &init).expect("bench4 reference");
+        rt.shutdown();
+        out
+    };
+    let boot = |localities: usize| {
+        PxRuntime::boot(PxConfig {
+            localities,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::cluster_like(),
+        })
+    };
+
+    let mut rows = Vec::new();
+    for &capacity in locality_set {
+        // Steady: fixed membership baseline.
+        {
+            let rt = boot(capacity);
+            let t0 = Instant::now();
+            let out = run_epoch_placed(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+            )
+            .expect("bench4 steady epoch");
+            rows.push(ElasticRow {
+                capacity,
+                mode: "steady",
+                members_start: capacity,
+                members_end: rt.membership().n_active(),
+                wall: t0.elapsed(),
+                tasks_run: out.tasks_run,
+                stats: ElasticStats::default(),
+                bounced: rt.net().bounced(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+        if capacity < 2 {
+            continue; // shrink/grow need a multi-locality roster
+        }
+        let half = capacity / 2;
+        // Shrink: retire the upper half of the machine at 50% done.
+        {
+            let rt = boot(capacity);
+            let mplan =
+                MembershipPlan { events: leave_events(capacity, half, 0.5), load_trigger: None };
+            let t0 = Instant::now();
+            let (out, stats) = run_epoch_elastic(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+                &mplan,
+            )
+            .expect("bench4 shrink epoch");
+            rows.push(ElasticRow {
+                capacity,
+                mode: "shrink",
+                members_start: capacity,
+                members_end: rt.membership().n_active(),
+                wall: t0.elapsed(),
+                tasks_run: out.tasks_run,
+                stats,
+                bounced: rt.net().bounced(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+        // Grow: start on the lower half, boot the rest at 50% done.
+        {
+            let rt = boot(capacity);
+            for l in half..capacity {
+                rt.retire_locality(l as u32).expect("pre-retire for grow");
+            }
+            let mplan =
+                MembershipPlan { events: join_events(capacity, half, 0.5), load_trigger: None };
+            let t0 = Instant::now();
+            let (out, stats) = run_epoch_elastic(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+                &mplan,
+            )
+            .expect("bench4 grow epoch");
+            rows.push(ElasticRow {
+                capacity,
+                mode: "grow",
+                members_start: half,
+                members_end: rt.membership().n_active(),
+                wall: t0.elapsed(),
+                tasks_run: out.tasks_run,
+                stats,
+                bounced: rt.net().bounced(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+    }
+    rows
+}
+
+fn render_bench4_table(rows: &[ElasticRow]) -> String {
+    let mut out = String::new();
+    out.push_str("== BENCH 4: elastic localities — steady vs shrink-mid-run vs grow-mid-run ==\n");
+    out.push_str("(scripted membership changes at 50% task completion; blocks drain off a\n retiring locality via AGAS migration, the wire drains, the port detaches;\n physics must match the single-locality run bit-for-bit in every mode)\n");
+    let mut t = Table::new(&[
+        "capacity",
+        "mode",
+        "members",
+        "wall",
+        "tasks/s",
+        "events",
+        "blocks moved",
+        "rebalance ms",
+        "bounced",
+        "migrations",
+        "bitwise",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.capacity.to_string(),
+            r.mode.to_string(),
+            format!("{}->{}", r.members_start, r.members_end),
+            fmt_dur(r.wall),
+            format!("{:.0}", r.tasks_per_sec()),
+            r.stats.applied.len().to_string(),
+            r.stats.blocks_moved.to_string(),
+            format!("{:.2}", r.stats.rebalance_total.as_secs_f64() * 1e3),
+            r.bounced.to_string(),
+            r.totals.migrations.to_string(),
+            r.bitwise_match.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\nreading: shrink rows pay a one-time rebalance latency and then run on half\nthe machine; grow rows recover toward the steady throughput once the joins\nland. `bounced` parcels (stragglers re-routed via the anchor) and bitwise\nequality show retirement loses nothing.\n",
+    );
+    out
+}
+
+fn render_bench4_json(scale: Scale, rows: &[ElasticRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"elastic_localities\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!(
+        "  \"scale\": \"{}\",\n",
+        if scale == Scale::Full { "full" } else { "quick" }
+    ));
+    out.push_str("  \"series\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"capacity\": {}, \"mode\": \"{}\", \"members_start\": {}, \
+             \"members_end\": {}, \"wall_ms\": {:.3}, \"tasks_run\": {}, \
+             \"tasks_per_sec\": {:.1}, \"events_applied\": {}, \"blocks_moved\": {}, \
+             \"rebalance_ms_total\": {:.3}, \"parcels_sent\": {}, \"parcels_forwarded\": {}, \
+             \"parcels_bounced\": {}, \"migrations\": {}, \"payload_deep_copies\": {}, \
+             \"amr_batch_spawns\": {}, \"bitwise_match_vs_single\": {}}}{}\n",
+            r.capacity,
+            r.mode,
+            r.members_start,
+            r.members_end,
+            r.wall.as_secs_f64() * 1e3,
+            r.tasks_run,
+            r.tasks_per_sec(),
+            r.stats.applied.len(),
+            r.stats.blocks_moved,
+            r.stats.rebalance_total.as_secs_f64() * 1e3,
+            r.totals.parcels_sent,
+            r.totals.parcels_forwarded,
+            r.bounced,
+            r.totals.migrations,
+            r.totals.payload_deep_copies,
+            r.totals.amr_batch_spawns,
+            r.bitwise_match,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The BENCH 4 experiment: human-readable table plus the
+/// machine-readable `BENCH_4.json` body, from one measurement pass.
+pub fn bench4_report(scale: Scale) -> (String, String) {
+    let (n0, steps, workers): (usize, u64, usize) = match scale {
+        Scale::Quick => (401, 6, 2),
+        Scale::Full => (1601, 12, 4),
+    };
+    let rows = bench4_rows(n0, steps, workers, &[1, 2, 4, 8], backend_from_env());
+    (render_bench4_table(&rows), render_bench4_json(scale, &rows))
+}
+
+/// Run the BENCH 4 experiment and write `BENCH_4.json` to
+/// `PX_BENCH4_JSON` (or `<repo>/BENCH_4.json`, next to its siblings).
+/// Returns the path written and the human-readable table.
+pub fn write_bench4_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, String)> {
+    let (table, json) = bench4_report(scale);
+    let path = std::env::var("PX_BENCH4_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_4.json")
+        });
+    std::fs::write(&path, json)?;
+    Ok((path, table))
+}
+
+/// `px-amr dist --elastic <script>`: run one distributed AMR epoch under
+/// a user-scripted membership plan (e.g. `"25:-3,25:-2,60:+2,60:+3"`)
+/// and report every applied event. The roster capacity is inferred from
+/// the script (highest locality named + 1, at least 2); localities whose
+/// first scripted event is a *join* start retired.
+pub fn run_elastic_demo(
+    scale: Scale,
+    script: &str,
+    policy: PlacementPolicy,
+) -> Result<String, String> {
+    let mplan = MembershipPlan::parse(script)?;
+    let mut capacity = 2usize;
+    let mut first_event: std::collections::HashMap<u32, MembershipEvent> =
+        std::collections::HashMap::new();
+    for e in &mplan.events {
+        let l = match e.event {
+            MembershipEvent::Leave(l) | MembershipEvent::Join(l) => l,
+        };
+        capacity = capacity.max(l as usize + 1);
+        first_event.entry(l).or_insert(e.event);
+    }
+    let (n0, steps, workers): (usize, u64, usize) = match scale {
+        Scale::Quick => (401, 6, 2),
+        Scale::Full => (1601, 12, 4),
+    };
+    let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+    let reg = Region { lo: 6 * (n0 - 1) / 10, hi: 10 * (n0 - 1) / 10 };
+    let h = Hierarchy::build(mesh, &[vec![reg]]).map_err(|e| e.to_string())?;
+    let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, steps));
+    let init = initial_block_states(&plan, &cfg);
+    let rt = PxRuntime::boot(PxConfig {
+        localities: capacity,
+        workers_per_locality: workers,
+        policy: SchedPolicyKind::LocalPriority,
+        net: NetModel::cluster_like(),
+    });
+    // A locality the script *joins* first must start outside the set.
+    for (l, ev) in &first_event {
+        if matches!(ev, MembershipEvent::Join(_)) {
+            rt.retire_locality(*l).map_err(|e| e.to_string())?;
+        }
+    }
+    let members_start = rt.membership().n_active();
+    let opts = DistAmrOpts { policy, ..Default::default() };
+    let t0 = Instant::now();
+    let (out, stats) =
+        run_epoch_elastic(&rt, plan, backend_from_env(), cfg, &init, &opts, &mplan)
+            .map_err(|e| e.to_string())?;
+    let wall = t0.elapsed();
+
+    let mut report = String::new();
+    report.push_str(&format!(
+        "== px-amr dist --elastic: capacity {capacity}, members {members_start}->{}, `{}` placement ==\n",
+        rt.membership().n_active(),
+        policy.name()
+    ));
+    let mut t = Table::new(&["event", "at tasks", "blocks moved", "latency ms", "residents after"]);
+    for ev in &stats.applied {
+        t.row(&[
+            ev.event.to_string(),
+            ev.at_tasks.to_string(),
+            ev.blocks_moved.to_string(),
+            format!("{:.2}", ev.latency.as_secs_f64() * 1e3),
+            ev.residents_after.to_string(),
+        ]);
+    }
+    report.push_str(&t.render());
+    let totals = rt.counters_total();
+    report.push_str(&format!(
+        "\nwall {}  tasks {}  migrations {}  parcels {} (forwarded {}, bounced {})\nbatch spawns {}  deep copies {}\n",
+        fmt_dur(wall),
+        out.tasks_run,
+        totals.migrations,
+        totals.parcels_sent,
+        totals.parcels_forwarded,
+        rt.net().bounced(),
+        totals.amr_batch_spawns,
+        totals.payload_deep_copies,
+    ));
+    rt.shutdown();
+    Ok(report)
 }
 
 // ------------------------------------------------------------- §V FPGA

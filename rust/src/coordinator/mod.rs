@@ -36,6 +36,20 @@
 //! The balancer runs on a dedicated OS thread — never as a PX-thread —
 //! so a migration can briefly pause delivery of a block's inputs without
 //! risking a scheduling deadlock on a one-worker locality.
+//!
+//! A third service arrived with elastic localities (DESIGN.md §8):
+//! [`MembershipPlan`] scripts *when the machine itself changes* —
+//! join/leave events at task-completion fractions (the `px-amr dist
+//! --elastic` script format) plus an optional load-threshold trigger
+//! that retires the idlest member when the work no longer fills the
+//! machine. The plan is pure policy; the mechanism (AGAS drain,
+//! LPT repack, port detach) lives in
+//! [`crate::amr::dataflow_driver::run_epoch_elastic`] and
+//! [`crate::px::runtime::Membership`]. Placement itself became
+//! member-set aware: [`PlacementPolicy::assign_on`] and
+//! [`CostModel::place_on`] pack onto an explicit member list, so the
+//! same policies serve a machine of 8, a machine shrunk to 4, and the
+//! re-grown 8 without assuming `0..n` contiguity.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -99,6 +113,21 @@ impl PlacementPolicy {
             PlacementPolicy::WeightedSlabs => "weighted",
             PlacementPolicy::Adaptive => "adaptive",
         }
+    }
+
+    /// As [`assign`](PlacementPolicy::assign), but packing onto an
+    /// explicit member list instead of the contiguous `0..n` range — the
+    /// elastic-membership entry point. Slab `i` lands on `members[i]`.
+    pub fn assign_on(
+        &self,
+        plan: &EpochPlan,
+        members: &[LocalityId],
+    ) -> HashMap<BlockId, LocalityId> {
+        assert!(!members.is_empty());
+        self.assign(plan, members.len())
+            .into_iter()
+            .map(|(id, slot)| (id, members[slot as usize]))
+            .collect()
     }
 
     /// Compute the block → locality map for `n_localities`.
@@ -204,12 +233,171 @@ impl DistAmrOpts {
     }
 }
 
+// --------------------------------------------------- elastic membership
+
+/// One membership change: a locality leaving or (re)joining the machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// Retire the locality: drain its AGAS residents, detach its port.
+    Leave(LocalityId),
+    /// Boot the locality (back) in: re-attach its port, repack onto the
+    /// grown member set.
+    Join(LocalityId),
+}
+
+impl std::fmt::Display for MembershipEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MembershipEvent::Leave(l) => write!(f, "leave(L{l})"),
+            MembershipEvent::Join(l) => write!(f, "join(L{l})"),
+        }
+    }
+}
+
+/// A scripted membership change, triggered when the epoch has completed
+/// the given fraction of its tasks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedEvent {
+    /// Task-completion fraction in `[0, 1]` at which the event fires.
+    pub at_fraction: f64,
+    pub event: MembershipEvent,
+}
+
+/// Load-threshold membership trigger: when the idlest non-anchor member
+/// carries less than `underload_ratio ×` the mean remaining work and the
+/// machine still has more than `min_members` members, retire it — work
+/// has drained to the point where the machine is bigger than the job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadTrigger {
+    /// Never shrink below this many members.
+    pub min_members: usize,
+    /// Fire when `idlest < ratio × mean` (remaining-work units).
+    pub underload_ratio: f64,
+}
+
+/// When the machine itself changes during an epoch: scripted join/leave
+/// events (by task-completion fraction) plus an optional load trigger.
+/// Policy only — [`crate::amr::dataflow_driver::run_epoch_elastic`]
+/// supplies the mechanism.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MembershipPlan {
+    /// Events sorted by `at_fraction` (parse/shrink_grow keep them so).
+    pub events: Vec<ScriptedEvent>,
+    pub load_trigger: Option<LoadTrigger>,
+}
+
+impl MembershipPlan {
+    /// Parse the CLI script format: comma-separated `PCT:±L` items,
+    /// e.g. `"25:-7,25:-6,60:+6,60:+7"` — at 25% of tasks completed
+    /// retire localities 7 and 6, at 60% boot them back.
+    pub fn parse(script: &str) -> Result<MembershipPlan, String> {
+        let mut events = Vec::new();
+        for item in script.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (pct, ev) = item
+                .split_once(':')
+                .ok_or_else(|| format!("`{item}`: expected PCT:±LOCALITY"))?;
+            let pct: f64 =
+                pct.trim().parse().map_err(|e| format!("`{item}`: bad percentage: {e}"))?;
+            if !(0.0..=100.0).contains(&pct) {
+                return Err(format!("`{item}`: percentage must be in [0, 100]"));
+            }
+            let ev = ev.trim();
+            let event = if let Some(loc) = ev.strip_prefix('-') {
+                let l: LocalityId =
+                    loc.parse().map_err(|e| format!("`{item}`: bad locality: {e}"))?;
+                if l == 0 {
+                    return Err(format!(
+                        "`{item}`: locality 0 is the anchor and can never leave"
+                    ));
+                }
+                MembershipEvent::Leave(l)
+            } else if let Some(loc) = ev.strip_prefix('+') {
+                MembershipEvent::Join(
+                    loc.parse().map_err(|e| format!("`{item}`: bad locality: {e}"))?,
+                )
+            } else {
+                return Err(format!("`{item}`: expected `+L` (join) or `-L` (leave)"));
+            };
+            events.push(ScriptedEvent { at_fraction: pct / 100.0, event });
+        }
+        if events.is_empty() {
+            return Err("empty membership script".into());
+        }
+        events.sort_by(|a, b| a.at_fraction.total_cmp(&b.at_fraction));
+        Ok(MembershipPlan { events, load_trigger: None })
+    }
+
+    /// The canonical shrink/grow cycle: retire localities
+    /// `down_to..capacity` at `shrink_at`, boot them back at `grow_at`
+    /// (e.g. `shrink_grow(8, 4, 0.25, 0.6)` is the 8→4→8 cycle the
+    /// equivalence tests drive).
+    pub fn shrink_grow(
+        capacity: usize,
+        down_to: usize,
+        shrink_at: f64,
+        grow_at: f64,
+    ) -> MembershipPlan {
+        assert!(down_to >= 1 && down_to < capacity, "need 1 <= down_to < capacity");
+        assert!(shrink_at <= grow_at, "cannot grow before shrinking");
+        let mut events = Vec::new();
+        for l in down_to..capacity {
+            events.push(ScriptedEvent {
+                at_fraction: shrink_at,
+                event: MembershipEvent::Leave(l as LocalityId),
+            });
+        }
+        for l in down_to..capacity {
+            events.push(ScriptedEvent {
+                at_fraction: grow_at,
+                event: MembershipEvent::Join(l as LocalityId),
+            });
+        }
+        MembershipPlan { events, load_trigger: None }
+    }
+
+    /// Evaluate `trigger` against per-locality remaining work (indexed by
+    /// locality id) and the current member set: `Some(Leave(idlest))`
+    /// when the idlest non-anchor member is underloaded and the machine
+    /// can still shrink. Deterministic (ties break by lower id).
+    pub fn decide_load_trigger(
+        trigger: &LoadTrigger,
+        load: &[u64],
+        members: &[LocalityId],
+    ) -> Option<MembershipEvent> {
+        if members.len() <= trigger.min_members.max(1) {
+            return None;
+        }
+        let total: u64 = members.iter().map(|&l| load.get(l as usize).copied().unwrap_or(0)).sum();
+        let mean = total as f64 / members.len() as f64;
+        let (w, l) = members
+            .iter()
+            .filter(|&&l| l != 0)
+            .map(|&l| (load.get(l as usize).copied().unwrap_or(0), l))
+            .min()?;
+        if (w as f64) < trigger.underload_ratio * mean {
+            Some(MembershipEvent::Leave(l))
+        } else {
+            None
+        }
+    }
+}
+
 // --------------------------------------------------- adaptive placement
 
 /// EWMA smoothing for observed costs: new epochs dominate (an epoch is
 /// long relative to measurement noise), old history decays fast enough
 /// to track a moving pulse.
 const COST_EWMA_ALPHA: f64 = 0.5;
+
+/// The per-level *fallback* decays faster than the per-block term. The
+/// fallback only matters for blocks with no history of their own —
+/// fresh ids minted by a regrid, i.e. exactly where a refined region
+/// just *moved to* — so stale level history misplaces precisely the
+/// blocks that are hardest to place. Weighting new observations at 3:1
+/// re-tracks a moving hotspot within one epoch (pinned by
+/// `level_fallback_retracks_faster_than_block_term`), while the
+/// per-block term keeps its longer memory for ids that persist.
+const LEVEL_EWMA_ALPHA: f64 = 0.75;
 
 /// Observed-cost feedback carried across epoch/regrid boundaries — the
 /// state behind [`PlacementPolicy::Adaptive`].
@@ -282,10 +470,23 @@ impl CostModel {
         plan: &EpochPlan,
         n_localities: usize,
     ) -> (HashMap<BlockId, LocalityId>, bool) {
-        assert!(n_localities >= 1);
+        let members: Vec<LocalityId> = (0..n_localities as LocalityId).collect();
+        self.place_on(plan, &members)
+    }
+
+    /// As [`place`](CostModel::place), but packing the LPT map onto an
+    /// explicit member set — the entry point `run_epoch_adaptive` uses,
+    /// so every membership change repacks onto the *current* machine
+    /// rather than the boot-time `0..n` range (DESIGN.md §8).
+    pub fn place_on(
+        &mut self,
+        plan: &EpochPlan,
+        members: &[LocalityId],
+    ) -> (HashMap<BlockId, LocalityId>, bool) {
+        assert!(!members.is_empty());
         let map = if self.epochs_observed == 0 {
             // Cold start: no observations — the static cost-weighted map.
-            PlacementPolicy::WeightedSlabs.assign(plan, n_localities)
+            PlacementPolicy::WeightedSlabs.assign_on(plan, members)
         } else {
             let mut blocks: Vec<(f64, BlockId)> = plan
                 .plans
@@ -293,17 +494,17 @@ impl CostModel {
                 .map(|p| (self.weight(plan, p.info.id, p.info.width()), p.info.id))
                 .collect();
             blocks.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-            let mut load = vec![0.0f64; n_localities];
+            let mut load = vec![0.0f64; members.len()];
             let mut map = HashMap::with_capacity(blocks.len());
             for (w, id) in blocks {
-                let dest = load
+                let slot = load
                     .iter()
                     .enumerate()
                     .min_by(|a, b| a.1.total_cmp(b.1))
-                    .expect("n_localities >= 1")
+                    .expect("members is nonempty")
                     .0;
-                map.insert(id, dest as LocalityId);
-                load[dest] += w.max(1.0);
+                map.insert(id, members[slot]);
+                load[slot] += w.max(1.0);
             }
             map
         };
@@ -353,15 +554,24 @@ impl CostModel {
             if lvl_pt_steps[l] > 0.0 {
                 let per_pt = lvl_ns[l] / lvl_pt_steps[l];
                 let e = &mut self.level_ns_per_point[l];
+                // Faster decay than the per-block EWMA: the fallback
+                // serves regrid-fresh ids, where yesterday's hotspot
+                // location is exactly the wrong prior.
                 *e = if *e == 0.0 {
                     per_pt
                 } else {
-                    COST_EWMA_ALPHA * per_pt + (1.0 - COST_EWMA_ALPHA) * *e
+                    LEVEL_EWMA_ALPHA * per_pt + (1.0 - LEVEL_EWMA_ALPHA) * *e
                 };
             }
         }
         self.prev_homes = Some(final_homes.clone());
         self.epochs_observed += 1;
+    }
+
+    /// Observed ns/(point·step) fallback for `level` (0.0 = no history).
+    /// Diagnostic accessor; the decay-rate unit test pins its EWMA.
+    pub fn level_estimate(&self, level: usize) -> f64 {
+        self.level_ns_per_point.get(level).copied().unwrap_or(0.0)
     }
 }
 
@@ -411,16 +621,27 @@ impl Drop for LoadBalancer {
 }
 
 /// One balancing decision: sample loads, migrate at most one block from
-/// the busiest to the idlest locality. Returns migrations performed.
+/// the busiest to the idlest *member* locality. Returns migrations
+/// performed. Candidates come from the driver's member set, never the
+/// raw roster: a retired locality reports zero load and would otherwise
+/// be picked as the idlest target — migrating a block behind a detached
+/// port would strand its inputs in a bounce/forward loop.
 fn balance_once(state: &Arc<DriverState>, cfg: &BalanceConfig) -> u64 {
     let load = state.locality_load();
-    if load.len() < 2 {
+    let members = state.members();
+    if members.len() < 2 {
         return 0;
     }
-    let (busy, &max) =
-        load.iter().enumerate().max_by_key(|(_, &w)| w).expect("nonempty");
-    let (idle, &min) =
-        load.iter().enumerate().min_by_key(|(_, &w)| w).expect("nonempty");
+    let (busy, max) = members
+        .iter()
+        .map(|&m| (m, load[m]))
+        .max_by_key(|&(_, w)| w)
+        .expect("members is nonempty");
+    let (idle, min) = members
+        .iter()
+        .map(|&m| (m, load[m]))
+        .min_by_key(|&(_, w)| w)
+        .expect("members is nonempty");
     if busy == idle || (max as f64) <= cfg.imbalance_ratio * (min.max(1) as f64) {
         return 0;
     }
@@ -592,6 +813,140 @@ mod tests {
         let (again, rebalanced2) = model.place(&plan, n);
         assert_eq!(again, adapted, "stable observations must give a stable map");
         assert!(!rebalanced2);
+    }
+
+    #[test]
+    fn assign_on_maps_slabs_onto_member_ids() {
+        let plan = plan_1level();
+        let members: Vec<LocalityId> = vec![0, 3, 5];
+        let by_slot = PlacementPolicy::WeightedSlabs.assign(&plan, 3);
+        let by_member = PlacementPolicy::WeightedSlabs.assign_on(&plan, &members);
+        assert_eq!(by_member.len(), by_slot.len());
+        for (id, slot) in &by_slot {
+            assert_eq!(by_member[id], members[*slot as usize]);
+        }
+        // Only member ids appear in the map.
+        assert!(by_member.values().all(|l| members.contains(l)));
+    }
+
+    #[test]
+    fn place_on_packs_onto_member_ids_and_detects_rebalance() {
+        let plan = plan_1level();
+        let members: Vec<LocalityId> = vec![1, 4];
+        let mut model = CostModel::new();
+        let (cold, rebalanced) = model.place_on(&plan, &members);
+        assert!(!rebalanced);
+        assert!(cold.values().all(|l| members.contains(l)));
+        assert_eq!(cold, PlacementPolicy::WeightedSlabs.assign_on(&plan, &members));
+        // Feed uniform observations, then shrink the member set: the next
+        // map must live entirely on the survivor.
+        let samples: Vec<BlockCostSample> = plan
+            .plans
+            .iter()
+            .map(|p| {
+                let id = p.info.id;
+                let steps = plan.targets[id.level as usize];
+                BlockCostSample { id, width: p.info.width(), ns: 1_000 * steps, steps }
+            })
+            .collect();
+        model.observe(&samples, &cold);
+        let (shrunk, rebalanced) = model.place_on(&plan, &[1]);
+        assert!(shrunk.values().all(|&l| l == 1));
+        assert!(rebalanced, "packing two localities' blocks onto one must move blocks");
+    }
+
+    #[test]
+    fn membership_plan_parses_scripts_and_rejects_garbage() {
+        let p = MembershipPlan::parse("60:+6, 25:-7,25:-6,60:+7").unwrap();
+        assert_eq!(p.events.len(), 4);
+        // Sorted by fraction; ties keep script order.
+        assert_eq!(p.events[0], ScriptedEvent { at_fraction: 0.25, event: MembershipEvent::Leave(7) });
+        assert_eq!(p.events[1], ScriptedEvent { at_fraction: 0.25, event: MembershipEvent::Leave(6) });
+        assert_eq!(p.events[2], ScriptedEvent { at_fraction: 0.60, event: MembershipEvent::Join(6) });
+        assert_eq!(p.events[3], ScriptedEvent { at_fraction: 0.60, event: MembershipEvent::Join(7) });
+        assert!(p.load_trigger.is_none());
+        for bad in ["", "25", "25:-x", "25:7", "150:-1", "-5:-1", "25:~3", "25:-0"] {
+            assert!(MembershipPlan::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+        // Re-joining the anchor is equally meaningless but harmless at
+        // parse time; `+0` on a live member is rejected when applied.
+        assert!(MembershipPlan::parse("25:+0").is_ok());
+    }
+
+    #[test]
+    fn shrink_grow_builds_the_cycle() {
+        let p = MembershipPlan::shrink_grow(8, 4, 0.25, 0.6);
+        assert_eq!(p.events.len(), 8);
+        let leaves: Vec<_> = p.events.iter().filter(|e| matches!(e.event, MembershipEvent::Leave(_))).collect();
+        let joins: Vec<_> = p.events.iter().filter(|e| matches!(e.event, MembershipEvent::Join(_))).collect();
+        assert_eq!(leaves.len(), 4);
+        assert_eq!(joins.len(), 4);
+        assert!(leaves.iter().all(|e| e.at_fraction == 0.25));
+        assert!(joins.iter().all(|e| e.at_fraction == 0.6));
+        assert!(leaves.iter().all(|e| matches!(e.event, MembershipEvent::Leave(l) if (4..8).contains(&(l as usize)))));
+    }
+
+    #[test]
+    fn load_trigger_retires_the_underloaded_non_anchor() {
+        let tr = LoadTrigger { min_members: 2, underload_ratio: 0.5 };
+        // L2 nearly idle vs mean((100+90+5)/3)=65 → 5 < 32.5 → leave(2).
+        let load = vec![100u64, 90, 5];
+        assert_eq!(
+            MembershipPlan::decide_load_trigger(&tr, &load, &[0, 1, 2]),
+            Some(MembershipEvent::Leave(2))
+        );
+        // Balanced machine: no event.
+        assert_eq!(MembershipPlan::decide_load_trigger(&tr, &[50, 60, 55], &[0, 1, 2]), None);
+        // At the floor: never shrink below min_members.
+        assert_eq!(MembershipPlan::decide_load_trigger(&tr, &load, &[0, 2]), None);
+        // The anchor is never the candidate even when idlest.
+        assert_eq!(
+            MembershipPlan::decide_load_trigger(&tr, &[0, 100, 90], &[0, 1, 2]),
+            None
+        );
+    }
+
+    #[test]
+    fn level_fallback_retracks_faster_than_block_term() {
+        // Satellite pin (ROADMAP "CostModel decay fix"): the per-level
+        // fallback must weight fresh observations 3:1, out-decaying the
+        // per-block EWMA's 1:1, so a regridded (fresh-id) block near a
+        // *moved* hotspot is costed from the new regime. Epoch 1 runs at
+        // 1000 ns/(pt·step); epoch 2's hotspot shift raises it to
+        // 10_000. The block term would sit at 5500; the level fallback
+        // must reach 0.75·10000 + 0.25·1000 = 7750.
+        let plan = plan_1level();
+        let mut model = CostModel::new();
+        let samples = |per_pt: u64| -> Vec<BlockCostSample> {
+            plan.plans
+                .iter()
+                .map(|p| {
+                    let id = p.info.id;
+                    let steps = plan.targets[id.level as usize];
+                    BlockCostSample {
+                        id,
+                        width: p.info.width(),
+                        ns: per_pt * p.info.width() as u64 * steps,
+                        steps,
+                    }
+                })
+                .collect()
+        };
+        let (cold, _) = model.place(&plan, 2);
+        model.observe(&samples(1_000), &cold);
+        assert!((model.level_estimate(0) - 1_000.0).abs() < 1e-6, "first observation sets directly");
+        model.observe(&samples(10_000), &cold);
+        let level = model.level_estimate(0);
+        assert!(
+            (level - 7_750.0).abs() < 1e-6,
+            "level fallback must decay at alpha=0.75, got {level}"
+        );
+        let block_ewma = 0.5 * 10_000.0 + 0.5 * 1_000.0; // = 5500, the slower term
+        assert!(
+            level > block_ewma,
+            "level fallback ({level}) must re-track the shifted hotspot faster than \
+             the per-block EWMA ({block_ewma})"
+        );
     }
 
     #[test]

@@ -13,8 +13,26 @@
 //! See the repo's `README.md` for the architecture map and how to build,
 //! run, and regenerate the bench artifacts; `DESIGN.md` for the system
 //! inventory, the per-figure experiment index, and the distribution /
-//! adaptive-placement / ghost-batching design notes (§6–§7); and the
-//! `BENCH_*.json` artifacts for measured results.
+//! adaptive-placement / ghost-batching / elastic-membership design
+//! notes (§6–§8); and the `BENCH_*.json` artifacts for measured results.
+
+// CI runs `cargo clippy -- -D warnings`. Correctness/perf lints stay
+// hot; the style lints below are opted out crate-wide where the house
+// style deliberately differs (multi-array index loops in the numerics,
+// runtime-shaped constructors without `Default`, `len()` on field
+// bundles that cannot be empty, argument-heavy epoch entry points).
+#![allow(
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::new_without_default,
+    clippy::needless_range_loop,
+    clippy::len_without_is_empty,
+    clippy::single_match,
+    clippy::collapsible_else_if,
+    clippy::comparison_chain,
+    clippy::manual_range_contains,
+    clippy::module_inception
+)]
 
 pub mod amr;
 pub mod bench;

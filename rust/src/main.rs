@@ -5,7 +5,9 @@
 //!   fig2..fig9 regenerate the paper's figures (see DESIGN.md §5)
 //!   fpga       §V thread-queue offload study
 //!   dist       distributed AMR strong scaling (1->8 localities), BENCH_2.json
+//!              (--elastic <script> runs a scripted membership-change epoch)
 //!   bench3     ghost batching + adaptive placement study, BENCH_3.json
+//!   bench4     elastic localities study (steady/shrink/grow), BENCH_4.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -15,6 +17,10 @@
 //!   --localities K (distributed localities with a simulated wire)
 //!   --placement slabs|weighted|adaptive (block -> locality policy;
 //!     adaptive feeds each epoch's observed costs into the next map)
+
+// Same style-lint opt-outs as the library crate (see lib.rs): CI runs
+// `cargo clippy -- -D warnings` over both.
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
 
 use std::sync::Arc;
 
@@ -91,6 +97,14 @@ fn main() {
             }
             Err(e) => Err(format!("bench3 experiment failed: {e}")),
         },
+        "bench4" => match bench::write_bench4_json(scale) {
+            Ok((path, table)) => {
+                print!("{table}");
+                println!("BENCH_4.json written to {}", path.display());
+                Ok(())
+            }
+            Err(e) => Err(format!("bench4 experiment failed: {e}")),
+        },
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -106,14 +120,18 @@ fn main() {
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4> [--options]\n\n\
          run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
                        --workers <cores> --backend native|xla --scheduler local|global\n\
                        --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
                        --localities 1 --placement slabs|weighted|adaptive\n\
          dist options: --placement slabs|weighted|adaptive (default slabs + balancer)\n\
+                       --elastic \"25:-3,25:-2,60:+2,60:+3\" (scripted membership\n\
+                       changes at task-completion percentages: -L leave, +L join)\n\
          bench3:       batched vs per-fragment ghost exchange and static vs\n\
                        adaptive placement across 1/2/4/8 localities (BENCH_3.json)\n\
+         bench4:       elastic localities — steady vs shrink-mid-run vs\n\
+                       grow-mid-run across 1/2/4/8 localities (BENCH_4.json)\n\
          env: PX_SCALE=quick|full  PX_BACKEND=native|xla  PX_ARTIFACTS=<dir>"
     );
 }
@@ -122,9 +140,17 @@ fn cmd_dist(args: &Args, scale: bench::Scale) -> Result<(), String> {
     let placement: PlacementPolicy = args
         .get_choice("placement", &PlacementPolicy::CLI_NAMES, "slabs")?
         .parse()?;
+    let elastic = args.get("elastic", "");
     let unknown = args.unknown();
     if !unknown.is_empty() {
         return Err(format!("unknown options: {}", unknown.join(", ")));
+    }
+    if !elastic.is_empty() {
+        // Scripted membership-change epoch, e.g.
+        // `px-amr dist --elastic "25:-3,25:-2,60:+2,60:+3"`.
+        let report = bench::run_elastic_demo(scale, &elastic, placement)?;
+        print!("{report}");
+        return Ok(());
     }
     match bench::write_bench2_json(scale, placement) {
         Ok((path, table)) => {

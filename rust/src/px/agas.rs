@@ -103,6 +103,19 @@ impl Agas {
     pub fn bindings(&self) -> usize {
         self.partitions.iter().map(|p| p.lock().unwrap().entries.len()).sum()
     }
+
+    /// Every GID currently resolving to `locality` — the roster a
+    /// retirement drain must migrate away before the locality's port
+    /// detaches (DESIGN.md §8). Scans all home partitions; not a hot
+    /// path (membership changes are rare relative to resolves).
+    pub fn residents(&self, locality: LocalityId) -> Vec<Gid> {
+        let mut out = Vec::new();
+        for p in &self.partitions {
+            let p = p.lock().unwrap();
+            out.extend(p.entries.iter().filter(|(_, e)| e.locality == locality).map(|(g, _)| *g));
+        }
+        out
+    }
 }
 
 /// Per-locality AGAS client with a read-through cache.
@@ -171,6 +184,15 @@ impl AgasClient {
         self.agas.unbind(gid)?;
         self.cache.write().unwrap().remove(&gid);
         Ok(())
+    }
+
+    /// Drop every cache entry pointing at `locality` — called on all
+    /// clients when that locality retires, so no future resolve routes a
+    /// parcel toward its (about to detach) port. The next resolve of an
+    /// affected GID misses to the home table, which already points at
+    /// the object's post-drain home.
+    pub fn purge_locality(&self, locality: LocalityId) {
+        self.cache.write().unwrap().retain(|_, p| p.locality != locality);
     }
 
     /// Shared service handle (for constructing sibling clients).
@@ -258,6 +280,38 @@ mod tests {
         clients[0].unbind(g).unwrap();
         assert_eq!(agas.bindings(), 0);
         assert!(clients[0].resolve(g).is_err());
+    }
+
+    #[test]
+    fn residents_track_binds_and_migrations() {
+        let (agas, clients) = setup(3);
+        let alloc = GidAllocator::new(0);
+        let a = alloc.alloc(GidKind::Block);
+        let b = alloc.alloc(GidKind::Block);
+        clients[0].bind(a, 0).unwrap();
+        clients[1].bind(b, 1).unwrap();
+        assert_eq!(agas.residents(0), vec![a]);
+        assert_eq!(agas.residents(1), vec![b]);
+        assert!(agas.residents(2).is_empty());
+        clients[0].migrate(a, 2).unwrap();
+        assert!(agas.residents(0).is_empty());
+        assert_eq!(agas.residents(2), vec![a]);
+        clients[1].unbind(b).unwrap();
+        assert!(agas.residents(1).is_empty());
+    }
+
+    #[test]
+    fn purge_locality_forces_home_reads() {
+        let (_agas, clients) = setup(3);
+        let alloc = GidAllocator::new(0);
+        let g = alloc.alloc(GidKind::Block);
+        clients[0].bind(g, 0).unwrap();
+        assert_eq!(clients[2].resolve(g).unwrap().locality, 0); // cached
+        clients[0].migrate(g, 1).unwrap();
+        // Stale without purge; fresh after purging entries that point at 0.
+        assert_eq!(clients[2].resolve(g).unwrap().locality, 0);
+        clients[2].purge_locality(0);
+        assert_eq!(clients[2].resolve(g).unwrap().locality, 1);
     }
 
     #[test]

@@ -113,6 +113,11 @@ pub struct Counters {
     /// least one block relative to where it ended the previous epoch —
     /// the coordinator's cost-feedback loop firing (DESIGN.md §7).
     pub placement_rebalances: Counter,
+    /// AMR block-step tasks whose inputs were completed by an
+    /// `ACT_AMR_PUSH_BATCH` arrival and that were drained straight into
+    /// one `spawn_batch` call — the whole batch publishes a single
+    /// worker wake instead of one per completed task (DESIGN.md §8).
+    pub amr_batch_spawns: Counter,
 }
 
 /// A plain snapshot of all counters, for diffing across a run.
@@ -142,6 +147,7 @@ pub struct CounterSnapshot {
     pub payload_deep_copies: u64,
     pub amr_batched_pushes: u64,
     pub placement_rebalances: u64,
+    pub amr_batch_spawns: u64,
 }
 
 impl Counters {
@@ -172,11 +178,45 @@ impl Counters {
             payload_deep_copies: self.payload_deep_copies.get(),
             amr_batched_pushes: self.amr_batched_pushes.get(),
             placement_rebalances: self.placement_rebalances.get(),
+            amr_batch_spawns: self.amr_batch_spawns.get(),
         }
     }
 }
 
 impl CounterSnapshot {
+    /// Fold another locality's snapshot into this one (runtime-wide
+    /// totals): every event counter sums, high-water marks take the max.
+    /// Lives next to the field list so a new counter cannot be forgotten
+    /// by the aggregation the way a by-hand sum in `runtime.rs` once
+    /// dropped `amr_batched_pushes`/`placement_rebalances`.
+    pub fn absorb(&mut self, s: &CounterSnapshot) {
+        self.threads_spawned += s.threads_spawned;
+        self.threads_completed += s.threads_completed;
+        self.threads_from_parcels += s.threads_from_parcels;
+        self.suspensions += s.suspensions;
+        self.resumptions += s.resumptions;
+        self.steals += s.steals;
+        self.parked_waits += s.parked_waits;
+        self.queue_contended += s.queue_contended;
+        self.queue_cas_retries += s.queue_cas_retries;
+        self.queue_hwm = self.queue_hwm.max(s.queue_hwm);
+        self.parcels_sent += s.parcels_sent;
+        self.parcels_received += s.parcels_received;
+        self.parcels_forwarded += s.parcels_forwarded;
+        self.parcel_bytes += s.parcel_bytes;
+        self.agas_cache_hits += s.agas_cache_hits;
+        self.agas_cache_misses += s.agas_cache_misses;
+        self.migrations += s.migrations;
+        self.lco_triggers += s.lco_triggers;
+        self.xla_calls += s.xla_calls;
+        self.amr_pushes += s.amr_pushes;
+        self.amr_remote_pushes += s.amr_remote_pushes;
+        self.payload_deep_copies += s.payload_deep_copies;
+        self.amr_batched_pushes += s.amr_batched_pushes;
+        self.placement_rebalances += s.placement_rebalances;
+        self.amr_batch_spawns += s.amr_batch_spawns;
+    }
+
     /// Event deltas between two snapshots (self - earlier).
     pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
         CounterSnapshot {
@@ -204,6 +244,7 @@ impl CounterSnapshot {
             payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
             amr_batched_pushes: self.amr_batched_pushes - earlier.amr_batched_pushes,
             placement_rebalances: self.placement_rebalances - earlier.placement_rebalances,
+            amr_batch_spawns: self.amr_batch_spawns - earlier.amr_batch_spawns,
         }
     }
 
@@ -234,6 +275,7 @@ impl CounterSnapshot {
             ("payload_deep_copies", self.payload_deep_copies),
             ("amr_batched_pushes", self.amr_batched_pushes),
             ("placement_rebalances", self.placement_rebalances),
+            ("amr_batch_spawns", self.amr_batch_spawns),
         ];
         let mut out = String::new();
         for (k, v) in rows {
@@ -301,5 +343,25 @@ mod tests {
     fn render_contains_every_field() {
         let s = Counters::default().snapshot().render();
         assert!(s.contains("threads_spawned") && s.contains("xla_calls"));
+        assert!(s.contains("amr_batch_spawns"));
+    }
+
+    #[test]
+    fn absorb_sums_events_and_maxes_hwm() {
+        let a = Counters::default();
+        a.amr_batched_pushes.add(3);
+        a.placement_rebalances.inc();
+        a.amr_batch_spawns.add(2);
+        a.queue_hwm.max(5);
+        let b = Counters::default();
+        b.amr_batched_pushes.add(4);
+        b.amr_batch_spawns.add(1);
+        b.queue_hwm.max(9);
+        let mut total = a.snapshot();
+        total.absorb(&b.snapshot());
+        assert_eq!(total.amr_batched_pushes, 7);
+        assert_eq!(total.placement_rebalances, 1);
+        assert_eq!(total.amr_batch_spawns, 3);
+        assert_eq!(total.queue_hwm, 9);
     }
 }

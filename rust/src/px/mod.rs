@@ -37,7 +37,7 @@ pub use lco::{AndGate, CountingSemaphore, Dataflow, FullEmptyBit, Future, Global
 pub use locality::LocalityCtx;
 pub use net::{NetModel, SimNet};
 pub use parcel::{ActionId, Parcel};
-pub use runtime::{PxConfig, PxRuntime, SchedPolicyKind};
+pub use runtime::{Membership, PxConfig, PxRuntime, SchedPolicyKind};
 pub use sched::{GlobalQueue, LocalPriority, MutexQueue, Policy, Priority, Task};
 pub use thread::{
     global_queue_manager, local_priority_manager, mutex_queue_manager, Spawner, ThreadManager,

@@ -15,6 +15,15 @@
 //! Failure injection: a drop predicate can be installed to test parcel
 //! loss handling in integration tests.
 //!
+//! Ports are a *lifecycle*, not a boot-time constant: elastic membership
+//! (DESIGN.md §8) detaches a retiring locality's port after draining its
+//! in-flight parcels ([`SimNet::drain_to`] + [`SimNet::detach_port`]) and
+//! re-attaches on boot. A parcel that still reaches a detached port —
+//! e.g. a sender that resolved a stale placement in the instants around
+//! retirement — is **bounced** to the anchor locality 0 (whose action
+//! manager hop-forwards it via a fresh AGAS resolve) instead of being
+//! dropped, so retirement can never lose a dataflow input.
+//!
 //! The per-parcel `base_latency` term is the lever behind the AMR
 //! driver's ghost batching (DESIGN.md §7): `n` fragments coalesced into
 //! one parcel pay the base latency once and the bandwidth term for the
@@ -99,6 +108,13 @@ struct NetShared {
     /// Failure injection: parcels for which this returns true are dropped.
     drop_filter: Mutex<Option<Box<dyn Fn(&Parcel) -> bool + Send + Sync>>>,
     dropped: AtomicU64,
+    /// Parcels that arrived at a detached port and were re-delivered to
+    /// the anchor locality's port (elastic-retirement stragglers).
+    bounced: AtomicU64,
+    /// Parcels that arrived at a detached port with no anchor to bounce
+    /// to (only possible if locality 0's port is missing — a protocol
+    /// violation, since the anchor never retires).
+    dead_letters: AtomicU64,
 }
 
 /// The simulated network fabric connecting all localities.
@@ -121,6 +137,8 @@ impl SimNet {
             shutdown: AtomicBool::new(false),
             drop_filter: Mutex::new(None),
             dropped: AtomicU64::new(0),
+            bounced: AtomicU64::new(0),
+            dead_letters: AtomicU64::new(0),
         });
         let net = Arc::new(SimNet { shared: shared.clone(), delivery: Mutex::new(None) });
         let h = std::thread::Builder::new()
@@ -131,11 +149,58 @@ impl SimNet {
         net
     }
 
-    /// Attach locality `l`'s parcel port (called once during runtime boot).
+    /// Attach locality `l`'s parcel port — at runtime boot and again when
+    /// an elastic membership change re-boots a previously retired
+    /// locality. Attaching over a live port is a protocol error.
     pub fn attach_port<F: Fn(Vec<u8>) + Send + Sync + 'static>(&self, l: LocalityId, port: F) {
         let mut ports = self.shared.ports.lock().unwrap();
         assert!(ports[l as usize].is_none(), "port {l} already attached");
         ports[l as usize] = Some(Arc::new(Box::new(port)));
+    }
+
+    /// Detach locality `l`'s parcel port (elastic retirement). Returns
+    /// whether a port was attached. Callers should [`SimNet::drain_to`]
+    /// first; anything that still arrives afterwards is bounced to the
+    /// anchor locality's port rather than lost.
+    pub fn detach_port(&self, l: LocalityId) -> bool {
+        self.shared.ports.lock().unwrap()[l as usize].take().is_some()
+    }
+
+    /// Whether locality `l` currently has a port attached.
+    pub fn has_port(&self, l: LocalityId) -> bool {
+        self.shared.ports.lock().unwrap()[l as usize].is_some()
+    }
+
+    /// Number of endpoint slots this fabric was built with (the roster
+    /// capacity — membership within it is dynamic).
+    pub fn capacity(&self) -> usize {
+        self.shared.ports.lock().unwrap().len()
+    }
+
+    /// Parcels still queued in the wire heap for destination `l`. A
+    /// parcel already popped by the delivery thread is not counted — the
+    /// bounce path covers that residual window.
+    pub fn in_flight_to(&self, l: LocalityId) -> u64 {
+        let heap = self.shared.heap.lock().unwrap();
+        heap.iter().filter(|Reverse(m)| m.dest == l).count() as u64
+    }
+
+    /// Block until no parcel destined for `l` remains in the wire heap
+    /// (the retirement drain), or fail after `timeout`.
+    pub fn drain_to(&self, l: LocalityId, timeout: Duration) -> PxResult<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.in_flight_to(l) == 0 {
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                return Err(PxError::TaskFailed(format!(
+                    "drain of locality {l} timed out with {} parcel(s) in flight",
+                    self.in_flight_to(l)
+                )));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
     }
 
     /// Install a failure-injection predicate (tests). Parcels matching the
@@ -183,6 +248,19 @@ impl SimNet {
         self.shared.dropped.load(Ordering::SeqCst)
     }
 
+    /// Parcels that hit a detached port and were re-delivered via the
+    /// anchor locality (elastic-retirement stragglers; each one is then
+    /// hop-forwarded to its object's current home).
+    pub fn bounced(&self) -> u64 {
+        self.shared.bounced.load(Ordering::SeqCst)
+    }
+
+    /// Parcels lost at a detached port with no anchor to bounce to.
+    /// Stays 0 under the elastic protocol (locality 0 never retires).
+    pub fn dead_letters(&self) -> u64 {
+        self.shared.dead_letters.load(Ordering::SeqCst)
+    }
+
     /// Stop the delivery thread; undelivered parcels are discarded.
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
@@ -222,10 +300,24 @@ fn delivery_loop(sh: Arc<NetShared>) {
             heap.peek().map(|Reverse(t)| t.deliver_at.saturating_duration_since(now))
         };
         for m in due {
-            let port = sh.ports.lock().unwrap()[m.dest as usize].clone();
+            let (port, anchor) = {
+                let ports = sh.ports.lock().unwrap();
+                (ports[m.dest as usize].clone(), ports.first().and_then(|p| p.clone()))
+            };
             match port {
                 Some(p) => p(m.bytes),
-                None => { /* port detached: parcel dropped on the floor */ }
+                None => match anchor {
+                    // Destination retired between send and delivery:
+                    // bounce through the anchor locality, whose action
+                    // manager hop-forwards after a fresh AGAS resolve.
+                    Some(p) if m.dest != 0 => {
+                        sh.bounced.fetch_add(1, Ordering::SeqCst);
+                        p(m.bytes);
+                    }
+                    _ => {
+                        sh.dead_letters.fetch_add(1, Ordering::SeqCst);
+                    }
+                },
             }
             sh.in_flight.fetch_sub(1, Ordering::SeqCst);
         }
@@ -303,6 +395,60 @@ mod tests {
         assert_eq!(Parcel::decode(&got).unwrap().action, 7);
         assert_eq!(net.dropped(), 1);
         assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn detached_port_bounces_to_anchor_and_reattach_restores() {
+        let net = SimNet::new(3, NetModel::instant());
+        let (tx0, rx0) = mpsc::channel();
+        net.attach_port(0, move |b| tx0.send(b).unwrap());
+        let (tx2, rx2) = mpsc::channel();
+        net.attach_port(2, move |b| tx2.send(b).unwrap());
+        // Direct delivery while attached.
+        net.send(2, &parcel(4)).unwrap();
+        rx2.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(net.bounced(), 0);
+        // Retire 2: drain then detach; a straggler bounces to the anchor.
+        net.drain_to(2, Duration::from_secs(2)).unwrap();
+        assert!(net.detach_port(2));
+        assert!(!net.has_port(2));
+        net.send(2, &parcel(4)).unwrap();
+        let bytes = rx0.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(Parcel::decode(&bytes).unwrap(), parcel(4));
+        assert_eq!(net.bounced(), 1);
+        assert_eq!(net.dead_letters(), 0);
+        // Re-boot: attach a fresh port; direct delivery resumes.
+        let (tx2b, rx2b) = mpsc::channel();
+        net.attach_port(2, move |b| tx2b.send(b).unwrap());
+        net.send(2, &parcel(8)).unwrap();
+        rx2b.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(net.bounced(), 1, "re-attached port must receive directly");
+    }
+
+    #[test]
+    fn drain_to_waits_for_destination_parcels_only() {
+        let net = SimNet::new(2, NetModel { base_latency: Duration::from_millis(30), bandwidth_bps: u64::MAX });
+        net.attach_port(0, |_| {});
+        net.attach_port(1, |_| {});
+        net.send(1, &parcel(4)).unwrap();
+        assert_eq!(net.in_flight_to(1), 1);
+        assert_eq!(net.in_flight_to(0), 0);
+        net.drain_to(0, Duration::from_millis(1)).unwrap(); // nothing for 0
+        net.drain_to(1, Duration::from_secs(2)).unwrap();
+        assert_eq!(net.in_flight_to(1), 0);
+    }
+
+    #[test]
+    fn detached_anchor_dead_letters() {
+        let net = SimNet::new(1, NetModel::instant());
+        // No port ever attached at 0: nothing to bounce to.
+        net.send(0, &parcel(2)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while net.dead_letters() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(net.dead_letters(), 1);
+        assert_eq!(net.bounced(), 0);
     }
 
     #[test]

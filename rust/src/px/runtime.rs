@@ -5,7 +5,18 @@
 //! a shared action registry, and the simulated interconnect. This is the
 //! launcher-facing API: the `px-amr` binary and all benches build a
 //! [`PxRuntime`] from a [`PxConfig`] and go.
+//!
+//! Since the elastic-localities refactor "the machine" is no longer the
+//! fixed `0..localities` range: [`PxConfig::localities`] only fixes the
+//! *roster capacity*, while the set of localities actually participating
+//! is a dynamic [`Membership`] — localities retire mid-run (their AGAS
+//! residents drained away, their parcel port detached after the wire
+//! drains) and boot back later (port re-attached, fresh components
+//! registered by the application layer). Every placement decision in the
+//! stack consults [`PxRuntime::membership`] instead of assuming the boot
+//! topology (DESIGN.md §8).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -80,6 +91,130 @@ impl PxConfig {
     }
 }
 
+/// The dynamic membership set of a runtime: which roster localities are
+/// currently *participating* (hosting objects, receiving parcels).
+///
+/// Retirement protocol (ordering is load-bearing; DESIGN.md §8):
+/// application layers first migrate every AGAS resident off the leaving
+/// locality (e.g. [`crate::amr::dataflow_driver::DriverState::retire_locality`]),
+/// then call [`Membership::retire`], which (1) flips the membership flag
+/// and bumps the epoch so no new placement chooses the locality, (2)
+/// purges every AGAS client cache entry still pointing at it, (3) drains
+/// the wire of parcels addressed to it, and (4) detaches its parcel
+/// port. Stragglers that race past all of that are bounced through the
+/// anchor locality by the net (see `px::net`), so retirement never loses
+/// a parcel. Locality 0 is the anchor and can never retire.
+///
+/// Boot is the inverse: re-attach the port, flip the flag, bump the
+/// epoch; the application layer then re-registers its per-locality
+/// components and repacks work onto the grown set.
+pub struct Membership {
+    active: Vec<AtomicBool>,
+    epoch: AtomicU64,
+    net: Arc<SimNet>,
+    localities: Vec<Arc<LocalityCtx>>,
+}
+
+impl Membership {
+    fn new(localities: Vec<Arc<LocalityCtx>>, net: Arc<SimNet>) -> Arc<Membership> {
+        Arc::new(Membership {
+            active: (0..localities.len()).map(|_| AtomicBool::new(true)).collect(),
+            epoch: AtomicU64::new(0),
+            net,
+            localities,
+        })
+    }
+
+    /// Roster capacity fixed at boot (membership moves within it).
+    pub fn capacity(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Whether locality `l` is currently a member.
+    pub fn is_member(&self, l: LocalityId) -> bool {
+        self.active.get(l as usize).map(|a| a.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    /// The current member set, ascending.
+    pub fn members(&self) -> Vec<LocalityId> {
+        (0..self.active.len() as LocalityId).filter(|&l| self.is_member(l)).collect()
+    }
+
+    /// Number of current members.
+    pub fn n_active(&self) -> usize {
+        self.active.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+
+    /// Monotone membership epoch: bumped by every retire/boot. Layers
+    /// that cache a member set compare epochs to detect staleness.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// The retirement rules, checkable without side effects: rejects the
+    /// anchor, a non-member, and the last member. Shared by
+    /// [`retire`](Membership::retire) and by callers that must validate
+    /// *before* performing their own irreversible drain work (the AMR
+    /// driver's membership controller) — one source of truth, so the
+    /// pre-check and the flip can never disagree.
+    pub fn check_retirable(&self, l: LocalityId) -> PxResult<()> {
+        if l == 0 {
+            return Err(PxError::LcoProtocol("anchor locality 0 cannot retire".into()));
+        }
+        if !self.is_member(l) {
+            return Err(PxError::LcoProtocol(format!("locality {l} is not a member")));
+        }
+        if self.n_active() <= 1 {
+            return Err(PxError::LcoProtocol("cannot retire the last member".into()));
+        }
+        Ok(())
+    }
+
+    /// Retire locality `l`: membership flip, AGAS cache purge, wire
+    /// drain, port detach. The caller must already have migrated `l`'s
+    /// AGAS residents away. Errors (and changes nothing) for the anchor,
+    /// a non-member, or the last member.
+    pub fn retire(&self, l: LocalityId) -> PxResult<()> {
+        self.check_retirable(l)?;
+        self.active[l as usize].store(false, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        for ctx in &self.localities {
+            ctx.agas.purge_locality(l);
+        }
+        if let Err(e) = self.net.drain_to(l, Duration::from_secs(10)) {
+            // Roll back the flip: the port stays attached, so membership
+            // must keep agreeing with the fabric (otherwise a later
+            // `boot` would assert on the live port and nothing could
+            // ever recover the slot). The purged caches simply re-fill.
+            self.active[l as usize].store(true, Ordering::SeqCst);
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+            return Err(e);
+        }
+        self.net.detach_port(l);
+        Ok(())
+    }
+
+    /// Boot (or re-boot) locality `l` into the membership: re-attach its
+    /// parcel port and flip the flag. Errors for an existing member or a
+    /// locality outside the roster capacity.
+    pub fn boot(&self, l: LocalityId) -> PxResult<()> {
+        if (l as usize) >= self.capacity() {
+            return Err(PxError::LcoProtocol(format!(
+                "locality {l} outside roster capacity {}",
+                self.capacity()
+            )));
+        }
+        if self.is_member(l) {
+            return Err(PxError::LcoProtocol(format!("locality {l} is already a member")));
+        }
+        let ctx = self.localities[l as usize].clone();
+        self.net.attach_port(l, move |bytes| ctx.on_parcel_bytes(bytes));
+        self.active[l as usize].store(true, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
 /// A booted ParalleX runtime instance.
 pub struct PxRuntime {
     config: PxConfig,
@@ -87,6 +222,7 @@ pub struct PxRuntime {
     managers: Vec<ThreadManager>,
     net: Arc<SimNet>,
     actions: Arc<ActionRegistry>,
+    membership: Arc<Membership>,
     #[allow(dead_code)]
     agas: Arc<Agas>,
 }
@@ -122,7 +258,8 @@ impl PxRuntime {
             localities.push(ctx);
             managers.push(tm);
         }
-        PxRuntime { config, localities, managers, net, actions, agas }
+        let membership = Membership::new(localities.clone(), net.clone());
+        PxRuntime { config, localities, managers, net, actions, membership, agas }
     }
 
     /// The boot configuration.
@@ -149,6 +286,23 @@ impl PxRuntime {
     /// The interconnect (for failure injection in tests).
     pub fn net(&self) -> &Arc<SimNet> {
         &self.net
+    }
+
+    /// The dynamic membership set — which roster localities currently
+    /// participate. Placement layers consult this, never
+    /// `localities().len()`, so the machine can shrink and grow mid-run.
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
+    }
+
+    /// Convenience for [`Membership::retire`].
+    pub fn retire_locality(&self, l: LocalityId) -> PxResult<()> {
+        self.membership.retire(l)
+    }
+
+    /// Convenience for [`Membership::boot`].
+    pub fn boot_locality(&self, l: LocalityId) -> PxResult<()> {
+        self.membership.boot(l)
     }
 
     /// Global quiescence: no task queued or running on any locality and
@@ -201,33 +355,13 @@ impl PxRuntime {
         }
     }
 
-    /// Aggregate counter snapshot over all localities.
+    /// Aggregate counter snapshot over all localities (the full roster —
+    /// retired localities contribute the events they recorded while
+    /// members).
     pub fn counters_total(&self) -> CounterSnapshot {
         let mut total = CounterSnapshot::default();
         for l in &self.localities {
-            let s = l.counters.snapshot();
-            total.threads_spawned += s.threads_spawned;
-            total.threads_completed += s.threads_completed;
-            total.threads_from_parcels += s.threads_from_parcels;
-            total.suspensions += s.suspensions;
-            total.resumptions += s.resumptions;
-            total.steals += s.steals;
-            total.parked_waits += s.parked_waits;
-            total.queue_contended += s.queue_contended;
-            total.queue_cas_retries += s.queue_cas_retries;
-            total.queue_hwm = total.queue_hwm.max(s.queue_hwm);
-            total.parcels_sent += s.parcels_sent;
-            total.parcels_received += s.parcels_received;
-            total.parcels_forwarded += s.parcels_forwarded;
-            total.parcel_bytes += s.parcel_bytes;
-            total.agas_cache_hits += s.agas_cache_hits;
-            total.agas_cache_misses += s.agas_cache_misses;
-            total.migrations += s.migrations;
-            total.lco_triggers += s.lco_triggers;
-            total.xla_calls += s.xla_calls;
-            total.amr_pushes += s.amr_pushes;
-            total.amr_remote_pushes += s.amr_remote_pushes;
-            total.payload_deep_copies += s.payload_deep_copies;
+            total.absorb(&l.counters.snapshot());
         }
         total
     }
@@ -334,6 +468,71 @@ mod tests {
         l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
         rt.wait_quiescent();
         assert_eq!(ran_on.load(std::sync::atomic::Ordering::SeqCst), 2);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn membership_lifecycle_retire_then_reboot() {
+        let rt = PxRuntime::boot(PxConfig { localities: 4, workers_per_locality: 1, ..Default::default() });
+        let m = rt.membership().clone();
+        assert_eq!(m.capacity(), 4);
+        assert_eq!(m.members(), vec![0, 1, 2, 3]);
+        assert_eq!(m.epoch(), 0);
+
+        rt.retire_locality(2).unwrap();
+        assert_eq!(m.members(), vec![0, 1, 3]);
+        assert!(!m.is_member(2));
+        assert_eq!(m.epoch(), 1);
+        assert!(!rt.net().has_port(2));
+
+        rt.boot_locality(2).unwrap();
+        assert_eq!(m.members(), vec![0, 1, 2, 3]);
+        assert_eq!(m.epoch(), 2);
+        assert!(rt.net().has_port(2));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn membership_rules_are_enforced() {
+        let rt = PxRuntime::boot(PxConfig { localities: 2, workers_per_locality: 1, ..Default::default() });
+        let m = rt.membership();
+        assert!(m.retire(0).is_err(), "anchor cannot retire");
+        assert!(m.retire(7).is_err(), "out-of-roster locality is not a member");
+        assert!(m.boot(1).is_err(), "booting a live member is an error");
+        assert!(m.boot(9).is_err(), "boot outside the roster capacity");
+        m.retire(1).unwrap();
+        assert!(m.retire(1).is_err(), "double retire");
+        assert!(m.retire(0).is_err(), "last member cannot retire");
+        m.boot(1).unwrap();
+        assert_eq!(m.members(), vec![0, 1]);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn apply_after_retirement_routes_to_migrated_home() {
+        // Object born on L1, cached by L2, migrated to L0; retiring L1
+        // purges the stale caches, so L2's next apply goes straight to
+        // L0 — no bounce, no forward through the retired port.
+        let rt = PxRuntime::boot(PxConfig { localities: 3, workers_per_locality: 2, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let l2 = rt.locality(2).clone();
+        let ran_on = Arc::new(std::sync::atomic::AtomicU64::new(u64::MAX));
+        let r2 = ran_on.clone();
+        rt.actions().register(1, move |ctx, _| {
+            r2.store(ctx.id as u64, std::sync::atomic::Ordering::SeqCst);
+        });
+        let g = l1.register_component(GidKind::Block, ()).unwrap();
+        assert!(l2.agas.resolve(g).is_ok()); // L2 caches placement = L1
+        let obj = l1.take_component(g).unwrap();
+        l0.install_component(g, obj);
+        l1.agas.migrate(g, 0).unwrap();
+        rt.retire_locality(1).unwrap();
+        l2.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
+        rt.wait_quiescent();
+        assert_eq!(ran_on.load(std::sync::atomic::Ordering::SeqCst), 0);
+        assert_eq!(rt.net().bounced(), 0, "purged caches must route directly");
+        assert_eq!(rt.net().dead_letters(), 0);
         rt.shutdown();
     }
 
