@@ -1,0 +1,24 @@
+//! BENCH 5: crash tolerance — steady vs checkpointed vs one unplanned
+//! locality death mid-run (detection, re-homing, dead-letter replay)
+//! across 2/4/8 localities, emitting `BENCH_5.json` next to its siblings.
+//! Run: `cargo bench --bench bench5_crash` (PX_SCALE=full for paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    match parallex::bench::write_bench5_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[bench5_crash] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[bench5_crash] failed to write BENCH_5.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -61,7 +61,7 @@
 //! [`Spawner::spawn_batch`] call — one worker wake per batch, counted by
 //! `amr_batch_spawns`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -80,6 +80,8 @@ use crate::px::error::{PxError, PxResult};
 use crate::px::gid::{Gid, GidKind, LocalityId};
 use crate::px::lco::Future as PxFuture;
 use crate::px::locality::LocalityCtx;
+use crate::px::parcel::Parcel;
+use crate::px::recovery::{FailureDetector, HeartbeatBoard, Heartbeater};
 use crate::px::runtime::{Membership, PxRuntime};
 use crate::px::sched::Priority;
 use crate::px::thread::Spawner;
@@ -304,6 +306,32 @@ pub struct DriverState {
     /// migration protocol (AGAS flips first, `home` a few instructions
     /// later — see [`DriverState::migrate_block`]).
     home: HashMap<BlockId, AtomicU32>,
+    /// Crash fence (indexed by locality), set by
+    /// [`DriverState::kill_locality`] the instant a locality "dies".
+    /// A fenced locality's queued tasks evaporate on entry (no result
+    /// committed, no `remaining` decrement — the recovery replay re-runs
+    /// them at the block's new home) and its task table refuses inserts,
+    /// so late deliveries re-route instead of landing in lost memory.
+    killed: Vec<AtomicBool>,
+    /// Tasks currently *executing* per locality. Recovery waits for the
+    /// victim's count to reach zero, so every task that slipped past the
+    /// fence has either committed (pruning its checkpoint entries) or
+    /// evaporated before the replay decides what to re-run — this closes
+    /// the double-execution race at task granularity.
+    running: Vec<AtomicU64>,
+    /// The per-epoch checkpoint: a fragment log. Every input delivered to
+    /// a task table is also serialized here (same codec as the wire, so
+    /// `f64` bit patterns are preserved exactly), keyed by task, and
+    /// pruned when the task commits — the log only ever holds the
+    /// in-flight frontier of the dataflow graph. Recovery replays the
+    /// dead locality's slice of it onto the survivors; everything a task
+    /// needs (its own entering state included — `Input::SelfState` is
+    /// just another logged input) reconstructs from here.
+    ckpt: Mutex<HashMap<TaskKey, Vec<Vec<u8>>>>,
+    /// Whether the checkpoint log records. Only crash-tolerant epochs pay
+    /// for it ([`run_epoch_crash`] flips it on before seeding); BENCH_5
+    /// reports the overhead against a log-off steady state.
+    ckpt_on: AtomicBool,
     /// Block → AGAS GID (populated only for multi-locality runs).
     gids: RwLock<HashMap<BlockId, Gid>>,
     /// Per-locality batch-sink GIDs (indexed by locality id; populated
@@ -558,6 +586,10 @@ impl DriverState {
             plan.plans.iter().map(|p| (p.info.id, AtomicU64::new(0))).collect();
         Arc::new(DriverState {
             active: (0..localities.len()).map(|_| AtomicBool::new(true)).collect(),
+            killed: (0..localities.len()).map(|_| AtomicBool::new(false)).collect(),
+            running: (0..localities.len()).map(|_| AtomicU64::new(0)).collect(),
+            ckpt: Mutex::new(HashMap::new()),
+            ckpt_on: AtomicBool::new(false),
             shards,
             home,
             gids: RwLock::new(HashMap::new()),
@@ -712,6 +744,12 @@ impl DriverState {
         if multi && self.home[&id].load(Ordering::SeqCst) as usize != loc {
             return InsertOutcome::NotHome;
         }
+        if multi && self.killed[loc].load(Ordering::SeqCst) {
+            // The locality died: refuse the insert so the caller spins in
+            // its re-route loop (exactly the migration-window behavior)
+            // until recovery points `home` at a survivor.
+            return InsertOutcome::NotHome;
+        }
         if count_push {
             self.shards[loc].ctx.counters.amr_pushes.inc();
         }
@@ -720,6 +758,15 @@ impl DriverState {
             inputs: Vec::with_capacity(4),
         });
         entry.inputs.push(input.clone());
+        if self.ckpt_on.load(Ordering::Relaxed) {
+            // Checkpoint the fragment while still under the shard lock,
+            // so the log can never miss an insert the kill fence let
+            // through (lock order is always shard → ckpt; the replay
+            // path takes ckpt alone before re-inserting).
+            let mut e = Enc::new();
+            enc_input_into(&mut e, k, input);
+            self.ckpt.lock().unwrap().entry(key).or_default().push(e.finish());
+        }
         debug_assert!(
             entry.inputs.len() <= entry.expected,
             "task {id:?}@{k}: {} inputs > expected {}",
@@ -997,6 +1044,18 @@ impl DriverState {
 
     /// Execute one block-step task (on locality `loc`).
     fn run_task(self: &Arc<Self>, loc: usize, sp: &Spawner, id: BlockId, k: u64, inputs: Vec<Input>) {
+        // Crash fence: raise the running count *before* reading the
+        // fence, so `recover_locality`'s running==0 wait (which follows
+        // the SeqCst fence store) cannot miss a task that is about to
+        // commit. A task that observes the fence evaporates — nothing
+        // committed, `remaining` untouched; its checkpoint entries are
+        // intact and the recovery replay re-runs it at the block's new
+        // home, performing the decrement this return skips.
+        self.running[loc].fetch_add(1, Ordering::SeqCst);
+        if self.killed[loc].load(Ordering::SeqCst) {
+            self.running[loc].fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
         let plan = self.plan.clone();
         let p = plan.plan(id);
         let frozen = self
@@ -1070,6 +1129,14 @@ impl DriverState {
                 self.release_due();
             }
         }
+
+        // Commit point: the task consumed its inputs as far as this
+        // epoch is concerned (frozen tasks included), so its checkpoint
+        // fragments will never need replaying — prune them.
+        if self.ckpt_on.load(Ordering::Relaxed) {
+            self.ckpt.lock().unwrap().remove(&(id, k));
+        }
+        self.running[loc].fetch_sub(1, Ordering::SeqCst);
 
         // Epoch completion accounting.
         if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
@@ -1537,6 +1604,176 @@ impl DriverState {
         }
         Ok(moved)
     }
+
+    // -------------------------------------------------- crash tolerance
+
+    /// Crash injection (driver half): fence locality `victim` the
+    /// instant it "dies". No drain, no migration — a task already
+    /// executing runs to its commit point (it counts as pre-crash work;
+    /// [`DriverState::recover_locality`] waits for it), everything
+    /// queued or arriving afterwards evaporates or re-routes. The caller
+    /// completes the failure with the heartbeat halt and
+    /// [`SimNet::kill_port`](crate::px::SimNet::kill_port).
+    pub fn kill_locality(&self, victim: usize) -> PxResult<()> {
+        if self.shards.len() < 2 {
+            return Err(PxError::LcoProtocol("cannot kill on a single-locality runtime".into()));
+        }
+        if victim == 0 {
+            return Err(PxError::LcoProtocol(
+                "locality 0 is the anchor (AGAS service and recovery root) and cannot be killed"
+                    .into(),
+            ));
+        }
+        if victim >= self.shards.len() {
+            return Err(PxError::LcoProtocol(format!(
+                "locality {victim} outside this epoch's roster of {}",
+                self.shards.len()
+            )));
+        }
+        if self.killed[victim].swap(true, Ordering::SeqCst) {
+            return Err(PxError::LcoProtocol(format!("locality {victim} is already dead")));
+        }
+        self.active[victim].store(false, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Crash recovery (driver half): reconstruct the dead locality's
+    /// slice of the epoch onto the survivors, from the fragment-log
+    /// checkpoint. Steps:
+    ///
+    /// 1. wait for the victim's in-flight tasks to drain — each either
+    ///    commits (pruning its log entries) or evaporates on the fence,
+    ///    so afterwards the log is an *exact* list of the work lost;
+    /// 2. discard the victim's partial-input tables (that memory died
+    ///    with the machine; the replay reconstructs every entry);
+    /// 3. LPT-pack every victim-resident block onto the survivors by
+    ///    remaining work, re-binding component, AGAS and driver `home`
+    ///    — the migration protocol minus the source-side drain a live
+    ///    locality would get;
+    /// 4. give the victim's batch sink refuge on a survivor, so batches
+    ///    replayed from the dead-letter queue land on a live component;
+    /// 5. replay the lost blocks' fragment log at their new homes
+    ///    through the ordinary delivery path.
+    ///
+    /// Returns `(blocks recovered, fragments replayed)`. Only the crash
+    /// controller thread calls this (single-migrator invariant).
+    pub fn recover_locality(self: &Arc<Self>, victim: usize) -> PxResult<(u64, u64)> {
+        if !self.killed.get(victim).map(|k| k.load(Ordering::SeqCst)).unwrap_or(false) {
+            return Err(PxError::LcoProtocol(format!(
+                "locality {victim} was never killed — nothing to recover"
+            )));
+        }
+        while self.running[victim].load(Ordering::SeqCst) > 0 {
+            std::thread::yield_now();
+        }
+        let members = self.members();
+        if members.is_empty() {
+            return Err(PxError::LcoProtocol("no surviving locality to recover onto".into()));
+        }
+        for sh in &self.shards[victim].table {
+            sh.lock().unwrap().clear();
+        }
+        let mut loads: HashMap<usize, u64> = members.iter().map(|&m| (m, 0)).collect();
+        let mut moving: Vec<(u64, BlockId)> = Vec::new();
+        for (w, id, home) in self.remaining_rows() {
+            if home == victim {
+                moving.push((w, id)); // keeps remaining_rows' LPT order
+            } else if let Some(e) = loads.get_mut(&home) {
+                *e += w;
+            }
+        }
+        let mut recovered: HashSet<BlockId> = HashSet::with_capacity(moving.len());
+        for (w, id) in moving {
+            let dest = lpt_pick(&members, &loads);
+            let gid = self
+                .gids
+                .read()
+                .unwrap()
+                .get(&id)
+                .copied()
+                .ok_or_else(|| PxError::Unresolved(format!("block {id:?} not AGAS-registered")))?;
+            // The simulated crash severs reachability (port, heartbeats,
+            // task fence), not host RAM: taking the handle out of the
+            // dead store stands in for re-creating the block proxy from
+            // the epoch plan's geometry at the survivor.
+            let handle = self.shards[victim].ctx.component::<BlockHandle>(gid)?;
+            self.shards[dest].ctx.install_component(gid, handle);
+            self.shards[dest].ctx.agas.migrate(gid, dest as LocalityId)?;
+            self.home[&id].store(dest as u32, Ordering::SeqCst);
+            let _ = self.shards[victim].ctx.take_component(gid);
+            if let Some(e) = loads.get_mut(&dest) {
+                *e += w.max(1);
+            }
+            recovered.insert(id);
+        }
+        self.relocate_sink(victim, members[0])?;
+        // Replay the lost slice of the log. Presence in the log is the
+        // exact re-run signal: every task that committed pruned its own
+        // key before the running==0 wait above released, and shadow
+        // tasks complete out of order, so a board-progress filter would
+        // wrongly skip a straggling shadow step — the log does not.
+        let slice: Vec<(TaskKey, Vec<Vec<u8>>)> = {
+            let mut log = self.ckpt.lock().unwrap();
+            let keys: Vec<TaskKey> =
+                log.keys().filter(|(b, _)| recovered.contains(b)).copied().collect();
+            keys.into_iter().map(|key| (key, log.remove(&key).unwrap())).collect()
+        };
+        let mut fragments = 0u64;
+        for ((id, k), frags) in slice {
+            let dest = self.home[&id].load(Ordering::SeqCst) as usize;
+            for bytes in frags {
+                let (k2, input) = decode_input(&bytes)?;
+                debug_assert_eq!(k2, k, "checkpoint log keyed under the wrong step");
+                // No concurrent migrator in a crash epoch, so `dest` is
+                // stable; the loop guards the invariant like migration's
+                // re-delivery does.
+                while !self.push_local(dest, id, k2, &input, false) {
+                    std::thread::yield_now();
+                }
+                fragments += 1;
+            }
+        }
+        self.shards[0].ctx.counters.blocks_recovered.add(recovered.len() as u64);
+        Ok((recovered.len() as u64, fragments))
+    }
+
+    /// Replay every parcel the fabric captured at a quarantined port:
+    /// re-resolve each against post-recovery AGAS and re-send toward the
+    /// object's current home. Each replay is charged to the anchor as
+    /// one `parcels_replayed` *and* one additional `parcels_sent`, so
+    /// the crash-run counter balance is
+    /// `parcels_sent == parcels_received + parcels_replayed`.
+    /// Returns the number replayed; the crash controller sweeps
+    /// repeatedly, because hop-forwards off stale caches can race into
+    /// the quarantined port after the first pass.
+    pub fn replay_dead_letters(&self) -> u64 {
+        let ctx = &self.shards[0].ctx;
+        let captured = ctx.net.take_dead_letters();
+        let mut replayed = 0u64;
+        for (orig_dest, bytes) in captured {
+            let p = match Parcel::decode(&bytes) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("[recovery] dead letter for L{orig_dest} undecodable: {e}");
+                    continue;
+                }
+            };
+            // Post-recovery AGAS points at the new home; an unbound GID
+            // (epoch teardown) falls back to the anchor, whose dispatch
+            // drops unknown objects with a diagnostic instead of hanging.
+            let dest = ctx.agas.refresh(p.dest).map(|pl| pl.locality).unwrap_or(0);
+            match ctx.net.send(dest, &p) {
+                Ok(n) => {
+                    ctx.counters.parcels_sent.inc();
+                    ctx.counters.parcel_bytes.add(n as u64);
+                    ctx.counters.parcels_replayed.inc();
+                    replayed += 1;
+                }
+                Err(e) => eprintln!("[recovery] replay toward L{dest} failed: {e}"),
+            }
+        }
+        replayed
+    }
 }
 
 /// Least-loaded member (ties break toward the lower locality id) — the
@@ -1741,6 +1978,194 @@ impl Drop for ElasticController {
     }
 }
 
+/// One scripted unplanned failure: kill `victim` (no drain, no notice)
+/// once the epoch has completed `at_fraction` of its tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct KillSpec {
+    /// The locality to kill. Never 0: the anchor hosts the AGAS service
+    /// and the recovery root, so [`run_epoch_crash`] rejects it up front.
+    pub victim: LocalityId,
+    /// Task-completion fraction at which the failure fires (0.0–1.0).
+    pub at_fraction: f64,
+}
+
+/// What the crash-tolerance layer did to one epoch — BENCH_5's series.
+#[derive(Debug, Clone, Default)]
+pub struct CrashStats {
+    /// The locality that died.
+    pub killed: LocalityId,
+    /// Tasks the epoch had completed when the failure was injected.
+    pub at_tasks: u64,
+    /// Heartbeat-halt to death-declaration lag (the detector's share of
+    /// the outage).
+    pub detection_latency: Duration,
+    /// Declaration to recovered: forced retire + block re-homing +
+    /// checkpoint replay + first dead-letter sweep.
+    pub recovery_latency: Duration,
+    /// Blocks re-homed off the dead locality.
+    pub blocks_recovered: u64,
+    /// Checkpointed input fragments re-delivered at the new homes.
+    pub fragments_replayed: u64,
+    /// Dead-letter parcels re-resolved and re-sent (all sweeps).
+    pub parcels_replayed: u64,
+    /// Missed heartbeat deadlines the detector observed.
+    pub heartbeats_missed: u64,
+    /// AGAS residents the dead locality stranded, per the runtime's
+    /// forced-retire audit ([`RetireReport`](crate::px::RetireReport)).
+    pub residents_stranded: usize,
+}
+
+/// Monitor thread driving a [`KillSpec`] against a running epoch: hosts
+/// the heartbeat fabric (board, beater, failure detector), injects the
+/// scripted failure, and — once the detector declares the death — runs
+/// recovery end-to-end (membership forced retire, block re-homing +
+/// checkpoint replay, dead-letter sweeps until the epoch completes).
+/// Like the balancer and the membership controller, it is the single
+/// migrating thread of its epoch.
+struct CrashController {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<CrashStats>>,
+}
+
+impl CrashController {
+    fn start(
+        state: Arc<DriverState>,
+        membership: Arc<Membership>,
+        kill: KillSpec,
+    ) -> CrashController {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("px-crash-controller".into())
+            .spawn(move || {
+                let net = state.shards[0].ctx.net.clone();
+                let board = HeartbeatBoard::new(state.n_localities());
+                for l in state.members() {
+                    board.enroll(l as LocalityId);
+                }
+                let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
+                let (tx, rx) = std::sync::mpsc::channel::<LocalityId>();
+                let detector = FailureDetector::spawn(
+                    board.clone(),
+                    Duration::from_micros(500),
+                    4,
+                    state.shards[0].ctx.counters.clone(),
+                    move |l| {
+                        let _ = tx.send(l);
+                    },
+                );
+                let total = state.plan.total_tasks().max(1);
+                let due = (kill.at_fraction * total as f64).ceil() as u64;
+                let mut stats = CrashStats { killed: kill.victim, ..Default::default() };
+                let mut halted_at: Option<Instant> = None;
+                let mut recovered = false;
+
+                // The failure itself: heartbeats stop, the port dies with
+                // no drain (in-flight parcels become dead letters), and
+                // the driver fence keeps the corpse from committing any
+                // further task results.
+                let inject = |stats: &mut CrashStats| -> Instant {
+                    stats.at_tasks = state.tasks_done();
+                    board.halt(kill.victim);
+                    if let Err(e) = state.kill_locality(kill.victim as usize) {
+                        eprintln!("[crash] kill of L{} rejected: {e}", kill.victim);
+                    }
+                    net.kill_port(kill.victim);
+                    Instant::now()
+                };
+                // Everything downstream of the death declaration, in
+                // DESIGN.md §9 order: runtime teardown (forced retire —
+                // cache purge, audit, quarantine), then driver recovery
+                // (re-home + checkpoint replay), then the first
+                // dead-letter sweep.
+                let recover = |stats: &mut CrashStats, halted: Option<Instant>| {
+                    stats.detection_latency = halted.map(|t| t.elapsed()).unwrap_or_default();
+                    let t0 = Instant::now();
+                    match membership.force_retire(kill.victim) {
+                        Ok(rep) => stats.residents_stranded = rep.residents_left,
+                        Err(e) => eprintln!("[crash] forced retire of L{} failed: {e}", kill.victim),
+                    }
+                    match state.recover_locality(kill.victim as usize) {
+                        Ok((blocks, frags)) => {
+                            stats.blocks_recovered = blocks;
+                            stats.fragments_replayed = frags;
+                        }
+                        Err(e) => eprintln!("[crash] recovery of L{} failed: {e}", kill.victim),
+                    }
+                    stats.parcels_replayed += state.replay_dead_letters();
+                    stats.recovery_latency = t0.elapsed();
+                };
+
+                loop {
+                    if halted_at.is_none() && state.tasks_done() >= due {
+                        halted_at = Some(inject(&mut stats));
+                    }
+                    if halted_at.is_some() && !recovered {
+                        match rx.try_recv() {
+                            Ok(dead) if dead == kill.victim => {
+                                recover(&mut stats, halted_at);
+                                recovered = true;
+                            }
+                            // A live member mis-declared (beater thread
+                            // starved past the detector's window): ignore
+                            // — nothing was killed, the epoch is intact.
+                            Ok(other) => {
+                                eprintln!("[crash] spurious death notice for live L{other} ignored")
+                            }
+                            Err(_) => {}
+                        }
+                    } else if recovered {
+                        // Straggler sweeps: hop-forwards off stale caches
+                        // can race into quarantine after the first replay.
+                        stats.parcels_replayed += state.replay_dead_letters();
+                    }
+                    if stop2.load(Ordering::SeqCst) {
+                        if halted_at.is_none() {
+                            // Epoch finished before the scripted fraction:
+                            // inject anyway (the elastic controller's
+                            // leftover-event semantics) so the run still
+                            // exercises and reports the recovery path.
+                            halted_at = Some(inject(&mut stats));
+                        }
+                        if !recovered {
+                            match rx.recv_timeout(Duration::from_secs(5)) {
+                                Ok(dead) if dead == kill.victim => recover(&mut stats, halted_at),
+                                Ok(other) => eprintln!(
+                                    "[crash] spurious death notice for live L{other} ignored"
+                                ),
+                                Err(_) => eprintln!(
+                                    "[crash] detector never declared L{} dead",
+                                    kill.victim
+                                ),
+                            }
+                        }
+                        stats.parcels_replayed += state.replay_dead_letters();
+                        beater.stop();
+                        stats.heartbeats_missed = detector.stop().heartbeats_missed;
+                        return stats;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            })
+            .expect("spawn crash controller");
+        CrashController { stop, handle: Some(handle) }
+    }
+
+    fn stop(mut self) -> CrashStats {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for CrashController {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Build the initial per-block states from the analytic pulse.
 pub fn initial_block_states(plan: &EpochPlan, cfg: &AmrConfig) -> HashMap<BlockId, Fields> {
     let mut out = HashMap::new();
@@ -1785,7 +2210,27 @@ pub fn run_epoch_placed(
     // Place onto the runtime's *current* member set, not the boot roster
     // — a runtime that shrank keeps working, and one that grew is used.
     let placement = opts.policy.assign_on(&plan, &rt.membership().members());
-    run_epoch_at(rt, plan, backend, config, init, placement, opts, None).map(|(out, _, _)| out)
+    run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None)
+        .map(|(out, _, _)| out)
+}
+
+/// As [`run_epoch_placed`], with the per-epoch fragment-log checkpoint
+/// recording (but no failure injected). This is the steady-state cost of
+/// being *ready* to lose a locality — every delivered input fragment is
+/// additionally serialized into the in-memory log and pruned again when
+/// its task commits. BENCH_5 reports this run's wallclock against the
+/// checkpoint-free baseline as the checkpoint overhead.
+pub fn run_epoch_checkpointed(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+) -> Result<AmrOutcome> {
+    let placement = opts.policy.assign_on(&plan, &rt.membership().members());
+    run_epoch_at(rt, plan, backend, config, init, placement, opts, true, None)
+        .map(|(out, _, _)| out)
 }
 
 /// As [`run_epoch_placed`], with the machine itself changing mid-epoch
@@ -1807,7 +2252,7 @@ pub fn run_epoch_elastic(
 ) -> Result<(AmrOutcome, ElasticStats)> {
     let placement = opts.policy.assign_on(&plan, &rt.membership().members());
     let (outcome, _st, stats) =
-        run_epoch_at(rt, plan, backend, config, init, placement, opts, Some(mplan))?;
+        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, Some(mplan))?;
     Ok((outcome, stats.unwrap_or_default()))
 }
 
@@ -1832,9 +2277,144 @@ pub fn run_epoch_adaptive(
     if rebalanced {
         rt.localities()[0].counters.placement_rebalances.inc();
     }
-    let (outcome, st, _) = run_epoch_at(rt, plan, backend, config, init, placement, opts, None)?;
+    let (outcome, st, _) =
+        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None)?;
     model.observe(&st.observed_costs(), &st.homes());
     Ok(outcome)
+}
+
+/// As [`run_epoch_placed`], with one **unplanned locality failure**
+/// injected mid-run (DESIGN.md §9): at the scripted task fraction the
+/// victim's heartbeats halt and its port dies with *no drain* — parcels
+/// in flight toward it are captured as dead letters. The heartbeat
+/// failure detector declares the death after K missed beats, after
+/// which the crash controller force-retires the locality at the runtime
+/// layer (cache purge, audit, quarantine), reconstructs every resident
+/// block on the survivors from the per-epoch fragment-log checkpoint,
+/// and replays the dead letters against repaired AGAS. The epoch then
+/// completes **bitwise identically** to an undisturbed run (pinned by
+/// the kill-mid-epoch property test).
+///
+/// Restrictions, rejected up front with a clear error: multi-locality
+/// runtimes only; the victim must be a non-anchor member (locality 0 is
+/// the AGAS service and recovery root — its death is unrecoverable by
+/// design); free-running schedules only (an evaporated task would wedge
+/// barrier tick accounting, and deadline freezing makes "identical
+/// completion" meaningless).
+pub fn run_epoch_crash(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+    kill: KillSpec,
+) -> Result<(AmrOutcome, CrashStats)> {
+    let n_loc = rt.localities().len();
+    if n_loc < 2 {
+        return Err(crate::anyhow!("crash tolerance requires a multi-locality runtime"));
+    }
+    if kill.victim == 0 {
+        return Err(crate::anyhow!(
+            "locality 0 is the anchor (AGAS service, bounce path and recovery root) and cannot \
+             be crash-recovered; kill a non-anchor locality"
+        ));
+    }
+    if kill.victim as usize >= n_loc {
+        return Err(crate::anyhow!(
+            "kill victim {} outside this runtime's roster of {n_loc}",
+            kill.victim
+        ));
+    }
+    if !rt.membership().is_member(kill.victim) {
+        return Err(crate::anyhow!("kill victim {} is not a current member", kill.victim));
+    }
+    if !(0.0..=1.0).contains(&kill.at_fraction) {
+        return Err(crate::anyhow!("kill fraction {} outside [0, 1]", kill.at_fraction));
+    }
+    if config.barrier {
+        return Err(crate::anyhow!(
+            "barrier-mode epochs cannot survive a crash (an evaporated task would wedge the \
+             global tick accounting); use the barrier-free schedule"
+        ));
+    }
+    if config.deadline.is_some() {
+        return Err(crate::anyhow!(
+            "deadline epochs cannot be crash-recovered (frozen progress has no \
+             bitwise-identical completion to recover to)"
+        ));
+    }
+    let placement = opts.policy.assign_on(&plan, &rt.membership().members());
+    let st =
+        DriverState::new(plan, backend, config, rt.localities(), &placement, opts.batch_pushes);
+    for l in 0..n_loc {
+        if !rt.membership().is_member(l as LocalityId) {
+            st.active[l].store(false, Ordering::SeqCst);
+        }
+    }
+    // The checkpoint log must be recording before the first seed insert
+    // — a fragment delivered before the log opens could never be
+    // replayed.
+    st.ckpt_on.store(true, Ordering::SeqCst);
+    if let Err(e) = st.register_blocks() {
+        st.unregister_blocks();
+        return Err(crate::anyhow!("block registration failed: {e}"));
+    }
+    let controller = CrashController::start(st.clone(), rt.membership().clone(), kill);
+
+    let init: Arc<HashMap<BlockId, Arc<Fields>>> =
+        Arc::new(init.iter().map(|(id, f)| (*id, Arc::new(f.clone()))).collect());
+    let mut by_loc: Vec<Vec<BlockId>> = vec![Vec::new(); n_loc];
+    for p in &st.plan.plans {
+        by_loc[placement[&p.info.id] as usize].push(p.info.id);
+    }
+    for (loc, blocks) in by_loc.into_iter().enumerate() {
+        if blocks.is_empty() {
+            continue;
+        }
+        let st2 = st.clone();
+        let init2 = init.clone();
+        st.shards[loc]
+            .ctx
+            .spawner
+            .spawn_prio(Priority::High, move |_| st2.seed_local(loc, &blocks, &init2));
+    }
+
+    let wait_err: Option<String> = loop {
+        match st.done.wait_timeout(Duration::from_millis(100)) {
+            Some(r) => break r.err().map(|e| format!("epoch failed: {e}")),
+            None => {
+                // A kill never bumps `dropped` — its parcels are captured
+                // and replayed. Only genuine wire loss (`--loss-rate`,
+                // drop filters) lands here, and that is unrecoverable.
+                let dropped = rt.net().dropped();
+                if dropped > 0 {
+                    break Some(format!(
+                        "ghost exchange lost {dropped} parcel(s) in flight; dataflow graph cannot complete"
+                    ));
+                }
+            }
+        }
+    };
+    let stats = controller.stop();
+    rt.wait_quiescent();
+    st.unregister_blocks();
+    if let Some(msg) = wait_err {
+        return Err(crate::anyhow!("{msg}"));
+    }
+    let blocks = st.board.lock().unwrap().clone();
+    crate::ensure!(
+        !st.diverged.load(Ordering::Relaxed),
+        "evolution diverged (supercritical or unstable)"
+    );
+    let outcome = AmrOutcome {
+        blocks,
+        elapsed: st.start.elapsed(),
+        tasks_run: st.tasks_run.load(Ordering::Relaxed),
+        tasks_frozen: st.tasks_frozen.load(Ordering::Relaxed),
+        migrations: stats.blocks_recovered,
+    };
+    Ok((outcome, stats))
 }
 
 /// Shared epoch body: run the dataflow graph under an explicit
@@ -1849,6 +2429,7 @@ fn run_epoch_at(
     init: &HashMap<BlockId, Fields>,
     placement: HashMap<BlockId, LocalityId>,
     opts: &DistAmrOpts,
+    ckpt: bool,
     mplan: Option<&MembershipPlan>,
 ) -> Result<(AmrOutcome, Arc<DriverState>, Option<ElasticStats>)> {
     let n_loc = rt.localities().len();
@@ -1860,6 +2441,11 @@ fn run_epoch_at(
         if !rt.membership().is_member(l as LocalityId) {
             st.active[l].store(false, Ordering::SeqCst);
         }
+    }
+    if ckpt {
+        // Before any seeding: a fragment delivered while the log is
+        // still closed could never be replayed.
+        st.ckpt_on.store(true, Ordering::SeqCst);
     }
     if n_loc > 1 {
         if let Err(e) = st.register_blocks() {
@@ -2972,5 +3558,236 @@ mod tests {
             }
             runtime.shutdown();
         });
+    }
+
+    /// [`NativeBackend`] plus a fixed busy-wait per task — bit-identical
+    /// physics, but a crash epoch runs long enough that injection,
+    /// detection (~2 ms of missed heartbeats) and recovery all land
+    /// mid-run instead of at teardown.
+    struct SpinBackend {
+        spin_us: u64,
+    }
+    impl ComputeBackend for SpinBackend {
+        fn step_exact(
+            &self,
+            m: usize,
+            chi: &[f64],
+            phi: &[f64],
+            pi: &[f64],
+            r: &[f64],
+            dx: f64,
+            dt: f64,
+        ) -> Result<Fields> {
+            let out = NativeBackend.step_exact(m, chi, phi, pi, r, dx, dt)?;
+            let spin = Duration::from_micros(self.spin_us);
+            let t0 = Instant::now();
+            while t0.elapsed() < spin {
+                std::hint::spin_loop();
+            }
+            Ok(out)
+        }
+        fn name(&self) -> &'static str {
+            "native-spin"
+        }
+    }
+
+    /// The crash-run counter balance: nothing lost on the wire (captured
+    /// parcels were all replayed and delivered), dead-letter queue empty,
+    /// zero-copy preserved.
+    fn assert_crash_counters_balanced(runtime: &PxRuntime, tag: &str) {
+        let totals = runtime.counters_total();
+        assert_eq!(runtime.net().dead_letters(), 0, "{tag}: dead letters left unreplayed");
+        assert_eq!(runtime.net().dropped(), 0, "{tag}: a crash captures parcels, never drops");
+        assert_eq!(
+            totals.parcels_sent,
+            totals.parcels_received + totals.parcels_replayed,
+            "{tag}: every sent parcel was delivered or re-sent as a replay (bounced={})",
+            runtime.net().bounced()
+        );
+        assert_eq!(
+            totals.payload_deep_copies, 0,
+            "{tag}: recovery must not deep-copy on the local push path"
+        );
+    }
+
+    #[test]
+    fn kill_mid_epoch_recovers_bitwise_identical() {
+        // The tentpole acceptance check: kill a non-anchor locality
+        // mid-epoch with no drain. The failure detector declares the
+        // death, the victim's blocks are reconstructed on survivors from
+        // the fragment-log checkpoint, dead letters are replayed, and
+        // the run completes bit-for-bit equal to an undisturbed run.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(4, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let kill = KillSpec { victim: 2, at_fraction: 0.35 };
+        let (out, stats) = run_epoch_crash(
+            &runtime,
+            plan,
+            Arc::new(SpinBackend { spin_us: 30 }),
+            cfg,
+            &init,
+            &DistAmrOpts::default(),
+            kill,
+        )
+        .unwrap();
+        assert_outcomes_bitwise_equal(&reference, &out, "kill L2 at 35%");
+        assert_eq!(stats.killed, 2);
+        assert!(stats.blocks_recovered >= 1, "victim hosted blocks: {stats:?}");
+        assert_eq!(out.migrations, stats.blocks_recovered);
+        assert!(
+            !runtime.membership().is_member(2),
+            "the dead locality must end force-retired"
+        );
+        assert!(stats.heartbeats_missed >= 1, "detection needs missed beats: {stats:?}");
+        let totals = runtime.counters_total();
+        assert_eq!(totals.blocks_recovered, stats.blocks_recovered);
+        assert_eq!(totals.parcels_replayed, stats.parcels_replayed);
+        assert!(totals.heartbeats_missed >= stats.heartbeats_missed);
+        assert_crash_counters_balanced(&runtime, "kill L2 at 35%");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn prop_crash_any_victim_any_time_bitwise_identical() {
+        // Tentpole property test: random geometry, roster size, victim
+        // and kill point — the run must always complete bitwise-equal to
+        // the undisturbed single-locality run, with the dead-letter queue
+        // drained and the parcel counters balanced.
+        prop_check("crash recovery invariants", 4, |rng: &mut Rng| {
+            let localities = [4usize, 8][rng.below(2) as usize];
+            let victim = rng.range(1, localities) as LocalityId;
+            let at_fraction = rng.range(10, 60) as f64 / 100.0;
+            let steps = rng.range(2, 5) as u64;
+            let granularity = rng.range(8, 16);
+            let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity };
+            let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+            let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+            let reference = {
+                let runtime = rt(2);
+                let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+                runtime.shutdown();
+                out
+            };
+            let runtime = rt_dist(localities, 2);
+            let plan = Arc::new(EpochPlan::new(h, steps));
+            let init = initial_block_states(&plan, &cfg);
+            let tag = format!("{localities} localities, kill L{victim} at {at_fraction}");
+            let (out, stats) = run_epoch_crash(
+                &runtime,
+                plan,
+                Arc::new(SpinBackend { spin_us: 20 }),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+                KillSpec { victim, at_fraction },
+            )
+            .unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &tag);
+            assert_eq!(stats.killed, victim, "{tag}");
+            assert!(stats.blocks_recovered >= 1, "{tag}: {stats:?}");
+            assert!(!runtime.membership().is_member(victim), "{tag}");
+            assert_crash_counters_balanced(&runtime, &tag);
+            runtime.shutdown();
+        });
+    }
+
+    #[test]
+    fn anchor_death_and_invalid_kills_fail_fast_with_clear_errors() {
+        // Satellite: killing the anchor (or an absurd victim/schedule)
+        // must fail immediately with a diagnostic, never hang the epoch.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 2, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let runtime = rt_dist(2, 1);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let opts = DistAmrOpts::default();
+        let t0 = Instant::now();
+        let check = |res: Result<(AmrOutcome, CrashStats)>, needle: &str| match res {
+            Err(e) => {
+                assert!(e.to_string().contains(needle), "expected '{needle}' in: {e}")
+            }
+            Ok(_) => panic!("kill spec should have been rejected ('{needle}')"),
+        };
+        let kill = |victim: LocalityId, at: f64| KillSpec { victim, at_fraction: at };
+        let be = || Arc::new(NativeBackend);
+        check(
+            run_epoch_crash(&runtime, plan.clone(), be(), cfg, &init, &opts, kill(0, 0.5)),
+            "anchor",
+        );
+        check(
+            run_epoch_crash(&runtime, plan.clone(), be(), cfg, &init, &opts, kill(7, 0.5)),
+            "roster",
+        );
+        check(
+            run_epoch_crash(&runtime, plan.clone(), be(), cfg, &init, &opts, kill(1, 1.5)),
+            "fraction",
+        );
+        let barrier_cfg = AmrConfig { barrier: true, ..cfg };
+        check(
+            run_epoch_crash(&runtime, plan.clone(), be(), barrier_cfg, &init, &opts, kill(1, 0.5)),
+            "barrier",
+        );
+        let deadline_cfg =
+            AmrConfig { deadline: Some(Duration::from_secs(1)), ..cfg };
+        check(
+            run_epoch_crash(&runtime, plan.clone(), be(), deadline_cfg, &init, &opts, kill(1, 0.5)),
+            "deadline",
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "rejections must be immediate, not a hang"
+        );
+        runtime.shutdown();
+        // Single-locality runtimes cannot lose their only member.
+        let single = rt_dist(1, 1);
+        check(
+            run_epoch_crash(&single, plan, be(), cfg, &init, &opts, kill(1, 0.5)),
+            "multi-locality",
+        );
+        single.shutdown();
+    }
+
+    #[test]
+    fn checkpointed_epoch_stays_bitwise_identical_and_zero_copy() {
+        // Satellite for the overhead axis: checkpoint recording on (no
+        // failure injected) must not perturb the physics or the wire.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(4, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let out = run_epoch_checkpointed(
+            &runtime,
+            plan,
+            Arc::new(NativeBackend),
+            cfg,
+            &init,
+            &DistAmrOpts::default(),
+        )
+        .unwrap();
+        assert_outcomes_bitwise_equal(&reference, &out, "checkpointed 4-locality run");
+        let totals = runtime.counters_total();
+        assert_eq!(totals.payload_deep_copies, 0);
+        assert_eq!(runtime.net().dead_letters(), 0);
+        assert_eq!(totals.parcels_sent, totals.parcels_received);
+        runtime.shutdown();
     }
 }

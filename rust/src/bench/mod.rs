@@ -12,8 +12,9 @@ use std::time::{Duration, Instant};
 
 use crate::amr::backend::{make_backend, BackendKind, ComputeBackend};
 use crate::amr::dataflow_driver::{
-    initial_block_states, run, run_epoch, run_epoch_adaptive, run_epoch_elastic,
-    run_epoch_placed, AmrConfig, ElasticStats,
+    initial_block_states, run, run_epoch, run_epoch_adaptive, run_epoch_checkpointed,
+    run_epoch_crash, run_epoch_elastic, run_epoch_placed, AmrConfig, CrashStats, ElasticStats,
+    KillSpec,
 };
 use crate::amr::engine::EpochPlan;
 use crate::amr::mesh::{Hierarchy, MeshConfig, Region};
@@ -1812,6 +1813,421 @@ pub fn run_elastic_demo(
     Ok(report)
 }
 
+// --------------------------- BENCH 5: crash tolerance (DESIGN.md §9)
+
+/// One row of the crash-tolerance experiment: one epoch at a given
+/// roster capacity in one of three modes — `steady` (no checkpoint, the
+/// baseline), `checkpointed` (fragment-log recording on, no failure —
+/// the steady-state cost of crash-readiness) or `kill` (checkpoint on
+/// and one unplanned locality death at 50% task completion, recovered
+/// via detection + re-homing + replay).
+struct CrashRow {
+    capacity: usize,
+    mode: &'static str,
+    victim: Option<u32>,
+    wall: Duration,
+    tasks_run: u64,
+    stats: CrashStats,
+    dead_letters_end: u64,
+    bitwise_match: bool,
+    totals: CounterSnapshot,
+}
+
+/// Measure steady vs checkpointed vs kill-mid-run on the one-level pulse
+/// problem, per roster capacity. Physics must match the single-locality
+/// run bit-for-bit in every row — losing a machine re-places work, never
+/// alters it.
+fn bench5_rows(
+    n0: usize,
+    steps: u64,
+    workers: usize,
+    locality_set: &[usize],
+    backend: Arc<dyn ComputeBackend>,
+) -> Vec<CrashRow> {
+    let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+    let reg = Region { lo: 6 * (n0 - 1) / 10, hi: 10 * (n0 - 1) / 10 };
+    let h = Hierarchy::build(mesh, &[vec![reg]]).expect("bench5 mesh");
+    let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, steps));
+    let init = initial_block_states(&plan, &cfg);
+
+    let reference = {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 1,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::instant(),
+        });
+        let out =
+            run_epoch(&rt, plan.clone(), backend.clone(), cfg, &init).expect("bench5 reference");
+        rt.shutdown();
+        out
+    };
+    let boot = |localities: usize| {
+        PxRuntime::boot(PxConfig {
+            localities,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::cluster_like(),
+        })
+    };
+
+    let mut rows = Vec::new();
+    for &capacity in locality_set {
+        // Steady: no checkpoint — the wallclock baseline.
+        {
+            let rt = boot(capacity);
+            let t0 = Instant::now();
+            let out = run_epoch_placed(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+            )
+            .expect("bench5 steady epoch");
+            rows.push(CrashRow {
+                capacity,
+                mode: "steady",
+                victim: None,
+                wall: t0.elapsed(),
+                tasks_run: out.tasks_run,
+                stats: CrashStats::default(),
+                dead_letters_end: rt.net().dead_letters(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+        // Checkpointed: fragment-log recording on, nothing killed — the
+        // overhead of being ready to lose a locality.
+        {
+            let rt = boot(capacity);
+            let t0 = Instant::now();
+            let out = run_epoch_checkpointed(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+            )
+            .expect("bench5 checkpointed epoch");
+            rows.push(CrashRow {
+                capacity,
+                mode: "checkpointed",
+                victim: None,
+                wall: t0.elapsed(),
+                tasks_run: out.tasks_run,
+                stats: CrashStats::default(),
+                dead_letters_end: rt.net().dead_letters(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+        if capacity < 2 {
+            continue; // a kill needs a survivor
+        }
+        // Kill: one unplanned death at 50% task completion.
+        {
+            let victim = (capacity / 2).max(1) as u32;
+            let rt = boot(capacity);
+            let t0 = Instant::now();
+            let (out, stats) = run_epoch_crash(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init,
+                &DistAmrOpts::default(),
+                KillSpec { victim, at_fraction: 0.5 },
+            )
+            .expect("bench5 kill epoch");
+            rows.push(CrashRow {
+                capacity,
+                mode: "kill",
+                victim: Some(victim),
+                wall: t0.elapsed(),
+                tasks_run: out.tasks_run,
+                stats,
+                dead_letters_end: rt.net().dead_letters(),
+                bitwise_match: reference.bitwise_eq(&out),
+                totals: rt.counters_total(),
+            });
+            rt.shutdown();
+        }
+    }
+    rows
+}
+
+/// Checkpoint overhead for one capacity: (checkpointed − steady) /
+/// steady wallclock, as a percentage. `None` if either row is missing.
+fn bench5_overhead_pct(rows: &[CrashRow], capacity: usize) -> Option<f64> {
+    let wall = |mode: &str| {
+        rows.iter()
+            .find(|r| r.capacity == capacity && r.mode == mode)
+            .map(|r| r.wall.as_secs_f64())
+    };
+    let steady = wall("steady")?;
+    let ckpt = wall("checkpointed")?;
+    Some((ckpt - steady) / steady.max(1e-9) * 100.0)
+}
+
+fn render_bench5_table(rows: &[CrashRow]) -> String {
+    let mut out = String::new();
+    out.push_str("== BENCH 5: crash tolerance — steady vs checkpointed vs kill-mid-run ==\n");
+    out.push_str("(one unplanned locality death at 50% task completion: heartbeats stop, the\n port dies with no drain; the detector declares the death, survivors rebuild\n the lost blocks from the fragment-log checkpoint and replay dead letters;\n physics must match the single-locality run bit-for-bit in every mode)\n");
+    let mut t = Table::new(&[
+        "capacity",
+        "mode",
+        "victim",
+        "wall",
+        "detect ms",
+        "recover ms",
+        "blocks",
+        "frags",
+        "replays",
+        "missed beats",
+        "dead letters",
+        "bitwise",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.capacity.to_string(),
+            r.mode.to_string(),
+            r.victim.map(|v| format!("L{v}")).unwrap_or_else(|| "-".into()),
+            fmt_dur(r.wall),
+            format!("{:.2}", r.stats.detection_latency.as_secs_f64() * 1e3),
+            format!("{:.2}", r.stats.recovery_latency.as_secs_f64() * 1e3),
+            r.stats.blocks_recovered.to_string(),
+            r.stats.fragments_replayed.to_string(),
+            r.stats.parcels_replayed.to_string(),
+            r.stats.heartbeats_missed.to_string(),
+            r.dead_letters_end.to_string(),
+            r.bitwise_match.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    let caps: Vec<usize> = {
+        let mut c: Vec<usize> = rows.iter().map(|r| r.capacity).collect();
+        c.dedup();
+        c
+    };
+    for cap in caps {
+        if let Some(pct) = bench5_overhead_pct(rows, cap) {
+            out.push_str(&format!("checkpoint overhead, {cap} localities: {pct:+.1}%\n"));
+        }
+    }
+    out.push_str(
+        "\nreading: kill rows pay detection (K missed heartbeats) plus a recovery\nrepack/replay, then finish on the survivors; the checkpointed rows bound the\nsteady-state cost of crash-readiness; `dead letters` must end 0 (every\ncaptured parcel replayed) and every row stays bitwise-exact.\n",
+    );
+    out
+}
+
+fn render_bench5_json(scale: Scale, rows: &[CrashRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"crash_tolerance\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!(
+        "  \"scale\": \"{}\",\n",
+        if scale == Scale::Full { "full" } else { "quick" }
+    ));
+    let caps: Vec<usize> = {
+        let mut c: Vec<usize> = rows.iter().map(|r| r.capacity).collect();
+        c.dedup();
+        c
+    };
+    for cap in caps {
+        if let Some(pct) = bench5_overhead_pct(rows, cap) {
+            out.push_str(&format!("  \"checkpoint_overhead_pct_c{cap}\": {pct:.3},\n"));
+        }
+    }
+    out.push_str("  \"series\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"capacity\": {}, \"mode\": \"{}\", \"victim\": {}, \"wall_ms\": {:.3}, \
+             \"tasks_run\": {}, \"detection_ms\": {:.3}, \"recovery_ms\": {:.3}, \
+             \"blocks_recovered\": {}, \"fragments_replayed\": {}, \"parcels_replayed\": {}, \
+             \"heartbeats_missed\": {}, \"residents_stranded\": {}, \"dead_letters_end\": {}, \
+             \"parcels_sent\": {}, \"parcels_received\": {}, \"payload_deep_copies\": {}, \
+             \"bitwise_match_vs_single\": {}}}{}\n",
+            r.capacity,
+            r.mode,
+            r.victim.map(|v| v.to_string()).unwrap_or_else(|| "null".into()),
+            r.wall.as_secs_f64() * 1e3,
+            r.tasks_run,
+            r.stats.detection_latency.as_secs_f64() * 1e3,
+            r.stats.recovery_latency.as_secs_f64() * 1e3,
+            r.stats.blocks_recovered,
+            r.stats.fragments_replayed,
+            r.stats.parcels_replayed,
+            r.stats.heartbeats_missed,
+            r.stats.residents_stranded,
+            r.dead_letters_end,
+            r.totals.parcels_sent,
+            r.totals.parcels_received,
+            r.totals.payload_deep_copies,
+            r.bitwise_match,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The BENCH 5 experiment: human-readable table plus the
+/// machine-readable `BENCH_5.json` body, from one measurement pass.
+pub fn bench5_report(scale: Scale) -> (String, String) {
+    let (n0, steps, workers): (usize, u64, usize) = match scale {
+        Scale::Quick => (401, 6, 2),
+        Scale::Full => (1601, 12, 4),
+    };
+    let rows = bench5_rows(n0, steps, workers, &[2, 4, 8], backend_from_env());
+    (render_bench5_table(&rows), render_bench5_json(scale, &rows))
+}
+
+/// Run the BENCH 5 experiment and write `BENCH_5.json` to
+/// `PX_BENCH5_JSON` (or `<repo>/BENCH_5.json`, next to its siblings).
+/// Returns the path written and the human-readable table.
+pub fn write_bench5_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, String)> {
+    let (table, json) = bench5_report(scale);
+    let path = std::env::var("PX_BENCH5_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_5.json")
+        });
+    std::fs::write(&path, json)?;
+    Ok((path, table))
+}
+
+/// `px-amr dist --kill <L>@<frac>` (optionally `--loss-rate <p>`): run
+/// one distributed AMR epoch with an unplanned locality failure injected
+/// at the given task-completion fraction, and report the recovery
+/// telemetry. With a nonzero loss rate the wire also drops parcels
+/// irrecoverably (seeded), which the epoch must surface as a clean error
+/// rather than a hang — that failure path is part of the demo.
+pub fn run_crash_demo(
+    scale: Scale,
+    kill: &str,
+    loss_rate: f64,
+    policy: PlacementPolicy,
+) -> Result<String, String> {
+    let kill_spec: Option<KillSpec> = if kill.is_empty() {
+        None
+    } else {
+        let (l, f) = kill
+            .split_once('@')
+            .ok_or_else(|| format!("--kill wants <locality>@<fraction>, got `{kill}`"))?;
+        let victim: u32 =
+            l.parse().map_err(|_| format!("--kill locality `{l}` is not an integer"))?;
+        let at_fraction: f64 =
+            f.parse().map_err(|_| format!("--kill fraction `{f}` is not a number"))?;
+        Some(KillSpec { victim, at_fraction })
+    };
+    if !(0.0..=1.0).contains(&loss_rate) {
+        return Err(format!("--loss-rate {loss_rate} outside [0, 1]"));
+    }
+    let (n0, steps, workers): (usize, u64, usize) = match scale {
+        Scale::Quick => (401, 6, 2),
+        Scale::Full => (1601, 12, 4),
+    };
+    let capacity = kill_spec.map(|k| (k.victim as usize + 1).max(4)).unwrap_or(4);
+    let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+    let reg = Region { lo: 6 * (n0 - 1) / 10, hi: 10 * (n0 - 1) / 10 };
+    let h = Hierarchy::build(mesh, &[vec![reg]]).map_err(|e| e.to_string())?;
+    let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, steps));
+    let init = initial_block_states(&plan, &cfg);
+    let backend = backend_from_env();
+    let reference = {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 1,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::instant(),
+        });
+        let out =
+            run_epoch(&rt, plan.clone(), backend.clone(), cfg, &init).map_err(|e| e.to_string())?;
+        rt.shutdown();
+        out
+    };
+    let rt = PxRuntime::boot(PxConfig {
+        localities: capacity,
+        workers_per_locality: workers,
+        policy: SchedPolicyKind::LocalPriority,
+        net: NetModel::cluster_like(),
+    });
+    if loss_rate > 0.0 {
+        rt.net().set_loss_rate(42, loss_rate);
+    }
+    let opts = DistAmrOpts { policy, ..Default::default() };
+    let mut report = String::new();
+    let t0 = Instant::now();
+    let res = match kill_spec {
+        Some(k) => run_epoch_crash(&rt, plan, backend, cfg, &init, &opts, k)
+            .map(|(out, stats)| (out, Some(stats))),
+        None => {
+            run_epoch_placed(&rt, plan, backend, cfg, &init, &opts).map(|out| (out, None))
+        }
+    };
+    let wall = t0.elapsed();
+    match res {
+        Ok((out, stats)) => {
+            report.push_str(&format!(
+                "== px-amr dist crash demo: capacity {capacity}, `{}` placement ==\n",
+                policy.name()
+            ));
+            if let Some(s) = &stats {
+                let mut t = Table::new(&["what", "value"]);
+                t.row(&["killed".into(), format!("L{} (at task {})", s.killed, s.at_tasks)]);
+                t.row(&[
+                    "detection latency".into(),
+                    format!("{:.2} ms", s.detection_latency.as_secs_f64() * 1e3),
+                ]);
+                t.row(&[
+                    "recovery latency".into(),
+                    format!("{:.2} ms", s.recovery_latency.as_secs_f64() * 1e3),
+                ]);
+                t.row(&["blocks recovered".into(), s.blocks_recovered.to_string()]);
+                t.row(&["fragments replayed".into(), s.fragments_replayed.to_string()]);
+                t.row(&["dead letters replayed".into(), s.parcels_replayed.to_string()]);
+                t.row(&["heartbeats missed".into(), s.heartbeats_missed.to_string()]);
+                t.row(&["residents stranded".into(), s.residents_stranded.to_string()]);
+                report.push_str(&t.render());
+            }
+            let totals = rt.counters_total();
+            report.push_str(&format!(
+                "\nwall {}  tasks {}  bitwise vs single-locality: {}\nparcels {} sent / {} received / {} replayed  dead letters now {}\n",
+                fmt_dur(wall),
+                out.tasks_run,
+                reference.bitwise_eq(&out),
+                totals.parcels_sent,
+                totals.parcels_received,
+                totals.parcels_replayed,
+                rt.net().dead_letters(),
+            ));
+            rt.shutdown();
+            Ok(report)
+        }
+        Err(e) if loss_rate > 0.0 => {
+            // Unrecoverable wire loss is *supposed* to fail cleanly.
+            report.push_str(&format!(
+                "epoch failed cleanly after {} (expected under --loss-rate {loss_rate}):\n  {e}\n({} parcel(s) irrecoverably dropped by the seeded loss filter)\n",
+                fmt_dur(wall),
+                rt.net().dropped(),
+            ));
+            rt.shutdown();
+            Ok(report)
+        }
+        Err(e) => {
+            rt.shutdown();
+            Err(e.to_string())
+        }
+    }
+}
+
 // ------------------------------------------------------------- §V FPGA
 
 /// §V: software queue vs FPGA-offloaded global queue on the Fibonacci
@@ -1951,6 +2367,42 @@ mod tests {
             "\"placement_rebalances\"",
             "\"policy\": \"adaptive\"",
             "\"bitwise_match_vs_single\": true",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "unbalanced braces");
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn bench5_json_reports_recovery_telemetry_and_balances_braces() {
+        // Tiny instance of the crash experiment (capacity 2, 2 coarse
+        // steps): steady, checkpointed and kill rows must all stay
+        // bitwise-exact and end with an empty dead-letter queue; the
+        // full [2,4,8] sweep runs in the bench target / CI.
+        use crate::amr::backend::NativeBackend;
+        let rows = bench5_rows(201, 2, 1, &[2], Arc::new(NativeBackend));
+        assert_eq!(rows.len(), 3, "steady + checkpointed + kill");
+        assert!(rows.iter().all(|r| r.bitwise_match), "crash recovery drifted the physics");
+        assert!(rows.iter().all(|r| r.dead_letters_end == 0), "unreplayed dead letters");
+        let kill = rows.iter().find(|r| r.mode == "kill").unwrap();
+        assert_eq!(kill.victim, Some(1));
+        assert_eq!(kill.stats.killed, 1);
+        let j = render_bench5_json(Scale::Quick, &rows);
+        for key in [
+            "\"bench\": \"crash_tolerance\"",
+            "\"checkpoint_overhead_pct_c2\"",
+            "\"mode\": \"steady\"",
+            "\"mode\": \"checkpointed\"",
+            "\"mode\": \"kill\"",
+            "\"detection_ms\"",
+            "\"recovery_ms\"",
+            "\"blocks_recovered\"",
+            "\"fragments_replayed\"",
+            "\"parcels_replayed\"",
+            "\"dead_letters_end\": 0",
+            "\"bitwise_match_vs_single\": true",
+            "\"series\": [",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

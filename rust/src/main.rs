@@ -8,6 +8,7 @@
 //!              (--elastic <script> runs a scripted membership-change epoch)
 //!   bench3     ghost batching + adaptive placement study, BENCH_3.json
 //!   bench4     elastic localities study (steady/shrink/grow), BENCH_4.json
+//!   bench5     crash tolerance study (steady/checkpointed/kill), BENCH_5.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -105,6 +106,14 @@ fn main() {
             }
             Err(e) => Err(format!("bench4 experiment failed: {e}")),
         },
+        "bench5" => match bench::write_bench5_json(scale) {
+            Ok((path, table)) => {
+                print!("{table}");
+                println!("BENCH_5.json written to {}", path.display());
+                Ok(())
+            }
+            Err(e) => Err(format!("bench5 experiment failed: {e}")),
+        },
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -120,7 +129,7 @@ fn main() {
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5> [--options]\n\n\
          run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
                        --workers <cores> --backend native|xla --scheduler local|global\n\
                        --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
@@ -128,10 +137,16 @@ fn print_help() {
          dist options: --placement slabs|weighted|adaptive (default slabs + balancer)\n\
                        --elastic \"25:-3,25:-2,60:+2,60:+3\" (scripted membership\n\
                        changes at task-completion percentages: -L leave, +L join)\n\
+                       --kill <L>@<frac> (kill locality L unplanned at the given\n\
+                       task-completion fraction; detected + recovered, no drain)\n\
+                       --loss-rate <p> (seeded irrecoverable parcel loss — the\n\
+                       epoch must fail cleanly, not hang)\n\
          bench3:       batched vs per-fragment ghost exchange and static vs\n\
                        adaptive placement across 1/2/4/8 localities (BENCH_3.json)\n\
          bench4:       elastic localities — steady vs shrink-mid-run vs\n\
                        grow-mid-run across 1/2/4/8 localities (BENCH_4.json)\n\
+         bench5:       crash tolerance — steady vs checkpointed vs one unplanned\n\
+                       locality death mid-run across 2/4/8 localities (BENCH_5.json)\n\
          env: PX_SCALE=quick|full  PX_BACKEND=native|xla  PX_ARTIFACTS=<dir>"
     );
 }
@@ -141,9 +156,22 @@ fn cmd_dist(args: &Args, scale: bench::Scale) -> Result<(), String> {
         .get_choice("placement", &PlacementPolicy::CLI_NAMES, "slabs")?
         .parse()?;
     let elastic = args.get("elastic", "");
+    let kill = args.get("kill", "");
+    let loss_rate: f64 = args.get_parse("loss-rate", 0.0)?;
     let unknown = args.unknown();
     if !unknown.is_empty() {
         return Err(format!("unknown options: {}", unknown.join(", ")));
+    }
+    if !kill.is_empty() || loss_rate > 0.0 {
+        // Failure-injection epoch, e.g. `px-amr dist --kill 2@0.35`
+        // (unplanned death of locality 2 at 35% task completion) or
+        // `px-amr dist --loss-rate 0.01` (irrecoverable wire loss).
+        if !elastic.is_empty() {
+            return Err("--kill/--loss-rate and --elastic are separate demos".into());
+        }
+        let report = bench::run_crash_demo(scale, &kill, loss_rate, placement)?;
+        print!("{report}");
+        return Ok(());
     }
     if !elastic.is_empty() {
         // Scripted membership-change epoch, e.g.

@@ -118,6 +118,24 @@ pub struct Counters {
     /// one `spawn_batch` call — the whole batch publishes a single
     /// worker wake instead of one per completed task (DESIGN.md §8).
     pub amr_batch_spawns: Counter,
+    /// Parcels that arrived at a gracefully detached port and were
+    /// redirected to the anchor locality (the hop-forward fallback).
+    /// Folded in from `SimNet::bounced()` by `counters_total`.
+    pub bounced: Counter,
+    /// Parcels whose destination port was gone with no anchor fallback —
+    /// quarantined arrivals held for replay plus true discards. Folded in
+    /// from `SimNet::dead_letters()` by `counters_total`; ends at 0 after
+    /// a successful recovery replay.
+    pub dead_letters: Counter,
+    /// Dead-lettered parcels re-resolved against post-recovery AGAS and
+    /// re-sent by the recovery subsystem (DESIGN.md §9).
+    pub parcels_replayed: Counter,
+    /// AGAS Block residents reconstructed onto survivors from the
+    /// per-epoch checkpoint after an unplanned locality death.
+    pub blocks_recovered: Counter,
+    /// Heartbeat deadlines a member missed before the failure detector
+    /// declared it dead (K consecutive misses trigger recovery).
+    pub heartbeats_missed: Counter,
 }
 
 /// A plain snapshot of all counters, for diffing across a run.
@@ -148,6 +166,11 @@ pub struct CounterSnapshot {
     pub amr_batched_pushes: u64,
     pub placement_rebalances: u64,
     pub amr_batch_spawns: u64,
+    pub bounced: u64,
+    pub dead_letters: u64,
+    pub parcels_replayed: u64,
+    pub blocks_recovered: u64,
+    pub heartbeats_missed: u64,
 }
 
 impl Counters {
@@ -179,6 +202,11 @@ impl Counters {
             amr_batched_pushes: self.amr_batched_pushes.get(),
             placement_rebalances: self.placement_rebalances.get(),
             amr_batch_spawns: self.amr_batch_spawns.get(),
+            bounced: self.bounced.get(),
+            dead_letters: self.dead_letters.get(),
+            parcels_replayed: self.parcels_replayed.get(),
+            blocks_recovered: self.blocks_recovered.get(),
+            heartbeats_missed: self.heartbeats_missed.get(),
         }
     }
 }
@@ -215,6 +243,11 @@ impl CounterSnapshot {
         self.amr_batched_pushes += s.amr_batched_pushes;
         self.placement_rebalances += s.placement_rebalances;
         self.amr_batch_spawns += s.amr_batch_spawns;
+        self.bounced += s.bounced;
+        self.dead_letters += s.dead_letters;
+        self.parcels_replayed += s.parcels_replayed;
+        self.blocks_recovered += s.blocks_recovered;
+        self.heartbeats_missed += s.heartbeats_missed;
     }
 
     /// Event deltas between two snapshots (self - earlier).
@@ -245,6 +278,14 @@ impl CounterSnapshot {
             amr_batched_pushes: self.amr_batched_pushes - earlier.amr_batched_pushes,
             placement_rebalances: self.placement_rebalances - earlier.placement_rebalances,
             amr_batch_spawns: self.amr_batch_spawns - earlier.amr_batch_spawns,
+            bounced: self.bounced - earlier.bounced,
+            // Non-monotone by design: a recovery replay drains captured
+            // dead letters back out of the tally, so a later snapshot can
+            // be smaller than an earlier one.
+            dead_letters: self.dead_letters.saturating_sub(earlier.dead_letters),
+            parcels_replayed: self.parcels_replayed - earlier.parcels_replayed,
+            blocks_recovered: self.blocks_recovered - earlier.blocks_recovered,
+            heartbeats_missed: self.heartbeats_missed - earlier.heartbeats_missed,
         }
     }
 
@@ -276,6 +317,11 @@ impl CounterSnapshot {
             ("amr_batched_pushes", self.amr_batched_pushes),
             ("placement_rebalances", self.placement_rebalances),
             ("amr_batch_spawns", self.amr_batch_spawns),
+            ("bounced", self.bounced),
+            ("dead_letters", self.dead_letters),
+            ("parcels_replayed", self.parcels_replayed),
+            ("blocks_recovered", self.blocks_recovered),
+            ("heartbeats_missed", self.heartbeats_missed),
         ];
         let mut out = String::new();
         for (k, v) in rows {
@@ -344,6 +390,9 @@ mod tests {
         let s = Counters::default().snapshot().render();
         assert!(s.contains("threads_spawned") && s.contains("xla_calls"));
         assert!(s.contains("amr_batch_spawns"));
+        assert!(s.contains("dead_letters") && s.contains("parcels_replayed"));
+        assert!(s.contains("blocks_recovered") && s.contains("heartbeats_missed"));
+        assert!(s.contains("bounced"));
     }
 
     #[test]
@@ -353,15 +402,26 @@ mod tests {
         a.placement_rebalances.inc();
         a.amr_batch_spawns.add(2);
         a.queue_hwm.max(5);
+        a.parcels_replayed.add(2);
+        a.blocks_recovered.inc();
         let b = Counters::default();
         b.amr_batched_pushes.add(4);
         b.amr_batch_spawns.add(1);
         b.queue_hwm.max(9);
+        b.parcels_replayed.add(3);
+        b.heartbeats_missed.add(5);
+        b.dead_letters.inc();
+        b.bounced.add(2);
         let mut total = a.snapshot();
         total.absorb(&b.snapshot());
         assert_eq!(total.amr_batched_pushes, 7);
         assert_eq!(total.placement_rebalances, 1);
         assert_eq!(total.amr_batch_spawns, 3);
         assert_eq!(total.queue_hwm, 9);
+        assert_eq!(total.parcels_replayed, 5);
+        assert_eq!(total.blocks_recovered, 1);
+        assert_eq!(total.heartbeats_missed, 5);
+        assert_eq!(total.dead_letters, 1);
+        assert_eq!(total.bounced, 2);
     }
 }

@@ -10,6 +10,8 @@
 //! * [`lco`] — Local Control Objects (future, dataflow, mutex, semaphore,
 //!   full-empty bit, and-gate, global barrier)
 //! * [`counters`] — the performance-counter monitoring framework
+//! * [`recovery`] — heartbeat failure detection for unplanned locality
+//!   death (the crash-tolerance layer over elastic membership)
 //! * [`locality`] / [`runtime`] — composition into localities and the
 //!   bootable multi-locality runtime
 
@@ -23,6 +25,7 @@ pub mod lockfree;
 pub mod locality;
 pub mod net;
 pub mod parcel;
+pub mod recovery;
 pub mod runtime;
 pub mod sched;
 pub mod thread;
@@ -37,7 +40,8 @@ pub use lco::{AndGate, CountingSemaphore, Dataflow, FullEmptyBit, Future, Global
 pub use locality::LocalityCtx;
 pub use net::{NetModel, SimNet};
 pub use parcel::{ActionId, Parcel};
-pub use runtime::{Membership, PxConfig, PxRuntime, SchedPolicyKind};
+pub use recovery::{DeathNotice, DetectorStats, FailureDetector, HeartbeatBoard, Heartbeater};
+pub use runtime::{Membership, PxConfig, PxRuntime, RetireReport, SchedPolicyKind};
 pub use sched::{GlobalQueue, LocalPriority, MutexQueue, Policy, Priority, Task};
 pub use thread::{
     global_queue_manager, local_priority_manager, mutex_queue_manager, Spawner, ThreadManager,

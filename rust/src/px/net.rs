@@ -96,6 +96,25 @@ impl Ord for InFlight {
 
 type PortFn = Box<dyn Fn(Vec<u8>) + Send + Sync>;
 
+/// splitmix64 stream for the seeded loss model — reproducible chaos
+/// without pulling a `rand` dependency into the offline build.
+struct LossState {
+    state: u64,
+    p: f64,
+}
+
+impl LossState {
+    /// Advance the stream; true when the next parcel should be lost.
+    fn lose_next(&mut self) -> bool {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        ((z >> 11) as f64 / (1u64 << 53) as f64) < self.p
+    }
+}
+
 struct NetShared {
     model: NetModel,
     heap: Mutex<BinaryHeap<Reverse<InFlight>>>,
@@ -107,7 +126,19 @@ struct NetShared {
     shutdown: AtomicBool,
     /// Failure injection: parcels for which this returns true are dropped.
     drop_filter: Mutex<Option<Box<dyn Fn(&Parcel) -> bool + Send + Sync>>>,
+    /// Seeded probabilistic wire loss (chaos runs); independent of and in
+    /// addition to the predicate filter above.
+    loss: Mutex<Option<LossState>>,
     dropped: AtomicU64,
+    /// Per-destination quarantine (crash injection). A parcel due for a
+    /// quarantined locality is *captured* — bytes retained in
+    /// `dead_queue` for recovery replay — instead of bounced to the
+    /// anchor: bouncing during the recovery window would hop-forward
+    /// against a stale AGAS view that still names the dead home.
+    quarantined: Mutex<Vec<bool>>,
+    /// Captured `(dest, bytes)` of parcels that hit a quarantined port,
+    /// drained by [`SimNet::take_dead_letters`] for replay.
+    dead_queue: Mutex<Vec<(LocalityId, Vec<u8>)>>,
     /// Parcels that arrived at a detached port and were re-delivered to
     /// the anchor locality's port (elastic-retirement stragglers).
     bounced: AtomicU64,
@@ -136,7 +167,10 @@ impl SimNet {
             seq: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             drop_filter: Mutex::new(None),
+            loss: Mutex::new(None),
             dropped: AtomicU64::new(0),
+            quarantined: Mutex::new(vec![false; n_localities]),
+            dead_queue: Mutex::new(Vec::new()),
             bounced: AtomicU64::new(0),
             dead_letters: AtomicU64::new(0),
         });
@@ -156,6 +190,9 @@ impl SimNet {
         let mut ports = self.shared.ports.lock().unwrap();
         assert!(ports[l as usize].is_none(), "port {l} already attached");
         ports[l as usize] = Some(Arc::new(Box::new(port)));
+        // A reboot revives a previously killed slot: lift the quarantine
+        // so deliveries flow directly again.
+        self.shared.quarantined.lock().unwrap()[l as usize] = false;
     }
 
     /// Detach locality `l`'s parcel port (elastic retirement). Returns
@@ -169,6 +206,34 @@ impl SimNet {
     /// Whether locality `l` currently has a port attached.
     pub fn has_port(&self, l: LocalityId) -> bool {
         self.shared.ports.lock().unwrap()[l as usize].is_some()
+    }
+
+    /// Crash injection: force-detach locality `l`'s port with **no
+    /// drain** and quarantine the slot. Unlike [`SimNet::detach_port`]
+    /// (graceful retirement), parcels already on the wire for `l` are not
+    /// bounced to the anchor — they are captured as dead letters for the
+    /// recovery subsystem to replay once AGAS has been repaired
+    /// ([`SimNet::take_dead_letters`]). Returns whether a port was live.
+    pub fn kill_port(&self, l: LocalityId) -> bool {
+        // Quarantine before detaching so no delivery slips through the
+        // `None`-port window into the anchor-bounce path.
+        self.shared.quarantined.lock().unwrap()[l as usize] = true;
+        self.shared.ports.lock().unwrap()[l as usize].take().is_some()
+    }
+
+    /// Whether locality `l` is quarantined (killed and not yet re-booted).
+    pub fn is_quarantined(&self, l: LocalityId) -> bool {
+        self.shared.quarantined.lock().unwrap()[l as usize]
+    }
+
+    /// Drain the captured dead letters for replay. Each entry is the
+    /// original destination and the serialized parcel bytes, in delivery
+    /// order. The [`SimNet::dead_letters`] tally is decremented by the
+    /// number drained, so a successful replay returns it to 0.
+    pub fn take_dead_letters(&self) -> Vec<(LocalityId, Vec<u8>)> {
+        let out = std::mem::take(&mut *self.shared.dead_queue.lock().unwrap());
+        self.shared.dead_letters.fetch_sub(out.len() as u64, Ordering::SeqCst);
+        out
     }
 
     /// Number of endpoint slots this fabric was built with (the roster
@@ -209,6 +274,18 @@ impl SimNet {
         *self.shared.drop_filter.lock().unwrap() = Some(Box::new(f));
     }
 
+    /// Install a seeded probabilistic drop filter: each send is lost with
+    /// probability `p`, decided by a splitmix64 stream started at `seed`,
+    /// so a chaos run replays bit-for-bit from the CLI (`--loss-rate`).
+    /// Lost parcels bump [`SimNet::dropped`] exactly like the predicate
+    /// filter — this injects *unrecoverable* wire loss, which the AMR
+    /// driver detects and surfaces as an error rather than a hang.
+    /// `p <= 0` clears the model.
+    pub fn set_loss_rate(&self, seed: u64, p: f64) {
+        *self.shared.loss.lock().unwrap() =
+            if p <= 0.0 { None } else { Some(LossState { state: seed, p }) };
+    }
+
     /// Send a parcel: serialize, apply the wire model, schedule delivery.
     pub fn send(&self, dest: LocalityId, parcel: &Parcel) -> PxResult<usize> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
@@ -216,6 +293,12 @@ impl SimNet {
         }
         if let Some(f) = &*self.shared.drop_filter.lock().unwrap() {
             if f(parcel) {
+                self.shared.dropped.fetch_add(1, Ordering::SeqCst);
+                return Ok(0);
+            }
+        }
+        if let Some(ls) = &mut *self.shared.loss.lock().unwrap() {
+            if ls.lose_next() {
                 self.shared.dropped.fetch_add(1, Ordering::SeqCst);
                 return Ok(0);
             }
@@ -255,8 +338,11 @@ impl SimNet {
         self.shared.bounced.load(Ordering::SeqCst)
     }
 
-    /// Parcels lost at a detached port with no anchor to bounce to.
-    /// Stays 0 under the elastic protocol (locality 0 never retires).
+    /// Parcels currently held as dead letters: quarantined-port captures
+    /// awaiting replay, plus parcels lost at a detached port with no
+    /// anchor to bounce to (only possible if locality 0's port is
+    /// missing). Returns to 0 after a successful recovery replay; stays 0
+    /// outright under the graceful elastic protocol.
     pub fn dead_letters(&self) -> u64 {
         self.shared.dead_letters.load(Ordering::SeqCst)
     }
@@ -300,6 +386,13 @@ fn delivery_loop(sh: Arc<NetShared>) {
             heap.peek().map(|Reverse(t)| t.deliver_at.saturating_duration_since(now))
         };
         for m in due {
+            if sh.quarantined.lock().unwrap()[m.dest as usize] {
+                // Crash quarantine: hold the bytes for recovery replay.
+                sh.dead_letters.fetch_add(1, Ordering::SeqCst);
+                sh.dead_queue.lock().unwrap().push((m.dest, m.bytes));
+                sh.in_flight.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
             let (port, anchor) = {
                 let ports = sh.ports.lock().unwrap();
                 (ports[m.dest as usize].clone(), ports.first().and_then(|p| p.clone()))
@@ -449,6 +542,75 @@ mod tests {
         }
         assert_eq!(net.dead_letters(), 1);
         assert_eq!(net.bounced(), 0);
+    }
+
+    #[test]
+    fn kill_port_quarantines_and_captures_dead_letters() {
+        let net = SimNet::new(3, NetModel::instant());
+        let (tx0, rx0) = mpsc::channel();
+        net.attach_port(0, move |b| tx0.send(b).unwrap());
+        net.attach_port(2, |_| {});
+        // Hard kill: no drain, no bounce — arrivals are captured.
+        assert!(net.kill_port(2));
+        assert!(net.is_quarantined(2));
+        assert!(!net.has_port(2));
+        net.send(2, &parcel(4)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while net.dead_letters() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(net.dead_letters(), 1);
+        assert_eq!(net.bounced(), 0, "quarantined arrivals must not bounce");
+        assert!(rx0.try_recv().is_err(), "anchor must not see quarantined parcels");
+        // Replay drain: bytes come back intact, tally returns to 0.
+        let dead = net.take_dead_letters();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].0, 2);
+        assert_eq!(Parcel::decode(&dead[0].1).unwrap(), parcel(4));
+        assert_eq!(net.dead_letters(), 0);
+        assert!(net.take_dead_letters().is_empty());
+    }
+
+    #[test]
+    fn reattach_after_kill_lifts_quarantine() {
+        let net = SimNet::new(2, NetModel::instant());
+        net.attach_port(1, |_| {});
+        assert!(net.kill_port(1));
+        let (tx, rx) = mpsc::channel();
+        net.attach_port(1, move |b| tx.send(b).unwrap());
+        assert!(!net.is_quarantined(1));
+        net.send(1, &parcel(4)).unwrap();
+        rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(net.dead_letters(), 0);
+    }
+
+    #[test]
+    fn loss_rate_is_seed_deterministic() {
+        let run = |seed: u64| {
+            let net = SimNet::new(1, NetModel::instant());
+            net.attach_port(0, |_| {});
+            net.set_loss_rate(seed, 0.3);
+            for _ in 0..200 {
+                net.send(0, &parcel(4)).unwrap();
+            }
+            net.dropped()
+        };
+        let a = run(42);
+        let b = run(42);
+        let c = run(43);
+        assert_eq!(a, b, "same seed must lose the same parcels");
+        assert!(a > 0 && a < 200, "p=0.3 over 200 sends should lose some, not all: {a}");
+        // A different seed exercises a different stream (overwhelmingly).
+        assert!(a != c || a > 0);
+        // p <= 0 clears the model.
+        let net = SimNet::new(1, NetModel::instant());
+        net.attach_port(0, |_| {});
+        net.set_loss_rate(7, 0.9);
+        net.set_loss_rate(7, 0.0);
+        for _ in 0..50 {
+            net.send(0, &parcel(2)).unwrap();
+        }
+        assert_eq!(net.dropped(), 0);
     }
 
     #[test]

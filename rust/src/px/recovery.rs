@@ -1,0 +1,355 @@
+//! Failure detection for unplanned locality death (DESIGN.md §9).
+//!
+//! PR 4's elastic membership assumed *cooperative* departure: a retiring
+//! locality drains its blocks and its wire before its port detaches. A
+//! production machine gives no such notice, so this module adds the
+//! ParalleX analogue of a cluster membership service:
+//!
+//! * [`HeartbeatBoard`] — one monotone beat slot per roster locality.
+//!   Each live member stamps its slot; a crash is *modeled* by halting
+//!   the member's beat (plus [`crate::px::SimNet::kill_port`] on the
+//!   wire side).
+//! * [`Heartbeater`] — the in-process stand-in for every member's beat
+//!   loop: one thread stamps all slots still marked beating, so halting
+//!   a slot is exactly "that machine stopped".
+//! * [`FailureDetector`] — the anchor-side monitor. Every poll interval
+//!   it compares each watched slot against the last value it saw; a
+//!   slot that fails to advance for `k_misses` consecutive polls is
+//!   declared dead and the caller's `on_death` hook runs (the driver
+//!   hooks recovery — forced retire, checkpoint replay, dead-letter
+//!   replay — into it).
+//!
+//! The anchor (locality 0) is never declared dead: it is the bounce and
+//! recovery root, and killing it is rejected up front by the runtime
+//! (`Membership::check_retirable`) rather than detected here.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::counters::Counters;
+use super::gid::LocalityId;
+
+/// Per-locality monotone heartbeat slots shared by members and monitor.
+pub struct HeartbeatBoard {
+    beats: Vec<AtomicU64>,
+    /// Member still stamping its beat. The crash switch flips this off —
+    /// beats stop exactly like a machine losing power.
+    beating: Vec<AtomicBool>,
+    /// Failure detector monitors this slot. Graceful retirement (and a
+    /// declared death) unwatch; a slot can be halted but still watched —
+    /// that is precisely the crash the detector exists to catch.
+    watched: Vec<AtomicBool>,
+}
+
+impl HeartbeatBoard {
+    /// Board for a roster of `capacity` localities; no slot enrolled.
+    pub fn new(capacity: usize) -> Arc<HeartbeatBoard> {
+        Arc::new(HeartbeatBoard {
+            beats: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            beating: (0..capacity).map(|_| AtomicBool::new(false)).collect(),
+            watched: (0..capacity).map(|_| AtomicBool::new(false)).collect(),
+        })
+    }
+
+    /// Roster capacity.
+    pub fn capacity(&self) -> usize {
+        self.beats.len()
+    }
+
+    /// Enroll `l` in the protocol: it beats and the detector watches it.
+    pub fn enroll(&self, l: LocalityId) {
+        self.beating[l as usize].store(true, Ordering::SeqCst);
+        self.watched[l as usize].store(true, Ordering::SeqCst);
+    }
+
+    /// Crash switch: `l` stops beating but stays watched — the detector
+    /// will notice after `k_misses` polls.
+    pub fn halt(&self, l: LocalityId) {
+        self.beating[l as usize].store(false, Ordering::SeqCst);
+    }
+
+    /// Graceful exit (or post-mortem): stop monitoring `l` entirely.
+    pub fn unwatch(&self, l: LocalityId) {
+        self.beating[l as usize].store(false, Ordering::SeqCst);
+        self.watched[l as usize].store(false, Ordering::SeqCst);
+    }
+
+    /// Stamp one beat for `l` (members call this; monotone).
+    pub fn beat(&self, l: LocalityId) {
+        self.beats[l as usize].fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Current beat value for `l`.
+    pub fn beat_of(&self, l: LocalityId) -> u64 {
+        self.beats[l as usize].load(Ordering::SeqCst)
+    }
+
+    /// Whether `l` is still stamping beats.
+    pub fn is_beating(&self, l: LocalityId) -> bool {
+        self.beating[l as usize].load(Ordering::SeqCst)
+    }
+
+    /// Whether the detector is monitoring `l`.
+    pub fn is_watched(&self, l: LocalityId) -> bool {
+        self.watched[l as usize].load(Ordering::SeqCst)
+    }
+}
+
+/// One thread stamping beats for every slot still marked beating — the
+/// in-process model of each member's own beat loop. Halting a slot on
+/// the board stops its beat without touching the others.
+pub struct Heartbeater {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeater {
+    /// Stamp all beating slots every `every`.
+    pub fn spawn(board: Arc<HeartbeatBoard>, every: Duration) -> Heartbeater {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("px-heartbeater".into())
+            .spawn(move || {
+                while !flag.load(Ordering::SeqCst) {
+                    for l in 0..board.capacity() {
+                        if board.is_beating(l as LocalityId) {
+                            board.beat(l as LocalityId);
+                        }
+                    }
+                    std::thread::sleep(every);
+                }
+            })
+            .expect("spawn heartbeater");
+        Heartbeater { stop, handle: Some(handle) }
+    }
+
+    /// Stop stamping and join.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Heartbeater {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A death the detector declared.
+#[derive(Debug, Clone)]
+pub struct DeathNotice {
+    /// The locality declared dead.
+    pub locality: LocalityId,
+    /// Consecutive missed polls that triggered the declaration.
+    pub missed: u64,
+    /// Wall time from the first missed poll to the declaration — the
+    /// detection component of recovery latency.
+    pub detection_latency: Duration,
+}
+
+/// What the detector saw over its lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct DetectorStats {
+    /// Deaths declared, in declaration order.
+    pub deaths: Vec<DeathNotice>,
+    /// Total missed heartbeat deadlines across all watched slots.
+    pub heartbeats_missed: u64,
+}
+
+/// Anchor-side heartbeat monitor. Polls the board every `every`; a
+/// watched non-anchor slot whose beat fails to advance for `k_misses`
+/// consecutive polls is declared dead: the slot is unwatched, the
+/// `heartbeats_missed` counter is charged, and `on_death` runs on the
+/// detector thread (the driver's recovery hook).
+pub struct FailureDetector {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<DetectorStats>>,
+}
+
+impl FailureDetector {
+    /// Spawn the monitor. `counters` is the anchor's set — every missed
+    /// deadline bumps `heartbeats_missed` so detector health shows up in
+    /// `counters_total` and bench artifacts.
+    pub fn spawn<F>(
+        board: Arc<HeartbeatBoard>,
+        every: Duration,
+        k_misses: u64,
+        counters: Arc<Counters>,
+        mut on_death: F,
+    ) -> FailureDetector
+    where
+        F: FnMut(LocalityId) + Send + 'static,
+    {
+        assert!(k_misses > 0, "failure detector needs at least one missed beat");
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("px-failure-detector".into())
+            .spawn(move || {
+                let cap = board.capacity();
+                let mut last_seen = vec![0u64; cap];
+                let mut misses = vec![0u64; cap];
+                let mut first_miss: Vec<Option<Instant>> = vec![None; cap];
+                let mut stats = DetectorStats::default();
+                while !flag.load(Ordering::SeqCst) {
+                    std::thread::sleep(every);
+                    // The anchor (slot 0) is never declared dead.
+                    for l in 1..cap {
+                        if !board.is_watched(l as LocalityId) {
+                            misses[l] = 0;
+                            first_miss[l] = None;
+                            continue;
+                        }
+                        let b = board.beat_of(l as LocalityId);
+                        if b != last_seen[l] {
+                            last_seen[l] = b;
+                            misses[l] = 0;
+                            first_miss[l] = None;
+                            continue;
+                        }
+                        misses[l] += 1;
+                        stats.heartbeats_missed += 1;
+                        counters.heartbeats_missed.inc();
+                        let since = *first_miss[l].get_or_insert_with(Instant::now);
+                        if misses[l] >= k_misses {
+                            board.unwatch(l as LocalityId);
+                            stats.deaths.push(DeathNotice {
+                                locality: l as LocalityId,
+                                missed: misses[l],
+                                detection_latency: since.elapsed(),
+                            });
+                            on_death(l as LocalityId);
+                        }
+                    }
+                }
+                stats
+            })
+            .expect("spawn failure detector");
+        FailureDetector { stop, handle: Some(handle) }
+    }
+
+    /// Stop the monitor and collect its stats.
+    pub fn stop(mut self) -> DetectorStats {
+        self.stop.store(true, Ordering::SeqCst);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => DetectorStats::default(),
+        }
+    }
+}
+
+impl Drop for FailureDetector {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn board_tracks_enroll_halt_unwatch() {
+        let board = HeartbeatBoard::new(4);
+        assert_eq!(board.capacity(), 4);
+        board.enroll(2);
+        assert!(board.is_beating(2) && board.is_watched(2));
+        board.halt(2);
+        assert!(!board.is_beating(2) && board.is_watched(2), "halted slot stays watched");
+        board.unwatch(2);
+        assert!(!board.is_watched(2));
+        board.beat(1);
+        board.beat(1);
+        assert_eq!(board.beat_of(1), 2);
+        assert_eq!(board.beat_of(0), 0);
+    }
+
+    #[test]
+    fn detector_declares_death_after_k_missed_beats() {
+        let board = HeartbeatBoard::new(4);
+        for l in 1..4 {
+            board.enroll(l);
+        }
+        let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
+        let counters = Arc::new(Counters::default());
+        let (tx, rx) = mpsc::channel();
+        let detector = FailureDetector::spawn(
+            board.clone(),
+            Duration::from_millis(1),
+            3,
+            counters.clone(),
+            move |l| tx.send(l).unwrap(),
+        );
+        // Let everyone beat a while: no deaths.
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(rx.try_recv().is_err(), "beating members must not be declared dead");
+        // Crash locality 2: beats stop, port-side kill is the net's job.
+        board.halt(2);
+        let dead = rx.recv_timeout(Duration::from_secs(5)).expect("death declared");
+        assert_eq!(dead, 2);
+        assert!(!board.is_watched(2), "declared-dead slot is unwatched");
+        let stats = detector.stop();
+        beater.stop();
+        assert_eq!(stats.deaths.len(), 1);
+        assert_eq!(stats.deaths[0].locality, 2);
+        assert!(stats.deaths[0].missed >= 3);
+        assert!(stats.heartbeats_missed >= 3);
+        assert_eq!(counters.heartbeats_missed.get(), stats.heartbeats_missed);
+    }
+
+    #[test]
+    fn gracefully_unwatched_slot_is_never_declared() {
+        let board = HeartbeatBoard::new(3);
+        board.enroll(1);
+        board.enroll(2);
+        let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
+        let (tx, rx) = mpsc::channel();
+        let detector = FailureDetector::spawn(
+            board.clone(),
+            Duration::from_micros(500),
+            2,
+            Arc::new(Counters::default()),
+            move |l| tx.send(l).unwrap(),
+        );
+        // Graceful retirement: unwatch *then* stop beating.
+        board.unwatch(1);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(rx.try_recv().is_err(), "graceful exit must not look like a crash");
+        drop(detector);
+        beater.stop();
+    }
+
+    #[test]
+    fn anchor_is_never_declared_dead() {
+        let board = HeartbeatBoard::new(2);
+        board.enroll(0);
+        board.enroll(1);
+        let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
+        let (tx, rx) = mpsc::channel();
+        let detector = FailureDetector::spawn(
+            board.clone(),
+            Duration::from_micros(500),
+            2,
+            Arc::new(Counters::default()),
+            move |l| tx.send(l).unwrap(),
+        );
+        board.halt(0); // even a silent anchor is not the detector's call
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(rx.try_recv().is_err());
+        drop(detector);
+        beater.stop();
+    }
+}

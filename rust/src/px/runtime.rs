@@ -91,6 +91,25 @@ impl PxConfig {
     }
 }
 
+/// Audit of a locality's teardown — what was still there when the port
+/// went away. Graceful retirement expects both fields to be 0 (the
+/// caller migrated residents and the wire was drained); the forced path
+/// reports whatever the crash stranded, and the recovery subsystem is
+/// expected to reconstruct the residents (`blocks_recovered`) and replay
+/// the stranded parcels (`parcels_replayed`, via the net's dead-letter
+/// capture). Reported, never panicked on: both paths share this audit.
+#[derive(Debug, Clone, Default)]
+pub struct RetireReport {
+    /// The locality torn down.
+    pub locality: LocalityId,
+    /// AGAS residents still bound to the locality at teardown.
+    pub residents_left: usize,
+    /// Parcels still on the wire for the locality at teardown.
+    pub in_flight_left: u64,
+    /// Whether this was the forced (no-drain) path.
+    pub forced: bool,
+}
+
 /// The dynamic membership set of a runtime: which roster localities are
 /// currently *participating* (hosting objects, receiving parcels).
 ///
@@ -175,23 +194,64 @@ impl Membership {
     /// AGAS residents away. Errors (and changes nothing) for the anchor,
     /// a non-member, or the last member.
     pub fn retire(&self, l: LocalityId) -> PxResult<()> {
+        self.teardown(l, false).map(|_| ())
+    }
+
+    /// Unplanned retirement (crash recovery): same membership flip and
+    /// cache purge as [`Membership::retire`], but **no drain** — the
+    /// locality is dead, not leaving — and the port is force-detached
+    /// with quarantine ([`SimNet::kill_port`]) so parcels already on the
+    /// wire are captured as dead letters for replay instead of bounced
+    /// against a not-yet-repaired AGAS. Returns the teardown audit;
+    /// stranded residents and parcels are *reported*, not panicked on —
+    /// reconstructing them is the recovery subsystem's job.
+    pub fn force_retire(&self, l: LocalityId) -> PxResult<RetireReport> {
+        self.teardown(l, true)
+    }
+
+    /// The one audited teardown both departure paths share: validate,
+    /// flip membership, bump the epoch, purge stale caches, then either
+    /// drain-and-detach (graceful) or kill-and-quarantine (forced), and
+    /// report what was left behind either way.
+    fn teardown(&self, l: LocalityId, forced: bool) -> PxResult<RetireReport> {
         self.check_retirable(l)?;
         self.active[l as usize].store(false, Ordering::SeqCst);
         self.epoch.fetch_add(1, Ordering::SeqCst);
         for ctx in &self.localities {
             ctx.agas.purge_locality(l);
         }
-        if let Err(e) = self.net.drain_to(l, Duration::from_secs(10)) {
-            // Roll back the flip: the port stays attached, so membership
-            // must keep agreeing with the fabric (otherwise a later
-            // `boot` would assert on the live port and nothing could
-            // ever recover the slot). The purged caches simply re-fill.
-            self.active[l as usize].store(true, Ordering::SeqCst);
-            self.epoch.fetch_add(1, Ordering::SeqCst);
-            return Err(e);
+        if !forced {
+            if let Err(e) = self.net.drain_to(l, Duration::from_secs(10)) {
+                // Roll back the flip: the port stays attached, so membership
+                // must keep agreeing with the fabric (otherwise a later
+                // `boot` would assert on the live port and nothing could
+                // ever recover the slot). The purged caches simply re-fill.
+                self.active[l as usize].store(true, Ordering::SeqCst);
+                self.epoch.fetch_add(1, Ordering::SeqCst);
+                return Err(e);
+            }
         }
-        self.net.detach_port(l);
-        Ok(())
+        let report = RetireReport {
+            locality: l,
+            residents_left: self.localities[0].agas.service().residents(l).len(),
+            in_flight_left: self.net.in_flight_to(l),
+            forced,
+        };
+        if forced {
+            self.net.kill_port(l);
+        } else {
+            if report.residents_left > 0 || report.in_flight_left > 0 {
+                // A graceful retire that strands anything is a caller bug
+                // (drain succeeded, so these can only be residents the
+                // application layer forgot to migrate). Audit, don't die.
+                eprintln!(
+                    "[membership] graceful retire of locality {l} left {} resident(s) and {} in-flight parcel(s)",
+                    report.residents_left, report.in_flight_left
+                );
+            }
+            self.net.detach_port(l);
+        }
+        Ok(report)
     }
 
     /// Boot (or re-boot) locality `l` into the membership: re-attach its
@@ -305,6 +365,11 @@ impl PxRuntime {
         self.membership.boot(l)
     }
 
+    /// Convenience for [`Membership::force_retire`] (crash recovery).
+    pub fn force_retire_locality(&self, l: LocalityId) -> PxResult<RetireReport> {
+        self.membership.force_retire(l)
+    }
+
     /// Global quiescence: no task queued or running on any locality and
     /// no parcel in flight, observed stably twice. Used by drivers that
     /// terminate by exhaustion rather than by a completion future.
@@ -357,12 +422,17 @@ impl PxRuntime {
 
     /// Aggregate counter snapshot over all localities (the full roster —
     /// retired localities contribute the events they recorded while
-    /// members).
+    /// members). The net-level `bounced`/`dead_letters` tallies are
+    /// folded in here — the fabric is the single source for both, so
+    /// recovery health shows up in every bench artifact and counter
+    /// balance without double counting.
     pub fn counters_total(&self) -> CounterSnapshot {
         let mut total = CounterSnapshot::default();
         for l in &self.localities {
             total.absorb(&l.counters.snapshot());
         }
+        total.bounced += self.net.bounced();
+        total.dead_letters += self.net.dead_letters();
         total
     }
 
@@ -533,6 +603,71 @@ mod tests {
         assert_eq!(ran_on.load(std::sync::atomic::Ordering::SeqCst), 0);
         assert_eq!(rt.net().bounced(), 0, "purged caches must route directly");
         assert_eq!(rt.net().dead_letters(), 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn force_retire_audits_stranded_state_and_quarantines() {
+        // Slow wire so a parcel is still in flight at the kill instant.
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 3,
+            workers_per_locality: 1,
+            net: NetModel { base_latency: Duration::from_millis(50), bandwidth_bps: u64::MAX },
+            ..Default::default()
+        });
+        let l0 = rt.locality(0).clone();
+        let l2 = rt.locality(2).clone();
+        rt.actions().register(1, |_, _| {});
+        let g = l2.register_component(GidKind::Block, ()).unwrap();
+        l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
+        // Crash L2: no drain, port killed. The audit reports both the
+        // resident and the in-flight parcel instead of panicking.
+        let report = rt.force_retire_locality(2).unwrap();
+        assert!(report.forced);
+        assert_eq!(report.locality, 2);
+        assert_eq!(report.residents_left, 1, "the component was never migrated off");
+        assert_eq!(report.in_flight_left, 1, "the parcel was still on the wire");
+        assert!(!rt.membership().is_member(2));
+        assert!(!rt.net().has_port(2));
+        assert!(rt.net().is_quarantined(2));
+        // The stranded parcel lands in the dead-letter capture, visible
+        // through counters_total (net fold), and is drainable for replay.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while rt.net().dead_letters() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(rt.net().dead_letters(), 1);
+        assert_eq!(rt.counters_total().dead_letters, 1);
+        assert_eq!(rt.net().bounced(), 0, "crash capture must not bounce");
+        let dead = rt.net().take_dead_letters();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].0, 2);
+        assert_eq!(rt.counters_total().dead_letters, 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn force_retire_rejects_anchor_fast() {
+        let rt = PxRuntime::boot(PxConfig { localities: 2, workers_per_locality: 1, ..Default::default() });
+        let started = Instant::now();
+        match rt.membership().force_retire(0) {
+            Err(PxError::LcoProtocol(m)) => assert!(m.contains("anchor")),
+            other => panic!("expected anchor rejection, got {other:?}"),
+        }
+        assert!(started.elapsed() < Duration::from_secs(1), "rejection must be immediate");
+        assert!(rt.membership().is_member(0));
+        assert!(rt.net().has_port(0));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn graceful_retire_still_balances_after_teardown_refactor() {
+        let rt = PxRuntime::boot(PxConfig { localities: 3, workers_per_locality: 1, ..Default::default() });
+        rt.retire_locality(1).unwrap();
+        assert!(!rt.net().has_port(1));
+        assert!(!rt.net().is_quarantined(1), "graceful detach must not quarantine");
+        rt.boot_locality(1).unwrap();
+        assert!(rt.net().has_port(1));
         rt.shutdown();
     }
 
