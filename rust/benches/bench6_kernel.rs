@@ -1,0 +1,25 @@
+//! BENCH 6: kernel fast path — native vs fused-scalar vs simd ns/step
+//! across block sizes (8..4096) and 1/2/4/8 localities, emitting
+//! `BENCH_6.json` next to its siblings. Every fast-path row is checked
+//! bitwise against the native kernel before it is timed.
+//! Run: `cargo bench --bench bench6_kernel` (PX_SCALE=full for paper scale).
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let t0 = std::time::Instant::now();
+    match parallex::bench::write_bench6_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[bench6_kernel] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[bench6_kernel] failed to write BENCH_6.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

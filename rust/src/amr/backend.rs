@@ -2,11 +2,22 @@
 //!
 //! Both the ParalleX driver and the CSP baseline advance blocks through
 //! this trait, so execution-model comparisons (Figs 6-8) hold the physics
-//! constant. Two implementations:
+//! constant. Four implementations:
 //!
-//! * [`NativeBackend`] — the pure-rust stencil (`physics::rk3_step`).
+//! * [`NativeBackend`] — the readable pure-rust stencil
+//!   (`physics::rk3_step`, three passes, allocates per step).
+//! * [`FusedBackend`] — the fused scalar kernel (`amr::kernel`),
+//!   per-worker scratch reuse, bitwise-identical to native.
+//! * [`SimdBackend`] — the fused kernel's `F64x4` lane path, also
+//!   bitwise-identical (DESIGN.md §10). The fast path for production
+//!   runs.
 //! * [`XlaBackend`] — the PJRT path executing the AOT JAX/Pallas
 //!   artifacts, padded up to the nearest compiled block size.
+//!
+//! The fused/simd backends share one thread-local [`kernel::Scratch`]
+//! per worker: backends are `Arc`-shared across the thread manager's
+//! workers, so per-thread scratch gives allocation-free steady state
+//! without any locking.
 //!
 //! Padding correctness: the stencil is local (output `j` depends on
 //! inputs `j..j+6`), so placing the `m+6` real inputs at the start of a
@@ -14,12 +25,21 @@
 //! the polluted tail is discarded. The `r` tail continues linearly so no
 //! padded point divides by r=0.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::util::err::Result;
 
+use super::kernel::{self, Scratch};
 use super::physics::{rk3_step, Fields, STEP_GHOST};
 use crate::runtime::XlaCompute;
+
+thread_local! {
+    /// Per-worker stage buffers for the fused kernels (see module docs).
+    static KERNEL_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+    /// Per-worker padding buffers for `XlaBackend`'s pad-up path.
+    static PAD_SCRATCH: RefCell<PadScratch> = RefCell::new(PadScratch::default());
+}
 
 /// Advance `m`-point segments one RK3 step (inputs `m + 6` long).
 pub trait ComputeBackend: Send + Sync {
@@ -52,6 +72,85 @@ impl ComputeBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// Fused scalar kernel backend: same math and op order as native, zero
+/// steady-state kernel allocations (per-worker scratch reuse).
+#[derive(Default, Clone, Copy)]
+pub struct FusedBackend;
+
+impl ComputeBackend for FusedBackend {
+    fn step_exact(
+        &self,
+        m: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> Result<Fields> {
+        crate::ensure!(chi.len() == m + 2 * STEP_GHOST, "bad input length");
+        KERNEL_SCRATCH.with(|s| {
+            let mut out = Fields::default();
+            kernel::fused_rk3_step_scalar(&mut s.borrow_mut(), chi, phi, pi, r, dx, dt, &mut out);
+            Ok(out)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+}
+
+/// Fused + SIMD-vectorized kernel backend (`F64x4` lanes, scalar tail):
+/// bitwise-identical to [`NativeBackend`], the production fast path.
+#[derive(Default, Clone, Copy)]
+pub struct SimdBackend;
+
+impl ComputeBackend for SimdBackend {
+    fn step_exact(
+        &self,
+        m: usize,
+        chi: &[f64],
+        phi: &[f64],
+        pi: &[f64],
+        r: &[f64],
+        dx: f64,
+        dt: f64,
+    ) -> Result<Fields> {
+        crate::ensure!(chi.len() == m + 2 * STEP_GHOST, "bad input length");
+        KERNEL_SCRATCH.with(|s| {
+            let mut out = Fields::default();
+            kernel::fused_rk3_step_simd(&mut s.borrow_mut(), chi, phi, pi, r, dx, dt, &mut out);
+            Ok(out)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+}
+
+/// Reusable padding buffers for [`XlaBackend`]'s pad-up path (grow-only,
+/// one set per worker thread).
+#[derive(Default)]
+struct PadScratch {
+    chi: Vec<f64>,
+    phi: Vec<f64>,
+    pi: Vec<f64>,
+    r: Vec<f64>,
+}
+
+impl PadScratch {
+    /// Zero-fill all four buffers at length `bn` without reallocating
+    /// when warm (the stencil's padding contract needs zeroed tails).
+    fn reset(&mut self, bn: usize) {
+        for v in [&mut self.chi, &mut self.phi, &mut self.pi, &mut self.r] {
+            v.clear();
+            v.resize(bn, 0.0);
+        }
     }
 }
 
@@ -92,21 +191,27 @@ impl ComputeBackend for XlaBackend {
             return Ok(Fields { chi: c, phi: p, pi: q });
         }
         // Pad up: real data first, zero tail (fields) / linear tail (r).
-        let bn = block + 2 * STEP_GHOST;
-        let mut pc = vec![0.0; bn];
-        let mut pp = vec![0.0; bn];
-        let mut pq = vec![0.0; bn];
-        let mut pr = vec![0.0; bn];
-        pc[..n].copy_from_slice(chi);
-        pp[..n].copy_from_slice(phi);
-        pq[..n].copy_from_slice(pi);
-        pr[..n].copy_from_slice(r);
-        let last = r[n - 1];
-        for (k, slot) in pr[n..].iter_mut().enumerate() {
-            *slot = last + dx * (k + 1) as f64;
-        }
-        let (c, p, q) = self.xc.step(block, &pc, &pp, &pq, &pr, dx, dt)?;
-        Ok(Fields { chi: c[..m].to_vec(), phi: p[..m].to_vec(), pi: q[..m].to_vec() })
+        // The four padding buffers live in per-worker scratch (grow-only),
+        // and the outputs come back as owned vectors of length `block`, so
+        // the only per-call work is the copies in and one truncate out.
+        PAD_SCRATCH.with(|ps| {
+            let s = &mut *ps.borrow_mut();
+            let bn = block + 2 * STEP_GHOST;
+            s.reset(bn);
+            s.chi[..n].copy_from_slice(chi);
+            s.phi[..n].copy_from_slice(phi);
+            s.pi[..n].copy_from_slice(pi);
+            s.r[..n].copy_from_slice(r);
+            let last = r[n - 1];
+            for (k, slot) in s.r[n..].iter_mut().enumerate() {
+                *slot = last + dx * (k + 1) as f64;
+            }
+            let (mut c, mut p, mut q) = self.xc.step(block, &s.chi, &s.phi, &s.pi, &s.r, dx, dt)?;
+            c.truncate(m);
+            p.truncate(m);
+            q.truncate(m);
+            Ok(Fields { chi: c, phi: p, pi: q })
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -118,16 +223,23 @@ impl ComputeBackend for XlaBackend {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     Native,
+    Fused,
+    Simd,
     Xla,
 }
+
+/// The valid `--backend` / `PX_BACKEND` spellings, for error messages.
+pub const BACKEND_CHOICES: &str = "native|fused|simd|xla";
 
 impl std::str::FromStr for BackendKind {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "native" => Ok(BackendKind::Native),
+            "fused" => Ok(BackendKind::Fused),
+            "simd" => Ok(BackendKind::Simd),
             "xla" => Ok(BackendKind::Xla),
-            other => Err(format!("unknown backend `{other}` (native|xla)")),
+            other => Err(format!("unknown backend `{other}` ({BACKEND_CHOICES})")),
         }
     }
 }
@@ -136,6 +248,8 @@ impl std::str::FromStr for BackendKind {
 pub fn make_backend(kind: BackendKind, artifacts_dir: &str) -> Result<Arc<dyn ComputeBackend>> {
     Ok(match kind {
         BackendKind::Native => Arc::new(NativeBackend),
+        BackendKind::Fused => Arc::new(FusedBackend),
+        BackendKind::Simd => Arc::new(SimdBackend),
         BackendKind::Xla => Arc::new(XlaBackend::new(XlaCompute::open(artifacts_dir)?)),
     })
 }
@@ -169,6 +283,70 @@ mod tests {
         let out = NativeBackend.step_exact(10, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
         let direct = rk3_step(&chi, &phi, &pi, &r, 0.1, 0.02);
         assert_eq!(out, direct);
+    }
+
+    #[test]
+    fn fused_and_simd_match_native_exactly() {
+        // Sizes straddle lane multiples; r0 = -0.3 puts r = 0 on an
+        // interior point (origin branch) at m >= 1.
+        for m in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 100] {
+            for r0 in [1.0, -0.3] {
+                let (chi, phi, pi, r) = sample(m, r0);
+                let a = NativeBackend.step_exact(m, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+                let b = FusedBackend.step_exact(m, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+                let c = SimdBackend.step_exact(m, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+                assert_eq!(a, b, "fused m={m} r0={r0}");
+                assert_eq!(a, c, "simd m={m} r0={r0}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_backend_bitwise_equals_native() {
+        // The ISSUE's pin: exact equality (`==`, not epsilon) across block
+        // sizes 1..=1024, origin blocks, and non-multiple-of-lane tails.
+        use crate::testkit::prop::{prop_check, Rng};
+        prop_check("SimdBackend == NativeBackend", 60, |rng: &mut Rng| {
+            let m = rng.range(1, 1025);
+            let n = m + 6;
+            let dx = rng.f64_range(0.01, 0.2);
+            let dt = 0.25 * dx;
+            let r0 = if rng.chance(0.4) { -(3.0 * dx) } else { rng.f64_range(0.5, 30.0) };
+            let r: Vec<f64> = (0..n).map(|i| r0 + dx * i as f64).collect();
+            let chi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.5, 0.5)).collect();
+            let phi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.5, 0.5)).collect();
+            let pi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.5, 0.5)).collect();
+            let a = NativeBackend.step_exact(m, &chi, &phi, &pi, &r, dx, dt).unwrap();
+            let b = SimdBackend.step_exact(m, &chi, &phi, &pi, &r, dx, dt).unwrap();
+            assert_eq!(a, b, "m={m} r0={r0}");
+            for i in 0..m {
+                assert_eq!(a.chi[i].to_bits(), b.chi[i].to_bits(), "chi[{i}] m={m}");
+                assert_eq!(a.phi[i].to_bits(), b.phi[i].to_bits(), "phi[{i}] m={m}");
+                assert_eq!(a.pi[i].to_bits(), b.pi[i].to_bits(), "pi[{i}] m={m}");
+            }
+        });
+    }
+
+    #[test]
+    fn backend_kind_parses_every_name_and_rejects_unknown() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("fused".parse::<BackendKind>().unwrap(), BackendKind::Fused);
+        assert_eq!("simd".parse::<BackendKind>().unwrap(), BackendKind::Simd);
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        let err = "avx9000".parse::<BackendKind>().unwrap_err();
+        assert!(err.contains(BACKEND_CHOICES), "error must list choices: {err}");
+    }
+
+    #[test]
+    fn make_backend_builds_fused_and_simd() {
+        let f = make_backend(BackendKind::Fused, "unused").unwrap();
+        let s = make_backend(BackendKind::Simd, "unused").unwrap();
+        assert_eq!(f.name(), "fused");
+        assert_eq!(s.name(), "simd");
+        let (chi, phi, pi, r) = sample(12, 0.7);
+        let a = f.step_exact(12, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+        let b = s.step_exact(12, &chi, &phi, &pi, &r, 0.1, 0.02).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

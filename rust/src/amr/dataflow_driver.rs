@@ -1077,7 +1077,16 @@ impl DriverState {
             let t = assemble(p, k, &inputs, &plan.hierarchy).expect("evolved block");
             let dx = plan.hierarchy.config.dx(id.level as usize);
             let dt = plan.hierarchy.config.dt(id.level as usize);
-            match self.backend.step_exact(t.m_out, &t.chi, &t.phi, &t.pi, &t.r, dx, dt) {
+            let t_kernel = Instant::now();
+            let stepped = self.backend.step_exact(t.m_out, &t.chi, &t.phi, &t.pi, &t.r, dx, dt);
+            // Pure kernel time, separated from assembly/routing so the
+            // §10 fast path's step-cost drop is visible as a counter.
+            self.shards[loc]
+                .ctx
+                .counters
+                .kernel_ns_total
+                .add(t_kernel.elapsed().as_nanos() as u64);
+            match stepped {
                 Ok(f) => {
                     if !f.max_abs().is_finite() || f.max_abs() > 1e12 {
                         // Supercritical blow-up: freeze the run (the
@@ -2567,7 +2576,7 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::amr::backend::NativeBackend;
+    use crate::amr::backend::{NativeBackend, SimdBackend};
     use crate::amr::mesh::MeshConfig;
     use crate::amr::physics::rk3_step;
     use crate::coordinator::{BalanceConfig, PlacementPolicy};
@@ -3093,6 +3102,37 @@ mod tests {
                 );
                 assert!(totals.parcels_sent > 0);
             }
+            runtime.shutdown();
+        }
+    }
+
+    #[test]
+    fn distributed_epoch_on_simd_backend_bitwise_matches_native_1_2_4_8() {
+        // Re-pin the distributed equivalence on the §10 fast path: the
+        // single-locality *native* run is the reference, every simd run
+        // (1/2/4/8 localities) must reproduce it bit for bit — kernel
+        // fusion + lanes change nothing observable.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        for localities in [1usize, 2, 4, 8] {
+            let runtime = rt_dist(localities, 2);
+            let plan = Arc::new(EpochPlan::new(h.clone(), cfg.coarse_steps));
+            let init = initial_block_states(&plan, &cfg);
+            let out = run_epoch(&runtime, plan, Arc::new(SimdBackend), cfg, &init).unwrap();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("simd {localities} loc"));
+            let totals = runtime.counters_total();
+            assert!(
+                totals.kernel_ns_total > 0,
+                "step_exact time must land in kernel_ns_total (got 0)"
+            );
+            assert_eq!(totals.payload_deep_copies, 0, "local deliveries must stay zero-copy");
             runtime.shutdown();
         }
     }

@@ -1,0 +1,567 @@
+//! Kernel fast path: fused, allocation-free, SIMD-vectorized RK3 step.
+//!
+//! [`super::physics::rk3_step`] is the readable reference: three passes,
+//! each materializing an `rhs` result plus a stage array — six
+//! `Fields::zeros` (18 buffer allocations) per block step. This module computes
+//! the same three SSP-RK3 stages with the RHS folded into each stage
+//! update, writing the two intermediate stage arrays into a caller-owned
+//! grow-only [`Scratch`] and the result into a caller-owned `Fields`, so
+//! a warm steady state performs **zero heap allocations** per step
+//! (pinned by [`Scratch::grows`] and BENCH_6).
+//!
+//! Two entry points share one scalar point function:
+//!
+//! * [`fused_rk3_step_scalar`] — the fused scalar loop.
+//! * [`fused_rk3_step_simd`] — the same loops over a hand-rolled
+//!   [`F64x4`] lane bundle (stable toolchain, no `std::simd`), four
+//!   output points per iteration plus a scalar tail. The `r ≈ 0`
+//!   l'Hôpital branch becomes a masked select: both branch values are
+//!   computed per lane and the origin lanes pick the regularized one
+//!   (an `inf`/`NaN` from the unselected `phi/r` division is discarded
+//!   by the select, never observed).
+//!
+//! **Why bitwise identity holds.** Every output point runs the identical
+//! IEEE-754 op sequence as `rk3_step`: the fusion only eliminates stores
+//! and loads of intermediate `k` arrays, never reassociates or contracts
+//! arithmetic (no `mul_add`, and rustc does not enable FP contraction),
+//! and a `F64x4` lane op is by construction four independent scalar f64
+//! ops. Hence scalar-fused ≡ simd ≡ `rk3_step` bit for bit — pinned by a
+//! randomized property test over block sizes 1..=1024 including origin
+//! blocks and non-multiple-of-lane tails, and by the 1/2/4/8-locality
+//! distributed bitwise tests running on [`super::backend::SimdBackend`].
+
+use super::physics::{Fields, R_ORIGIN_EPS, STEP_GHOST};
+
+/// f64 lanes per SIMD bundle.
+pub const LANES: usize = 4;
+
+/// Four f64 lanes with elementwise ops. Each operator is four independent
+/// scalar f64 operations, so lane arithmetic is bitwise-identical to the
+/// scalar kernel; the compiler is free to lower the bundle to vector
+/// instructions (and does, with the loads/stores adjacent).
+#[derive(Debug, Clone, Copy)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    /// Load lanes from `s[0..4]`.
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> F64x4 {
+        F64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Broadcast one value to all lanes.
+    #[inline(always)]
+    pub fn splat(v: f64) -> F64x4 {
+        F64x4([v; 4])
+    }
+
+    /// Store lanes to `d[0..4]`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f64]) {
+        d[..4].copy_from_slice(&self.0);
+    }
+
+    /// Lanewise |x|.
+    #[inline(always)]
+    pub fn abs(self) -> F64x4 {
+        F64x4([self.0[0].abs(), self.0[1].abs(), self.0[2].abs(), self.0[3].abs()])
+    }
+
+    /// Lanewise `self < other`.
+    #[inline(always)]
+    pub fn lt(self, other: F64x4) -> [bool; 4] {
+        [
+            self.0[0] < other.0[0],
+            self.0[1] < other.0[1],
+            self.0[2] < other.0[2],
+            self.0[3] < other.0[3],
+        ]
+    }
+
+    /// Per-lane `mask ? t : f`.
+    #[inline(always)]
+    pub fn select(mask: [bool; 4], t: F64x4, f: F64x4) -> F64x4 {
+        F64x4([
+            if mask[0] { t.0[0] } else { f.0[0] },
+            if mask[1] { t.0[1] } else { f.0[1] },
+            if mask[2] { t.0[2] } else { f.0[2] },
+            if mask[3] { t.0[3] } else { f.0[3] },
+        ])
+    }
+}
+
+macro_rules! lane_op {
+    ($trait:ident, $fn:ident, $op:tt) => {
+        impl std::ops::$trait for F64x4 {
+            type Output = F64x4;
+            #[inline(always)]
+            fn $fn(self, rhs: F64x4) -> F64x4 {
+                F64x4([
+                    self.0[0] $op rhs.0[0],
+                    self.0[1] $op rhs.0[1],
+                    self.0[2] $op rhs.0[2],
+                    self.0[3] $op rhs.0[3],
+                ])
+            }
+        }
+    };
+}
+
+lane_op!(Add, add, +);
+lane_op!(Sub, sub, -);
+lane_op!(Mul, mul, *);
+lane_op!(Div, div, /);
+
+/// Grow-only stage buffers for the fused kernel, reused across steps.
+///
+/// `u1` holds stage-1 results (length `n - 2` for `n` padded inputs),
+/// `u2` stage-2 results (length `n - 4`). [`Scratch::grows`] counts how
+/// often a step had to enlarge a buffer: after one warm-up step at the
+/// largest block size it stays constant — the zero-steady-state-alloc
+/// evidence BENCH_6 publishes.
+#[derive(Default)]
+pub struct Scratch {
+    u1_chi: Vec<f64>,
+    u1_phi: Vec<f64>,
+    u1_pi: Vec<f64>,
+    u2_chi: Vec<f64>,
+    u2_phi: Vec<f64>,
+    u2_pi: Vec<f64>,
+    grows: u64,
+}
+
+impl Scratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Cumulative count of buffer enlargements (reallocations).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Size the stage buffers for `n` padded input points.
+    fn ensure(&mut self, n: usize) {
+        let n1 = n - 2;
+        let n2 = n - 4;
+        for (v, want) in [
+            (&mut self.u1_chi, n1),
+            (&mut self.u1_phi, n1),
+            (&mut self.u1_pi, n1),
+            (&mut self.u2_chi, n2),
+            (&mut self.u2_phi, n2),
+            (&mut self.u2_pi, n2),
+        ] {
+            if v.capacity() < want {
+                self.grows += 1;
+            }
+            v.resize(want, 0.0);
+        }
+    }
+}
+
+/// Size `out` to hold `m` points without reallocating when warm.
+fn ensure_out(out: &mut Fields, m: usize) {
+    out.chi.resize(m, 0.0);
+    out.phi.resize(m, 0.0);
+    out.pi.resize(m, 0.0);
+}
+
+/// RHS of the three evolution equations at one point — the exact op
+/// sequence of `physics::rhs`, returned as `(chi_t, phi_t, pi_t)`.
+#[inline(always)]
+fn rhs_point(
+    chi_c: f64,
+    phi_l: f64,
+    phi_c: f64,
+    phi_r: f64,
+    pi_l: f64,
+    pi_c: f64,
+    pi_r: f64,
+    rc: f64,
+    inv_2dx: f64,
+) -> (f64, f64, f64) {
+    let dr_pi = (pi_r - pi_l) * inv_2dx;
+    let dr_phi = (phi_r - phi_l) * inv_2dx;
+    let spherical = if rc.abs() < R_ORIGIN_EPS {
+        3.0 * dr_phi
+    } else {
+        dr_phi + 2.0 * phi_c / rc
+    };
+    let x = chi_c;
+    let x2 = x * x;
+    let x4 = x2 * x2;
+    (pi_c, dr_pi, spherical + x * x2 * x4)
+}
+
+/// Lane version of [`rhs_point`]; the origin branch is a masked select
+/// over both branch values (each lane still runs the scalar op sequence).
+#[inline(always)]
+fn rhs_lane(
+    chi_c: F64x4,
+    phi_l: F64x4,
+    phi_c: F64x4,
+    phi_r: F64x4,
+    pi_l: F64x4,
+    pi_c: F64x4,
+    pi_r: F64x4,
+    rc: F64x4,
+    inv_2dx: F64x4,
+) -> (F64x4, F64x4, F64x4) {
+    let dr_pi = (pi_r - pi_l) * inv_2dx;
+    let dr_phi = (phi_r - phi_l) * inv_2dx;
+    let origin = rc.abs().lt(F64x4::splat(R_ORIGIN_EPS));
+    let spherical = F64x4::select(
+        origin,
+        F64x4::splat(3.0) * dr_phi,
+        dr_phi + F64x4::splat(2.0) * phi_c / rc,
+    );
+    let x = chi_c;
+    let x2 = x * x;
+    let x4 = x2 * x2;
+    (pi_c, dr_pi, spherical + x * x2 * x4)
+}
+
+const THIRD: f64 = 1.0 / 3.0;
+const TWO_THIRD: f64 = 2.0 / 3.0;
+
+/// Fused scalar SSP-RK3 step: inputs length `m + 6`, writes `m` points
+/// into `out`. Bitwise-identical to `physics::rk3_step`; zero heap
+/// allocations once `scratch` and `out` are warm.
+pub fn fused_rk3_step_scalar(
+    scratch: &mut Scratch,
+    chi: &[f64],
+    phi: &[f64],
+    pi: &[f64],
+    r: &[f64],
+    dx: f64,
+    dt: f64,
+    out: &mut Fields,
+) {
+    let n = chi.len();
+    assert!(n >= 2 * STEP_GHOST + 1, "fused rk3 needs at least 7 points, got {n}");
+    debug_assert!(phi.len() == n && pi.len() == n && r.len() == n);
+    let m = n - 6;
+    scratch.ensure(n);
+    ensure_out(out, m);
+    let s = scratch;
+    let inv_2dx = 1.0 / (2.0 * dx);
+
+    // Stage 1: u1 = u + dt L(u), valid on [1, n-1).
+    let n1 = n - 2;
+    for i in 0..n1 {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_point(
+            chi[c], phi[c - 1], phi[c], phi[c + 1], pi[c - 1], pi[c], pi[c + 1], r[c], inv_2dx,
+        );
+        s.u1_chi[i] = chi[c] + dt * kc;
+        s.u1_phi[i] = phi[c] + dt * kp;
+        s.u1_pi[i] = pi[c] + dt * kq;
+    }
+
+    // Stage 2: u2 = 3/4 u + 1/4 (u1 + dt L(u1)); u1 index c maps to r[c+1].
+    let n2 = n1 - 2;
+    for i in 0..n2 {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_point(
+            s.u1_chi[c],
+            s.u1_phi[c - 1],
+            s.u1_phi[c],
+            s.u1_phi[c + 1],
+            s.u1_pi[c - 1],
+            s.u1_pi[c],
+            s.u1_pi[c + 1],
+            r[c + 1],
+            inv_2dx,
+        );
+        s.u2_chi[i] = 0.75 * chi[i + 2] + 0.25 * (s.u1_chi[c] + dt * kc);
+        s.u2_phi[i] = 0.75 * phi[i + 2] + 0.25 * (s.u1_phi[c] + dt * kp);
+        s.u2_pi[i] = 0.75 * pi[i + 2] + 0.25 * (s.u1_pi[c] + dt * kq);
+    }
+
+    // Stage 3: u = 1/3 u + 2/3 (u2 + dt L(u2)); u2 index c maps to r[c+2].
+    for i in 0..m {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_point(
+            s.u2_chi[c],
+            s.u2_phi[c - 1],
+            s.u2_phi[c],
+            s.u2_phi[c + 1],
+            s.u2_pi[c - 1],
+            s.u2_pi[c],
+            s.u2_pi[c + 1],
+            r[c + 2],
+            inv_2dx,
+        );
+        out.chi[i] = THIRD * chi[i + 3] + TWO_THIRD * (s.u2_chi[c] + dt * kc);
+        out.phi[i] = THIRD * phi[i + 3] + TWO_THIRD * (s.u2_phi[c] + dt * kp);
+        out.pi[i] = THIRD * pi[i + 3] + TWO_THIRD * (s.u2_pi[c] + dt * kq);
+    }
+}
+
+/// Fused SIMD SSP-RK3 step: same contract and bit-exact results as
+/// [`fused_rk3_step_scalar`], main loops vectorized over [`F64x4`] with a
+/// scalar tail per stage.
+pub fn fused_rk3_step_simd(
+    scratch: &mut Scratch,
+    chi: &[f64],
+    phi: &[f64],
+    pi: &[f64],
+    r: &[f64],
+    dx: f64,
+    dt: f64,
+    out: &mut Fields,
+) {
+    let n = chi.len();
+    assert!(n >= 2 * STEP_GHOST + 1, "fused rk3 needs at least 7 points, got {n}");
+    debug_assert!(phi.len() == n && pi.len() == n && r.len() == n);
+    let m = n - 6;
+    scratch.ensure(n);
+    ensure_out(out, m);
+    let s = scratch;
+    let inv_2dx = 1.0 / (2.0 * dx);
+    let vdt = F64x4::splat(dt);
+    let vinv = F64x4::splat(inv_2dx);
+
+    // Stage 1: u1[i] = u[i+1] + dt k1[i], i in [0, n-2).
+    let n1 = n - 2;
+    let mut i = 0;
+    while i + LANES <= n1 {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_lane(
+            F64x4::load(&chi[c..]),
+            F64x4::load(&phi[c - 1..]),
+            F64x4::load(&phi[c..]),
+            F64x4::load(&phi[c + 1..]),
+            F64x4::load(&pi[c - 1..]),
+            F64x4::load(&pi[c..]),
+            F64x4::load(&pi[c + 1..]),
+            F64x4::load(&r[c..]),
+            vinv,
+        );
+        (F64x4::load(&chi[c..]) + vdt * kc).store(&mut s.u1_chi[i..]);
+        (F64x4::load(&phi[c..]) + vdt * kp).store(&mut s.u1_phi[i..]);
+        (F64x4::load(&pi[c..]) + vdt * kq).store(&mut s.u1_pi[i..]);
+        i += LANES;
+    }
+    while i < n1 {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_point(
+            chi[c], phi[c - 1], phi[c], phi[c + 1], pi[c - 1], pi[c], pi[c + 1], r[c], inv_2dx,
+        );
+        s.u1_chi[i] = chi[c] + dt * kc;
+        s.u1_phi[i] = phi[c] + dt * kp;
+        s.u1_pi[i] = pi[c] + dt * kq;
+        i += 1;
+    }
+
+    // Stage 2: u2[i] = 3/4 u[i+2] + 1/4 (u1[i+1] + dt k2[i]), i in [0, n-4).
+    let n2 = n1 - 2;
+    let v34 = F64x4::splat(0.75);
+    let v14 = F64x4::splat(0.25);
+    let mut i = 0;
+    while i + LANES <= n2 {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_lane(
+            F64x4::load(&s.u1_chi[c..]),
+            F64x4::load(&s.u1_phi[c - 1..]),
+            F64x4::load(&s.u1_phi[c..]),
+            F64x4::load(&s.u1_phi[c + 1..]),
+            F64x4::load(&s.u1_pi[c - 1..]),
+            F64x4::load(&s.u1_pi[c..]),
+            F64x4::load(&s.u1_pi[c + 1..]),
+            F64x4::load(&r[c + 1..]),
+            vinv,
+        );
+        let uc = v34 * F64x4::load(&chi[i + 2..]) + v14 * (F64x4::load(&s.u1_chi[c..]) + vdt * kc);
+        let up = v34 * F64x4::load(&phi[i + 2..]) + v14 * (F64x4::load(&s.u1_phi[c..]) + vdt * kp);
+        let uq = v34 * F64x4::load(&pi[i + 2..]) + v14 * (F64x4::load(&s.u1_pi[c..]) + vdt * kq);
+        uc.store(&mut s.u2_chi[i..]);
+        up.store(&mut s.u2_phi[i..]);
+        uq.store(&mut s.u2_pi[i..]);
+        i += LANES;
+    }
+    while i < n2 {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_point(
+            s.u1_chi[c],
+            s.u1_phi[c - 1],
+            s.u1_phi[c],
+            s.u1_phi[c + 1],
+            s.u1_pi[c - 1],
+            s.u1_pi[c],
+            s.u1_pi[c + 1],
+            r[c + 1],
+            inv_2dx,
+        );
+        s.u2_chi[i] = 0.75 * chi[i + 2] + 0.25 * (s.u1_chi[c] + dt * kc);
+        s.u2_phi[i] = 0.75 * phi[i + 2] + 0.25 * (s.u1_phi[c] + dt * kp);
+        s.u2_pi[i] = 0.75 * pi[i + 2] + 0.25 * (s.u1_pi[c] + dt * kq);
+        i += 1;
+    }
+
+    // Stage 3: out[i] = 1/3 u[i+3] + 2/3 (u2[i+1] + dt k3[i]), i in [0, m).
+    let v13 = F64x4::splat(THIRD);
+    let v23 = F64x4::splat(TWO_THIRD);
+    let mut i = 0;
+    while i + LANES <= m {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_lane(
+            F64x4::load(&s.u2_chi[c..]),
+            F64x4::load(&s.u2_phi[c - 1..]),
+            F64x4::load(&s.u2_phi[c..]),
+            F64x4::load(&s.u2_phi[c + 1..]),
+            F64x4::load(&s.u2_pi[c - 1..]),
+            F64x4::load(&s.u2_pi[c..]),
+            F64x4::load(&s.u2_pi[c + 1..]),
+            F64x4::load(&r[c + 2..]),
+            vinv,
+        );
+        let oc = v13 * F64x4::load(&chi[i + 3..]) + v23 * (F64x4::load(&s.u2_chi[c..]) + vdt * kc);
+        let op = v13 * F64x4::load(&phi[i + 3..]) + v23 * (F64x4::load(&s.u2_phi[c..]) + vdt * kp);
+        let oq = v13 * F64x4::load(&pi[i + 3..]) + v23 * (F64x4::load(&s.u2_pi[c..]) + vdt * kq);
+        oc.store(&mut out.chi[i..]);
+        op.store(&mut out.phi[i..]);
+        oq.store(&mut out.pi[i..]);
+        i += LANES;
+    }
+    while i < m {
+        let c = i + 1;
+        let (kc, kp, kq) = rhs_point(
+            s.u2_chi[c],
+            s.u2_phi[c - 1],
+            s.u2_phi[c],
+            s.u2_phi[c + 1],
+            s.u2_pi[c - 1],
+            s.u2_pi[c],
+            s.u2_pi[c + 1],
+            r[c + 2],
+            inv_2dx,
+        );
+        out.chi[i] = THIRD * chi[i + 3] + TWO_THIRD * (s.u2_chi[c] + dt * kc);
+        out.phi[i] = THIRD * phi[i + 3] + TWO_THIRD * (s.u2_phi[c] + dt * kp);
+        out.pi[i] = THIRD * pi[i + 3] + TWO_THIRD * (s.u2_pi[c] + dt * kq);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amr::physics::rk3_step;
+    use crate::testkit::prop::{prop_check, Rng};
+
+    fn assert_fields_bitwise(a: &Fields, b: &Fields, tag: &str) {
+        assert_eq!(a.len(), b.len(), "{tag}: length");
+        for i in 0..a.len() {
+            assert_eq!(a.chi[i].to_bits(), b.chi[i].to_bits(), "{tag}: chi[{i}]");
+            assert_eq!(a.phi[i].to_bits(), b.phi[i].to_bits(), "{tag}: phi[{i}]");
+            assert_eq!(a.pi[i].to_bits(), b.pi[i].to_bits(), "{tag}: pi[{i}]");
+        }
+    }
+
+    fn random_block(rng: &mut Rng, m: usize, origin: bool) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, f64) {
+        let n = m + 6;
+        let dx = rng.f64_range(0.01, 0.2);
+        // Origin blocks place r = 0 exactly on an interior point so the
+        // l'Hopital branch runs in every stage.
+        let r0 = if origin { -(3.0 * dx) } else { rng.f64_range(0.5, 30.0) };
+        let r: Vec<f64> = (0..n).map(|i| r0 + dx * i as f64).collect();
+        let chi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.5, 0.5)).collect();
+        let phi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.5, 0.5)).collect();
+        let pi: Vec<f64> = (0..n).map(|_| rng.f64_range(-0.5, 0.5)).collect();
+        (chi, phi, pi, r, dx)
+    }
+
+    #[test]
+    fn fused_scalar_matches_rk3_step_bitwise() {
+        prop_check("fused scalar == rk3_step", 60, |rng: &mut Rng| {
+            let m = rng.range(1, 129);
+            let origin = rng.chance(0.5);
+            let (chi, phi, pi, r, dx) = random_block(rng, m, origin);
+            let dt = 0.25 * dx;
+            let reference = rk3_step(&chi, &phi, &pi, &r, dx, dt);
+            let mut s = Scratch::new();
+            let mut out = Fields::default();
+            fused_rk3_step_scalar(&mut s, &chi, &phi, &pi, &r, dx, dt, &mut out);
+            assert_fields_bitwise(&out, &reference, &format!("m={m} origin={origin}"));
+        });
+    }
+
+    #[test]
+    fn simd_matches_rk3_step_bitwise_incl_origin_and_tails() {
+        // Sizes straddling lane multiples + the l'Hopital origin branch.
+        let mut s = Scratch::new();
+        let mut out = Fields::default();
+        let mut rng = Rng::from_seed(7);
+        for m in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 31, 100] {
+            for origin in [false, true] {
+                let (chi, phi, pi, r, dx) = random_block(&mut rng, m, origin);
+                let dt = 0.25 * dx;
+                let reference = rk3_step(&chi, &phi, &pi, &r, dx, dt);
+                fused_rk3_step_simd(&mut s, &chi, &phi, &pi, &r, dx, dt, &mut out);
+                assert_fields_bitwise(&out, &reference, &format!("m={m} origin={origin}"));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_bitwise_equals_scalar_1_to_1024() {
+        prop_check("simd == scalar kernels", 80, |rng: &mut Rng| {
+            let m = rng.range(1, 1025);
+            let origin = rng.chance(0.4);
+            let (chi, phi, pi, r, dx) = random_block(rng, m, origin);
+            let dt = 0.25 * dx;
+            let mut s1 = Scratch::new();
+            let mut s2 = Scratch::new();
+            let mut a = Fields::default();
+            let mut b = Fields::default();
+            fused_rk3_step_scalar(&mut s1, &chi, &phi, &pi, &r, dx, dt, &mut a);
+            fused_rk3_step_simd(&mut s2, &chi, &phi, &pi, &r, dx, dt, &mut b);
+            assert_eq!(a, b, "m={m} origin={origin}");
+            assert_fields_bitwise(&a, &b, &format!("m={m} origin={origin}"));
+        });
+    }
+
+    #[test]
+    fn scratch_stops_growing_once_warm() {
+        let mut rng = Rng::from_seed(11);
+        let m = 257; // deliberately not a lane multiple
+        let (chi, phi, pi, r, dx) = random_block(&mut rng, m, false);
+        let dt = 0.25 * dx;
+        let mut s = Scratch::new();
+        let mut out = Fields::default();
+        fused_rk3_step_simd(&mut s, &chi, &phi, &pi, &r, dx, dt, &mut out);
+        let warm = s.grows();
+        assert!(warm > 0, "cold run must size the buffers");
+        for _ in 0..10 {
+            fused_rk3_step_simd(&mut s, &chi, &phi, &pi, &r, dx, dt, &mut out);
+            fused_rk3_step_scalar(&mut s, &chi, &phi, &pi, &r, dx, dt, &mut out);
+        }
+        assert_eq!(s.grows(), warm, "steady state must not reallocate");
+        // A smaller block on warm scratch must not grow either.
+        let (chi, phi, pi, r, dx) = random_block(&mut rng, 31, true);
+        fused_rk3_step_simd(&mut s, &chi, &phi, &pi, &r, dx, 0.25 * dx, &mut out);
+        assert_eq!(s.grows(), warm, "smaller blocks reuse the warm buffers");
+    }
+
+    #[test]
+    fn lane_select_discards_unselected_division() {
+        // rc = 0 in one lane: the non-origin branch divides by zero there,
+        // but the select must return the regularized value.
+        let rc = F64x4([0.0, 1.0, 2.0, 4.0]);
+        let dr_phi = F64x4::splat(1.0);
+        let phi_c = F64x4::splat(2.0);
+        let origin = rc.abs().lt(F64x4::splat(R_ORIGIN_EPS));
+        let sel = F64x4::select(
+            origin,
+            F64x4::splat(3.0) * dr_phi,
+            dr_phi + F64x4::splat(2.0) * phi_c / rc,
+        );
+        assert_eq!(sel.0[0], 3.0);
+        assert_eq!(sel.0[1], 1.0 + 4.0);
+        assert_eq!(sel.0[2], 1.0 + 2.0);
+        assert_eq!(sel.0[3], 1.0 + 1.0);
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod backend;
 pub mod dataflow_driver;
+pub mod kernel;
 pub mod regrid;
 pub mod three_d;
 pub mod engine;

@@ -10,7 +10,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::amr::backend::{make_backend, BackendKind, ComputeBackend};
+use crate::amr::backend::{
+    make_backend, BackendKind, ComputeBackend, FusedBackend, NativeBackend, SimdBackend,
+};
 use crate::amr::dataflow_driver::{
     initial_block_states, run, run_epoch, run_epoch_adaptive, run_epoch_checkpointed,
     run_epoch_crash, run_epoch_elastic, run_epoch_placed, AmrConfig, CrashStats, ElasticStats,
@@ -49,13 +51,13 @@ impl Scale {
     }
 }
 
-/// Backend from `PX_BACKEND` (native|xla); native isolates runtime
-/// behaviour, xla exercises the AOT PJRT hot path.
+/// Backend from `PX_BACKEND` (native|fused|simd|xla); native isolates
+/// runtime behaviour, simd is the §10 kernel fast path, xla exercises
+/// the AOT PJRT hot path. An unknown value aborts with the valid
+/// choices instead of silently falling back to native.
 pub fn backend_from_env() -> Arc<dyn ComputeBackend> {
-    let kind = match std::env::var("PX_BACKEND").as_deref() {
-        Ok("xla") => BackendKind::Xla,
-        _ => BackendKind::Native,
-    };
+    let raw = std::env::var("PX_BACKEND").unwrap_or_else(|_| "native".to_string());
+    let kind: BackendKind = raw.parse().unwrap_or_else(|e| panic!("PX_BACKEND: {e}"));
     let dir = std::env::var("PX_ARTIFACTS")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
     make_backend(kind, &dir).expect("backend")
@@ -2228,6 +2230,300 @@ pub fn run_crash_demo(
     }
 }
 
+// ----------------------- BENCH 6: kernel fast path (DESIGN.md §10)
+
+/// Headline block size: the `run` command's default granularity, where
+/// the acceptance bar (fused+simd ≥ 1.5× native) is quoted.
+const BENCH6_DEFAULT_BLOCK: usize = 16;
+
+/// One kernel-microbench row: ns/step for one backend at one block size.
+struct KernelRow {
+    backend: &'static str,
+    m: usize,
+    ns_per_step: f64,
+    /// Scratch buffer enlargements during the *measured* (post-warmup)
+    /// reps — the zero-steady-state-allocation evidence. `None` for
+    /// native, which allocates 18 `Vec`s per step by design.
+    scratch_grows_steady: Option<u64>,
+    bitwise_vs_native: bool,
+}
+
+/// One distributed row: a full AMR epoch under one backend, recording
+/// the new `kernel_ns_total` counter next to wallclock.
+struct Bench6DistRow {
+    backend: &'static str,
+    localities: usize,
+    wall: Duration,
+    kernel_ns_total: u64,
+    bitwise_match: bool,
+}
+
+/// Deterministic block inputs for the microbench; `r` starts below zero
+/// so r = 0 lands on a point and the origin select is always exercised.
+fn bench6_block(m: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, f64, f64) {
+    let n = m + 6;
+    let dx = 0.05;
+    let dt = 0.25 * dx;
+    let r: Vec<f64> = (0..n).map(|i| -(3.0 * dx) + dx * i as f64).collect();
+    let chi: Vec<f64> = (0..n).map(|i| 0.3 * (0.41 * i as f64).sin()).collect();
+    let phi: Vec<f64> = (0..n).map(|i| 0.2 * (0.73 * i as f64).cos()).collect();
+    let pi: Vec<f64> = (0..n).map(|i| 0.1 * (1.1 * i as f64).sin()).collect();
+    (chi, phi, pi, r, dx, dt)
+}
+
+/// Time native (three-pass, allocating) vs fused-scalar vs simd at each
+/// block size. The fast paths run on warm scratch + a reused output, so
+/// the measured phase performs zero kernel allocations — asserted via
+/// `Scratch::grows` staying flat and published per row.
+fn bench6_kernel_rows(sizes: &[usize], rep_budget: usize) -> Vec<KernelRow> {
+    use crate::amr::kernel::{fused_rk3_step_scalar, fused_rk3_step_simd, Scratch};
+    use crate::amr::physics::{rk3_step, Fields};
+    let mut rows = Vec::new();
+    for &m in sizes {
+        let (chi, phi, pi, r, dx, dt) = bench6_block(m);
+        let reps = (rep_budget / (m + 8)).clamp(30, 5_000);
+        let reference = rk3_step(&chi, &phi, &pi, &r, dx, dt);
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let out = rk3_step(&chi, &phi, &pi, &r, dx, dt);
+            std::hint::black_box(&out);
+        }
+        let native_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+        rows.push(KernelRow {
+            backend: "native",
+            m,
+            ns_per_step: native_ns,
+            scratch_grows_steady: None,
+            bitwise_vs_native: true,
+        });
+
+        for (name, simd) in [("fused", false), ("simd", true)] {
+            let mut s = Scratch::new();
+            let mut out = Fields::default();
+            let step = |s: &mut Scratch, out: &mut Fields| {
+                if simd {
+                    fused_rk3_step_simd(s, &chi, &phi, &pi, &r, dx, dt, out);
+                } else {
+                    fused_rk3_step_scalar(s, &chi, &phi, &pi, &r, dx, dt, out);
+                }
+            };
+            step(&mut s, &mut out); // warm scratch + output buffers
+            let bitwise = out == reference;
+            let warm = s.grows();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                step(&mut s, &mut out);
+                std::hint::black_box(&out);
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+            rows.push(KernelRow {
+                backend: name,
+                m,
+                ns_per_step: ns,
+                scratch_grows_steady: Some(s.grows() - warm),
+                bitwise_vs_native: bitwise,
+            });
+        }
+    }
+    rows
+}
+
+/// Run the same AMR epoch under each backend across the locality sweep
+/// (instant wire: BENCH_2 owns the network story, this row isolates
+/// compute), recording wallclock + `kernel_ns_total` and pinning bitwise
+/// equality against the single-locality native reference.
+fn bench6_dist_rows(
+    n0: usize,
+    steps: u64,
+    workers: usize,
+    locality_set: &[usize],
+) -> Vec<Bench6DistRow> {
+    let mesh = MeshConfig { r_max: 20.0, n0, levels: 1, cfl: 0.25, granularity: 12 };
+    let reg = Region { lo: 6 * (n0 - 1) / 10, hi: 10 * (n0 - 1) / 10 };
+    let h = Hierarchy::build(mesh, &[vec![reg]]).expect("bench6 mesh");
+    let cfg = AmrConfig { coarse_steps: steps, ..Default::default() };
+    let plan = Arc::new(EpochPlan::new(h, steps));
+    let init = initial_block_states(&plan, &cfg);
+
+    let reference = {
+        let rt = PxRuntime::boot(PxConfig {
+            localities: 1,
+            workers_per_locality: workers,
+            policy: SchedPolicyKind::LocalPriority,
+            net: NetModel::instant(),
+        });
+        let out = run_epoch(&rt, plan.clone(), Arc::new(NativeBackend), cfg, &init)
+            .expect("reference epoch");
+        rt.shutdown();
+        out
+    };
+
+    let backends: [(&'static str, Arc<dyn ComputeBackend>); 3] = [
+        ("native", Arc::new(NativeBackend)),
+        ("fused", Arc::new(FusedBackend)),
+        ("simd", Arc::new(SimdBackend)),
+    ];
+    let mut rows = Vec::new();
+    for (name, backend) in backends {
+        for &localities in locality_set {
+            let rt = PxRuntime::boot(PxConfig {
+                localities,
+                workers_per_locality: workers,
+                policy: SchedPolicyKind::LocalPriority,
+                net: NetModel::instant(),
+            });
+            let t0 = Instant::now();
+            let out =
+                run_epoch(&rt, plan.clone(), backend.clone(), cfg, &init).expect("bench6 epoch");
+            let wall = t0.elapsed();
+            rows.push(Bench6DistRow {
+                backend: name,
+                localities,
+                wall,
+                kernel_ns_total: rt.counters_total().kernel_ns_total,
+                bitwise_match: reference.bitwise_eq(&out),
+            });
+            rt.shutdown();
+        }
+    }
+    rows
+}
+
+/// `native ns/step ÷ fast ns/step` at block size `m`.
+fn bench6_speedup(rows: &[KernelRow], m: usize, fast: &str) -> Option<f64> {
+    let find =
+        |b: &str| rows.iter().find(|r| r.backend == b && r.m == m).map(|r| r.ns_per_step);
+    Some(find("native")? / find(fast)?)
+}
+
+fn render_bench6_table(
+    rows: &[KernelRow],
+    dist: &[Bench6DistRow],
+    default_block: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str("== BENCH 6: kernel fast path — native vs fused vs simd (DESIGN.md §10) ==\n");
+    let mut t = Table::new(&["m", "backend", "ns/step", "ns/point", "vs native", "scratch grows"]);
+    for r in rows {
+        let native = rows
+            .iter()
+            .find(|x| x.backend == "native" && x.m == r.m)
+            .map(|x| x.ns_per_step)
+            .unwrap_or(f64::NAN);
+        t.row(&[
+            r.m.to_string(),
+            r.backend.into(),
+            format!("{:.0}", r.ns_per_step),
+            format!("{:.2}", r.ns_per_step / r.m as f64),
+            format!("{:.2}x", native / r.ns_per_step),
+            r.scratch_grows_steady.map(|g| g.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    out.push_str(&t.render());
+    if let Some(sp) = bench6_speedup(rows, default_block, "simd") {
+        out.push_str(&format!("\nkernel_speedup (native/simd @ m={default_block}): {sp:.2}x\n"));
+    }
+    out.push_str("\n-- distributed epoch: kernel time across localities (instant wire) --\n");
+    let mut t = Table::new(&["backend", "localities", "wall", "kernel ns total", "bitwise"]);
+    for r in dist {
+        t.row(&[
+            r.backend.into(),
+            r.localities.to_string(),
+            fmt_dur(r.wall),
+            r.kernel_ns_total.to_string(),
+            r.bitwise_match.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+fn render_bench6_json(
+    scale: Scale,
+    rows: &[KernelRow],
+    dist: &[Bench6DistRow],
+    default_block: usize,
+) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"kernel_fast_path\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!(
+        "  \"scale\": \"{}\",\n",
+        if scale == Scale::Full { "full" } else { "quick" }
+    ));
+    out.push_str(&format!("  \"default_block\": {default_block},\n"));
+    if let Some(sp) = bench6_speedup(rows, default_block, "simd") {
+        out.push_str(&format!("  \"kernel_speedup\": {sp:.3},\n"));
+    }
+    if let Some(sp) = bench6_speedup(rows, default_block, "fused") {
+        out.push_str(&format!("  \"fused_speedup\": {sp:.3},\n"));
+    }
+    out.push_str("  \"kernel\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"m\": {}, \"ns_per_step\": {:.1}, \
+             \"ns_per_point\": {:.3}, \"scratch_grows_steady\": {}, \
+             \"bitwise_vs_native\": {}}}{}\n",
+            r.backend,
+            r.m,
+            r.ns_per_step,
+            r.ns_per_step / r.m as f64,
+            r.scratch_grows_steady.map(|g| g.to_string()).unwrap_or_else(|| "null".into()),
+            r.bitwise_vs_native,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"dist\": [\n");
+    for (i, r) in dist.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"localities\": {}, \"wall_ms\": {:.3}, \
+             \"kernel_ns_total\": {}, \"bitwise_match_vs_single\": {}}}{}\n",
+            r.backend,
+            r.localities,
+            r.wall.as_secs_f64() * 1e3,
+            r.kernel_ns_total,
+            r.bitwise_match,
+            if i + 1 == dist.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The BENCH 6 experiment: human-readable table plus the
+/// machine-readable `BENCH_6.json` body, from one measurement pass.
+pub fn bench6_report(scale: Scale) -> (String, String) {
+    let (sizes, rep_budget, n0, steps, workers): (&[usize], usize, usize, u64, usize) =
+        match scale {
+            Scale::Quick => (&[8, 16, 64, 256, 1024, 4096], 400_000, 401, 4, 2),
+            Scale::Full => {
+                (&[8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096], 3_000_000, 1601, 8, 4)
+            }
+        };
+    let rows = bench6_kernel_rows(sizes, rep_budget);
+    let dist = bench6_dist_rows(n0, steps, workers, &[1, 2, 4, 8]);
+    (
+        render_bench6_table(&rows, &dist, BENCH6_DEFAULT_BLOCK),
+        render_bench6_json(scale, &rows, &dist, BENCH6_DEFAULT_BLOCK),
+    )
+}
+
+/// Run the BENCH 6 experiment and write `BENCH_6.json` to
+/// `PX_BENCH6_JSON` (or `<repo>/BENCH_6.json`, next to its siblings).
+/// Returns the path written and the human-readable table.
+pub fn write_bench6_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, String)> {
+    let (table, json) = bench6_report(scale);
+    let path = std::env::var("PX_BENCH6_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_6.json")
+        });
+    std::fs::write(&path, json)?;
+    Ok((path, table))
+}
+
 // ------------------------------------------------------------- §V FPGA
 
 /// §V: software queue vs FPGA-offloaded global queue on the Fibonacci
@@ -2403,6 +2699,45 @@ mod tests {
             "\"dead_letters_end\": 0",
             "\"bitwise_match_vs_single\": true",
             "\"series\": [",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "unbalanced braces");
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn bench6_json_reports_kernel_speedup_and_balances_braces() {
+        // Tiny instance of the kernel experiment (two block sizes, one of
+        // them off-lane; 2 localities, 2 coarse steps): the fast paths
+        // must stay bitwise-identical to native and allocation-free in
+        // steady state even at this scale — only the *speedup magnitude*
+        // needs the full bench.
+        let rows = bench6_kernel_rows(&[8, 13], 20_000);
+        assert_eq!(rows.len(), 6, "3 backends x 2 sizes");
+        assert!(rows.iter().all(|r| r.bitwise_vs_native), "fast path drifted from native");
+        assert!(
+            rows.iter().all(|r| r.scratch_grows_steady.unwrap_or(0) == 0),
+            "steady-state kernel allocations detected"
+        );
+        let dist = bench6_dist_rows(201, 2, 1, &[1, 2]);
+        assert_eq!(dist.len(), 6, "3 backends x 2 locality counts");
+        assert!(dist.iter().all(|r| r.bitwise_match), "distributed fast path drifted");
+        assert!(dist.iter().all(|r| r.kernel_ns_total > 0), "kernel_ns_total must accumulate");
+        let j = render_bench6_json(Scale::Quick, &rows, &dist, 8);
+        for key in [
+            "\"bench\": \"kernel_fast_path\"",
+            "\"kernel_speedup\"",
+            "\"fused_speedup\"",
+            "\"backend\": \"native\"",
+            "\"backend\": \"fused\"",
+            "\"backend\": \"simd\"",
+            "\"scratch_grows_steady\": 0",
+            "\"scratch_grows_steady\": null",
+            "\"bitwise_vs_native\": true",
+            "\"bitwise_match_vs_single\": true",
+            "\"kernel\": [",
+            "\"dist\": [",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -9,11 +9,12 @@
 //!   bench3     ghost batching + adaptive placement study, BENCH_3.json
 //!   bench4     elastic localities study (steady/shrink/grow), BENCH_4.json
 //!   bench5     crash tolerance study (steady/checkpointed/kill), BENCH_5.json
+//!   bench6     kernel fast path study (native/fused/simd), BENCH_6.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
 //!   --n0 N --levels L --steps S --granularity G --workers W
-//!   --backend native|xla --scheduler local|global --barrier
+//!   --backend native|fused|simd|xla --scheduler local|global --barrier
 //!   --epochs E (regrid between epochs) --amplitude A --deadline-ms MS
 //!   --localities K (distributed localities with a simulated wire)
 //!   --placement slabs|weighted|adaptive (block -> locality policy;
@@ -90,30 +91,10 @@ fn main() {
             Ok(())
         }
         "dist" => cmd_dist(&args, scale),
-        "bench3" => match bench::write_bench3_json(scale) {
-            Ok((path, table)) => {
-                print!("{table}");
-                println!("BENCH_3.json written to {}", path.display());
-                Ok(())
-            }
-            Err(e) => Err(format!("bench3 experiment failed: {e}")),
-        },
-        "bench4" => match bench::write_bench4_json(scale) {
-            Ok((path, table)) => {
-                print!("{table}");
-                println!("BENCH_4.json written to {}", path.display());
-                Ok(())
-            }
-            Err(e) => Err(format!("bench4 experiment failed: {e}")),
-        },
-        "bench5" => match bench::write_bench5_json(scale) {
-            Ok((path, table)) => {
-                print!("{table}");
-                println!("BENCH_5.json written to {}", path.display());
-                Ok(())
-            }
-            Err(e) => Err(format!("bench5 experiment failed: {e}")),
-        },
+        "bench3" => cmd_bench_artifact(&args, scale, "BENCH_3.json", bench::write_bench3_json),
+        "bench4" => cmd_bench_artifact(&args, scale, "BENCH_4.json", bench::write_bench4_json),
+        "bench5" => cmd_bench_artifact(&args, scale, "BENCH_5.json", bench::write_bench5_json),
+        "bench6" => cmd_bench_artifact(&args, scale, "BENCH_6.json", bench::write_bench6_json),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -126,15 +107,53 @@ fn main() {
     }
 }
 
+/// Uniform `--backend` handling for `run`/`dist`/bench subcommands: the
+/// flag wins, then `PX_BACKEND`, then `native`; unknown values are
+/// rejected with the valid list. The validated choice is written back to
+/// `PX_BACKEND` so the bench implementations (which read the env) follow
+/// the CLI.
+fn backend_arg(args: &Args) -> Result<BackendKind, String> {
+    let default = std::env::var("PX_BACKEND").unwrap_or_else(|_| "native".to_string());
+    let s = args.get("backend", &default);
+    let kind: BackendKind = s.parse()?;
+    std::env::set_var("PX_BACKEND", s);
+    Ok(kind)
+}
+
+/// Shared driver for the `benchN` subcommands: validate `--backend`,
+/// reject unknown options, run the experiment, report the artifact path.
+fn cmd_bench_artifact(
+    args: &Args,
+    scale: bench::Scale,
+    label: &str,
+    write: fn(bench::Scale) -> std::io::Result<(std::path::PathBuf, String)>,
+) -> Result<(), String> {
+    let _ = backend_arg(args)?;
+    let unknown = args.unknown();
+    if !unknown.is_empty() {
+        return Err(format!("unknown options: {}", unknown.join(", ")));
+    }
+    match write(scale) {
+        Ok((path, table)) => {
+            print!("{table}");
+            println!("{label} written to {}", path.display());
+            Ok(())
+        }
+        Err(e) => Err(format!("{label} experiment failed: {e}")),
+    }
+}
+
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6> [--options]\n\n\
          run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
-                       --workers <cores> --backend native|xla --scheduler local|global\n\
+                       --workers <cores> --backend native|fused|simd|xla\n\
+                       --scheduler local|global\n\
                        --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
                        --localities 1 --placement slabs|weighted|adaptive\n\
-         dist options: --placement slabs|weighted|adaptive (default slabs + balancer)\n\
+         dist options: --backend native|fused|simd|xla (physics backend)\n\
+                       --placement slabs|weighted|adaptive (default slabs + balancer)\n\
                        --elastic \"25:-3,25:-2,60:+2,60:+3\" (scripted membership\n\
                        changes at task-completion percentages: -L leave, +L join)\n\
                        --kill <L>@<frac> (kill locality L unplanned at the given\n\
@@ -147,11 +166,15 @@ fn print_help() {
                        grow-mid-run across 1/2/4/8 localities (BENCH_4.json)\n\
          bench5:       crash tolerance — steady vs checkpointed vs one unplanned\n\
                        locality death mid-run across 2/4/8 localities (BENCH_5.json)\n\
-         env: PX_SCALE=quick|full  PX_BACKEND=native|xla  PX_ARTIFACTS=<dir>"
+         bench6:       kernel fast path — native vs fused vs simd ns/step across\n\
+                       block sizes and 1/2/4/8 localities (BENCH_6.json)\n\
+                       (bench subcommands also accept --backend)\n\
+         env: PX_SCALE=quick|full  PX_BACKEND=native|fused|simd|xla  PX_ARTIFACTS=<dir>"
     );
 }
 
 fn cmd_dist(args: &Args, scale: bench::Scale) -> Result<(), String> {
+    let _ = backend_arg(args)?;
     let placement: PlacementPolicy = args
         .get_choice("placement", &PlacementPolicy::CLI_NAMES, "slabs")?
         .parse()?;
@@ -221,7 +244,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         "workers",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     )?;
-    let backend_s = args.get("backend", "native");
+    let kind = backend_arg(args)?;
     let scheduler: SchedPolicyKind = args.get("scheduler", "local").parse()?;
     let barrier = args.flag("barrier");
     let epochs: u64 = args.get_parse("epochs", 1)?;
@@ -236,7 +259,6 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         return Err(format!("unknown options: {}", unknown.join(", ")));
     }
 
-    let kind: BackendKind = backend_s.parse()?;
     let dir = std::env::var("PX_ARTIFACTS")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
     let backend = make_backend(kind, &dir).map_err(|e| e.to_string())?;

@@ -88,6 +88,11 @@ pub struct Counters {
     pub lco_triggers: Counter,
     /// XLA executable invocations (the PJRT hot path).
     pub xla_calls: Counter,
+    /// Nanoseconds spent inside `ComputeBackend::step_exact` on this
+    /// locality — the pure kernel cost, excluding assembly/scheduling, so
+    /// a faster backend (DESIGN.md §10) is visible next to `amr_pushes`
+    /// and the CostModel's per-block EWMA.
+    pub kernel_ns_total: Counter,
     /// AMR dataflow inputs delivered into a task table — same-locality
     /// `Arc` refcount bumps plus decoded remote arrivals (a remote input
     /// counts once here, at the receiver, and once in
@@ -160,6 +165,7 @@ pub struct CounterSnapshot {
     pub migrations: u64,
     pub lco_triggers: u64,
     pub xla_calls: u64,
+    pub kernel_ns_total: u64,
     pub amr_pushes: u64,
     pub amr_remote_pushes: u64,
     pub payload_deep_copies: u64,
@@ -196,6 +202,7 @@ impl Counters {
             migrations: self.migrations.get(),
             lco_triggers: self.lco_triggers.get(),
             xla_calls: self.xla_calls.get(),
+            kernel_ns_total: self.kernel_ns_total.get(),
             amr_pushes: self.amr_pushes.get(),
             amr_remote_pushes: self.amr_remote_pushes.get(),
             payload_deep_copies: self.payload_deep_copies.get(),
@@ -237,6 +244,7 @@ impl CounterSnapshot {
         self.migrations += s.migrations;
         self.lco_triggers += s.lco_triggers;
         self.xla_calls += s.xla_calls;
+        self.kernel_ns_total += s.kernel_ns_total;
         self.amr_pushes += s.amr_pushes;
         self.amr_remote_pushes += s.amr_remote_pushes;
         self.payload_deep_copies += s.payload_deep_copies;
@@ -272,6 +280,7 @@ impl CounterSnapshot {
             migrations: self.migrations - earlier.migrations,
             lco_triggers: self.lco_triggers - earlier.lco_triggers,
             xla_calls: self.xla_calls - earlier.xla_calls,
+            kernel_ns_total: self.kernel_ns_total - earlier.kernel_ns_total,
             amr_pushes: self.amr_pushes - earlier.amr_pushes,
             amr_remote_pushes: self.amr_remote_pushes - earlier.amr_remote_pushes,
             payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
@@ -311,6 +320,7 @@ impl CounterSnapshot {
             ("migrations", self.migrations),
             ("lco_triggers", self.lco_triggers),
             ("xla_calls", self.xla_calls),
+            ("kernel_ns_total", self.kernel_ns_total),
             ("amr_pushes", self.amr_pushes),
             ("amr_remote_pushes", self.amr_remote_pushes),
             ("payload_deep_copies", self.payload_deep_copies),
@@ -393,6 +403,7 @@ mod tests {
         assert!(s.contains("dead_letters") && s.contains("parcels_replayed"));
         assert!(s.contains("blocks_recovered") && s.contains("heartbeats_missed"));
         assert!(s.contains("bounced"));
+        assert!(s.contains("kernel_ns_total"));
     }
 
     #[test]
@@ -404,7 +415,9 @@ mod tests {
         a.queue_hwm.max(5);
         a.parcels_replayed.add(2);
         a.blocks_recovered.inc();
+        a.kernel_ns_total.add(100);
         let b = Counters::default();
+        b.kernel_ns_total.add(250);
         b.amr_batched_pushes.add(4);
         b.amr_batch_spawns.add(1);
         b.queue_hwm.max(9);
@@ -423,5 +436,6 @@ mod tests {
         assert_eq!(total.heartbeats_missed, 5);
         assert_eq!(total.dead_letters, 1);
         assert_eq!(total.bounced, 2);
+        assert_eq!(total.kernel_ns_total, 350);
     }
 }
