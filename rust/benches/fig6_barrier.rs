@@ -1,10 +1,28 @@
 //! Fig 6: barrier vs no-barrier — regenerates the paper's rows/series.
+//!
+//! Two halves:
+//! 1. BENCH 7 (`BENCH_7.json`): the same contrast replayed event-by-event
+//!    on the deterministic virtual-clock executor — exact, reproducible
+//!    makespans over the measured epoch DAG (fast; always runs).
+//! 2. The wallclock cone study (timestep profiles under a real deadline);
+//!    skipped when `PX_FIG6_REPLAY_ONLY` is set (CI smoke).
+//!
 //! Run: `cargo bench --bench fig6_barrier` (PX_SCALE=full for paper scale).
 fn main() {
     if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
     }
     let t0 = std::time::Instant::now();
-    print!("{}", parallex::bench::fig6_barrier(parallex::bench::Scale::from_env()));
+    let scale = parallex::bench::Scale::from_env();
+    match parallex::bench::write_bench7_json(scale) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!("[fig6_barrier] wrote {}", path.display());
+        }
+        Err(e) => eprintln!("[fig6_barrier] BENCH_7.json not written: {e}"),
+    }
+    if std::env::var("PX_FIG6_REPLAY_ONLY").is_err() {
+        print!("{}", parallex::bench::fig6_barrier(scale));
+    }
     eprintln!("[fig6_barrier] total {:.1}s", t0.elapsed().as_secs_f64());
 }

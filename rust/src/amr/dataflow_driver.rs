@@ -1921,12 +1921,8 @@ impl ElasticController {
                 let mut next = 0usize;
                 loop {
                     let done = state.tasks_done();
-                    while next < mplan.events.len() {
+                    while next < mplan.scripted_events_due(done, total) {
                         let ev = mplan.events[next];
-                        let due = (ev.at_fraction * total as f64).ceil() as u64;
-                        if done < due {
-                            break;
-                        }
                         apply_membership_event(&state, &membership, ev.event, done, &mut stats);
                         next += 1;
                     }
@@ -2017,30 +2013,47 @@ pub struct CrashStats {
     pub fragments_replayed: u64,
     /// Dead-letter parcels re-resolved and re-sent (all sweeps).
     pub parcels_replayed: u64,
-    /// Missed heartbeat deadlines the detector observed.
+    /// Missed heartbeat deadlines the detector observed. One detector
+    /// watches the whole epoch, so in a multi-kill run
+    /// ([`run_epoch_crash_multi`]) the aggregate is reported on the
+    /// *first* spec's stats and the rest carry 0.
     pub heartbeats_missed: u64,
     /// AGAS residents the dead locality stranded, per the runtime's
     /// forced-retire audit ([`RetireReport`](crate::px::RetireReport)).
     pub residents_stranded: usize,
 }
 
-/// Monitor thread driving a [`KillSpec`] against a running epoch: hosts
-/// the heartbeat fabric (board, beater, failure detector), injects the
-/// scripted failure, and — once the detector declares the death — runs
-/// recovery end-to-end (membership forced retire, block re-homing +
-/// checkpoint replay, dead-letter sweeps until the epoch completes).
-/// Like the balancer and the membership controller, it is the single
-/// migrating thread of its epoch.
+/// Per-victim progress the multi-kill controller tracks: the spec, its
+/// due task count, and the injection/recovery state machine.
+struct VictimRun {
+    kill: KillSpec,
+    due: u64,
+    halted_at: Option<Instant>,
+    recovered: bool,
+    stats: CrashStats,
+}
+
+/// Monitor thread driving a list of [`KillSpec`]s against a running
+/// epoch: hosts the heartbeat fabric (board, beater, failure detector),
+/// injects each scripted failure, and — as the detector declares each
+/// death — runs recovery end-to-end (membership forced retire, block
+/// re-homing + checkpoint replay, dead-letter sweeps until the epoch
+/// completes). Two specs with the same fraction are *concurrent* kills
+/// (both dead before either recovers); staggered fractions give
+/// *cascading* failures (a second victim dying while the first is being
+/// — or has just been — recovered). Like the balancer and the
+/// membership controller, it is the single migrating thread of its
+/// epoch.
 struct CrashController {
     stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<CrashStats>>,
+    handle: Option<std::thread::JoinHandle<Vec<CrashStats>>>,
 }
 
 impl CrashController {
     fn start(
         state: Arc<DriverState>,
         membership: Arc<Membership>,
-        kill: KillSpec,
+        kills: Vec<KillSpec>,
     ) -> CrashController {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -2064,94 +2077,134 @@ impl CrashController {
                     },
                 );
                 let total = state.plan.total_tasks().max(1);
-                let due = (kill.at_fraction * total as f64).ceil() as u64;
-                let mut stats = CrashStats { killed: kill.victim, ..Default::default() };
-                let mut halted_at: Option<Instant> = None;
-                let mut recovered = false;
+                let mut runs: Vec<VictimRun> = kills
+                    .iter()
+                    .map(|&kill| VictimRun {
+                        kill,
+                        due: (kill.at_fraction * total as f64).ceil() as u64,
+                        halted_at: None,
+                        recovered: false,
+                        stats: CrashStats { killed: kill.victim, ..Default::default() },
+                    })
+                    .collect();
+                // Straggler dead-letter sweeps are charged to the most
+                // recently recovered victim — with one victim this is the
+                // old accounting exactly.
+                let mut last_recovered = 0usize;
 
                 // The failure itself: heartbeats stop, the port dies with
                 // no drain (in-flight parcels become dead letters), and
                 // the driver fence keeps the corpse from committing any
                 // further task results.
-                let inject = |stats: &mut CrashStats| -> Instant {
-                    stats.at_tasks = state.tasks_done();
-                    board.halt(kill.victim);
-                    if let Err(e) = state.kill_locality(kill.victim as usize) {
-                        eprintln!("[crash] kill of L{} rejected: {e}", kill.victim);
+                let inject = |run: &mut VictimRun| {
+                    run.stats.at_tasks = state.tasks_done();
+                    board.halt(run.kill.victim);
+                    if let Err(e) = state.kill_locality(run.kill.victim as usize) {
+                        eprintln!("[crash] kill of L{} rejected: {e}", run.kill.victim);
                     }
-                    net.kill_port(kill.victim);
-                    Instant::now()
+                    net.kill_port(run.kill.victim);
+                    run.halted_at = Some(Instant::now());
                 };
-                // Everything downstream of the death declaration, in
+                // Everything downstream of a death declaration, in
                 // DESIGN.md §9 order: runtime teardown (forced retire —
                 // cache purge, audit, quarantine), then driver recovery
-                // (re-home + checkpoint replay), then the first
+                // (re-home + checkpoint replay; `members()` excludes any
+                // *other* victim still dead, so a concurrent second
+                // corpse is never picked as a refuge), then the first
                 // dead-letter sweep.
-                let recover = |stats: &mut CrashStats, halted: Option<Instant>| {
-                    stats.detection_latency = halted.map(|t| t.elapsed()).unwrap_or_default();
+                let recover = |run: &mut VictimRun| {
+                    let victim = run.kill.victim;
+                    run.stats.detection_latency =
+                        run.halted_at.map(|t| t.elapsed()).unwrap_or_default();
                     let t0 = Instant::now();
-                    match membership.force_retire(kill.victim) {
-                        Ok(rep) => stats.residents_stranded = rep.residents_left,
-                        Err(e) => eprintln!("[crash] forced retire of L{} failed: {e}", kill.victim),
+                    match membership.force_retire(victim) {
+                        Ok(rep) => run.stats.residents_stranded = rep.residents_left,
+                        Err(e) => eprintln!("[crash] forced retire of L{victim} failed: {e}"),
                     }
-                    match state.recover_locality(kill.victim as usize) {
+                    match state.recover_locality(victim as usize) {
                         Ok((blocks, frags)) => {
-                            stats.blocks_recovered = blocks;
-                            stats.fragments_replayed = frags;
+                            run.stats.blocks_recovered = blocks;
+                            run.stats.fragments_replayed = frags;
                         }
-                        Err(e) => eprintln!("[crash] recovery of L{} failed: {e}", kill.victim),
+                        Err(e) => eprintln!("[crash] recovery of L{victim} failed: {e}"),
                     }
-                    stats.parcels_replayed += state.replay_dead_letters();
-                    stats.recovery_latency = t0.elapsed();
+                    run.stats.parcels_replayed += state.replay_dead_letters();
+                    run.stats.recovery_latency = t0.elapsed();
+                    run.recovered = true;
                 };
 
                 loop {
-                    if halted_at.is_none() && state.tasks_done() >= due {
-                        halted_at = Some(inject(&mut stats));
+                    let done = state.tasks_done();
+                    for run in runs.iter_mut() {
+                        if run.halted_at.is_none() && done >= run.due {
+                            inject(run);
+                        }
                     }
-                    if halted_at.is_some() && !recovered {
-                        match rx.try_recv() {
-                            Ok(dead) if dead == kill.victim => {
-                                recover(&mut stats, halted_at);
-                                recovered = true;
+                    // Drain every declaration pending this pass — two
+                    // concurrent victims can be declared back to back.
+                    while let Ok(dead) = rx.try_recv() {
+                        match runs
+                            .iter()
+                            .position(|r| r.kill.victim == dead && r.halted_at.is_some() && !r.recovered)
+                        {
+                            Some(i) => {
+                                recover(&mut runs[i]);
+                                last_recovered = i;
                             }
                             // A live member mis-declared (beater thread
                             // starved past the detector's window): ignore
                             // — nothing was killed, the epoch is intact.
-                            Ok(other) => {
-                                eprintln!("[crash] spurious death notice for live L{other} ignored")
+                            None => {
+                                eprintln!("[crash] spurious death notice for live L{dead} ignored")
                             }
-                            Err(_) => {}
                         }
-                    } else if recovered {
+                    }
+                    if runs.iter().any(|r| r.recovered) {
                         // Straggler sweeps: hop-forwards off stale caches
                         // can race into quarantine after the first replay.
-                        stats.parcels_replayed += state.replay_dead_letters();
+                        runs[last_recovered].stats.parcels_replayed += state.replay_dead_letters();
                     }
                     if stop2.load(Ordering::SeqCst) {
-                        if halted_at.is_none() {
-                            // Epoch finished before the scripted fraction:
-                            // inject anyway (the elastic controller's
-                            // leftover-event semantics) so the run still
-                            // exercises and reports the recovery path.
-                            halted_at = Some(inject(&mut stats));
-                        }
-                        if !recovered {
-                            match rx.recv_timeout(Duration::from_secs(5)) {
-                                Ok(dead) if dead == kill.victim => recover(&mut stats, halted_at),
-                                Ok(other) => eprintln!(
-                                    "[crash] spurious death notice for live L{other} ignored"
-                                ),
-                                Err(_) => eprintln!(
-                                    "[crash] detector never declared L{} dead",
-                                    kill.victim
-                                ),
+                        for run in runs.iter_mut() {
+                            if run.halted_at.is_none() {
+                                // Epoch finished before the scripted
+                                // fraction: inject anyway (the elastic
+                                // controller's leftover-event semantics)
+                                // so the run still exercises and reports
+                                // the recovery path.
+                                inject(run);
                             }
                         }
-                        stats.parcels_replayed += state.replay_dead_letters();
+                        for i in 0..runs.len() {
+                            while !runs[i].recovered {
+                                match rx.recv_timeout(Duration::from_secs(5)) {
+                                    Ok(dead) => {
+                                        match runs.iter().position(|r| {
+                                            r.kill.victim == dead && !r.recovered
+                                        }) {
+                                            Some(j) => {
+                                                recover(&mut runs[j]);
+                                                last_recovered = j;
+                                            }
+                                            None => eprintln!(
+                                                "[crash] spurious death notice for live L{dead} ignored"
+                                            ),
+                                        }
+                                    }
+                                    Err(_) => {
+                                        eprintln!(
+                                            "[crash] detector never declared L{} dead",
+                                            runs[i].kill.victim
+                                        );
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        runs[last_recovered].stats.parcels_replayed += state.replay_dead_letters();
                         beater.stop();
-                        stats.heartbeats_missed = detector.stop().heartbeats_missed;
-                        return stats;
+                        runs[0].stats.heartbeats_missed = detector.stop().heartbeats_missed;
+                        return runs.into_iter().map(|r| r.stats).collect();
                     }
                     std::thread::sleep(Duration::from_micros(200));
                 }
@@ -2160,7 +2213,7 @@ impl CrashController {
         CrashController { stop, handle: Some(handle) }
     }
 
-    fn stop(mut self) -> CrashStats {
+    fn stop(mut self) -> Vec<CrashStats> {
         self.stop.store(true, Ordering::SeqCst);
         self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
     }
@@ -2319,27 +2372,61 @@ pub fn run_epoch_crash(
     opts: &DistAmrOpts,
     kill: KillSpec,
 ) -> Result<(AmrOutcome, CrashStats)> {
+    let (outcome, mut stats) =
+        run_epoch_crash_multi(rt, plan, backend, config, init, opts, &[kill])?;
+    Ok((outcome, stats.pop().expect("one KillSpec in, one CrashStats out")))
+}
+
+/// As [`run_epoch_crash`], with **multiple unplanned failures** in one
+/// epoch: every [`KillSpec`] in `kills` fires at its own scripted task
+/// fraction. Equal fractions are concurrent kills (several localities
+/// dead at once before any is recovered); distinct fractions cascade (a
+/// later victim dies after — possibly during — an earlier recovery).
+/// Victims must be pairwise distinct non-anchor members, and at least
+/// one locality (the anchor) always survives. Returns one
+/// [`CrashStats`] per spec, in spec order; the detector's aggregate
+/// `heartbeats_missed` is reported on the first spec's stats.
+pub fn run_epoch_crash_multi(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+    kills: &[KillSpec],
+) -> Result<(AmrOutcome, Vec<CrashStats>)> {
     let n_loc = rt.localities().len();
     if n_loc < 2 {
         return Err(crate::anyhow!("crash tolerance requires a multi-locality runtime"));
     }
-    if kill.victim == 0 {
-        return Err(crate::anyhow!(
-            "locality 0 is the anchor (AGAS service, bounce path and recovery root) and cannot \
-             be crash-recovered; kill a non-anchor locality"
-        ));
+    if kills.is_empty() {
+        return Err(crate::anyhow!("no kill specs: use run_epoch_checkpointed for a crash-free run"));
     }
-    if kill.victim as usize >= n_loc {
-        return Err(crate::anyhow!(
-            "kill victim {} outside this runtime's roster of {n_loc}",
-            kill.victim
-        ));
-    }
-    if !rt.membership().is_member(kill.victim) {
-        return Err(crate::anyhow!("kill victim {} is not a current member", kill.victim));
-    }
-    if !(0.0..=1.0).contains(&kill.at_fraction) {
-        return Err(crate::anyhow!("kill fraction {} outside [0, 1]", kill.at_fraction));
+    for (i, kill) in kills.iter().enumerate() {
+        if kill.victim == 0 {
+            return Err(crate::anyhow!(
+                "locality 0 is the anchor (AGAS service, bounce path and recovery root) and cannot \
+                 be crash-recovered; kill a non-anchor locality"
+            ));
+        }
+        if kill.victim as usize >= n_loc {
+            return Err(crate::anyhow!(
+                "kill victim {} outside this runtime's roster of {n_loc}",
+                kill.victim
+            ));
+        }
+        if !rt.membership().is_member(kill.victim) {
+            return Err(crate::anyhow!("kill victim {} is not a current member", kill.victim));
+        }
+        if !(0.0..=1.0).contains(&kill.at_fraction) {
+            return Err(crate::anyhow!("kill fraction {} outside [0, 1]", kill.at_fraction));
+        }
+        if kills[..i].iter().any(|k| k.victim == kill.victim) {
+            return Err(crate::anyhow!(
+                "kill victim {} listed twice — a locality only dies once per epoch",
+                kill.victim
+            ));
+        }
     }
     if config.barrier {
         return Err(crate::anyhow!(
@@ -2369,7 +2456,7 @@ pub fn run_epoch_crash(
         st.unregister_blocks();
         return Err(crate::anyhow!("block registration failed: {e}"));
     }
-    let controller = CrashController::start(st.clone(), rt.membership().clone(), kill);
+    let controller = CrashController::start(st.clone(), rt.membership().clone(), kills.to_vec());
 
     let init: Arc<HashMap<BlockId, Arc<Fields>>> =
         Arc::new(init.iter().map(|(id, f)| (*id, Arc::new(f.clone()))).collect());
@@ -2421,7 +2508,7 @@ pub fn run_epoch_crash(
         elapsed: st.start.elapsed(),
         tasks_run: st.tasks_run.load(Ordering::Relaxed),
         tasks_frozen: st.tasks_frozen.load(Ordering::Relaxed),
-        migrations: stats.blocks_recovered,
+        migrations: stats.iter().map(|s| s.blocks_recovered).sum(),
     };
     Ok((outcome, stats))
 }
@@ -3829,5 +3916,203 @@ mod tests {
         assert_eq!(runtime.net().dead_letters(), 0);
         assert_eq!(totals.parcels_sent, totals.parcels_received);
         runtime.shutdown();
+    }
+
+    #[test]
+    fn two_victim_concurrent_kill_recovers_bitwise_identical() {
+        // Two localities die at the *same* task fraction — both corpses
+        // on the floor before either recovery starts. The controller
+        // must recover each onto the members still alive at that moment
+        // (never onto the other corpse) and the epoch must still end
+        // bit-for-bit equal to an undisturbed run.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let runtime = rt_dist(4, 2);
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let kills = [
+            KillSpec { victim: 2, at_fraction: 0.3 },
+            KillSpec { victim: 3, at_fraction: 0.3 },
+        ];
+        let (out, stats) = run_epoch_crash_multi(
+            &runtime,
+            plan,
+            Arc::new(SpinBackend { spin_us: 30 }),
+            cfg,
+            &init,
+            &DistAmrOpts::default(),
+            &kills,
+        )
+        .unwrap();
+        assert_outcomes_bitwise_equal(&reference, &out, "kill L2+L3 at 30%");
+        assert_eq!(stats.len(), 2);
+        for (s, k) in stats.iter().zip(&kills) {
+            assert_eq!(s.killed, k.victim);
+            assert!(s.blocks_recovered >= 1, "victim L{} hosted blocks: {s:?}", k.victim);
+            assert!(
+                !runtime.membership().is_member(k.victim),
+                "dead L{} must end force-retired",
+                k.victim
+            );
+        }
+        let recovered: u64 = stats.iter().map(|s| s.blocks_recovered).sum();
+        assert_eq!(out.migrations, recovered);
+        let totals = runtime.counters_total();
+        assert_eq!(totals.blocks_recovered, recovered);
+        assert_eq!(
+            totals.parcels_replayed,
+            stats.iter().map(|s| s.parcels_replayed).sum::<u64>(),
+            "every dead-letter sweep is credited to exactly one victim's stats"
+        );
+        assert!(stats[0].heartbeats_missed >= 1, "aggregate missed beats on stats[0]");
+        assert_crash_counters_balanced(&runtime, "kill L2+L3 at 30%");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn crash_schedule_exploration_multi_victim_stays_bitwise_identical() {
+        // The tentpole's crash-layer exploration: ≥1000 seeded failure
+        // schedules (PX_DST_SCHEDULES overrides the budget, PX_DST_SEED
+        // the base seed), each deriving two distinct victims, kill
+        // fractions, and concurrent-vs-cascading timing from the
+        // schedule seed. Every schedule must complete bitwise-identical
+        // to the undisturbed reference with the parcel ledger closed
+        // (sent == received + replayed, dead letters end 0). A failing
+        // schedule prints its seed; the same seed re-derives the same
+        // kill script exactly.
+        use crate::testkit::dst;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        let mesh = MeshConfig { r_max: 10.0, n0: 81, levels: 0, cfl: 0.2, granularity: 8 };
+        let cfg =
+            AmrConfig { coarse_steps: 2, amplitude: 0.005, r0: 5.0, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        let found = dst::explore(
+            "multi-victim crash recovery",
+            dst::schedule_budget(1000),
+            |spec| {
+                let mut rng = Rng::from_seed(spec.seed);
+                // Two distinct non-anchor victims out of the 4-roster.
+                let victims: [LocalityId; 3] = [1, 2, 3];
+                let ai = rng.below(3) as usize;
+                let bi = (ai + 1 + rng.below(2) as usize) % 3;
+                let (a, b) = (victims[ai], victims[bi]);
+                let f1 = rng.range(10, 70) as f64 / 100.0;
+                let cascade = rng.chance(0.5);
+                let f2 = if cascade {
+                    (f1 + rng.range(10, 30) as f64 / 100.0).min(0.9)
+                } else {
+                    f1
+                };
+                let kills =
+                    [KillSpec { victim: a, at_fraction: f1 }, KillSpec { victim: b, at_fraction: f2 }];
+                let tag = format!("kill L{a}@{f1} + L{b}@{f2}");
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    let runtime = rt_dist(4, 1);
+                    let (out, stats) = run_epoch_crash_multi(
+                        &runtime,
+                        plan.clone(),
+                        Arc::new(SpinBackend { spin_us: 20 }),
+                        cfg,
+                        &init,
+                        &DistAmrOpts::default(),
+                        &kills,
+                    )
+                    .unwrap();
+                    assert_outcomes_bitwise_equal(&reference, &out, &tag);
+                    assert_eq!(stats.len(), 2, "{tag}");
+                    assert_crash_counters_balanced(&runtime, &tag);
+                    runtime.shutdown();
+                }));
+                dst::ScheduleResult {
+                    trace: Vec::new(),
+                    error: outcome
+                        .err()
+                        .map(|e| {
+                            format!("{tag}: {}", crate::testkit::prop::panic_message(e.as_ref()))
+                        }),
+                }
+            },
+        );
+        assert!(found.is_none(), "failing schedule: {found:?}");
+    }
+
+    #[test]
+    fn elastic_triggers_fire_in_order_under_the_virtual_clock() {
+        // The membership controller's trigger arithmetic, driven by the
+        // deterministic executor instead of a live epoch + polling
+        // sleeps: a virtual epoch completes one task per 100µs, the
+        // controller polls at 50µs + k·250µs (offset so poll instants
+        // never tie with task instants), and each scripted event must
+        // fire at exactly the first poll after its fraction is reached.
+        use crate::coordinator::{MembershipEvent, MembershipPlan, ScriptedEvent};
+        use crate::sim::DetExecutor;
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        let mplan = MembershipPlan {
+            events: vec![
+                ScriptedEvent { at_fraction: 0.25, event: MembershipEvent::Leave(2) },
+                ScriptedEvent { at_fraction: 0.60, event: MembershipEvent::Join(2) },
+            ],
+            load_trigger: None,
+        };
+        let total = 100u64;
+        let done = Rc::new(RefCell::new(0u64));
+        let fired: Rc<RefCell<Vec<(Duration, MembershipEvent)>>> =
+            Rc::new(RefCell::new(Vec::new()));
+        let mut ex = DetExecutor::new();
+        {
+            let done = done.clone();
+            ex.schedule_every(Duration::from_micros(100), move |_| {
+                *done.borrow_mut() += 1;
+                *done.borrow() < total
+            });
+        }
+        {
+            let done = done.clone();
+            let fired = fired.clone();
+            let mplan = mplan.clone();
+            let mut next = 0usize;
+            ex.schedule_in(Duration::from_micros(50), move |ex| {
+                ex.schedule_every(Duration::from_micros(250), move |ex| {
+                    let d = *done.borrow();
+                    while next < mplan.scripted_events_due(d, total) {
+                        fired.borrow_mut().push((ex.now(), mplan.events[next].event));
+                        next += 1;
+                    }
+                    true
+                });
+            });
+        }
+        ex.run_until(Duration::from_millis(12));
+        drop(ex);
+        let fired = fired.borrow();
+        // Leave(2) is due at task 25 (t = 2.5ms); the first poll at or
+        // after that is 50µs + 10·250µs = 2.55ms. Join(2) is due at task
+        // 60 (t = 6ms); first poll after is 6.05ms. Byte-for-byte
+        // deterministic: no tolerance windows, exact instants.
+        assert_eq!(
+            *fired,
+            vec![
+                (Duration::from_micros(2550), MembershipEvent::Leave(2)),
+                (Duration::from_micros(6050), MembershipEvent::Join(2)),
+            ]
+        );
     }
 }

@@ -2524,6 +2524,159 @@ pub fn write_bench6_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, S
     Ok((path, table))
 }
 
+// ------------------------------------------------------------- BENCH 7
+
+/// One deterministic-replay measurement: the measured epoch DAG replayed
+/// event-by-event on the virtual clock ([`crate::sim::clock::det_replay`]),
+/// barrier-free (dataflow LCO) vs globally barriered.
+struct Bench7Row {
+    levels: usize,
+    workers: usize,
+    dataflow: Duration,
+    barrier: Duration,
+    dataflow_eff: f64,
+    barrier_eff: f64,
+    /// Same replay under a different tie-break seed — equal makespans
+    /// mean the schedule contrast is a DAG property, not a tie artifact.
+    seed_stable: bool,
+}
+
+/// The fig 6 contrast on the deterministic executor: real task costs
+/// (measured once per DAG), virtual workers, virtual time — so the
+/// barrier penalty is exact and reproducible rather than a wallclock
+/// sample. `det_replay`'s makespan is a pure function of
+/// `(tasks, workers, barrier, seed)`.
+fn bench7_rows(scale: Scale) -> Vec<Bench7Row> {
+    let (n0, steps): (usize, u64) = match scale {
+        Scale::Quick => (801, 6),
+        Scale::Full => (6401, 24),
+    };
+    let backend = backend_from_env();
+    let barrier_cost = Duration::from_micros(5);
+    let mut rows = Vec::new();
+    for levels in [0usize, 1] {
+        let h = pulse_hierarchy(n0, levels, 0.05);
+        let mut mesh = h.config;
+        mesh.granularity = 16;
+        let h = Hierarchy::build(mesh, &h.regions[1..].to_vec()).expect("rebuild");
+        let plan = Arc::new(EpochPlan::new(h, steps));
+        let (mut tasks, ids) = epoch_dag(&plan, backend.clone());
+        for (i, id_k) in ids.iter().enumerate() {
+            tasks[i].tick = plan.barrier_tick(id_k.0, id_k.1);
+        }
+        for workers in [1usize, 2, 4, 8, 16] {
+            let df = crate::sim::clock::det_replay(&tasks, workers, None, 0);
+            let ba = crate::sim::clock::det_replay(&tasks, workers, Some(barrier_cost), 0);
+            let df2 = crate::sim::clock::det_replay(&tasks, workers, None, 0xF00D);
+            rows.push(Bench7Row {
+                levels,
+                workers,
+                dataflow: df.makespan,
+                barrier: ba.makespan,
+                dataflow_eff: df.efficiency,
+                barrier_eff: ba.efficiency,
+                seed_stable: df.makespan == df2.makespan,
+            });
+        }
+    }
+    rows
+}
+
+fn render_bench7_table(rows: &[Bench7Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "== BENCH 7: deterministic replay — dataflow (LCO) vs global barrier (virtual clock) ==\n",
+    );
+    out.push_str("(event-by-event det_replay over the measured epoch DAG; the fig 6 contrast\n\
+                  with exact virtual makespans instead of wallclock samples)\n");
+    let mut t =
+        Table::new(&["levels", "workers", "dataflow", "barrier", "barrier/df", "df speedup"]);
+    for levels in [0usize, 1] {
+        let base = rows
+            .iter()
+            .find(|r| r.levels == levels && r.workers == 1)
+            .map(|r| r.dataflow)
+            .unwrap_or_default();
+        for r in rows.iter().filter(|r| r.levels == levels) {
+            t.row(&[
+                r.levels.to_string(),
+                r.workers.to_string(),
+                fmt_dur(r.dataflow),
+                fmt_dur(r.barrier),
+                format!("{:.2}x", r.barrier.as_secs_f64() / r.dataflow.as_secs_f64()),
+                format!("{:.2}x", base.as_secs_f64() / r.dataflow.as_secs_f64()),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "paper's finding: the barrier pays max-over-ranks per tick while dataflow\n\
+         overlaps ticks — the gap widens with workers and refinement.\n",
+    );
+    out
+}
+
+fn render_bench7_json(scale: Scale, rows: &[Bench7Row]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"det_replay_barrier\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!(
+        "  \"scale\": \"{}\",\n",
+        if scale == Scale::Full { "full" } else { "quick" }
+    ));
+    // Headline: the barrier's makespan penalty at the widest machine on
+    // the deepest hierarchy measured.
+    if let Some(r) = rows.iter().filter(|r| r.levels == 1).max_by_key(|r| r.workers) {
+        out.push_str(&format!(
+            "  \"barrier_penalty_pct\": {:.3},\n",
+            (r.barrier.as_secs_f64() / r.dataflow.as_secs_f64() - 1.0) * 100.0
+        ));
+    }
+    out.push_str(&format!(
+        "  \"seed_stable\": {},\n",
+        rows.iter().all(|r| r.seed_stable)
+    ));
+    out.push_str("  \"series\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"levels\": {}, \"workers\": {}, \"dataflow_us\": {:.3}, \
+             \"barrier_us\": {:.3}, \"dataflow_eff\": {:.4}, \"barrier_eff\": {:.4}, \
+             \"seed_stable\": {}}}{}\n",
+            r.levels,
+            r.workers,
+            r.dataflow.as_secs_f64() * 1e6,
+            r.barrier.as_secs_f64() * 1e6,
+            r.dataflow_eff,
+            r.barrier_eff,
+            r.seed_stable,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The BENCH 7 experiment: human-readable table plus the
+/// machine-readable `BENCH_7.json` body, from one measurement pass.
+pub fn bench7_report(scale: Scale) -> (String, String) {
+    let rows = bench7_rows(scale);
+    (render_bench7_table(&rows), render_bench7_json(scale, &rows))
+}
+
+/// Run the BENCH 7 experiment and write `BENCH_7.json` to
+/// `PX_BENCH7_JSON` (or `<repo>/BENCH_7.json`, next to its siblings).
+/// Returns the path written and the human-readable table.
+pub fn write_bench7_json(scale: Scale) -> std::io::Result<(std::path::PathBuf, String)> {
+    let (table, json) = bench7_report(scale);
+    let path = std::env::var("PX_BENCH7_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_7.json")
+        });
+    std::fs::write(&path, json)?;
+    Ok((path, table))
+}
+
 // ------------------------------------------------------------- §V FPGA
 
 /// §V: software queue vs FPGA-offloaded global queue on the Fibonacci
@@ -2738,6 +2891,66 @@ mod tests {
             "\"bitwise_match_vs_single\": true",
             "\"kernel\": [",
             "\"dist\": [",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "unbalanced braces");
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn bench7_replay_is_deterministic_and_barrier_never_beats_dataflow() {
+        // Tiny instance of the deterministic-replay experiment: a small
+        // measured DAG, the two execution styles, and the artifact
+        // shape. The replay contract is exact: the same spec computed
+        // twice must agree to the nanosecond, and with one worker the
+        // barrier/dataflow relationship is a hard invariant.
+        let backend = backend_from_env();
+        let h = pulse_hierarchy(201, 1, 0.05);
+        let mut mesh = h.config;
+        mesh.granularity = 16;
+        let h = Hierarchy::build(mesh, &h.regions[1..].to_vec()).expect("rebuild");
+        let plan = Arc::new(EpochPlan::new(h, 4));
+        let (mut tasks, ids) = epoch_dag(&plan, backend);
+        for (i, id_k) in ids.iter().enumerate() {
+            tasks[i].tick = plan.barrier_tick(id_k.0, id_k.1);
+        }
+        for workers in [1usize, 4] {
+            let df = crate::sim::clock::det_replay(&tasks, workers, None, 0);
+            let df_again = crate::sim::clock::det_replay(&tasks, workers, None, 0);
+            assert_eq!(df.makespan, df_again.makespan, "replay must be deterministic");
+            let ba = crate::sim::clock::det_replay(
+                &tasks,
+                workers,
+                Some(Duration::from_micros(5)),
+                0,
+            );
+            // With one worker the bound is exact — dataflow is the
+            // serial work, the barrier adds its per-tick cost on top.
+            // (At higher worker counts greedy list scheduling admits
+            // Graham anomalies, so only w=1 is a hard invariant.)
+            if workers == 1 {
+                assert!(
+                    ba.makespan > df.makespan,
+                    "serial barrier run must pay the tick costs: {:?} vs {:?}",
+                    ba.makespan,
+                    df.makespan
+                );
+                assert_eq!(df.makespan, df.total_work, "1 worker never idles in dataflow");
+            }
+        }
+        let rows = bench7_rows(Scale::Quick);
+        let j = render_bench7_json(Scale::Quick, &rows);
+        for key in [
+            "\"bench\": \"det_replay_barrier\"",
+            "\"barrier_penalty_pct\"",
+            // Presence only: a ns-exact completion tie would let the
+            // seeded tie-break legally move a greedy makespan, so the
+            // value is reported, not asserted.
+            "\"seed_stable\"",
+            "\"dataflow_us\"",
+            "\"barrier_us\"",
+            "\"series\": [",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -359,6 +359,20 @@ impl MembershipPlan {
     /// locality id) and the current member set: `Some(Leave(idlest))`
     /// when the idlest non-anchor member is underloaded and the machine
     /// can still shrink. Deterministic (ties break by lower id).
+    /// How many of the plan's scripted events are due once `done` of
+    /// `total` tasks have completed — the membership controller's pure
+    /// trigger arithmetic, factored out so the virtual-clock tests can
+    /// pin firing order against exact task counts without a live epoch.
+    /// Events are sorted by fraction, so the due set is exactly the
+    /// prefix `events[..n]`.
+    pub fn scripted_events_due(&self, done: u64, total: u64) -> usize {
+        let total = total.max(1);
+        self.events
+            .iter()
+            .take_while(|ev| done >= (ev.at_fraction * total as f64).ceil() as u64)
+            .count()
+    }
+
     pub fn decide_load_trigger(
         trigger: &LoadTrigger,
         load: &[u64],

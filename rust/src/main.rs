@@ -10,6 +10,7 @@
 //!   bench4     elastic localities study (steady/shrink/grow), BENCH_4.json
 //!   bench5     crash tolerance study (steady/checkpointed/kill), BENCH_5.json
 //!   bench6     kernel fast path study (native/fused/simd), BENCH_6.json
+//!   bench7     deterministic replay study (dataflow vs barrier), BENCH_7.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -95,6 +96,7 @@ fn main() {
         "bench4" => cmd_bench_artifact(&args, scale, "BENCH_4.json", bench::write_bench4_json),
         "bench5" => cmd_bench_artifact(&args, scale, "BENCH_5.json", bench::write_bench5_json),
         "bench6" => cmd_bench_artifact(&args, scale, "BENCH_6.json", bench::write_bench6_json),
+        "bench7" => cmd_bench_artifact(&args, scale, "BENCH_7.json", bench::write_bench7_json),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -146,7 +148,7 @@ fn cmd_bench_artifact(
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6|bench7> [--options]\n\n\
          run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
                        --workers <cores> --backend native|fused|simd|xla\n\
                        --scheduler local|global\n\
@@ -168,6 +170,8 @@ fn print_help() {
                        locality death mid-run across 2/4/8 localities (BENCH_5.json)\n\
          bench6:       kernel fast path — native vs fused vs simd ns/step across\n\
                        block sizes and 1/2/4/8 localities (BENCH_6.json)\n\
+         bench7:       deterministic replay — dataflow (LCO) vs global barrier\n\
+                       on the virtual clock over the measured DAG (BENCH_7.json)\n\
                        (bench subcommands also accept --backend)\n\
          env: PX_SCALE=quick|full  PX_BACKEND=native|fused|simd|xla  PX_ARTIFACTS=<dir>"
     );

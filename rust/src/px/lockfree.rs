@@ -56,6 +56,21 @@ use std::sync::Mutex;
 
 use crate::util::CachePadded;
 
+/// Interleaving boundary for the deterministic schedule explorer
+/// (`testkit::dst`, DESIGN.md §11). In test builds (and under the `dst`
+/// feature) this calls into the explorer, which hands the execution token
+/// to a seeded scheduler when the current thread is part of a schedule and
+/// is a cheap TLS read otherwise; in ordinary builds it compiles to
+/// nothing. Placement rule: yield points sit only *outside* lock-held
+/// regions (a parked token holder owning a mutex would deadlock the
+/// granted thread), and mark the windows where another thread's step
+/// changes this operation's outcome.
+#[inline]
+fn dst_yield() {
+    #[cfg(any(test, feature = "dst"))]
+    crate::testkit::dst::yield_point();
+}
+
 // ------------------------------------------------------------- WsDeque
 
 struct WsBuf<T> {
@@ -145,6 +160,7 @@ impl<T> WsDeque<T> {
     /// Owner-only: push at the bottom. Returns the new approximate
     /// length (for high-water-mark accounting).
     pub fn push(&self, value: T) -> usize {
+        dst_yield();
         let b = self.bottom.load(Ordering::Relaxed);
         let t = self.top.load(Ordering::Acquire);
         // Only the owner swaps `buf`, so a Relaxed load is its own write.
@@ -153,6 +169,9 @@ impl<T> WsDeque<T> {
             buf = self.grow(t, b, buf);
         }
         buf.put(b, Box::into_raw(Box::new(value)));
+        // Slot written but not yet published: thieves must still see the
+        // old bottom here.
+        dst_yield();
         // Publish the slot write before the new bottom becomes visible.
         self.bottom.store(b + 1, Ordering::Release);
         (b + 1 - t).max(0) as usize
@@ -161,11 +180,14 @@ impl<T> WsDeque<T> {
     /// Owner-only: pop at the bottom (LIFO — best cache locality for the
     /// task the owner just created).
     pub fn pop(&self) -> Option<T> {
+        dst_yield();
         let b = self.bottom.load(Ordering::Relaxed) - 1;
         self.bottom.store(b, Ordering::Relaxed);
         // The SeqCst fence orders the speculative bottom claim against
         // thieves' top reads (Dekker-style).
         fence(Ordering::SeqCst);
+        // Bottom speculatively claimed; a thief may race us to `top` now.
+        dst_yield();
         let t = self.top.load(Ordering::Relaxed);
         if t > b {
             // Empty: undo the claim.
@@ -176,6 +198,7 @@ impl<T> WsDeque<T> {
         let p = buf.get(b);
         if t == b {
             // Last element: race the thieves for it via top.
+            dst_yield();
             let won = self
                 .top
                 .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
@@ -190,8 +213,11 @@ impl<T> WsDeque<T> {
 
     /// Any thread: steal the oldest element.
     pub fn steal(&self) -> Steal<T> {
+        dst_yield();
         let t = self.top.load(Ordering::Acquire);
         fence(Ordering::SeqCst);
+        // `top` sampled; owner pops and rival steals may move it now.
+        dst_yield();
         let b = self.bottom.load(Ordering::Acquire);
         if t >= b {
             return Steal::Empty;
@@ -201,12 +227,23 @@ impl<T> WsDeque<T> {
         // so the read pointer is the element even across a growth race.
         let buf = unsafe { &*self.buf.load(Ordering::Acquire) };
         let p = buf.get(t);
+        // Slot read, claim not yet made — the classic thief/thief race
+        // window (and where the planted bug below becomes observable).
+        dst_yield();
         if self
             .top
             .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
             .is_ok()
         {
             Steal::Taken(*unsafe { Box::from_raw(p) })
+        } else if cfg!(feature = "planted-steal-bug") {
+            // Planted concurrency bug (test-only cfg, see Cargo.toml):
+            // report a lost CAS race as `Empty`. The caller then believes
+            // the deque is drained and stops stealing — work is stranded.
+            // Only a thief/thief or thief/owner race over the same element
+            // exposes it, which is exactly the schedule-dependent class of
+            // bug the explorer + linearizability checker exist to catch.
+            Steal::Empty
         } else {
             Steal::Contended
         }
@@ -310,6 +347,7 @@ impl<T> MpmcQueue<T> {
     /// Enqueue. Returns the approximate post-push length; records
     /// conflicts in `stats`.
     pub fn push(&self, value: T, stats: &mut QStats) -> usize {
+        dst_yield();
         if self.overflowed.load(Ordering::Acquire) == 0 {
             let boxed = Box::new(value);
             let mut pos = self.enq.load(Ordering::Relaxed);
@@ -325,6 +363,9 @@ impl<T> MpmcQueue<T> {
                         Ordering::Relaxed,
                     ) {
                         Ok(_) => {
+                            // Cursor claimed, cell not yet filled: rival
+                            // producers and consumers see a seq lag here.
+                            dst_yield();
                             cell.val.store(Box::into_raw(boxed), Ordering::Relaxed);
                             cell.seq.store(pos.wrapping_add(1), Ordering::Release);
                             return self.count.fetch_add(1, Ordering::Relaxed) + 1;
@@ -343,7 +384,10 @@ impl<T> MpmcQueue<T> {
                 }
             }
         } else {
-            // Overflow already engaged: keep FIFO by appending there.
+            // Overflow already engaged: keep FIFO by appending there. The
+            // window between the flag load above and taking the lock is
+            // the stranded-element race the re-assert below guards.
+            dst_yield();
             let mut g = self.lock_overflow(stats);
             // Re-assert the flag under the lock: a consumer may have
             // drained the list and cleared it between our load above and
@@ -359,6 +403,7 @@ impl<T> MpmcQueue<T> {
 
     /// Dequeue. Records conflicts in `stats`.
     pub fn pop(&self, stats: &mut QStats) -> Option<T> {
+        dst_yield();
         let mut pos = self.deq.load(Ordering::Relaxed);
         loop {
             let cell = &self.cells[pos & self.mask];
@@ -390,6 +435,9 @@ impl<T> MpmcQueue<T> {
             } else if dif < 0 {
                 // Ring empty; check the spillover.
                 if self.overflowed.load(Ordering::Acquire) != 0 {
+                    // Racing producers may append or re-assert the flag
+                    // between the load above and the lock below.
+                    dst_yield();
                     let mut g = self.lock_overflow(stats);
                     if let Some(v) = g.pop_front() {
                         if g.is_empty() {
@@ -640,5 +688,293 @@ mod tests {
             q.push(format!("item-{i}"), &mut s);
         }
         drop(q);
+    }
+}
+
+#[cfg(test)]
+mod dst_tests {
+    //! Schedule-explored linearizability (DESIGN.md §11): every explored
+    //! interleaving records a history through `testkit::linear::Recorder`
+    //! and checks it against the sequential models. The planted-bug test
+    //! (under `--features planted-steal-bug`) is the harness's own
+    //! acceptance check: the explorer must catch a real schedule-dependent
+    //! bug and reproduce it byte-for-byte from the printed seed.
+
+    use super::*;
+    use crate::testkit::dst::{
+        explore, run_schedule, schedule_budget, ScheduleResult, ScheduleSpec,
+    };
+    use crate::testkit::linear::{
+        is_linearizable, render_history, DequeOp, DequeSpec, MpmcOp, MpmcSpec, Recorder,
+    };
+    use std::sync::Arc;
+
+    /// Bounded `Contended` retries: under DST the rival completes whenever
+    /// granted, so retries converge (the explorer's step budget backstops
+    /// pathological schedules). Retries are not completed operations and
+    /// are not recorded.
+    const STEAL_RETRIES: usize = 8;
+
+    fn record_steal(d: &WsDeque<u64>, rec: &Recorder<DequeOp>, thread: u32) {
+        for _ in 0..STEAL_RETRIES {
+            let s = rec.invoke();
+            match d.steal() {
+                Steal::Taken(v) => {
+                    rec.record(thread, s, DequeOp::Steal(Some(v)));
+                    return;
+                }
+                Steal::Empty => {
+                    rec.record(thread, s, DequeOp::Steal(None));
+                    return;
+                }
+                Steal::Contended => {}
+            }
+        }
+    }
+
+    fn check_deque(result: ScheduleResult, rec: &Recorder<DequeOp>) -> ScheduleResult {
+        if result.error.is_some() {
+            return result;
+        }
+        let history = rec.take();
+        if is_linearizable(&DequeSpec, &history) {
+            result
+        } else {
+            ScheduleResult {
+                trace: result.trace,
+                error: Some(format!(
+                    "non-linearizable deque history:\n{}",
+                    render_history(&history)
+                )),
+            }
+        }
+    }
+
+    /// Two thieves race over a pre-filled deque — the minimal scenario
+    /// where a stale-`top` CAS failure is observable. The pushes happen
+    /// on the test thread before the schedule starts (single-pusher
+    /// discipline holds; yield points are no-ops off-schedule), so both
+    /// recorded steals strictly follow them in real time.
+    fn two_thief_schedule(spec: ScheduleSpec) -> ScheduleResult {
+        let d: Arc<WsDeque<u64>> = Arc::new(WsDeque::new());
+        let rec: Arc<Recorder<DequeOp>> = Arc::new(Recorder::new());
+        for v in [1u64, 2] {
+            let s = rec.invoke();
+            d.push(v);
+            rec.record(0, s, DequeOp::Push(v));
+        }
+        let result = run_schedule(spec, |b| {
+            for id in 1..=2u32 {
+                let dt = d.clone();
+                let rt = rec.clone();
+                b.thread(move || record_steal(&dt, &rt, id));
+            }
+        });
+        check_deque(result, &rec)
+    }
+
+    /// Owner (pushes then pops) vs two thieves: covers the speculative
+    /// bottom claim, the last-element owner/thief CAS race, and the
+    /// pre-publish slot-write window.
+    fn owner_vs_thieves_schedule(spec: ScheduleSpec) -> ScheduleResult {
+        let d: Arc<WsDeque<u64>> = Arc::new(WsDeque::new());
+        let rec: Arc<Recorder<DequeOp>> = Arc::new(Recorder::new());
+        let result = run_schedule(spec, |b| {
+            let d0 = d.clone();
+            let r0 = rec.clone();
+            b.thread(move || {
+                for v in [1u64, 2] {
+                    let s = r0.invoke();
+                    d0.push(v);
+                    r0.record(0, s, DequeOp::Push(v));
+                }
+                for _ in 0..2 {
+                    let s = r0.invoke();
+                    let got = d0.pop();
+                    r0.record(0, s, DequeOp::Pop(got));
+                }
+            });
+            for id in 1..=2u32 {
+                let dt = d.clone();
+                let rt = rec.clone();
+                b.thread(move || record_steal(&dt, &rt, id));
+            }
+        });
+        check_deque(result, &rec)
+    }
+
+    #[cfg(not(feature = "planted-steal-bug"))]
+    #[test]
+    fn deque_two_thieves_linearizable_under_explored_schedules() {
+        let found = explore(
+            "ws-deque-two-thieves",
+            schedule_budget(200),
+            two_thief_schedule,
+        );
+        assert!(found.is_none(), "linearizability violation: {found:?}");
+    }
+
+    #[cfg(not(feature = "planted-steal-bug"))]
+    #[test]
+    fn deque_owner_vs_thieves_linearizable_under_explored_schedules() {
+        let found = explore(
+            "ws-deque-owner-thieves",
+            schedule_budget(200),
+            owner_vs_thieves_schedule,
+        );
+        assert!(found.is_none(), "linearizability violation: {found:?}");
+    }
+
+    /// Acceptance check for the harness (ISSUE 8): the planted steal bug
+    /// must be found within the default schedule budget, and replaying
+    /// the reported spec must reproduce the identical failing trace.
+    #[cfg(feature = "planted-steal-bug")]
+    #[test]
+    fn planted_steal_bug_is_found_by_explorer() {
+        // With [1, 2] pre-filled and no owner pops, element 2 stays
+        // resident, so a bugged `Empty` from a lost CAS race can never
+        // linearize — the checker flags exactly the planted defect.
+        let found = explore(
+            "planted-steal-bug",
+            schedule_budget(400),
+            two_thief_schedule,
+        )
+        .expect("explorer must find the planted steal bug within its default budget");
+        assert!(
+            found.error.contains("non-linearizable"),
+            "unexpected failure kind: {}",
+            found.error
+        );
+        let replay = two_thief_schedule(found.spec);
+        assert_eq!(replay.trace, found.trace, "seed replay must be byte-identical");
+        assert_eq!(replay.error.as_deref(), Some(found.error.as_str()));
+        let replay2 = two_thief_schedule(found.spec);
+        assert_eq!(replay2.trace, found.trace, "replay must be stable across runs");
+    }
+
+    fn check_mpmc(
+        result: ScheduleResult,
+        rec: &Recorder<MpmcOp>,
+        producers: u32,
+    ) -> ScheduleResult {
+        if result.error.is_some() {
+            return result;
+        }
+        let history = rec.take();
+        if is_linearizable(&MpmcSpec { producers }, &history) {
+            result
+        } else {
+            ScheduleResult {
+                trace: result.trace,
+                error: Some(format!(
+                    "non-linearizable mpmc history:\n{}",
+                    render_history(&history)
+                )),
+            }
+        }
+    }
+
+    /// Two producers, two consumers on the ring hot path (no overflow):
+    /// per-producer FIFO must hold in every explored interleaving.
+    ///
+    /// `Pop(None)` is *not* recorded: the Vyukov ring is deliberately not
+    /// linearizable for emptiness (a claimed-but-unpublished cell hides
+    /// later completed pushes from consumers), and the runtime treats a
+    /// `None` as "no work visible yet — retry/park", not as an observation
+    /// of the queue's state. The checked contract is per-producer FIFO and
+    /// exactly-once delivery of every popped value.
+    fn mpmc_schedule(spec: ScheduleSpec) -> ScheduleResult {
+        let q: Arc<MpmcQueue<u64>> = Arc::new(MpmcQueue::with_capacity(8));
+        let rec: Arc<Recorder<MpmcOp>> = Arc::new(Recorder::new());
+        let result = run_schedule(spec, |b| {
+            for p in 0..2u32 {
+                let qp = q.clone();
+                let rp = rec.clone();
+                b.thread(move || {
+                    let mut stats = QStats::default();
+                    for i in 0..3u64 {
+                        let v = p as u64 * 100 + i;
+                        let s = rp.invoke();
+                        qp.push(v, &mut stats);
+                        rp.record(p, s, MpmcOp::Push(p, v));
+                    }
+                });
+            }
+            for c in 0..2u32 {
+                let qc = q.clone();
+                let rc = rec.clone();
+                b.thread(move || {
+                    let mut stats = QStats::default();
+                    for _ in 0..4 {
+                        let s = rc.invoke();
+                        if let Some(v) = qc.pop(&mut stats) {
+                            rc.record(2 + c, s, MpmcOp::Pop(Some(v)));
+                        }
+                    }
+                });
+            }
+        });
+        check_mpmc(result, &rec, 2)
+    }
+
+    /// One producer overruns the 8-slot ring so pushes spill to the
+    /// overflow list mid-schedule; FIFO must hold across the ring/spill
+    /// boundary and the flag re-assert race.
+    fn mpmc_overflow_schedule(spec: ScheduleSpec) -> ScheduleResult {
+        let q: Arc<MpmcQueue<u64>> = Arc::new(MpmcQueue::with_capacity(8));
+        let rec: Arc<Recorder<MpmcOp>> = Arc::new(Recorder::new());
+        let result = run_schedule(spec, |b| {
+            let qp = q.clone();
+            let rp = rec.clone();
+            b.thread(move || {
+                let mut stats = QStats::default();
+                for v in 0..10u64 {
+                    let s = rp.invoke();
+                    qp.push(v, &mut stats);
+                    rp.record(0, s, MpmcOp::Push(0, v));
+                }
+            });
+            let qc = q.clone();
+            let rc = rec.clone();
+            b.thread(move || {
+                let mut stats = QStats::default();
+                for _ in 0..11 {
+                    let s = rc.invoke();
+                    if let Some(v) = qc.pop(&mut stats) {
+                        rc.record(1, s, MpmcOp::Pop(Some(v)));
+                    }
+                }
+            });
+        });
+        check_mpmc(result, &rec, 1)
+    }
+
+    #[test]
+    fn mpmc_ring_linearizable_under_explored_schedules() {
+        let found = explore("mpmc-ring", schedule_budget(150), mpmc_schedule);
+        assert!(found.is_none(), "linearizability violation: {found:?}");
+    }
+
+    #[test]
+    fn mpmc_overflow_linearizable_under_explored_schedules() {
+        let found = explore(
+            "mpmc-overflow",
+            schedule_budget(150),
+            mpmc_overflow_schedule,
+        );
+        assert!(found.is_none(), "linearizability violation: {found:?}");
+    }
+
+    #[cfg(not(feature = "planted-steal-bug"))]
+    #[test]
+    fn explored_schedules_replay_byte_identical() {
+        use crate::testkit::dst::nth_spec;
+        for i in 0..6 {
+            let spec = nth_spec(0xABCD, i);
+            let a = owner_vs_thieves_schedule(spec);
+            let b = owner_vs_thieves_schedule(spec);
+            assert_eq!(a.trace, b.trace, "schedule {i} must replay identically");
+            assert!(a.error.is_none());
+        }
     }
 }

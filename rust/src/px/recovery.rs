@@ -165,6 +165,89 @@ pub struct DetectorStats {
     pub heartbeats_missed: u64,
 }
 
+/// Pure poll state of the failure detector, shared by the monitor thread
+/// ([`FailureDetector`]) and the virtual-clock tests.
+///
+/// One [`poll`](DetectorCore::poll) is one monitor pass at a monotone
+/// timestamp `now` — wall time for the threaded detector (its epoch's
+/// `elapsed()`), virtual time under `sim::DetExecutor`. Factoring the
+/// state out of the thread is what lets detection-latency tests assert
+/// *exact* values instead of sleeping and hoping (DESIGN.md §11).
+pub struct DetectorCore {
+    k_misses: u64,
+    last_seen: Vec<u64>,
+    misses: Vec<u64>,
+    first_miss: Vec<Option<Duration>>,
+    stats: DetectorStats,
+}
+
+impl DetectorCore {
+    /// Core for a board of `capacity` slots, declaring death after
+    /// `k_misses` consecutive missed polls.
+    pub fn new(capacity: usize, k_misses: u64) -> DetectorCore {
+        assert!(k_misses > 0, "failure detector needs at least one missed beat");
+        DetectorCore {
+            k_misses,
+            last_seen: vec![0; capacity],
+            misses: vec![0; capacity],
+            first_miss: vec![None; capacity],
+            stats: DetectorStats::default(),
+        }
+    }
+
+    /// One monitor pass at monotone instant `now`. Declared deaths are
+    /// unwatched on the board, charged to `counters`/stats, and returned
+    /// so the caller can run its recovery hook. The anchor (slot 0) is
+    /// never declared dead.
+    pub fn poll(
+        &mut self,
+        board: &HeartbeatBoard,
+        now: Duration,
+        counters: &Counters,
+    ) -> Vec<DeathNotice> {
+        let mut declared = Vec::new();
+        for l in 1..board.capacity() {
+            if !board.is_watched(l as LocalityId) {
+                self.misses[l] = 0;
+                self.first_miss[l] = None;
+                continue;
+            }
+            let b = board.beat_of(l as LocalityId);
+            if b != self.last_seen[l] {
+                self.last_seen[l] = b;
+                self.misses[l] = 0;
+                self.first_miss[l] = None;
+                continue;
+            }
+            self.misses[l] += 1;
+            self.stats.heartbeats_missed += 1;
+            counters.heartbeats_missed.inc();
+            let since = *self.first_miss[l].get_or_insert(now);
+            if self.misses[l] >= self.k_misses {
+                board.unwatch(l as LocalityId);
+                let notice = DeathNotice {
+                    locality: l as LocalityId,
+                    missed: self.misses[l],
+                    detection_latency: now - since,
+                };
+                self.stats.deaths.push(notice.clone());
+                declared.push(notice);
+            }
+        }
+        declared
+    }
+
+    /// What the core has seen so far.
+    pub fn stats(&self) -> &DetectorStats {
+        &self.stats
+    }
+
+    /// Consume the core, yielding its stats.
+    pub fn into_stats(self) -> DetectorStats {
+        self.stats
+    }
+}
+
 /// Anchor-side heartbeat monitor. Polls the board every `every`; a
 /// watched non-anchor slot whose beat fails to advance for `k_misses`
 /// consecutive polls is declared dead: the slot is unwatched, the
@@ -195,43 +278,15 @@ impl FailureDetector {
         let handle = std::thread::Builder::new()
             .name("px-failure-detector".into())
             .spawn(move || {
-                let cap = board.capacity();
-                let mut last_seen = vec![0u64; cap];
-                let mut misses = vec![0u64; cap];
-                let mut first_miss: Vec<Option<Instant>> = vec![None; cap];
-                let mut stats = DetectorStats::default();
+                let mut core = DetectorCore::new(board.capacity(), k_misses);
+                let epoch = Instant::now();
                 while !flag.load(Ordering::SeqCst) {
                     std::thread::sleep(every);
-                    // The anchor (slot 0) is never declared dead.
-                    for l in 1..cap {
-                        if !board.is_watched(l as LocalityId) {
-                            misses[l] = 0;
-                            first_miss[l] = None;
-                            continue;
-                        }
-                        let b = board.beat_of(l as LocalityId);
-                        if b != last_seen[l] {
-                            last_seen[l] = b;
-                            misses[l] = 0;
-                            first_miss[l] = None;
-                            continue;
-                        }
-                        misses[l] += 1;
-                        stats.heartbeats_missed += 1;
-                        counters.heartbeats_missed.inc();
-                        let since = *first_miss[l].get_or_insert_with(Instant::now);
-                        if misses[l] >= k_misses {
-                            board.unwatch(l as LocalityId);
-                            stats.deaths.push(DeathNotice {
-                                locality: l as LocalityId,
-                                missed: misses[l],
-                                detection_latency: since.elapsed(),
-                            });
-                            on_death(l as LocalityId);
-                        }
+                    for death in core.poll(&board, epoch.elapsed(), &counters) {
+                        on_death(death.locality);
                     }
                 }
-                stats
+                core.into_stats()
             })
             .expect("spawn failure detector");
         FailureDetector { stop, handle: Some(handle) }
@@ -259,6 +314,9 @@ impl Drop for FailureDetector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::DetExecutor;
+    use std::cell::RefCell;
+    use std::rc::Rc;
     use std::sync::mpsc;
 
     #[test]
@@ -277,27 +335,148 @@ mod tests {
         assert_eq!(board.beat_of(0), 0);
     }
 
+    /// Virtual-clock harness: members beat every 1ms (integer instants),
+    /// the detector polls every 1ms offset by 500µs (never coinciding
+    /// with a beat), and deaths are collected with their virtual
+    /// timestamps. Returns `(deaths, core stats, counters)` after running
+    /// to `horizon`.
+    fn run_virtual_detector(
+        board: &Arc<HeartbeatBoard>,
+        k_misses: u64,
+        horizon: Duration,
+        script: impl FnOnce(&mut DetExecutor, Arc<HeartbeatBoard>),
+    ) -> (Vec<(Duration, DeathNotice)>, DetectorStats, Arc<Counters>) {
+        let counters = Arc::new(Counters::default());
+        let deaths: Rc<RefCell<Vec<(Duration, DeathNotice)>>> = Rc::new(RefCell::new(Vec::new()));
+        let mut ex = DetExecutor::new();
+        let beat_board = board.clone();
+        ex.schedule_every(Duration::from_millis(1), move |_| {
+            for l in 0..beat_board.capacity() {
+                if beat_board.is_beating(l as LocalityId) {
+                    beat_board.beat(l as LocalityId);
+                }
+            }
+            true
+        });
+        let core = Rc::new(RefCell::new(DetectorCore::new(board.capacity(), k_misses)));
+        let poll_board = board.clone();
+        let poll_counters = counters.clone();
+        let poll_core = core.clone();
+        let poll_deaths = deaths.clone();
+        ex.schedule_in(Duration::from_micros(500), move |ex| {
+            ex.schedule_every(Duration::from_millis(1), move |ex| {
+                let now = ex.now();
+                for d in poll_core.borrow_mut().poll(&poll_board, now, &poll_counters) {
+                    poll_deaths.borrow_mut().push((now, d));
+                }
+                true
+            });
+        });
+        script(&mut ex, board.clone());
+        ex.run_until(horizon);
+        // The pending re-armed poll event still holds a clone of `core`;
+        // drop the executor before unwrapping.
+        drop(ex);
+        let deaths = deaths.borrow().clone();
+        let stats = Rc::try_unwrap(core)
+            .ok()
+            .expect("sole core owner after run")
+            .into_inner()
+            .into_stats();
+        (deaths, stats, counters)
+    }
+
     #[test]
-    fn detector_declares_death_after_k_missed_beats() {
+    fn detector_declares_death_after_k_missed_beats_at_exact_virtual_time() {
         let board = HeartbeatBoard::new(4);
         for l in 1..4 {
             board.enroll(l);
         }
+        // Beats land at 1,2,3,4,5 ms; the halt at 5.2ms stops slot 2's
+        // beat. Polls run at 1.5, 2.5, ... ms: the poll at 5.5ms still
+        // sees the 5ms beat, 6.5/7.5/8.5 miss — with k=3 the death is
+        // declared at exactly 8.5ms with detection latency exactly 2ms
+        // (first miss observed at 6.5ms).
+        let (deaths, stats, counters) = run_virtual_detector(
+            &board,
+            3,
+            Duration::from_millis(20),
+            |ex, board| {
+                ex.schedule_in(Duration::from_micros(5200), move |_| board.halt(2));
+            },
+        );
+        assert_eq!(deaths.len(), 1, "exactly one death declared");
+        let (at, notice) = &deaths[0];
+        assert_eq!(notice.locality, 2);
+        assert_eq!(notice.missed, 3);
+        assert_eq!(*at, Duration::from_micros(8500));
+        assert_eq!(notice.detection_latency, Duration::from_millis(2));
+        assert!(!board.is_watched(2), "declared-dead slot is unwatched");
+        assert!(board.is_watched(1) && board.is_watched(3), "survivors stay watched");
+        // Slot 2 missed exactly 3 polls; nothing else ever missed.
+        assert_eq!(stats.heartbeats_missed, 3);
+        assert_eq!(counters.heartbeats_missed.get(), 3);
+    }
+
+    #[test]
+    fn gracefully_unwatched_slot_is_never_declared() {
+        let board = HeartbeatBoard::new(3);
+        board.enroll(1);
+        board.enroll(2);
+        let (deaths, stats, _) = run_virtual_detector(
+            &board,
+            2,
+            Duration::from_millis(50),
+            |ex, board| {
+                // Graceful retirement at 3.2ms: unwatch stops the beat
+                // *and* the monitoring in one step.
+                ex.schedule_in(Duration::from_micros(3200), move |_| board.unwatch(1));
+            },
+        );
+        assert!(deaths.is_empty(), "graceful exit must not look like a crash");
+        assert_eq!(stats.heartbeats_missed, 0);
+        assert!(board.is_watched(2), "the live member stays watched");
+    }
+
+    #[test]
+    fn anchor_is_never_declared_dead() {
+        let board = HeartbeatBoard::new(2);
+        board.enroll(0);
+        board.enroll(1);
+        let (deaths, stats, _) = run_virtual_detector(
+            &board,
+            2,
+            Duration::from_millis(50),
+            |ex, board| {
+                // Even a silent anchor is not the detector's call.
+                ex.schedule_in(Duration::from_micros(2200), move |_| board.halt(0));
+            },
+        );
+        assert!(deaths.is_empty());
+        assert_eq!(stats.heartbeats_missed, 0, "anchor slot is never even polled");
+        assert!(board.is_watched(0), "the anchor stays watched");
+    }
+
+    /// The OS-thread wrapper still works end to end (spawn, poll loop,
+    /// stop/stats) — no sleeps in the test: the victim is halted before
+    /// the detector starts, so the first k polls already miss.
+    #[test]
+    fn threaded_detector_wrapper_declares_death() {
+        let board = HeartbeatBoard::new(4);
+        for l in 1..4 {
+            board.enroll(l);
+        }
+        board.halt(2);
         let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
         let counters = Arc::new(Counters::default());
         let (tx, rx) = mpsc::channel();
         let detector = FailureDetector::spawn(
             board.clone(),
-            Duration::from_millis(1),
+            Duration::from_micros(500),
             3,
             counters.clone(),
             move |l| tx.send(l).unwrap(),
         );
-        // Let everyone beat a while: no deaths.
-        std::thread::sleep(Duration::from_millis(20));
-        assert!(rx.try_recv().is_err(), "beating members must not be declared dead");
-        // Crash locality 2: beats stop, port-side kill is the net's job.
-        board.halt(2);
         let dead = rx.recv_timeout(Duration::from_secs(5)).expect("death declared");
         assert_eq!(dead, 2);
         assert!(!board.is_watched(2), "declared-dead slot is unwatched");
@@ -308,48 +487,5 @@ mod tests {
         assert!(stats.deaths[0].missed >= 3);
         assert!(stats.heartbeats_missed >= 3);
         assert_eq!(counters.heartbeats_missed.get(), stats.heartbeats_missed);
-    }
-
-    #[test]
-    fn gracefully_unwatched_slot_is_never_declared() {
-        let board = HeartbeatBoard::new(3);
-        board.enroll(1);
-        board.enroll(2);
-        let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
-        let (tx, rx) = mpsc::channel();
-        let detector = FailureDetector::spawn(
-            board.clone(),
-            Duration::from_micros(500),
-            2,
-            Arc::new(Counters::default()),
-            move |l| tx.send(l).unwrap(),
-        );
-        // Graceful retirement: unwatch *then* stop beating.
-        board.unwatch(1);
-        std::thread::sleep(Duration::from_millis(25));
-        assert!(rx.try_recv().is_err(), "graceful exit must not look like a crash");
-        drop(detector);
-        beater.stop();
-    }
-
-    #[test]
-    fn anchor_is_never_declared_dead() {
-        let board = HeartbeatBoard::new(2);
-        board.enroll(0);
-        board.enroll(1);
-        let beater = Heartbeater::spawn(board.clone(), Duration::from_micros(200));
-        let (tx, rx) = mpsc::channel();
-        let detector = FailureDetector::spawn(
-            board.clone(),
-            Duration::from_micros(500),
-            2,
-            Arc::new(Counters::default()),
-            move |l| tx.send(l).unwrap(),
-        );
-        board.halt(0); // even a silent anchor is not the detector's call
-        std::thread::sleep(Duration::from_millis(25));
-        assert!(rx.try_recv().is_err());
-        drop(detector);
-        beater.stop();
     }
 }

@@ -287,6 +287,89 @@ mod tests {
     }
 
     #[test]
+    fn empty_sequences_roundtrip() {
+        // The empty-batch envelope: zero-length f64 slice, byte slice
+        // and string must all encode to a bare length prefix and decode
+        // back to empty, with the cursor exactly consumed.
+        let mut e = Enc::new();
+        e.f64s(&[]).bytes(&[]).str("");
+        let buf = e.finish();
+        assert_eq!(buf.len(), 12, "three u32 length prefixes, no payload");
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.f64s().unwrap(), Vec::<f64>::new());
+        assert_eq!(d.bytes().unwrap(), &[] as &[u8]);
+        assert_eq!(d.str().unwrap(), "");
+        d.expect_end().unwrap();
+    }
+
+    #[test]
+    fn patch_u32_at_buffer_boundaries() {
+        // Patch the very first and the very last u32 of the buffer —
+        // the `offset..offset + 4` slice must sit flush against both
+        // ends without over- or under-running.
+        let mut e = Enc::new();
+        let head = e.len();
+        e.u32(0);
+        e.u64(77);
+        let tail = e.len();
+        e.u32(0);
+        e.patch_u32(head, 0xAAAA_BBBB).patch_u32(tail, 0xCCCC_DDDD);
+        let buf = e.finish();
+        assert_eq!(tail, buf.len() - 4);
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u32().unwrap(), 0xAAAA_BBBB);
+        assert_eq!(d.u64().unwrap(), 77);
+        assert_eq!(d.u32().unwrap(), 0xCCCC_DDDD);
+        d.expect_end().unwrap();
+    }
+
+    #[test]
+    fn every_truncation_of_a_message_errors_cleanly() {
+        // Chop a mixed message after every possible prefix length and
+        // decode: each cut must surface `PxError::Wire` from one of the
+        // fields — never a panic, never an Ok full decode off garbage.
+        let mut e = Enc::new();
+        e.u8(3).u32(70_000).f64s(&[1.5, -2.5]).bytes(b"xyz").str("end").u64(99);
+        let buf = e.finish();
+        let whole = {
+            let mut d = Dec::new(&buf);
+            let decode_all = |d: &mut Dec| -> PxResult<()> {
+                d.u8()?;
+                d.u32()?;
+                d.f64s()?;
+                d.bytes()?;
+                d.str()?;
+                d.u64()?;
+                d.expect_end()
+            };
+            decode_all(&mut d)
+        };
+        whole.unwrap();
+        for cut in 0..buf.len() {
+            let mut d = Dec::new(&buf[..cut]);
+            let res: PxResult<()> = (|| {
+                d.u8()?;
+                d.u32()?;
+                d.f64s()?;
+                d.bytes()?;
+                d.str()?;
+                d.u64()?;
+                d.expect_end()
+            })();
+            match res {
+                Err(PxError::Wire(msg)) => {
+                    assert!(
+                        msg.contains("truncated") || msg.contains("trailing"),
+                        "cut at {cut}: unexpected wire error: {msg}"
+                    )
+                }
+                Err(e) => panic!("cut at {cut}: non-wire error: {e}"),
+                Ok(()) => panic!("cut at {cut}: truncated decode succeeded"),
+            }
+        }
+    }
+
+    #[test]
     fn prop_f64s_roundtrip_including_specials() {
         prop_check("wire f64s roundtrip", 200, |rng: &mut Rng| {
             let mut v = rng.f64_vec(0, 64, -1e12, 1e12);

@@ -1,0 +1,534 @@
+//! Virtual time: a [`VirtualClock`] plus a single-threaded deterministic
+//! event executor ([`DetExecutor`]).
+//!
+//! Wall-clock time is the other scheduler we never controlled: heartbeat
+//! cadence, failure-detection deadlines, and monitor-thread polling were
+//! all tested with real `thread::sleep`s, which makes those tests slow
+//! *and* flaky. Here time is data. Events are `(virtual_ns, seq)` entries
+//! in a min-heap; running an event advances the clock to its timestamp
+//! instantly. A whole simulated minute of heartbeats executes in
+//! microseconds, and every run is exactly reproducible.
+//!
+//! Determinism contract: with the same seed and the same scheduled
+//! closures, the executor runs events in the same order and the clock
+//! reads the same values. Ties (events at the same virtual instant) break
+//! by submission order, or — when constructed [`DetExecutor::with_seed`] —
+//! by a seeded PRNG, so schedule exploration can also shuffle same-instant
+//! races.
+//!
+//! [`det_replay`] is the first consumer beyond unit tests: it replays a
+//! measured task DAG under virtual workers on the executor, either
+//! dataflow-style (any free worker takes any ready task the instant its
+//! inputs are done) or barrier-style (tick `t + 1` is gated until all of
+//! tick `t` completed, plus a barrier cost) — the fig 6 comparison.
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::sim::{SimOutcome, SimTask};
+use crate::testkit::prop::Rng;
+
+/// Monotonic virtual time, in nanoseconds since executor start.
+#[derive(Debug, Clone, Copy)]
+pub struct VirtualClock {
+    now_ns: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now_ns: 0 }
+    }
+
+    /// Current virtual instant in nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Current virtual instant as a [`Duration`] since start.
+    pub fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns)
+    }
+
+    /// Advance by `d`. Virtual time never goes backwards.
+    pub fn advance(&mut self, d: Duration) {
+        self.now_ns += d.as_nanos() as u64;
+    }
+
+    fn advance_to_ns(&mut self, t: u64) {
+        debug_assert!(t >= self.now_ns, "virtual time cannot go backwards");
+        self.now_ns = t;
+    }
+}
+
+type EventFn = Box<dyn FnOnce(&mut DetExecutor)>;
+
+/// Single-threaded deterministic event executor over a [`VirtualClock`].
+///
+/// Closures scheduled with [`schedule_in`](DetExecutor::schedule_in) /
+/// [`schedule_at`](DetExecutor::schedule_at) /
+/// [`schedule_every`](DetExecutor::schedule_every) receive `&mut self`, so
+/// they can read the clock and schedule further events — enough to express
+/// heartbeaters, failure detectors, and monitor loops without threads.
+pub struct DetExecutor {
+    clock: VirtualClock,
+    seq: u64,
+    /// Min-heap of (time_ns, seq): FIFO among equal instants by default.
+    queue: BinaryHeap<Reverse<(u64, u64)>>,
+    events: HashMap<u64, EventFn>,
+    /// Seeded tie-break among same-instant events, if requested.
+    rng: Option<Rng>,
+    /// Seq ids in execution order — the replayable trace.
+    trace: Vec<u64>,
+}
+
+impl DetExecutor {
+    /// Executor with submission-order tie-break at equal instants.
+    pub fn new() -> DetExecutor {
+        DetExecutor {
+            clock: VirtualClock::new(),
+            seq: 0,
+            queue: BinaryHeap::new(),
+            events: HashMap::new(),
+            rng: None,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Executor whose same-instant ties are broken by a seeded PRNG, so
+    /// different seeds explore different orders of simultaneous events.
+    pub fn with_seed(seed: u64) -> DetExecutor {
+        let mut ex = DetExecutor::new();
+        ex.rng = Some(Rng::from_seed(seed));
+        ex
+    }
+
+    /// Current virtual instant.
+    pub fn now(&self) -> Duration {
+        self.clock.now()
+    }
+
+    /// Current virtual instant in nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Execution order of completed events (their schedule ids).
+    pub fn trace(&self) -> &[u64] {
+        &self.trace
+    }
+
+    /// Schedule `f` to run `delay` after the current instant. Returns the
+    /// event's schedule id (its position in [`trace`](DetExecutor::trace)).
+    pub fn schedule_in<F: FnOnce(&mut DetExecutor) + 'static>(
+        &mut self,
+        delay: Duration,
+        f: F,
+    ) -> u64 {
+        self.schedule_at_ns(self.clock.now_ns() + delay.as_nanos() as u64, f)
+    }
+
+    /// Schedule `f` at an absolute virtual instant (`>=` now).
+    pub fn schedule_at<F: FnOnce(&mut DetExecutor) + 'static>(
+        &mut self,
+        at: Duration,
+        f: F,
+    ) -> u64 {
+        self.schedule_at_ns(at.as_nanos() as u64, f)
+    }
+
+    fn schedule_at_ns<F: FnOnce(&mut DetExecutor) + 'static>(&mut self, at: u64, f: F) -> u64 {
+        let at = at.max(self.clock.now_ns());
+        let id = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse((at, id)));
+        self.events.insert(id, Box::new(f));
+        id
+    }
+
+    /// Schedule `f` every `period`, starting one period from now, for as
+    /// long as it returns `true` — a virtual monitor thread.
+    pub fn schedule_every<F>(&mut self, period: Duration, f: F)
+    where
+        F: FnMut(&mut DetExecutor) -> bool + 'static,
+    {
+        fn rearm<F>(ex: &mut DetExecutor, period: Duration, mut f: F)
+        where
+            F: FnMut(&mut DetExecutor) -> bool + 'static,
+        {
+            ex.schedule_in(period, move |ex| {
+                if f(ex) {
+                    rearm(ex, period, f);
+                }
+            });
+        }
+        rearm(self, period, f);
+    }
+
+    /// Run the next event, if any: advance the clock to its instant and
+    /// call it. Returns `false` when the queue is empty.
+    pub fn run_one(&mut self) -> bool {
+        let Some(&Reverse((t, _))) = self.queue.peek() else {
+            return false;
+        };
+        // Gather every event at instant `t` (popped in seq order), pick
+        // one — first by default, seeded otherwise — and put the rest
+        // back.
+        let mut batch: Vec<u64> = Vec::new();
+        while let Some(&Reverse((t2, id))) = self.queue.peek() {
+            if t2 != t {
+                break;
+            }
+            self.queue.pop();
+            batch.push(id);
+        }
+        let pick = match self.rng.as_mut() {
+            Some(rng) if batch.len() > 1 => rng.below(batch.len() as u64) as usize,
+            _ => 0,
+        };
+        let chosen = batch.swap_remove(pick);
+        for id in batch {
+            self.queue.push(Reverse((t, id)));
+        }
+        self.clock.advance_to_ns(t);
+        self.trace.push(chosen);
+        let f = self.events.remove(&chosen).expect("scheduled event body");
+        f(self);
+        true
+    }
+
+    /// Run until no events remain. Returns the number of events executed.
+    pub fn run(&mut self) -> usize {
+        let mut n = 0;
+        while self.run_one() {
+            n += 1;
+        }
+        n
+    }
+
+    /// Run events up to and including `deadline`, then advance the clock
+    /// to `deadline`. Returns the number of events executed.
+    pub fn run_until(&mut self, deadline: Duration) -> usize {
+        let deadline_ns = deadline.as_nanos() as u64;
+        let mut n = 0;
+        while let Some(&Reverse((t, _))) = self.queue.peek() {
+            if t > deadline_ns {
+                break;
+            }
+            self.run_one();
+            n += 1;
+        }
+        if deadline_ns > self.clock.now_ns() {
+            self.clock.advance_to_ns(deadline_ns);
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic DAG replay (the fig 6 consumer)
+// ---------------------------------------------------------------------------
+
+struct Replay {
+    cost_ns: Vec<u64>,
+    tick: Vec<u64>,
+    succ: Vec<Vec<usize>>,
+    indeg: Vec<usize>,
+    /// Ready tasks, lowest id first (deterministic dispatch order).
+    ready: BinaryHeap<Reverse<usize>>,
+    /// Barrier mode: ready tasks gated until their tick opens.
+    gated: HashMap<u64, Vec<usize>>,
+    /// Barrier mode: incomplete tasks per tick.
+    remaining: HashMap<u64, usize>,
+    /// Barrier mode: ascending tick schedule and the open tick's index.
+    tick_order: Vec<u64>,
+    tick_idx: usize,
+    barrier_ns: Option<u64>,
+    free_workers: usize,
+    total_work_ns: u64,
+    done: usize,
+}
+
+impl Replay {
+    fn tick_open(&self, t: u64) -> bool {
+        match self.barrier_ns {
+            None => true,
+            Some(_) => self.tick_order.get(self.tick_idx) == Some(&t),
+        }
+    }
+
+    fn make_ready(&mut self, task: usize) {
+        let t = self.tick[task];
+        if self.tick_open(t) {
+            self.ready.push(Reverse(task));
+        } else {
+            self.gated.entry(t).or_default().push(task);
+        }
+    }
+}
+
+fn dispatch(ex: &mut DetExecutor, st: &Rc<RefCell<Replay>>) {
+    loop {
+        let task = {
+            let mut s = st.borrow_mut();
+            if s.free_workers == 0 {
+                break;
+            }
+            let Some(Reverse(task)) = s.ready.pop() else {
+                break;
+            };
+            s.free_workers -= 1;
+            s.total_work_ns += s.cost_ns[task];
+            task
+        };
+        let cost = Duration::from_nanos(st.borrow().cost_ns[task]);
+        let st2 = st.clone();
+        ex.schedule_in(cost, move |ex| complete(ex, &st2, task));
+    }
+}
+
+fn complete(ex: &mut DetExecutor, st: &Rc<RefCell<Replay>>, task: usize) {
+    let mut tick_done = false;
+    {
+        let mut s = st.borrow_mut();
+        s.free_workers += 1;
+        s.done += 1;
+        let succs = s.succ[task].clone();
+        for n in succs {
+            s.indeg[n] -= 1;
+            if s.indeg[n] == 0 {
+                s.make_ready(n);
+            }
+        }
+        if s.barrier_ns.is_some() {
+            let t = s.tick[task];
+            let left = s.remaining.get_mut(&t).expect("tick accounted");
+            *left -= 1;
+            tick_done = *left == 0;
+        }
+    }
+    if tick_done {
+        // Pay the barrier, then open the next tick and release its tasks.
+        let barrier = Duration::from_nanos(st.borrow().barrier_ns.unwrap_or(0));
+        let st2 = st.clone();
+        ex.schedule_in(barrier, move |ex| {
+            {
+                let mut s = st2.borrow_mut();
+                s.tick_idx += 1;
+                if let Some(&t) = s.tick_order.get(s.tick_idx) {
+                    let held = s.gated.remove(&t).unwrap_or_default();
+                    for task in held {
+                        s.ready.push(Reverse(task));
+                    }
+                }
+            }
+            dispatch(ex, &st2);
+        });
+    }
+    dispatch(ex, st);
+}
+
+/// Replay a measured task DAG on the deterministic executor with `workers`
+/// virtual workers.
+///
+/// With `barrier = None`, execution is dataflow/LCO-style: a task starts
+/// the instant its inputs are done and a worker is free. With
+/// `barrier = Some(cost)`, tasks of tick `t + 1` are gated until every
+/// tick-`t` task completed, and each tick boundary pays `cost` — the
+/// global-barrier execution style the paper's fig 6 charges against.
+///
+/// The `seed` feeds the executor's same-instant tie-break; the outcome's
+/// makespan is a pure function of `(tasks, workers, barrier, seed)`.
+pub fn det_replay(
+    tasks: &[SimTask],
+    workers: usize,
+    barrier: Option<Duration>,
+    seed: u64,
+) -> SimOutcome {
+    assert!(workers >= 1);
+    let n = tasks.len();
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut indeg: Vec<usize> = vec![0; n];
+    let mut remaining: HashMap<u64, usize> = HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        indeg[i] = t.preds.len();
+        for &p in &t.preds {
+            succ[p].push(i);
+        }
+        *remaining.entry(t.tick).or_insert(0) += 1;
+    }
+    let mut tick_order: Vec<u64> = remaining.keys().copied().collect();
+    tick_order.sort_unstable();
+    let st = Rc::new(RefCell::new(Replay {
+        cost_ns: tasks.iter().map(|t| t.cost.as_nanos() as u64).collect(),
+        tick: tasks.iter().map(|t| t.tick).collect(),
+        succ,
+        indeg: indeg.clone(),
+        ready: BinaryHeap::new(),
+        gated: HashMap::new(),
+        remaining,
+        tick_order,
+        tick_idx: 0,
+        barrier_ns: barrier.map(|b| b.as_nanos() as u64),
+        free_workers: workers,
+        total_work_ns: 0,
+        done: 0,
+    }));
+    for (i, &d) in indeg.iter().enumerate() {
+        if d == 0 {
+            st.borrow_mut().make_ready(i);
+        }
+    }
+    let mut ex = DetExecutor::with_seed(seed);
+    let st2 = st.clone();
+    ex.schedule_in(Duration::ZERO, move |ex| dispatch(ex, &st2));
+    ex.run();
+    let s = st.borrow();
+    assert_eq!(s.done, n, "replayed DAG had a cycle or unreachable tasks");
+    let makespan = ex.now();
+    let total_work = Duration::from_nanos(s.total_work_ns);
+    SimOutcome {
+        makespan,
+        total_work,
+        efficiency: s.total_work_ns as f64
+            / (makespan.as_nanos() as f64 * workers as f64).max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn events_run_in_time_order_and_advance_the_clock() {
+        let log: Rc<RefCell<Vec<(u64, u32)>>> = Rc::new(RefCell::new(Vec::new()));
+        let mut ex = DetExecutor::new();
+        for (delay_us, tag) in [(30u64, 3u32), (10, 1), (20, 2)] {
+            let log = log.clone();
+            ex.schedule_in(Duration::from_micros(delay_us), move |ex| {
+                log.borrow_mut().push((ex.now_ns(), tag));
+            });
+        }
+        assert_eq!(ex.run(), 3);
+        assert_eq!(
+            *log.borrow(),
+            vec![(10_000, 1), (20_000, 2), (30_000, 3)]
+        );
+        assert_eq!(ex.now(), Duration::from_micros(30));
+    }
+
+    #[test]
+    fn schedule_every_runs_until_cancelled() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let mut ex = DetExecutor::new();
+        ex.schedule_every(Duration::from_millis(1), move |_| {
+            h.fetch_add(1, Ordering::SeqCst) < 4
+        });
+        ex.run();
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+        assert_eq!(ex.now(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn run_until_stops_at_the_deadline() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let mut ex = DetExecutor::new();
+        ex.schedule_every(Duration::from_millis(1), move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+            true
+        });
+        ex.run_until(Duration::from_millis(3));
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(ex.now(), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn same_instant_ties_are_fifo_without_a_seed_and_seed_deterministic_with() {
+        let run = |seed: Option<u64>| {
+            let log: Rc<RefCell<Vec<u32>>> = Rc::new(RefCell::new(Vec::new()));
+            let mut ex = match seed {
+                Some(s) => DetExecutor::with_seed(s),
+                None => DetExecutor::new(),
+            };
+            for tag in 0..6u32 {
+                let log = log.clone();
+                ex.schedule_in(Duration::from_micros(5), move |_| {
+                    log.borrow_mut().push(tag);
+                });
+            }
+            ex.run();
+            let v = log.borrow().clone();
+            v
+        };
+        assert_eq!(run(None), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(run(Some(42)), run(Some(42)), "seeded order must replay");
+    }
+
+    fn task(cost_us: u64, preds: Vec<usize>, tick: u64) -> SimTask {
+        SimTask {
+            cost: Duration::from_micros(cost_us),
+            preds,
+            rank: 0,
+            tick,
+            remote_inputs: 0,
+        }
+    }
+
+    #[test]
+    fn det_replay_matches_list_scheduling_on_independent_tasks() {
+        let tasks: Vec<SimTask> = (0..40).map(|_| task(100, vec![], 0)).collect();
+        let out = det_replay(&tasks, 4, None, 1);
+        assert_eq!(out.makespan, Duration::from_micros(1000));
+        assert!((out.efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn det_replay_respects_dependencies() {
+        // 0 -> {1, 2} -> 3, all 10us: critical path 30us on any width.
+        let tasks = vec![
+            task(10, vec![], 0),
+            task(10, vec![0], 0),
+            task(10, vec![0], 0),
+            task(10, vec![1, 2], 0),
+        ];
+        let out = det_replay(&tasks, 4, None, 7);
+        assert_eq!(out.makespan, Duration::from_micros(30));
+    }
+
+    #[test]
+    fn barrier_mode_gates_ticks_and_charges_the_barrier() {
+        // Tick 0: one 30us task + one 10us task; tick 1: two 10us tasks
+        // with no cross-tick deps. Dataflow overlaps the idle worker into
+        // tick 1; barrier mode waits for the straggler, then pays 5us.
+        let tasks = vec![
+            task(30, vec![], 0),
+            task(10, vec![], 0),
+            task(10, vec![], 1),
+            task(10, vec![], 1),
+        ];
+        let dataflow = det_replay(&tasks, 2, None, 3);
+        let barrier = det_replay(&tasks, 2, Some(Duration::from_micros(5)), 3);
+        assert_eq!(dataflow.makespan, Duration::from_micros(30));
+        // Barrier: tick 0 ends at 30, +5 barrier, tick 1 runs 10 in
+        // parallel (ends 45), +5 final barrier.
+        assert_eq!(barrier.makespan, Duration::from_micros(50));
+        assert!(barrier.makespan > dataflow.makespan);
+    }
+
+    #[test]
+    fn det_replay_is_seed_stable() {
+        let tasks: Vec<SimTask> = (0..30)
+            .map(|i| task(10 + (i % 7) as u64, if i == 0 { vec![] } else { vec![i - 1 - (i - 1) % 2] }, 0))
+            .collect();
+        let a = det_replay(&tasks, 3, None, 99);
+        let b = det_replay(&tasks, 3, None, 99);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.total_work, b.total_work);
+    }
+}

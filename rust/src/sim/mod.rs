@@ -20,6 +20,17 @@
 //!
 //! Everything else — dependency structure, task costs, ownership — is
 //! measured, not assumed; only the worker count is virtual.
+//!
+//! The [`clock`] submodule extends the idea from makespans to *behavior*:
+//! a [`VirtualClock`]-driven deterministic event executor
+//! ([`DetExecutor`]) that runs heartbeats, failure detectors, and monitor
+//! cadence in virtual time (no `thread::sleep` in tests), plus
+//! [`clock::det_replay`], which replays a measured DAG event-by-event in
+//! dataflow or barrier-gated mode (the fig 6 experiment).
+
+pub mod clock;
+
+pub use clock::{DetExecutor, VirtualClock};
 
 use std::collections::{BinaryHeap, HashMap};
 use std::time::Duration;

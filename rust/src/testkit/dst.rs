@@ -1,0 +1,520 @@
+//! Deterministic schedule exploration over cfg-gated yield points.
+//!
+//! Concurrency bugs in the lock-free runtime live in interleavings the OS
+//! scheduler almost never produces. This module makes interleavings a
+//! *searchable input*: real OS threads run the real atomics, but only one
+//! logical thread holds the execution token at a time, and every
+//! [`yield_point`] hands the token to a thread chosen by a seeded
+//! scheduler. A schedule is therefore a pure function of its
+//! [`ScheduleSpec`] — replaying the same seed reproduces the same trace
+//! byte-for-byte.
+//!
+//! Two search strategies are implemented:
+//!
+//! - [`Strategy::Random`] — at every yield point, pick a uniformly random
+//!   runnable thread. Good general coverage.
+//! - [`Strategy::Pct`] — PCT-style priority-bounded search: threads get
+//!   distinct random priorities, the highest-priority runnable thread
+//!   always runs, and `depth - 1` random priority-change points demote the
+//!   current leader. PCT finds bugs of preemption depth `d` with known
+//!   probability, and in practice hits "adversarial" schedules (one thread
+//!   frozen at the worst instruction) that uniform sampling misses.
+//!
+//! [`explore`] drives a budget of schedules (alternating strategies),
+//! stops at the first failure, and prints the failing seed plus the full
+//! decision trace with replay instructions. [`run_schedule`] with the
+//! printed spec reproduces the identical trace — that is the replay
+//! contract CI's deep-exploration job leans on.
+//!
+//! Yield points are injected into `px::lockfree` (see `dst_yield` there)
+//! and compile to nothing outside `cfg(test)` / the `dst` feature. Two
+//! rules keep the harness sound:
+//!
+//! - scheduled closures must be *finite* op sequences (no unbounded
+//!   retry loops without yields);
+//! - never place a yield point while holding a lock — a parked token
+//!   holder that owns a mutex would deadlock the granted thread. All
+//!   yield points in `px::lockfree` sit outside lock-held regions.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::testkit::prop::{panic_message, Rng};
+
+/// How the scheduler picks the next runnable thread at each yield point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Uniformly random runnable thread at every decision point.
+    Random,
+    /// PCT-style priority-bounded schedules with `depth - 1` priority
+    /// change points.
+    Pct {
+        /// Bug depth `d` the search targets (number of ordered preemption
+        /// constraints). `depth = 3` covers most real-world races.
+        depth: usize,
+    },
+}
+
+/// Complete, replayable identity of one schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleSpec {
+    /// Seed for every scheduling decision in this schedule.
+    pub seed: u64,
+    /// Search strategy.
+    pub strategy: Strategy,
+}
+
+/// Outcome of one schedule: the decision trace and the first panic, if any.
+#[derive(Clone, Debug)]
+pub struct ScheduleResult {
+    /// Chosen logical-thread id at each decision point, in order. A pure
+    /// function of the [`ScheduleSpec`] and the code under test.
+    pub trace: Vec<u32>,
+    /// Message of the first panicking logical thread, if any.
+    pub error: Option<String>,
+}
+
+/// A failing schedule found by [`explore`].
+#[derive(Clone, Debug)]
+pub struct FoundFailure {
+    /// Replay this spec with [`run_schedule`] to reproduce the trace.
+    pub spec: ScheduleSpec,
+    /// Decision trace of the failing run.
+    pub trace: Vec<u32>,
+    /// The failure message.
+    pub error: String,
+}
+
+/// Change points beyond this step index never fire; PCT change points are
+/// drawn from `[0, PCT_HORIZON)`. Test bodies here run a few hundred
+/// decisions at most, so this horizon covers them densely.
+const PCT_HORIZON: u64 = 256;
+
+/// Hard cap on scheduling decisions per schedule, against livelock in the
+/// code under test (e.g. an unbounded retry loop with a yield inside).
+const STEP_BUDGET: usize = 1_000_000;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ThreadState {
+    Runnable,
+    Finished,
+}
+
+struct Inner {
+    state: Vec<ThreadState>,
+    /// Which logical thread currently holds the token.
+    current: Option<usize>,
+    started: bool,
+    all_finished: bool,
+    rng: Rng,
+    strategy: Strategy,
+    /// PCT priorities (larger runs first); ties broken by index.
+    priorities: Vec<u64>,
+    /// Sorted PCT change-point steps, next-to-fire first.
+    change_points: Vec<u64>,
+    /// Descending counter for demoted priorities; starts below all
+    /// initial priorities so a demoted thread runs only when alone.
+    next_low: u64,
+    step: u64,
+    trace: Vec<u32>,
+    panic_msg: Option<String>,
+}
+
+impl Inner {
+    /// Pick and grant the next runnable thread; records the trace entry.
+    /// Must be called with the lock held. Sets `all_finished` when no
+    /// thread remains.
+    fn pick_next(&mut self) {
+        let runnable: Vec<usize> = (0..self.state.len())
+            .filter(|&i| self.state[i] == ThreadState::Runnable)
+            .collect();
+        if runnable.is_empty() {
+            self.current = None;
+            self.all_finished = true;
+            return;
+        }
+        assert!(
+            self.step < STEP_BUDGET as u64,
+            "schedule exceeded {STEP_BUDGET} decisions — livelock in code under test?"
+        );
+        let chosen = match self.strategy {
+            Strategy::Random => runnable[self.rng.below(runnable.len() as u64) as usize],
+            Strategy::Pct { .. } => {
+                while self
+                    .change_points
+                    .first()
+                    .is_some_and(|&cp| cp <= self.step)
+                {
+                    self.change_points.remove(0);
+                    // Demote the current leader among runnable threads.
+                    if let Some(&leader) = runnable
+                        .iter()
+                        .max_by_key(|&&i| (self.priorities[i], i))
+                    {
+                        self.priorities[leader] = self.next_low;
+                        self.next_low -= 1;
+                    }
+                }
+                *runnable
+                    .iter()
+                    .max_by_key(|&&i| (self.priorities[i], i))
+                    .unwrap()
+            }
+        };
+        self.step += 1;
+        self.trace.push(chosen as u32);
+        self.current = Some(chosen);
+    }
+}
+
+/// Token-passing scheduler shared by the logical threads of one schedule.
+pub struct Controller {
+    inner: Mutex<Inner>,
+    cvar: Condvar,
+}
+
+impl Controller {
+    fn new(spec: ScheduleSpec, threads: usize) -> Controller {
+        let mut rng = Rng::from_seed(spec.seed);
+        let mut priorities = vec![0u64; threads];
+        let mut change_points = Vec::new();
+        if let Strategy::Pct { depth } = spec.strategy {
+            // Distinct-enough random priorities well above the demotion
+            // band; exact ties are broken by thread index anyway.
+            for p in priorities.iter_mut() {
+                *p = (1 << 32) + rng.next_u32() as u64;
+            }
+            for _ in 0..depth.saturating_sub(1) {
+                change_points.push(rng.below(PCT_HORIZON));
+            }
+            change_points.sort_unstable();
+        }
+        Controller {
+            inner: Mutex::new(Inner {
+                state: vec![ThreadState::Runnable; threads],
+                current: None,
+                started: false,
+                all_finished: false,
+                rng,
+                strategy: spec.strategy,
+                priorities,
+                change_points,
+                next_low: (1 << 32) - 1,
+                step: 0,
+                trace: Vec::new(),
+                panic_msg: None,
+            }),
+            cvar: Condvar::new(),
+        }
+    }
+
+    /// Grant the first thread. All logical threads are registered up front
+    /// (the state vector is sized at construction), so the first decision
+    /// is independent of OS spawn timing.
+    fn start(&self) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(!g.started);
+        g.started = true;
+        g.pick_next();
+        drop(g);
+        self.cvar.notify_all();
+    }
+
+    /// Block until this logical thread holds the token.
+    fn wait_for_grant(&self, id: usize) {
+        let mut g = self.inner.lock().unwrap();
+        while g.current != Some(id) {
+            g = self.cvar.wait(g).unwrap();
+        }
+    }
+
+    /// A yield point: release the token, let the scheduler pick (possibly
+    /// us again), and block until re-granted.
+    fn yield_now(&self, id: usize) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert_eq!(g.current, Some(id), "yield from a thread without the token");
+        g.pick_next();
+        if g.current == Some(id) {
+            return;
+        }
+        drop(g);
+        self.cvar.notify_all();
+        self.wait_for_grant(id);
+    }
+
+    /// Mark this logical thread finished and pass the token on.
+    fn finish(&self, id: usize, error: Option<String>) {
+        let mut g = self.inner.lock().unwrap();
+        g.state[id] = ThreadState::Finished;
+        if let Some(msg) = error {
+            if g.panic_msg.is_none() {
+                g.panic_msg = Some(msg);
+            }
+        }
+        g.pick_next();
+        drop(g);
+        self.cvar.notify_all();
+    }
+
+    fn wait_all_finished(&self, timeout: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        while !g.all_finished {
+            let (ng, res) = self.cvar.wait_timeout(g, timeout).unwrap();
+            g = ng;
+            assert!(
+                !res.timed_out() || g.all_finished,
+                "schedule deadlocked ({}s): a yield point inside a lock-held region?",
+                timeout.as_secs()
+            );
+        }
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<(Arc<Controller>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The interleaving boundary injected into the code under test.
+///
+/// On a thread managed by [`run_schedule`] this hands the execution token
+/// to the scheduler; on any other thread it is a no-op (a relaxed TLS
+/// read), so instrumented code keeps its normal behavior in ordinary
+/// tests and, behind the `dst` feature, in production builds.
+pub fn yield_point() {
+    let active = ACTIVE.with(|a| a.borrow().clone());
+    if let Some((ctl, id)) = active {
+        ctl.yield_now(id);
+    }
+}
+
+/// Collects the logical threads of one schedule before it runs.
+pub struct ScheduleBuilder {
+    threads: Vec<Box<dyn FnOnce() + Send + 'static>>,
+}
+
+impl ScheduleBuilder {
+    /// Register a logical thread. Its id (0-based registration order) is
+    /// what appears in the trace.
+    pub fn thread<F: FnOnce() + Send + 'static>(&mut self, f: F) {
+        self.threads.push(Box::new(f));
+    }
+}
+
+/// Run one schedule: `build` registers the logical threads, then they run
+/// serialized under the spec's seeded scheduler. Panics in the threads are
+/// caught and reported in the result; the schedule keeps running the
+/// surviving threads so the trace stays complete.
+pub fn run_schedule<F: FnOnce(&mut ScheduleBuilder)>(
+    spec: ScheduleSpec,
+    build: F,
+) -> ScheduleResult {
+    let mut b = ScheduleBuilder { threads: Vec::new() };
+    build(&mut b);
+    assert!(!b.threads.is_empty(), "schedule needs at least one thread");
+    let ctl = Arc::new(Controller::new(spec, b.threads.len()));
+    let mut handles = Vec::new();
+    for (id, f) in b.threads.into_iter().enumerate() {
+        let ctl = ctl.clone();
+        handles.push(std::thread::spawn(move || {
+            ACTIVE.with(|a| *a.borrow_mut() = Some((ctl.clone(), id)));
+            ctl.wait_for_grant(id);
+            let r = catch_unwind(AssertUnwindSafe(f));
+            ACTIVE.with(|a| *a.borrow_mut() = None);
+            ctl.finish(id, r.err().map(|e| panic_message(e.as_ref())));
+        }));
+    }
+    ctl.start();
+    ctl.wait_all_finished(Duration::from_secs(60));
+    for h in handles {
+        let _ = h.join();
+    }
+    let g = ctl.inner.lock().unwrap();
+    ScheduleResult { trace: g.trace.clone(), error: g.panic_msg.clone() }
+}
+
+/// Schedule budget: `PX_DST_SCHEDULES` env override, else `default`.
+/// CI's deep-exploration job raises this without recompiling.
+pub fn schedule_budget(default: usize) -> usize {
+    std::env::var("PX_DST_SCHEDULES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Base seed for schedule exploration: `PX_DST_SEED` env override, else a
+/// fixed default so CI is reproducible.
+pub fn base_seed() -> u64 {
+    std::env::var("PX_DST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD0_57A6)
+}
+
+/// The spec of the `i`-th explored schedule for a given base seed:
+/// schedules alternate Random and PCT(depth 3) strategies over distinct
+/// derived seeds. Exposed so a failing schedule index can be replayed
+/// directly.
+pub fn nth_spec(base: u64, i: usize) -> ScheduleSpec {
+    let seed = base ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let strategy = if i % 2 == 0 {
+        Strategy::Random
+    } else {
+        Strategy::Pct { depth: 3 }
+    };
+    ScheduleSpec { seed, strategy }
+}
+
+/// Explore up to `budget` schedules, stopping at the first failure.
+///
+/// On failure, prints the seed, strategy, and full decision trace with
+/// replay instructions (stderr, so `--nocapture` and CI logs show it) and
+/// returns the failure. Returns `None` if every schedule passed.
+pub fn explore<F: FnMut(ScheduleSpec) -> ScheduleResult>(
+    name: &str,
+    budget: usize,
+    mut run: F,
+) -> Option<FoundFailure> {
+    let base = base_seed();
+    for i in 0..budget {
+        let spec = nth_spec(base, i);
+        let r = run(spec);
+        if let Some(error) = r.error {
+            eprintln!(
+                "schedule exploration `{name}` FAILED at schedule {i}/{budget}\n\
+                 \x20 seed     = {seed:#x}\n\
+                 \x20 strategy = {strategy:?}\n\
+                 \x20 replay   = PX_DST_SEED={base} plus schedule index {i}, or\n\
+                 \x20            run_schedule(ScheduleSpec {{ seed: {seed:#x}, strategy: {strategy:?} }}, ..)\n\
+                 \x20 trace    = {trace:?}\n\
+                 \x20 error    = {error}",
+                seed = spec.seed,
+                strategy = spec.strategy,
+                trace = r.trace,
+            );
+            return Some(FoundFailure { spec, trace: r.trace, error });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// A schedule over three counting threads: the trace must be a pure
+    /// function of the seed, byte-for-byte.
+    fn counting_schedule(spec: ScheduleSpec) -> ScheduleResult {
+        let counter = Arc::new(AtomicUsize::new(0));
+        run_schedule(spec, |b| {
+            for _ in 0..3 {
+                let c = counter.clone();
+                b.thread(move || {
+                    for _ in 0..5 {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        yield_point();
+                    }
+                });
+            }
+        })
+    }
+
+    #[test]
+    fn same_seed_reproduces_identical_trace() {
+        for strategy in [Strategy::Random, Strategy::Pct { depth: 3 }] {
+            let spec = ScheduleSpec { seed: 0xFEED, strategy };
+            let a = counting_schedule(spec);
+            let b = counting_schedule(spec);
+            assert_eq!(a.trace, b.trace, "replay must be byte-identical ({strategy:?})");
+            assert!(a.error.is_none());
+        }
+    }
+
+    #[test]
+    fn different_seeds_explore_different_interleavings() {
+        let traces: Vec<Vec<u32>> = (0..8)
+            .map(|i| counting_schedule(nth_spec(1, i)).trace)
+            .collect();
+        let distinct: std::collections::HashSet<&Vec<u32>> = traces.iter().collect();
+        assert!(
+            distinct.len() > 1,
+            "8 derived seeds should produce more than one distinct interleaving"
+        );
+    }
+
+    #[test]
+    fn all_threads_run_to_completion() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = done.clone();
+        let r = run_schedule(
+            ScheduleSpec { seed: 3, strategy: Strategy::Random },
+            move |b| {
+                for _ in 0..4 {
+                    let d = d2.clone();
+                    b.thread(move || {
+                        yield_point();
+                        d.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            },
+        );
+        assert!(r.error.is_none());
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+        // Every decision chose one of the four threads.
+        assert!(r.trace.iter().all(|&t| t < 4));
+    }
+
+    #[test]
+    fn panics_are_caught_and_reported_with_schedule_intact() {
+        let r = run_schedule(
+            ScheduleSpec { seed: 9, strategy: Strategy::Random },
+            |b| {
+                b.thread(|| {
+                    yield_point();
+                    panic!("injected failure");
+                });
+                b.thread(|| {
+                    yield_point();
+                    yield_point();
+                });
+            },
+        );
+        assert_eq!(r.error.as_deref(), Some("injected failure"));
+    }
+
+    #[test]
+    fn explore_finds_a_seeded_failure_and_replay_matches() {
+        // Fails only when thread 1 runs before thread 0 at the first
+        // decision — a schedule-dependent bug the explorer must find.
+        let run = |spec: ScheduleSpec| {
+            let flag = Arc::new(AtomicUsize::new(0));
+            let f1 = flag.clone();
+            let f2 = flag.clone();
+            run_schedule(spec, move |b| {
+                b.thread(move || {
+                    f1.store(1, Ordering::SeqCst);
+                });
+                b.thread(move || {
+                    assert!(f2.load(Ordering::SeqCst) == 1, "lost the race");
+                });
+            })
+        };
+        let found = explore("seeded-race", schedule_budget(64), run)
+            .expect("explorer must find the schedule-dependent failure");
+        let replay = run(found.spec);
+        assert_eq!(replay.trace, found.trace, "replay trace must be identical");
+        assert_eq!(replay.error.as_deref(), Some(found.error.as_str()));
+    }
+
+    #[test]
+    fn pct_demotes_the_leader_at_change_points() {
+        // Smoke: PCT schedules complete and produce a full trace even with
+        // many change points.
+        let spec = ScheduleSpec { seed: 77, strategy: Strategy::Pct { depth: 8 } };
+        let r = counting_schedule(spec);
+        assert!(r.error.is_none());
+        assert!(!r.trace.is_empty());
+    }
+}

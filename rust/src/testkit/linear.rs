@@ -1,0 +1,354 @@
+//! Linearizability checking for the lock-free runtime structures.
+//!
+//! A [`Recorder`] collects a concurrent history of operations with unique
+//! global start/end stamps (a shared atomic counter — cheap, and totally
+//! ordered, which is all the checker needs). [`is_linearizable`] then runs
+//! the classic Wing–Gong search: it tries to find a permutation of the
+//! history that (a) respects real-time order (if op A completed before op B
+//! began, A must come first) and (b) is legal for a sequential model of the
+//! data structure ([`SeqSpec`]).
+//!
+//! Histories are capped at 64 operations so the "already linearized" set
+//! fits in a `u64` bitmask; combined with memoization on
+//! `(mask, sequential state)` this is fast enough to run inside the
+//! schedule explorer (`testkit::dst`) on every explored interleaving.
+//!
+//! Two sequential models ship here, matching the module contracts in
+//! `px::lockfree`:
+//!
+//! - [`DequeSpec`] — the Chase–Lev work-stealing deque: owner pushes and
+//!   pops at the back, thieves steal from the front. `Contended` results
+//!   are *not* recorded (they are "retry", not a completed operation), so
+//!   a `Steal(None)` in a history claims the deque was observably empty —
+//!   exactly the claim the planted steal bug violates.
+//! - [`MpmcSpec`] — the Vyukov MPMC injector, modeled as a bag of
+//!   per-producer FIFOs: the queue only guarantees per-producer ordering
+//!   (see the `px::lockfree` docs), so a pop may take the head of *any*
+//!   producer's queue.
+
+use std::collections::{HashSet, VecDeque};
+use std::fmt::Debug;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One completed operation in a concurrent history.
+#[derive(Clone, Debug)]
+pub struct OpRecord<O> {
+    /// Logical thread that performed the operation.
+    pub thread: u32,
+    /// Globally unique stamp taken at invocation.
+    pub start: u64,
+    /// Globally unique stamp taken at response. Always `> start`.
+    pub end: u64,
+    /// The operation and its observed result.
+    pub op: O,
+}
+
+/// Collects a concurrent history with unique global start/end stamps.
+pub struct Recorder<O> {
+    clock: AtomicU64,
+    ops: Mutex<Vec<OpRecord<O>>>,
+}
+
+impl<O> Recorder<O> {
+    pub fn new() -> Recorder<O> {
+        Recorder { clock: AtomicU64::new(0), ops: Mutex::new(Vec::new()) }
+    }
+
+    /// Take an invocation stamp. Call immediately before the operation.
+    pub fn invoke(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Record a completed operation; the response stamp is taken here.
+    pub fn record(&self, thread: u32, start: u64, op: O) {
+        let end = self.clock.fetch_add(1, Ordering::SeqCst);
+        self.ops.lock().unwrap().push(OpRecord { thread, start, end, op });
+    }
+
+    /// Drain the recorded history.
+    pub fn take(&self) -> Vec<OpRecord<O>> {
+        std::mem::take(&mut *self.ops.lock().unwrap())
+    }
+}
+
+/// Sequential model of a data structure, used as the linearizability oracle.
+pub trait SeqSpec {
+    /// Operation type, carrying the observed result (e.g. `Pop(Some(3))`).
+    type Op: Clone + Debug;
+    /// Sequential state. `Eq + Hash` so search states can be memoized.
+    type State: Clone + Eq + Hash;
+
+    /// The state before any operation ran.
+    fn initial(&self) -> Self::State;
+
+    /// `Some(next)` if `op` (with its recorded result) is legal from
+    /// `state`; `None` if the model rejects it.
+    fn apply(&self, state: &Self::State, op: &Self::Op) -> Option<Self::State>;
+}
+
+/// Wing–Gong linearizability check of `history` against `spec`.
+///
+/// Returns `true` iff some legal sequential order of the operations
+/// respects the history's real-time precedence. Panics if the history
+/// holds more than 64 operations (the mask width).
+pub fn is_linearizable<S: SeqSpec>(spec: &S, history: &[OpRecord<S::Op>]) -> bool {
+    let n = history.len();
+    assert!(n <= 64, "linearizability histories are capped at 64 ops (got {n})");
+    if n == 0 {
+        return true;
+    }
+    let full: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let mut memo: HashSet<(u64, S::State)> = HashSet::new();
+    let mut stack: Vec<(u64, S::State)> = vec![(0, spec.initial())];
+    while let Some((done, state)) = stack.pop() {
+        if done == full {
+            return true;
+        }
+        if !memo.insert((done, state.clone())) {
+            continue;
+        }
+        // An op may linearize next only if no other pending op finished
+        // before it began: its start must precede every pending end.
+        // Stamps are unique, so `start < min_end` is exact (an op's own
+        // end never blocks it — start < end always holds).
+        let mut min_end = u64::MAX;
+        for (i, r) in history.iter().enumerate() {
+            if done & (1 << i) == 0 {
+                min_end = min_end.min(r.end);
+            }
+        }
+        for (i, r) in history.iter().enumerate() {
+            if done & (1 << i) != 0 || r.start > min_end {
+                continue;
+            }
+            if let Some(next) = spec.apply(&state, &r.op) {
+                stack.push((done | (1 << i), next));
+            }
+        }
+    }
+    false
+}
+
+/// Render a history for failure messages: one op per line, with stamps.
+pub fn render_history<O: Debug>(history: &[OpRecord<O>]) -> String {
+    let mut out = String::new();
+    for r in history {
+        out.push_str(&format!(
+            "  t{} [{:>3},{:>3}] {:?}\n",
+            r.thread, r.start, r.end, r.op
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Sequential models for the px::lockfree structures
+// ---------------------------------------------------------------------------
+
+/// Operations on the Chase–Lev work-stealing deque, with observed results.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DequeOp {
+    /// Owner pushed a value at the back.
+    Push(u64),
+    /// Owner popped from the back; `None` means it observed empty.
+    Pop(Option<u64>),
+    /// A thief stole from the front; `None` means it observed empty.
+    /// `Contended` retries are not completed operations — do not record
+    /// them.
+    Steal(Option<u64>),
+}
+
+/// Sequential model: a double-ended queue (owner at back, thieves at front).
+pub struct DequeSpec;
+
+impl SeqSpec for DequeSpec {
+    type Op = DequeOp;
+    type State = VecDeque<u64>;
+
+    fn initial(&self) -> VecDeque<u64> {
+        VecDeque::new()
+    }
+
+    fn apply(&self, state: &VecDeque<u64>, op: &DequeOp) -> Option<VecDeque<u64>> {
+        let mut s = state.clone();
+        let ok = match op {
+            DequeOp::Push(v) => {
+                s.push_back(*v);
+                true
+            }
+            DequeOp::Pop(r) => s.pop_back() == *r,
+            DequeOp::Steal(r) => s.pop_front() == *r,
+        };
+        if ok {
+            Some(s)
+        } else {
+            None
+        }
+    }
+}
+
+/// Operations on the MPMC injector, with observed results.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MpmcOp {
+    /// Producer `p` pushed a value.
+    Push(u32, u64),
+    /// A consumer popped; `None` means it observed empty.
+    Pop(Option<u64>),
+}
+
+/// Sequential model of the Vyukov MPMC queue: per-producer FIFO only.
+///
+/// The runtime's contract (see `px::lockfree`) promises FIFO *per
+/// producer*, not a single total order, so the model is a bag of FIFOs: a
+/// pop may take the current head of any producer's queue. Use distinct
+/// values per test so each `Pop(Some(v))` matches exactly one head.
+pub struct MpmcSpec {
+    /// Number of producer threads in the history.
+    pub producers: u32,
+}
+
+impl SeqSpec for MpmcSpec {
+    type Op = MpmcOp;
+    type State = Vec<VecDeque<u64>>;
+
+    fn initial(&self) -> Vec<VecDeque<u64>> {
+        vec![VecDeque::new(); self.producers as usize]
+    }
+
+    fn apply(&self, state: &Vec<VecDeque<u64>>, op: &MpmcOp) -> Option<Vec<VecDeque<u64>>> {
+        let mut s = state.clone();
+        match op {
+            MpmcOp::Push(p, v) => {
+                s.get_mut(*p as usize)?.push_back(*v);
+                Some(s)
+            }
+            MpmcOp::Pop(Some(v)) => {
+                let q = s.iter_mut().find(|q| q.front() == Some(v))?;
+                q.pop_front();
+                Some(s)
+            }
+            MpmcOp::Pop(None) => {
+                if s.iter().all(|q| q.is_empty()) {
+                    Some(s)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(thread: u32, start: u64, end: u64, op: DequeOp) -> OpRecord<DequeOp> {
+        OpRecord { thread, start, end, op }
+    }
+
+    #[test]
+    fn sequential_deque_history_is_linearizable() {
+        let h = vec![
+            rec(0, 0, 1, DequeOp::Push(7)),
+            rec(0, 2, 3, DequeOp::Push(8)),
+            rec(1, 4, 5, DequeOp::Steal(Some(7))),
+            rec(0, 6, 7, DequeOp::Pop(Some(8))),
+            rec(0, 8, 9, DequeOp::Pop(None)),
+        ];
+        assert!(is_linearizable(&DequeSpec, &h));
+    }
+
+    #[test]
+    fn overlapping_steals_may_reorder() {
+        // Two thieves overlap; either order is legal, so the history where
+        // the later-starting steal got the front element must still pass.
+        let h = vec![
+            rec(0, 0, 1, DequeOp::Push(1)),
+            rec(0, 2, 3, DequeOp::Push(2)),
+            rec(1, 4, 7, DequeOp::Steal(Some(2))),
+            rec(2, 5, 6, DequeOp::Steal(Some(1))),
+        ];
+        assert!(is_linearizable(&DequeSpec, &h));
+    }
+
+    #[test]
+    fn lost_element_is_not_linearizable() {
+        // Push completed before the steal began, nothing else removed the
+        // element — a Steal(None) afterwards is a real bug signature.
+        let h = vec![
+            rec(0, 0, 1, DequeOp::Push(5)),
+            rec(1, 2, 3, DequeOp::Steal(None)),
+            rec(0, 4, 5, DequeOp::Pop(Some(5))),
+        ];
+        assert!(!is_linearizable(&DequeSpec, &h));
+    }
+
+    #[test]
+    fn duplicated_steal_is_not_linearizable() {
+        let h = vec![
+            rec(0, 0, 1, DequeOp::Push(5)),
+            rec(1, 2, 3, DequeOp::Steal(Some(5))),
+            rec(2, 4, 5, DequeOp::Steal(Some(5))),
+        ];
+        assert!(!is_linearizable(&DequeSpec, &h));
+    }
+
+    #[test]
+    fn real_time_order_is_respected() {
+        // Pop(None) completed strictly before the push began: it cannot be
+        // linearized after the push, and before the push the deque was
+        // empty — legal. But Pop(Some) before any push is not.
+        let ok = vec![
+            rec(0, 0, 1, DequeOp::Pop(None)),
+            rec(0, 2, 3, DequeOp::Push(9)),
+        ];
+        assert!(is_linearizable(&DequeSpec, &ok));
+        let bad = vec![
+            rec(0, 0, 1, DequeOp::Pop(Some(9))),
+            rec(0, 2, 3, DequeOp::Push(9)),
+        ];
+        assert!(!is_linearizable(&DequeSpec, &bad));
+    }
+
+    #[test]
+    fn mpmc_per_producer_fifo_allows_cross_producer_interleave() {
+        let spec = MpmcSpec { producers: 2 };
+        // Producer 0 pushed 1 then 2; producer 1 pushed 10. A consumer may
+        // see 10 between 1 and 2 even though the pushes were ordered.
+        let h = vec![
+            OpRecord { thread: 0, start: 0, end: 1, op: MpmcOp::Push(0, 1) },
+            OpRecord { thread: 0, start: 2, end: 3, op: MpmcOp::Push(0, 2) },
+            OpRecord { thread: 1, start: 4, end: 5, op: MpmcOp::Push(1, 10) },
+            OpRecord { thread: 2, start: 6, end: 7, op: MpmcOp::Pop(Some(1)) },
+            OpRecord { thread: 2, start: 8, end: 9, op: MpmcOp::Pop(Some(10)) },
+            OpRecord { thread: 2, start: 10, end: 11, op: MpmcOp::Pop(Some(2)) },
+            OpRecord { thread: 2, start: 12, end: 13, op: MpmcOp::Pop(None) },
+        ];
+        assert!(is_linearizable(&spec, &h));
+    }
+
+    #[test]
+    fn mpmc_rejects_reordered_single_producer() {
+        let spec = MpmcSpec { producers: 1 };
+        // One producer pushed 1 then 2 (sequentially); popping 2 first
+        // violates per-producer FIFO.
+        let h = vec![
+            OpRecord { thread: 0, start: 0, end: 1, op: MpmcOp::Push(0, 1) },
+            OpRecord { thread: 0, start: 2, end: 3, op: MpmcOp::Push(0, 2) },
+            OpRecord { thread: 1, start: 4, end: 5, op: MpmcOp::Pop(Some(2)) },
+        ];
+        assert!(!is_linearizable(&spec, &h));
+    }
+
+    #[test]
+    fn mpmc_rejects_lost_pop() {
+        let spec = MpmcSpec { producers: 1 };
+        let h = vec![
+            OpRecord { thread: 0, start: 0, end: 1, op: MpmcOp::Push(0, 1) },
+            OpRecord { thread: 1, start: 2, end: 3, op: MpmcOp::Pop(None) },
+        ];
+        assert!(!is_linearizable(&spec, &h));
+    }
+}

@@ -1,8 +1,19 @@
 //! In-repo testing utilities.
 //!
-//! The build environment is offline (no `proptest`/`quickcheck`), so
-//! [`prop`] provides a small deterministic property-testing harness built
-//! on a splitmix/xorshift PRNG. It is used across the runtime's unit tests
-//! for randomized invariant checking with reproducible seeds.
+//! The build environment is offline (no `proptest`/`quickcheck`/`loom`),
+//! so the harnesses are grown in-tree:
+//!
+//! - [`prop`] — a small deterministic property-testing harness built on a
+//!   splitmix PRNG, used across the runtime's unit tests for randomized
+//!   invariant checking with reproducible seeds.
+//! - [`dst`] — deterministic schedule exploration: real threads serialized
+//!   through seeded token-passing at cfg-gated yield points, with random
+//!   and PCT-style priority-bounded search plus byte-identical
+//!   failing-schedule replay (see `DESIGN.md` §11).
+//! - [`linear`] — a Wing–Gong linearizability checker with sequential
+//!   models of the `px::lockfree` structures, run on every explored
+//!   interleaving.
 
+pub mod dst;
+pub mod linear;
 pub mod prop;

@@ -84,24 +84,50 @@ impl Rng {
     }
 }
 
+/// Best-effort rendering of a `catch_unwind` payload. Handles the common
+/// `String` / `&str` cases, then a few typed payloads tests actually throw
+/// (errors, formatted values), and falls back to naming the payload type so
+/// a non-string panic still produces a distinguishable message — the
+/// failing seed is reported either way.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        return s.clone();
+    }
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        return (*s).to_string();
+    }
+    if let Some(e) = payload.downcast_ref::<crate::px::error::PxError>() {
+        return format!("PxError: {e}");
+    }
+    if let Some(e) = payload.downcast_ref::<std::io::Error>() {
+        return format!("io::Error: {e}");
+    }
+    if let Some(e) = payload.downcast_ref::<Box<dyn std::error::Error + Send + Sync>>() {
+        return format!("error: {e}");
+    }
+    format!("<non-string panic payload: {:?}>", payload.type_id())
+}
+
 /// Run `f` against `cases` independently-seeded RNGs; panic with the seed
 /// of the first failing case. The base seed is fixed so CI is reproducible;
-/// set `PX_PROP_SEED` to explore a different region of the input space.
+/// set `PX_PROP_SEED` to explore a different region of the input space, and
+/// `PX_PROP_CASES` to override the case count (CI's deep-exploration job
+/// scales every property up without recompiling).
 pub fn prop_check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
     let base: u64 = std::env::var("PX_PROP_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0FFEE);
+    let cases: u64 = std::env::var("PX_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
     for case in 0..cases {
         let seed = base ^ (case.wrapping_mul(0x1000_0000_1B3));
         let mut rng = Rng::from_seed(seed);
         let r = catch_unwind(AssertUnwindSafe(|| f(&mut rng)));
         if let Err(e) = r {
-            let msg = e
-                .downcast_ref::<String>()
-                .map(|s| s.as_str())
-                .or_else(|| e.downcast_ref::<&str>().copied())
-                .unwrap_or("<non-string panic>");
+            let msg = panic_message(e.as_ref());
             panic!("property `{name}` failed at case {case} (seed={seed:#x}): {msg}");
         }
     }
@@ -151,5 +177,30 @@ mod tests {
     #[should_panic(expected = "property `always-fails`")]
     fn failing_property_reports_seed() {
         prop_check("always-fails", 3, |_rng| panic!("boom"));
+    }
+
+    #[test]
+    fn panic_message_renders_typed_payloads() {
+        let grab = |f: Box<dyn FnOnce() + Send>| {
+            catch_unwind(AssertUnwindSafe(f)).unwrap_err()
+        };
+        let e = grab(Box::new(|| panic!("plain {}", "string")));
+        assert_eq!(panic_message(e.as_ref()), "plain string");
+        let e = grab(Box::new(|| panic!("static str")));
+        assert_eq!(panic_message(e.as_ref()), "static str");
+        let e = grab(Box::new(|| {
+            std::panic::panic_any(crate::px::error::PxError::ShuttingDown)
+        }));
+        assert_eq!(panic_message(e.as_ref()), "PxError: runtime is shutting down");
+        // An arbitrary payload still yields a distinguishable message (and
+        // prop_check reports the seed around it either way).
+        let e = grab(Box::new(|| std::panic::panic_any(1234u64)));
+        assert!(panic_message(e.as_ref()).contains("non-string panic payload"));
+    }
+
+    #[test]
+    #[should_panic(expected = "seed=")]
+    fn non_string_panic_still_reports_seed() {
+        prop_check("typed-panic", 1, |_rng| std::panic::panic_any(7usize));
     }
 }
