@@ -1,10 +1,26 @@
-//! Fig 7: strong scaling PX vs CSP — regenerates the paper's rows/series.
+//! Fig 7, un-stubbed: real strong scaling over the distributed driver —
+//! 1/2/4/8 localities x {slabs, adaptive, wire} placement — plus the
+//! BENCH 8 wire-aware placement study (moving pulse + elastic membership
+//! stress run and the compute-skew wall guard), emitting `BENCH_8.json`
+//! next to its siblings.
 //! Run: `cargo bench --bench fig7_scaling` (PX_SCALE=full for paper scale).
 fn main() {
     if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
     }
     let t0 = std::time::Instant::now();
-    print!("{}", parallex::bench::fig7_scaling(parallex::bench::Scale::from_env()));
-    eprintln!("[fig7_scaling] total {:.1}s", t0.elapsed().as_secs_f64());
+    match parallex::bench::write_bench8_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[fig7_scaling] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[fig7_scaling] failed to write BENCH_8.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

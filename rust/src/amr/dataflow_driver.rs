@@ -31,6 +31,14 @@
 //! boundary. DESIGN.md §6/§7 document the placement, batching, migration
 //! and delivery protocols.
 //!
+//! Wire-aware epochs ([`run_epoch_wire`], DESIGN.md §12) additionally
+//! record the serialized size of every cross-block input edge at
+//! routing time (`amr_cut_bytes` counts the bytes that actually crossed
+//! localities) and feed the per-edge totals into the coordinator's
+//! [`TrafficModel`](crate::coordinator::TrafficModel), so the next
+//! epoch's placement can trade compute imbalance against the parcel
+//! bytes a split neighbourhood would pay.
+//!
 //! The same driver also implements the conventional *global-barrier*
 //! schedule ("HPX is also capable of implementing the standard AMR
 //! algorithm with global barriers", §III): with [`AmrConfig::barrier`]
@@ -73,7 +81,7 @@ use super::engine::{assemble, restriction_of, shadow_output, split_output, Epoch
 use super::mesh::{BlockId, BlockRole, Hierarchy, Region};
 use super::physics::{initial_data, Fields};
 use crate::coordinator::{
-    CostModel, DistAmrOpts, LoadBalancer, MembershipEvent, MembershipPlan,
+    CostModel, DistAmrOpts, LoadBalancer, MembershipEvent, MembershipPlan, TrafficModel,
 };
 use crate::px::action::{ACT_AMR_PUSH, ACT_AMR_PUSH_BATCH};
 use crate::px::error::{PxError, PxResult};
@@ -232,6 +240,23 @@ pub struct BlockCostSample {
     pub steps: u64,
 }
 
+/// One producer→consumer block edge's accumulated wire bytes within an
+/// epoch — what the driver's routing layer observed, independent of
+/// where the two blocks happened to be placed (a co-located edge is
+/// charged the bytes it *would* serialize, so the traffic graph does
+/// not oscillate with the placement that samples it). Consumed by
+/// [`TrafficModel::observe`](crate::coordinator::TrafficModel::observe).
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficSample {
+    /// Producing block (the task whose outputs were routed).
+    pub src: BlockId,
+    /// Consuming block (the task the input was routed to).
+    pub dst: BlockId,
+    /// Total serialized input bytes routed along this edge, as
+    /// [`encode_input`] would write them.
+    pub bytes: u64,
+}
+
 type TaskKey = (BlockId, u64);
 
 struct TaskEntry {
@@ -345,6 +370,25 @@ pub struct DriverState {
     /// feedback [`run_epoch_adaptive`] hands to the coordinator's
     /// [`CostModel`] at the epoch boundary.
     cost_ns: HashMap<BlockId, AtomicU64>,
+    /// Per-sending-locality (src block, dst block) → serialized bytes
+    /// routed along that edge this epoch (indexed by locality id, so
+    /// recording never contends across localities). Only wire-aware
+    /// epochs pay for the bookkeeping (`traffic_on`); merged and handed
+    /// to the coordinator's [`TrafficModel`] by
+    /// [`DriverState::observed_traffic`].
+    traffic: Vec<Mutex<HashMap<(BlockId, BlockId), u64>>>,
+    /// Whether routing records the traffic graph. Flipped on before
+    /// seeding by [`run_epoch_wire`] only — every other epoch kind skips
+    /// the per-push map insert entirely.
+    traffic_on: AtomicBool,
+    /// The single-migrator invariant, enforced: whichever subsystem
+    /// moves blocks mid-epoch — the coordinator's [`LoadBalancer`], the
+    /// membership [`ElasticController`] or the [`CrashController`] —
+    /// must hold the epoch's one [`MigratorGuard`]
+    /// ([`DriverState::acquire_migrator`]); a second claimant fails fast
+    /// instead of racing migrations. Holds the current owner's name for
+    /// the error message.
+    migrator: Mutex<Option<&'static str>>,
     board: Mutex<HashMap<BlockId, BlockOutcome>>,
     tasks_run: AtomicU64,
     tasks_frozen: AtomicU64,
@@ -436,6 +480,32 @@ fn enc_input_into(e: &mut Enc, k: u64, input: &Input) {
             enc_fields(e, f);
         }
     }
+}
+
+/// Wire size of one `Fields` payload as [`enc_fields`] writes it: three
+/// components, each a `u32` length prefix plus 8 bytes per `f64`.
+fn fields_wire_bytes(f: &Fields) -> usize {
+    3 * (4 + 8 * f.len())
+}
+
+/// Wire size of one `(k, input)` record, byte-for-byte what
+/// [`enc_input_into`] would produce — pure arithmetic, no encoder, so
+/// the routing hot path can account traffic bytes without serializing
+/// fragments that are about to be delivered as `Arc` bumps (pinned
+/// against the real codec by `encoded_input_len_matches_the_wire_codec`).
+fn encoded_input_len(input: &Input) -> usize {
+    // `u64` k + `u8` kind tag, then the variant payload.
+    8 + 1
+        + match input {
+            Input::SelfState(s) => {
+                2 + s.ext_left.as_ref().map_or(0, fields_wire_bytes)
+                    + fields_wire_bytes(&s.interior)
+                    + s.ext_right.as_ref().map_or(0, fields_wire_bytes)
+            }
+            Input::GhostFrag { f, .. }
+            | Input::TaperFrag { f, .. }
+            | Input::RestrictFrag { f, .. } => 8 + fields_wire_bytes(f),
+        }
 }
 
 fn decode_input(buf: &[u8]) -> PxResult<(u64, Input)> {
@@ -596,6 +666,9 @@ impl DriverState {
             sinks: RwLock::new(Vec::new()),
             batch,
             cost_ns,
+            traffic: (0..localities.len()).map(|_| Mutex::new(HashMap::new())).collect(),
+            traffic_on: AtomicBool::new(false),
+            migrator: Mutex::new(None),
             board: Mutex::new(HashMap::new()),
             tasks_run: AtomicU64::new(0),
             tasks_frozen: AtomicU64::new(0),
@@ -809,11 +882,14 @@ impl DriverState {
     /// consumers get the `Arc` (refcount bump), remote consumers are
     /// appended to the step's per-destination batch (flushed by the
     /// caller) or — with batching off — serialized into their own parcel
-    /// through AGAS.
+    /// through AGAS. `src` is the producing block, recorded (wire-aware
+    /// epochs only) so the traffic graph knows which block pair the
+    /// bytes belong to.
     fn route_push(
         self: &Arc<Self>,
         b: &mut PushBatcher,
         from: usize,
+        src: BlockId,
         id: BlockId,
         k: u64,
         input: &Input,
@@ -824,6 +900,14 @@ impl DriverState {
         if self.shards.len() == 1 {
             self.push_local(0, id, k, input, true);
             return;
+        }
+        if src != id && self.traffic_on.load(Ordering::Relaxed) {
+            // Placement-independent traffic graph: every cross-block edge
+            // is charged the bytes it would serialize, co-located or not
+            // — otherwise the model would only see the current cut and
+            // the refinement would oscillate between placements.
+            *self.traffic[from].lock().unwrap().entry((src, id)).or_insert(0) +=
+                encoded_input_len(input) as u64;
         }
         loop {
             let home = self.home[&id].load(Ordering::SeqCst) as usize;
@@ -838,6 +922,7 @@ impl DriverState {
                 let ctx = &self.shards[from].ctx;
                 ctx.counters.amr_remote_pushes.inc();
                 ctx.counters.amr_batched_pushes.inc();
+                ctx.counters.amr_cut_bytes.add(encoded_input_len(input) as u64);
                 b.add(home, id, k, input);
                 return;
             } else {
@@ -875,7 +960,9 @@ impl DriverState {
         };
         let ctx = &self.shards[from].ctx;
         ctx.counters.amr_remote_pushes.inc();
-        if let Err(e) = ctx.apply(gid, ACT_AMR_PUSH, encode_input(k, input), Gid::NULL) {
+        let bytes = encode_input(k, input);
+        ctx.counters.amr_cut_bytes.add(bytes.len() as u64);
+        if let Err(e) = ctx.apply(gid, ACT_AMR_PUSH, bytes, Gid::NULL) {
             eprintln!("[L{}] AMR remote push {id:?}@{k} failed: {e}", ctx.id);
         }
     }
@@ -1168,7 +1255,7 @@ impl DriverState {
 
         // Self (Shadow blocks take no self input — pure injection).
         if p.role != BlockRole::Shadow {
-            self.route_push(&mut batch, loc, id, next, &Input::SelfState(out.clone()));
+            self.route_push(&mut batch, loc, id, id, next, &Input::SelfState(out.clone()));
         }
 
         // Ghost fragments: the full owned range (extension included).
@@ -1193,7 +1280,14 @@ impl DriverState {
                     (lo, Arc::new(Fields::concat(&parts)))
                 };
             for tgt in &p.ghost_to {
-                self.route_push(&mut batch, loc, *tgt, next, &Input::GhostFrag { lo, f: frag.clone() });
+                self.route_push(
+                    &mut batch,
+                    loc,
+                    id,
+                    *tgt,
+                    next,
+                    &Input::GhostFrag { lo, f: frag.clone() },
+                );
             }
         }
 
@@ -1208,6 +1302,7 @@ impl DriverState {
                 self.route_push(
                     &mut batch,
                     loc,
+                    id,
                     *tgt,
                     task_k,
                     &Input::RestrictFrag { lo: plo, f: f.clone() },
@@ -1223,6 +1318,7 @@ impl DriverState {
                 self.route_push(
                     &mut batch,
                     loc,
+                    id,
                     *tgt,
                     child_k,
                     &Input::TaperFrag { parent_lo: b.lo, f: out.interior.clone() },
@@ -1254,12 +1350,13 @@ impl DriverState {
             let out = Arc::new(StateOut { ext_left: None, interior: f.clone(), ext_right: None });
             // Self + ghosts (Shadow blocks take no self input).
             if p.role != BlockRole::Shadow {
-                self.route_push(&mut batch, loc, id, 0, &Input::SelfState(out.clone()));
+                self.route_push(&mut batch, loc, id, id, 0, &Input::SelfState(out.clone()));
             }
             for tgt in &p.ghost_to {
                 self.route_push(
                     &mut batch,
                     loc,
+                    id,
                     *tgt,
                     0,
                     &Input::GhostFrag { lo: p.info.lo, f: f.clone() },
@@ -1275,6 +1372,7 @@ impl DriverState {
                         self.route_push(
                             &mut batch,
                             loc,
+                            id,
                             *tgt,
                             0,
                             &Input::RestrictFrag { lo: plo, f: rf.clone() },
@@ -1287,6 +1385,7 @@ impl DriverState {
                 self.route_push(
                     &mut batch,
                     loc,
+                    id,
                     *tgt,
                     0,
                     &Input::TaperFrag { parent_lo: p.info.lo, f: f.clone() },
@@ -1348,6 +1447,46 @@ impl DriverState {
                 }
             })
             .collect()
+    }
+
+    /// Observed per-edge wire traffic so far this epoch, merged across
+    /// the sending localities and sorted by block pair for determinism.
+    /// Edges are directed (producer → consumer);
+    /// [`TrafficModel::observe`] folds the two directions of a pair
+    /// together. Empty unless the epoch recorded traffic
+    /// ([`run_epoch_wire`]).
+    pub fn observed_traffic(&self) -> Vec<TrafficSample> {
+        let mut merged: HashMap<(BlockId, BlockId), u64> = HashMap::new();
+        for m in &self.traffic {
+            for (&edge, &bytes) in m.lock().unwrap().iter() {
+                *merged.entry(edge).or_insert(0) += bytes;
+            }
+        }
+        let mut out: Vec<TrafficSample> = merged
+            .into_iter()
+            .map(|((src, dst), bytes)| TrafficSample { src, dst, bytes })
+            .collect();
+        out.sort_by(|a, b| (a.src, a.dst).cmp(&(b.src, b.dst)));
+        out
+    }
+
+    /// Claim the epoch's single mid-epoch-migration slot. Exactly one
+    /// subsystem may move blocks while the dataflow graph runs — the
+    /// load balancer, the membership controller or the crash controller
+    /// — because the migration protocol assumes its drains are
+    /// serialized on one thread. The returned guard releases the slot
+    /// on drop; a second claimant gets a fail-fast error naming both
+    /// parties instead of a silent migration race.
+    pub fn acquire_migrator(self: &Arc<Self>, who: &'static str) -> PxResult<MigratorGuard> {
+        let mut slot = self.migrator.lock().unwrap();
+        if let Some(holder) = *slot {
+            return Err(PxError::LcoProtocol(format!(
+                "single-migrator invariant violated: cannot start the {who} — the {holder} \
+                 already owns this epoch's migrations"
+            )));
+        }
+        *slot = Some(who);
+        Ok(MigratorGuard { state: self.clone() })
     }
 
     /// Every block's current home locality — after an epoch this is the
@@ -1785,6 +1924,29 @@ impl DriverState {
     }
 }
 
+/// Exclusive hold on one epoch's mid-epoch-migration slot
+/// ([`DriverState::acquire_migrator`]): proof that the holder is the
+/// epoch's only block-moving subsystem. Releases the slot when dropped,
+/// so a stopped balancer/controller frees it for a successor within the
+/// same epoch.
+pub struct MigratorGuard {
+    state: Arc<DriverState>,
+}
+
+impl Drop for MigratorGuard {
+    fn drop(&mut self) {
+        *self.state.migrator.lock().unwrap() = None;
+    }
+}
+
+impl std::fmt::Debug for MigratorGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MigratorGuard")
+            .field("holder", &*self.state.migrator.lock().unwrap())
+            .finish()
+    }
+}
+
 /// Least-loaded member (ties break toward the lower locality id) — the
 /// deterministic LPT destination pick shared by the membership repack
 /// paths.
@@ -1903,6 +2065,9 @@ fn apply_membership_event(
 struct ElasticController {
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<ElasticStats>>,
+    /// The epoch's migration slot — held for the controller's lifetime
+    /// so a concurrently started balancer fails fast instead of racing.
+    _guard: MigratorGuard,
 }
 
 impl ElasticController {
@@ -1910,7 +2075,8 @@ impl ElasticController {
         state: Arc<DriverState>,
         membership: Arc<Membership>,
         mplan: MembershipPlan,
-    ) -> ElasticController {
+    ) -> PxResult<ElasticController> {
+        let guard = state.acquire_migrator("membership controller")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::Builder::new()
@@ -1965,7 +2131,7 @@ impl ElasticController {
                 }
             })
             .expect("spawn membership controller");
-        ElasticController { stop, handle: Some(handle) }
+        Ok(ElasticController { stop, handle: Some(handle), _guard: guard })
     }
 
     fn stop(mut self) -> ElasticStats {
@@ -2047,6 +2213,10 @@ struct VictimRun {
 struct CrashController {
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<Vec<CrashStats>>>,
+    /// The epoch's migration slot — recovery re-homes blocks, so the
+    /// crash controller is a migrator like the balancer and the
+    /// membership controller, and mutually exclusive with both.
+    _guard: MigratorGuard,
 }
 
 impl CrashController {
@@ -2054,7 +2224,8 @@ impl CrashController {
         state: Arc<DriverState>,
         membership: Arc<Membership>,
         kills: Vec<KillSpec>,
-    ) -> CrashController {
+    ) -> PxResult<CrashController> {
+        let guard = state.acquire_migrator("crash controller")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::Builder::new()
@@ -2210,7 +2381,7 @@ impl CrashController {
                 }
             })
             .expect("spawn crash controller");
-        CrashController { stop, handle: Some(handle) }
+        Ok(CrashController { stop, handle: Some(handle), _guard: guard })
     }
 
     fn stop(mut self) -> Vec<CrashStats> {
@@ -2272,7 +2443,7 @@ pub fn run_epoch_placed(
     // Place onto the runtime's *current* member set, not the boot roster
     // — a runtime that shrank keeps working, and one that grew is used.
     let placement = opts.policy.assign_on(&plan, &rt.membership().members());
-    run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None)
+    run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None, false)
         .map(|(out, _, _)| out)
 }
 
@@ -2291,7 +2462,7 @@ pub fn run_epoch_checkpointed(
     opts: &DistAmrOpts,
 ) -> Result<AmrOutcome> {
     let placement = opts.policy.assign_on(&plan, &rt.membership().members());
-    run_epoch_at(rt, plan, backend, config, init, placement, opts, true, None)
+    run_epoch_at(rt, plan, backend, config, init, placement, opts, true, None, false)
         .map(|(out, _, _)| out)
 }
 
@@ -2314,7 +2485,7 @@ pub fn run_epoch_elastic(
 ) -> Result<(AmrOutcome, ElasticStats)> {
     let placement = opts.policy.assign_on(&plan, &rt.membership().members());
     let (outcome, _st, stats) =
-        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, Some(mplan))?;
+        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, Some(mplan), false)?;
     Ok((outcome, stats.unwrap_or_default()))
 }
 
@@ -2340,8 +2511,42 @@ pub fn run_epoch_adaptive(
         rt.localities()[0].counters.placement_rebalances.inc();
     }
     let (outcome, st, _) =
-        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None)?;
+        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None, false)?;
     model.observe(&st.observed_costs(), &st.homes());
+    Ok(outcome)
+}
+
+/// As [`run_epoch_adaptive`], with the placement additionally shaped by
+/// *observed parcel traffic* (DESIGN.md §12): the map comes from
+/// [`CostModel::place_wire_on`] — the adaptive LPT seed refined by a
+/// KL/FM boundary pass over the carried [`TrafficModel`] — and the
+/// epoch records every cross-block edge's serialized bytes, feeding
+/// both models back at the boundary. The traffic model starts cold
+/// (first epoch ≡ the adaptive map), then each epoch's placement pays
+/// `α·imbalance + cut_bytes` instead of imbalance alone. Placement
+/// never changes physics: outcomes stay bitwise identical to every
+/// other policy (pinned by the wire-placement property test).
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch_wire(
+    rt: &PxRuntime,
+    plan: Arc<EpochPlan>,
+    backend: Arc<dyn ComputeBackend>,
+    config: AmrConfig,
+    init: &HashMap<BlockId, Fields>,
+    opts: &DistAmrOpts,
+    model: &mut CostModel,
+    traffic: &mut TrafficModel,
+    alpha: f64,
+) -> Result<AmrOutcome> {
+    let (placement, rebalanced) =
+        model.place_wire_on(&plan, &rt.membership().members(), traffic, alpha);
+    if rebalanced {
+        rt.localities()[0].counters.placement_rebalances.inc();
+    }
+    let (outcome, st, _) =
+        run_epoch_at(rt, plan, backend, config, init, placement, opts, false, None, true)?;
+    model.observe(&st.observed_costs(), &st.homes());
+    traffic.observe(&st.observed_traffic());
     Ok(outcome)
 }
 
@@ -2456,7 +2661,14 @@ pub fn run_epoch_crash_multi(
         st.unregister_blocks();
         return Err(crate::anyhow!("block registration failed: {e}"));
     }
-    let controller = CrashController::start(st.clone(), rt.membership().clone(), kills.to_vec());
+    let controller =
+        match CrashController::start(st.clone(), rt.membership().clone(), kills.to_vec()) {
+            Ok(c) => c,
+            Err(e) => {
+                st.unregister_blocks();
+                return Err(crate::anyhow!("crash controller failed to start: {e}"));
+            }
+        };
 
     let init: Arc<HashMap<BlockId, Arc<Fields>>> =
         Arc::new(init.iter().map(|(id, f)| (*id, Arc::new(f.clone()))).collect());
@@ -2527,6 +2739,7 @@ fn run_epoch_at(
     opts: &DistAmrOpts,
     ckpt: bool,
     mplan: Option<&MembershipPlan>,
+    record_traffic: bool,
 ) -> Result<(AmrOutcome, Arc<DriverState>, Option<ElasticStats>)> {
     let n_loc = rt.localities().len();
     let st =
@@ -2543,6 +2756,11 @@ fn run_epoch_at(
         // still closed could never be replayed.
         st.ckpt_on.store(true, Ordering::SeqCst);
     }
+    if record_traffic {
+        // Before any seeding, like the checkpoint log: the k=0 pushes
+        // are edges of the traffic graph too.
+        st.traffic_on.store(true, Ordering::SeqCst);
+    }
     if n_loc > 1 {
         if let Err(e) = st.register_blocks() {
             // Clean up any partial registrations before bailing, or the
@@ -2553,7 +2771,13 @@ fn run_epoch_at(
     }
     let elastic = match mplan {
         Some(mp) if n_loc > 1 => {
-            Some(ElasticController::start(st.clone(), rt.membership().clone(), mp.clone()))
+            match ElasticController::start(st.clone(), rt.membership().clone(), mp.clone()) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    st.unregister_blocks();
+                    return Err(crate::anyhow!("membership controller failed to start: {e}"));
+                }
+            }
         }
         Some(_) => {
             st.unregister_blocks();
@@ -2562,9 +2786,16 @@ fn run_epoch_at(
         None => None,
     };
     // Membership changes and the balancer share the single-migrator
-    // invariant: elastic epochs never start a balancer.
+    // invariant: elastic epochs never start a balancer (and the guard
+    // inside `LoadBalancer::start` enforces it if they ever tried).
     let balancer = if n_loc > 1 && elastic.is_none() {
-        opts.balance.map(|b| LoadBalancer::start(st.clone(), b))
+        match opts.balance.map(|b| LoadBalancer::start(st.clone(), b)).transpose() {
+            Ok(b) => b,
+            Err(e) => {
+                st.unregister_blocks();
+                return Err(crate::anyhow!("load balancer failed to start: {e}"));
+            }
+        }
     } else {
         None
     };
@@ -4113,6 +4344,261 @@ mod tests {
                 (Duration::from_micros(2550), MembershipEvent::Leave(2)),
                 (Duration::from_micros(6050), MembershipEvent::Join(2)),
             ]
+        );
+    }
+
+    #[test]
+    fn encoded_input_len_matches_the_wire_codec() {
+        // The traffic recorder charges edges by arithmetic, not by
+        // encoding — this pins the arithmetic to the real codec for
+        // every input variant, extensions present and absent.
+        let fields = |n: usize, s: f64| Fields {
+            chi: (0..n).map(|i| s + i as f64).collect(),
+            phi: (0..n).map(|i| s * 0.5 - i as f64).collect(),
+            pi: (0..n).map(|i| s * (i as f64 + 0.25)).collect(),
+        };
+        let cases: Vec<Input> = vec![
+            Input::SelfState(Arc::new(StateOut {
+                ext_left: None,
+                interior: Arc::new(fields(5, 1.0)),
+                ext_right: None,
+            })),
+            Input::SelfState(Arc::new(StateOut {
+                ext_left: Some(fields(3, 2.0)),
+                interior: Arc::new(fields(7, 3.0)),
+                ext_right: Some(fields(2, 4.0)),
+            })),
+            Input::SelfState(Arc::new(StateOut {
+                ext_left: None,
+                interior: Arc::new(fields(4, 8.0)),
+                ext_right: Some(fields(3, 9.0)),
+            })),
+            Input::GhostFrag { lo: 12, f: Arc::new(fields(6, 5.0)) },
+            Input::TaperFrag { parent_lo: 4, f: Arc::new(fields(9, 6.0)) },
+            Input::RestrictFrag { lo: 0, f: Arc::new(fields(1, 7.0)) },
+        ];
+        for (i, input) in cases.iter().enumerate() {
+            let encoded = encode_input(i as u64 * 7 + 3, input);
+            assert_eq!(
+                encoded_input_len(input),
+                encoded.len(),
+                "case {i}: arithmetic wire size must match the codec"
+            );
+        }
+    }
+
+    #[test]
+    fn second_migrator_fails_fast_with_a_clear_error() {
+        // The single-migrator invariant is a guard, not a convention:
+        // with a load balancer holding the epoch's migration slot, a
+        // second migrator's start must fail fast naming both parties.
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 0, cfl: 0.25, granularity: 16 };
+        let cfg = AmrConfig { coarse_steps: 2, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[]).unwrap();
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let runtime = rt_dist(2, 1);
+        let placement =
+            PlacementPolicy::RadialSlabs.assign_on(&plan, &runtime.membership().members());
+        let st = DriverState::new(
+            plan,
+            Arc::new(NativeBackend),
+            cfg,
+            runtime.localities(),
+            &placement,
+            true,
+        );
+        let lb = LoadBalancer::start(
+            st.clone(),
+            BalanceConfig {
+                interval: Duration::from_millis(500),
+                imbalance_ratio: 1e9,
+                max_migrations: 0,
+            },
+        )
+        .expect("first migrator claims the slot");
+        let err = st.acquire_migrator("membership controller").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("single-migrator"), "error must name the invariant: {msg}");
+        assert!(
+            msg.contains("load balancer") && msg.contains("membership controller"),
+            "error must name both the holder and the claimant: {msg}"
+        );
+        // Stopping the holder frees the slot for a successor migrator.
+        lb.stop();
+        let _guard = st.acquire_migrator("crash controller").expect("slot freed after stop");
+        runtime.shutdown();
+    }
+
+    #[test]
+    fn prop_wire_placement_bitwise_identical_across_localities_and_shrink() {
+        // Placement never changes physics: the wire-aware policy must
+        // match the single-locality reference — and the slabs and
+        // adaptive policies — bit for bit, across 1/2/4/8 localities,
+        // across regrids (the refined region tracks a moving pulse, so
+        // the traffic model's edge set churns), and across a mid-run
+        // shrink (the 8-locality machine halves between epochs).
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let regions =
+            [Region { lo: 100, hi: 160 }, Region { lo: 120, hi: 180 }, Region { lo: 140, hi: 200 }];
+        let references: Vec<AmrOutcome> = regions
+            .iter()
+            .map(|&reg| {
+                let h = Hierarchy::build(mesh, &[vec![reg]]).unwrap();
+                let runtime = rt(2);
+                let (_, out) = run(&runtime, h, Arc::new(NativeBackend), cfg).unwrap();
+                runtime.shutdown();
+                out
+            })
+            .collect();
+        for &localities in &[1usize, 2, 4, 8] {
+            let runtime = rt_dist(localities, 1);
+            let mut model = CostModel::new();
+            let mut amodel = CostModel::new();
+            let mut traffic = TrafficModel::new();
+            for (e, &reg) in regions.iter().enumerate() {
+                if localities == 8 && e == 1 {
+                    // Mid-run shrink: half the machine leaves between
+                    // epochs; the wire placer must repack onto the
+                    // survivors like the adaptive placer does.
+                    for l in 4..8u32 {
+                        runtime.retire_locality(l).unwrap();
+                    }
+                }
+                let h = Hierarchy::build(mesh, &[vec![reg]]).unwrap();
+                let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+                let init = initial_block_states(&plan, &cfg);
+                let tag = format!("{localities} localities, epoch {e}");
+                let wire = run_epoch_wire(
+                    &runtime,
+                    plan.clone(),
+                    Arc::new(NativeBackend),
+                    cfg,
+                    &init,
+                    &DistAmrOpts::default(),
+                    &mut model,
+                    &mut traffic,
+                    1.0,
+                )
+                .unwrap();
+                assert_outcomes_bitwise_equal(&references[e], &wire, &format!("wire: {tag}"));
+                let slabs = run_epoch_placed(
+                    &runtime,
+                    plan.clone(),
+                    Arc::new(NativeBackend),
+                    cfg,
+                    &init,
+                    &DistAmrOpts { policy: PlacementPolicy::RadialSlabs, ..Default::default() },
+                )
+                .unwrap();
+                assert_outcomes_bitwise_equal(&slabs, &wire, &format!("wire vs slabs: {tag}"));
+                let adaptive = run_epoch_adaptive(
+                    &runtime,
+                    plan,
+                    Arc::new(NativeBackend),
+                    cfg,
+                    &init,
+                    &DistAmrOpts { policy: PlacementPolicy::Adaptive, ..Default::default() },
+                    &mut amodel,
+                )
+                .unwrap();
+                assert_outcomes_bitwise_equal(&adaptive, &wire, &format!("wire vs adaptive: {tag}"));
+            }
+            assert_eq!(traffic.epochs_observed, 3, "{localities} localities");
+            if localities > 1 {
+                assert!(
+                    !traffic.edges().is_empty(),
+                    "multi-locality wire epochs must observe block-pair traffic"
+                );
+            }
+            assert_eq!(runtime.counters_total().payload_deep_copies, 0);
+            runtime.shutdown();
+        }
+    }
+
+    #[test]
+    fn wire_placement_reduces_cut_bytes_on_comm_heavy_config() {
+        // Communication-heavy config: cheap compute (NativeBackend)
+        // over fine-granularity blocks at 4 localities — parcel bytes,
+        // not the kernel, dominate. The adaptive placer LPT-packs on
+        // observed ns alone, scattering geometric neighbours; the
+        // wire-aware placer must land strictly fewer cut bytes and
+        // batched pushes in the warmed steady state. A small α keeps
+        // this comparison about the cut term (the imbalance guard has
+        // its own unit test in the coordinator).
+        let mesh = MeshConfig { r_max: 20.0, n0: 401, levels: 1, cfl: 0.25, granularity: 8 };
+        let cfg = AmrConfig { coarse_steps: 3, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 240, hi: 400 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let plan = Arc::new(EpochPlan::new(h, cfg.coarse_steps));
+        let init = initial_block_states(&plan, &cfg);
+        // Cut bytes + batched pushes over the two steady epochs, after
+        // a first epoch warmed the cost (and traffic) models. Every
+        // epoch is bitwise-checked before its counters are trusted.
+        let steady = |wire: bool| -> (u64, u64) {
+            let runtime = rt_dist(4, 1);
+            let mut model = CostModel::new();
+            let mut traffic = TrafficModel::new();
+            let opts = DistAmrOpts::default();
+            let mut run_one = |model: &mut CostModel, traffic: &mut TrafficModel| {
+                let out = if wire {
+                    run_epoch_wire(
+                        &runtime,
+                        plan.clone(),
+                        Arc::new(NativeBackend),
+                        cfg,
+                        &init,
+                        &opts,
+                        model,
+                        traffic,
+                        0.01,
+                    )
+                    .unwrap()
+                } else {
+                    run_epoch_adaptive(
+                        &runtime,
+                        plan.clone(),
+                        Arc::new(NativeBackend),
+                        cfg,
+                        &init,
+                        &opts,
+                        model,
+                    )
+                    .unwrap()
+                };
+                assert_outcomes_bitwise_equal(
+                    &reference,
+                    &out,
+                    if wire { "wire" } else { "adaptive" },
+                );
+            };
+            run_one(&mut model, &mut traffic);
+            let warm = runtime.counters_total();
+            for _ in 0..2 {
+                run_one(&mut model, &mut traffic);
+            }
+            let total = runtime.counters_total();
+            runtime.shutdown();
+            (
+                total.amr_cut_bytes - warm.amr_cut_bytes,
+                total.amr_batched_pushes - warm.amr_batched_pushes,
+            )
+        };
+        let (wire_cut, wire_batched) = steady(true);
+        let (adaptive_cut, adaptive_batched) = steady(false);
+        assert!(adaptive_cut > 0, "adaptive steady state must cross the wire at all");
+        assert!(
+            wire_cut < adaptive_cut,
+            "wire placement must cut fewer bytes than adaptive ({wire_cut} vs {adaptive_cut})"
+        );
+        assert!(
+            wire_batched < adaptive_batched,
+            "wire placement must batch fewer remote pushes ({wire_batched} vs {adaptive_batched})"
         );
     }
 }

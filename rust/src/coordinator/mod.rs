@@ -24,6 +24,14 @@
 //!   the runtime adapting placement to what the work actually cost,
 //!   which is the paper's central claim against CSP's frozen
 //!   decomposition (DESIGN.md §7).
+//!   [`PlacementPolicy::Wire`] folds *communication* into the same loop:
+//!   a [`TrafficModel`] carries the observed serialized bytes per block
+//!   pair (recorded by the driver at `ACT_AMR_PUSH`/`ACT_AMR_PUSH_BATCH`
+//!   send time), and [`CostModel::place_wire_on`] refines the LPT seed
+//!   with a KL/FM-style boundary pass ([`refine_cut`]) that moves blocks
+//!   across localities only while the combined objective
+//!   `α·compute_imbalance + cut_bytes` ([`wire_objective`]) strictly
+//!   decreases — LPT becomes a real graph partitioner (DESIGN.md §12).
 //! * **Load balancing** ([`LoadBalancer`]): a monitor thread that reads
 //!   the driver's per-locality remaining-work estimate (derived from the
 //!   same counters the paper's "generic monitoring framework" exposes)
@@ -56,9 +64,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::amr::dataflow_driver::{BlockCostSample, DriverState};
+use crate::amr::dataflow_driver::{BlockCostSample, DriverState, MigratorGuard, TrafficSample};
 use crate::amr::engine::EpochPlan;
 use crate::amr::mesh::BlockId;
+use crate::px::error::PxResult;
 use crate::px::gid::LocalityId;
 
 /// How blocks are assigned to localities at epoch start.
@@ -82,19 +91,33 @@ pub enum PlacementPolicy {
     /// [`assign`](PlacementPolicy::assign) directly) degenerates to the
     /// [`WeightedSlabs`](PlacementPolicy::WeightedSlabs) map.
     Adaptive,
+    /// Adaptive placement that also trades compute balance against
+    /// *cut bytes*: the LPT seed from the [`CostModel`] is refined by a
+    /// KL/FM-style boundary pass over the [`TrafficModel`]'s observed
+    /// bytes per block pair ([`CostModel::place_wire_on`], carried
+    /// across epochs by
+    /// [`run_epoch_wire`](crate::amr::dataflow_driver::run_epoch_wire)).
+    /// Cold start (no traffic or cost observations yet) degenerates to
+    /// the [`WeightedSlabs`](PlacementPolicy::WeightedSlabs) map, same
+    /// as [`Adaptive`](PlacementPolicy::Adaptive).
+    Wire,
 }
 
 impl std::str::FromStr for PlacementPolicy {
     type Err = String;
 
-    /// CLI names: `slabs`, `weighted`, `adaptive`.
+    /// CLI names: exactly [`PlacementPolicy::CLI_NAMES`] — the error
+    /// message quotes that list, so it can never drift from the set the
+    /// launcher accepts.
     fn from_str(s: &str) -> Result<PlacementPolicy, String> {
         match s {
             "slabs" => Ok(PlacementPolicy::RadialSlabs),
             "weighted" => Ok(PlacementPolicy::WeightedSlabs),
             "adaptive" => Ok(PlacementPolicy::Adaptive),
+            "wire" => Ok(PlacementPolicy::Wire),
             other => Err(format!(
-                "unknown placement policy `{other}` (expected slabs|weighted|adaptive)"
+                "unknown placement policy `{other}` (expected {})",
+                PlacementPolicy::CLI_NAMES.join("|")
             )),
         }
     }
@@ -102,9 +125,10 @@ impl std::str::FromStr for PlacementPolicy {
 
 impl PlacementPolicy {
     /// Every CLI name, for closed-set option validation
-    /// (`Args::get_choice`) — the single source the launcher quotes, so
-    /// a new policy only needs this impl block and the help text.
-    pub const CLI_NAMES: [&'static str; 3] = ["slabs", "weighted", "adaptive"];
+    /// (`Args::get_choice`) — the single source the launcher *and* the
+    /// `FromStr` error quote, so a new policy only needs this impl block
+    /// and the help text.
+    pub const CLI_NAMES: [&'static str; 4] = ["slabs", "weighted", "adaptive", "wire"];
 
     /// The CLI/JSON name (inverse of [`FromStr`](std::str::FromStr)).
     pub fn name(&self) -> &'static str {
@@ -112,6 +136,7 @@ impl PlacementPolicy {
             PlacementPolicy::RadialSlabs => "slabs",
             PlacementPolicy::WeightedSlabs => "weighted",
             PlacementPolicy::Adaptive => "adaptive",
+            PlacementPolicy::Wire => "wire",
         }
     }
 
@@ -146,12 +171,12 @@ impl PlacementPolicy {
                 let mid_r = plan.hierarchy.config.dx(id.level as usize) * p.info.mid_index();
                 let w = match self {
                     PlacementPolicy::RadialSlabs => p.info.width() as u64,
-                    // Adaptive without observations = the static cost
-                    // model; with observations, CostModel::place is used
-                    // instead of this method.
-                    PlacementPolicy::WeightedSlabs | PlacementPolicy::Adaptive => {
-                        plan.block_cost(id)
-                    }
+                    // Adaptive/Wire without observations = the static
+                    // cost model; with observations, CostModel::place_on
+                    // / place_wire_on are used instead of this method.
+                    PlacementPolicy::WeightedSlabs
+                    | PlacementPolicy::Adaptive
+                    | PlacementPolicy::Wire => plan.block_cost(id),
                 };
                 (mid_r, id, w)
             })
@@ -413,6 +438,76 @@ const COST_EWMA_ALPHA: f64 = 0.5;
 /// per-block term keeps its longer memory for ids that persist.
 const LEVEL_EWMA_ALPHA: f64 = 0.75;
 
+/// EWMA smoothing for observed per-edge traffic. Same rationale as
+/// [`COST_EWMA_ALPHA`]: within a constant plan every cross-block edge
+/// fires every epoch, so one epoch of history is already representative;
+/// equal weighting keeps the model responsive when a regrid reshapes
+/// the traffic graph.
+const TRAFFIC_EWMA_ALPHA: f64 = 0.5;
+
+/// Observed-traffic feedback carried across epoch/regrid boundaries —
+/// the communication half of [`PlacementPolicy::Wire`], paired with the
+/// [`CostModel`]'s compute half.
+///
+/// The driver reports every epoch's serialized bytes per directed block
+/// pair ([`TrafficSample`]); the model aggregates both directions into
+/// an undirected edge and EWMA-smooths the per-epoch totals. Edges
+/// absent from an epoch's samples (regridded away) are dropped, so a
+/// reused id never inherits stale traffic — mirroring
+/// [`CostModel::observe`]'s retain discipline.
+#[derive(Debug, Default)]
+pub struct TrafficModel {
+    /// EWMA of bytes per epoch, per undirected block pair. The key is
+    /// the ordered pair `(min, max)`.
+    edges: HashMap<(BlockId, BlockId), f64>,
+    /// Epochs observed so far (0 ⇒ refinement has nothing to refine on).
+    pub epochs_observed: u64,
+}
+
+impl TrafficModel {
+    /// Fresh model with no observations.
+    pub fn new() -> TrafficModel {
+        TrafficModel::default()
+    }
+
+    /// Fold one finished epoch's traffic into the model: aggregate the
+    /// directed samples per undirected pair (self-edges dropped), EWMA
+    /// against the existing estimate, and forget pairs that no longer
+    /// exist under the current plan.
+    pub fn observe(&mut self, samples: &[TrafficSample]) {
+        let mut agg: HashMap<(BlockId, BlockId), u64> = HashMap::with_capacity(samples.len());
+        for s in samples {
+            if s.src == s.dst {
+                continue;
+            }
+            let key = if s.src <= s.dst { (s.src, s.dst) } else { (s.dst, s.src) };
+            *agg.entry(key).or_insert(0) += s.bytes;
+        }
+        for (key, bytes) in &agg {
+            let e = self.edges.entry(*key).or_insert(*bytes as f64);
+            *e = TRAFFIC_EWMA_ALPHA * *bytes as f64 + (1.0 - TRAFFIC_EWMA_ALPHA) * *e;
+        }
+        self.edges.retain(|key, _| agg.contains_key(key));
+        self.epochs_observed += 1;
+    }
+
+    /// Smoothed bytes per epoch across the undirected edge `{a, b}`
+    /// (0.0 = never observed).
+    pub fn edge_bytes(&self, a: BlockId, b: BlockId) -> f64 {
+        let key = if a <= b { (a, b) } else { (b, a) };
+        self.edges.get(&key).copied().unwrap_or(0.0)
+    }
+
+    /// Every known undirected edge, sorted by block pair — the
+    /// deterministic input [`refine_cut`] walks.
+    pub fn edges(&self) -> Vec<(BlockId, BlockId, f64)> {
+        let mut out: Vec<(BlockId, BlockId, f64)> =
+            self.edges.iter().map(|(&(a, b), &w)| (a, b, w)).collect();
+        out.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        out
+    }
+}
+
 /// Observed-cost feedback carried across epoch/regrid boundaries — the
 /// state behind [`PlacementPolicy::Adaptive`].
 ///
@@ -498,30 +593,82 @@ impl CostModel {
         members: &[LocalityId],
     ) -> (HashMap<BlockId, LocalityId>, bool) {
         assert!(!members.is_empty());
-        let map = if self.epochs_observed == 0 {
-            // Cold start: no observations — the static cost-weighted map.
-            PlacementPolicy::WeightedSlabs.assign_on(plan, members)
-        } else {
-            let mut blocks: Vec<(f64, BlockId)> = plan
+        let map = self.lpt_map(plan, members);
+        self.finish_placement(map)
+    }
+
+    /// As [`place_on`](CostModel::place_on), but refining the LPT seed
+    /// against observed traffic: a KL/FM-style boundary pass
+    /// ([`refine_cut`]) moves blocks across localities while the
+    /// combined objective `alpha·compute_imbalance + cut_bytes`
+    /// ([`wire_objective`]) strictly decreases. The entry point behind
+    /// [`PlacementPolicy::Wire`], used by
+    /// [`run_epoch_wire`](crate::amr::dataflow_driver::run_epoch_wire).
+    ///
+    /// With no traffic history yet (or a single member) the refinement
+    /// is a no-op and this is exactly the adaptive placement.
+    pub fn place_wire_on(
+        &mut self,
+        plan: &EpochPlan,
+        members: &[LocalityId],
+        traffic: &TrafficModel,
+        alpha: f64,
+    ) -> (HashMap<BlockId, LocalityId>, bool) {
+        assert!(!members.is_empty());
+        let mut map = self.lpt_map(plan, members);
+        if traffic.epochs_observed > 0 && members.len() > 1 {
+            let weights: HashMap<BlockId, f64> = plan
                 .plans
                 .iter()
-                .map(|p| (self.weight(plan, p.info.id, p.info.width()), p.info.id))
+                .map(|p| (p.info.id, self.weight(plan, p.info.id, p.info.width())))
                 .collect();
-            blocks.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-            let mut load = vec![0.0f64; members.len()];
-            let mut map = HashMap::with_capacity(blocks.len());
-            for (w, id) in blocks {
-                let slot = load
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.total_cmp(b.1))
-                    .expect("members is nonempty")
-                    .0;
-                map.insert(id, members[slot]);
-                load[slot] += w.max(1.0);
-            }
-            map
-        };
+            // Only edges whose endpoints both exist under this plan —
+            // regrid-stale ids must not anchor the refinement.
+            let edges: Vec<(BlockId, BlockId, f64)> = traffic
+                .edges()
+                .into_iter()
+                .filter(|(a, b, _)| weights.contains_key(a) && weights.contains_key(b))
+                .collect();
+            refine_cut(&weights, &edges, members, &mut map, alpha);
+        }
+        self.finish_placement(map)
+    }
+
+    /// The greedy LPT pack by estimated cost (cold start: the static
+    /// cost-weighted slab map) — the seed both `place_on` and
+    /// `place_wire_on` start from.
+    fn lpt_map(&self, plan: &EpochPlan, members: &[LocalityId]) -> HashMap<BlockId, LocalityId> {
+        if self.epochs_observed == 0 {
+            // Cold start: no observations — the static cost-weighted map.
+            return PlacementPolicy::WeightedSlabs.assign_on(plan, members);
+        }
+        let mut blocks: Vec<(f64, BlockId)> = plan
+            .plans
+            .iter()
+            .map(|p| (self.weight(plan, p.info.id, p.info.width()), p.info.id))
+            .collect();
+        blocks.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut load = vec![0.0f64; members.len()];
+        let mut map = HashMap::with_capacity(blocks.len());
+        for (w, id) in blocks {
+            let slot = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .expect("members is nonempty")
+                .0;
+            map.insert(id, members[slot]);
+            load[slot] += w.max(1.0);
+        }
+        map
+    }
+
+    /// Rebalance bookkeeping shared by every placement entry point:
+    /// diff the map against where blocks actually ended last epoch.
+    fn finish_placement(
+        &mut self,
+        map: HashMap<BlockId, LocalityId>,
+    ) -> (HashMap<BlockId, LocalityId>, bool) {
         let rebalanced = match &self.prev_homes {
             Some(prev) => map
                 .iter()
@@ -589,15 +736,159 @@ impl CostModel {
     }
 }
 
-/// Handle to the running balancer monitor thread.
+// ----------------------------------------------- wire-aware refinement
+
+/// Bound on full refinement sweeps per placement. Each accepted move
+/// strictly decreases [`wire_objective`], so the loop terminates on its
+/// own; the cap only guards against floating-point near-ties producing
+/// pathological sweep counts on huge graphs.
+const REFINE_MAX_PASSES: usize = 8;
+
+/// The combined packing objective [`PlacementPolicy::Wire`] minimizes:
+///
+/// `alpha · (max_load − min_load) + cut_bytes`
+///
+/// where load is summed per member from `weights` (estimated epoch
+/// nanoseconds per block) and `cut_bytes` sums the weight of every edge
+/// whose endpoints `map` places on different localities. `alpha` is the
+/// exchange rate between one nanosecond of compute imbalance and one
+/// byte crossing the wire; the default (`1.0`, see `--wire-alpha`) lets
+/// compute dominate on compute-heavy workloads and cut dominate on
+/// communication-heavy ones simply through the magnitudes observed.
+pub fn wire_objective(
+    weights: &HashMap<BlockId, f64>,
+    edges: &[(BlockId, BlockId, f64)],
+    members: &[LocalityId],
+    map: &HashMap<BlockId, LocalityId>,
+    alpha: f64,
+) -> f64 {
+    let mut load: HashMap<LocalityId, f64> = members.iter().map(|&m| (m, 0.0)).collect();
+    for (id, w) in weights {
+        if let Some(&home) = map.get(id) {
+            *load.entry(home).or_insert(0.0) += w;
+        }
+    }
+    let max = load.values().cloned().fold(0.0f64, f64::max);
+    let min = load.values().cloned().fold(f64::INFINITY, f64::min);
+    let imbalance = if min.is_finite() { max - min } else { 0.0 };
+    let cut: f64 = edges
+        .iter()
+        .filter(|(a, b, _)| map.get(a) != map.get(b))
+        .map(|(_, _, w)| w)
+        .sum();
+    alpha * imbalance + cut
+}
+
+/// KL/FM-style boundary refinement: starting from `map` (the LPT seed),
+/// repeatedly move single blocks to other members, applying a move only
+/// when it *strictly* decreases [`wire_objective`]; each block takes its
+/// best improving target per sweep. Returns the number of moves applied.
+///
+/// Deterministic by construction: blocks are visited in id order,
+/// candidate targets in `members` order, and ties in the best-target
+/// choice keep the earlier candidate — the same inputs always produce
+/// the same map. Placement never changes physics (the repo's bitwise
+/// invariant), so determinism here is about reproducible *performance*,
+/// not correctness.
+pub fn refine_cut(
+    weights: &HashMap<BlockId, f64>,
+    edges: &[(BlockId, BlockId, f64)],
+    members: &[LocalityId],
+    map: &mut HashMap<BlockId, LocalityId>,
+    alpha: f64,
+) -> usize {
+    if members.len() < 2 || map.is_empty() {
+        return 0;
+    }
+    // Per-block adjacency over the undirected traffic graph.
+    let mut adj: HashMap<BlockId, Vec<(BlockId, f64)>> = HashMap::new();
+    for &(a, b, w) in edges {
+        adj.entry(a).or_default().push((b, w));
+        adj.entry(b).or_default().push((a, w));
+    }
+    let mut load: HashMap<LocalityId, f64> = members.iter().map(|&m| (m, 0.0)).collect();
+    for (id, home) in map.iter() {
+        *load.entry(*home).or_insert(0.0) += weights.get(id).copied().unwrap_or(0.0);
+    }
+    let imbalance = |load: &HashMap<LocalityId, f64>| {
+        let max = load.values().cloned().fold(0.0f64, f64::max);
+        let min = load.values().cloned().fold(f64::INFINITY, f64::min);
+        if min.is_finite() {
+            max - min
+        } else {
+            0.0
+        }
+    };
+    let mut ids: Vec<BlockId> = map.keys().copied().collect();
+    ids.sort();
+    let mut moves = 0usize;
+    for _pass in 0..REFINE_MAX_PASSES {
+        let mut moved_this_pass = false;
+        for &id in &ids {
+            let home = map[&id];
+            let w = weights.get(&id).copied().unwrap_or(0.0);
+            // Cut bytes this block pays toward a candidate home `t`:
+            // the weight of its edges whose other endpoint is NOT on t.
+            let cut_from = |t: LocalityId| -> f64 {
+                adj.get(&id)
+                    .map(|ns| {
+                        ns.iter()
+                            .filter(|(n, _)| map.get(n).copied() != Some(t))
+                            .map(|(_, ew)| ew)
+                            .sum()
+                    })
+                    .unwrap_or(0.0)
+            };
+            let base_imb = imbalance(&load);
+            let base_cut = cut_from(home);
+            let mut best: Option<(f64, LocalityId)> = None;
+            for &t in members {
+                if t == home {
+                    continue;
+                }
+                *load.get_mut(&home).expect("home is a member") -= w;
+                *load.get_mut(&t).expect("target is a member") += w;
+                let d_imb = imbalance(&load) - base_imb;
+                *load.get_mut(&home).expect("home is a member") += w;
+                *load.get_mut(&t).expect("target is a member") -= w;
+                let delta = alpha * d_imb + (cut_from(t) - base_cut);
+                if delta < 0.0 && best.map(|(bd, _)| delta < bd).unwrap_or(true) {
+                    best = Some((delta, t));
+                }
+            }
+            if let Some((_, t)) = best {
+                *load.get_mut(&home).expect("home is a member") -= w;
+                *load.get_mut(&t).expect("target is a member") += w;
+                map.insert(id, t);
+                moves += 1;
+                moved_this_pass = true;
+            }
+        }
+        if !moved_this_pass {
+            break;
+        }
+    }
+    moves
+}
+
+/// Handle to the running balancer monitor thread. Holds the epoch's
+/// [`MigratorGuard`] for its whole lifetime: while a balancer runs, no
+/// other migrator (elastic membership, crash recovery, or a second
+/// balancer) can start against the same epoch.
 pub struct LoadBalancer {
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<u64>>,
+    /// Released on drop/stop — after the monitor thread has joined.
+    _guard: MigratorGuard,
 }
 
 impl LoadBalancer {
-    /// Start balancing `state` on a dedicated monitor thread.
-    pub fn start(state: Arc<DriverState>, cfg: BalanceConfig) -> LoadBalancer {
+    /// Start balancing `state` on a dedicated monitor thread. Fails fast
+    /// (without spawning) if another migrator already owns the epoch —
+    /// the single-migrator invariant is enforced here, not by caller
+    /// convention.
+    pub fn start(state: Arc<DriverState>, cfg: BalanceConfig) -> PxResult<LoadBalancer> {
+        let guard = state.acquire_migrator("load balancer")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::Builder::new()
@@ -615,7 +906,7 @@ impl LoadBalancer {
                 }
             })
             .expect("spawn load balancer");
-        LoadBalancer { stop, handle: Some(handle) }
+        Ok(LoadBalancer { stop, handle: Some(handle), _guard: guard })
     }
 
     /// Stop the monitor and return the number of migrations it performed.
@@ -689,6 +980,7 @@ mod tests {
             PlacementPolicy::RadialSlabs,
             PlacementPolicy::WeightedSlabs,
             PlacementPolicy::Adaptive,
+            PlacementPolicy::Wire,
         ] {
             for n in [1usize, 2, 3, 8] {
                 let a = policy.assign(&plan, n);
@@ -737,11 +1029,19 @@ mod tests {
             PlacementPolicy::WeightedSlabs
         );
         assert_eq!("adaptive".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::Adaptive);
+        assert_eq!("wire".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::Wire);
         assert!("banana".parse::<PlacementPolicy>().is_err());
+        // Satellite: the rejection message is derived from CLI_NAMES, so
+        // it must quote the *full* valid set — including `wire`.
+        let err = "banana".parse::<PlacementPolicy>().unwrap_err();
+        for n in PlacementPolicy::CLI_NAMES {
+            assert!(err.contains(n), "error must list `{n}`: {err}");
+        }
         for p in [
             PlacementPolicy::RadialSlabs,
             PlacementPolicy::WeightedSlabs,
             PlacementPolicy::Adaptive,
+            PlacementPolicy::Wire,
         ] {
             assert_eq!(p.name().parse::<PlacementPolicy>().unwrap(), p);
             assert!(PlacementPolicy::CLI_NAMES.contains(&p.name()));
@@ -961,6 +1261,114 @@ mod tests {
             "level fallback ({level}) must re-track the shifted hotspot faster than \
              the per-block EWMA ({block_ewma})"
         );
+    }
+
+    /// Shorthand level-0 block id for hand-built traffic graphs.
+    fn bid(block: u32) -> BlockId {
+        BlockId { level: 0, region: 0, block }
+    }
+
+    #[test]
+    fn wire_cold_start_matches_weighted_slabs() {
+        // With no cost *or* traffic history the wire placement must
+        // degenerate to exactly the adaptive cold start (= the static
+        // weighted map): same physics, same placement, nothing to refine.
+        let plan = plan_1level();
+        let members: Vec<LocalityId> = vec![0, 1, 2];
+        let mut model = CostModel::new();
+        let traffic = TrafficModel::new();
+        let (map, rebalanced) = model.place_wire_on(&plan, &members, &traffic, 1.0);
+        assert!(!rebalanced);
+        assert_eq!(map, PlacementPolicy::WeightedSlabs.assign_on(&plan, &members));
+        assert_eq!(map, PlacementPolicy::Wire.assign_on(&plan, &members));
+    }
+
+    #[test]
+    fn traffic_model_ewma_folds_directions_and_forgets_dead_edges() {
+        let mut tm = TrafficModel::new();
+        // Directed both ways: one undirected edge of 100 + 50 bytes.
+        tm.observe(&[
+            TrafficSample { src: bid(0), dst: bid(1), bytes: 100 },
+            TrafficSample { src: bid(1), dst: bid(0), bytes: 50 },
+            TrafficSample { src: bid(1), dst: bid(2), bytes: 80 },
+            // Self-traffic is meaningless for placement and is dropped.
+            TrafficSample { src: bid(2), dst: bid(2), bytes: 9_999 },
+        ]);
+        assert_eq!(tm.epochs_observed, 1);
+        assert!((tm.edge_bytes(bid(0), bid(1)) - 150.0).abs() < 1e-9);
+        assert!((tm.edge_bytes(bid(1), bid(0)) - 150.0).abs() < 1e-9, "undirected lookup");
+        assert!((tm.edge_bytes(bid(1), bid(2)) - 80.0).abs() < 1e-9);
+        assert_eq!(tm.edge_bytes(bid(2), bid(2)), 0.0);
+        // Second epoch: edge {0,1} doubles, edge {1,2} vanishes (regrid).
+        tm.observe(&[TrafficSample { src: bid(0), dst: bid(1), bytes: 300 }]);
+        let e01 = tm.edge_bytes(bid(0), bid(1));
+        assert!((e01 - (0.5 * 300.0 + 0.5 * 150.0)).abs() < 1e-9, "EWMA alpha=0.5: {e01}");
+        assert_eq!(tm.edge_bytes(bid(1), bid(2)), 0.0, "dead edges must be forgotten");
+        assert_eq!(tm.edges().len(), 1);
+    }
+
+    #[test]
+    fn refinement_strictly_decreases_the_combined_objective() {
+        // Hand-built graph: two 3-block cliques with heavy internal
+        // traffic, equal compute weights, seeded with the worst possible
+        // split (each clique torn across both localities). The FM pass
+        // must strictly decrease the combined objective, end with fewer
+        // cut bytes, and keep the load perfectly balanced.
+        let members: Vec<LocalityId> = vec![0, 1];
+        let weights: HashMap<BlockId, f64> = (0..6).map(|i| (bid(i), 100.0)).collect();
+        let clique = |ids: [u32; 3]| -> Vec<(BlockId, BlockId, f64)> {
+            vec![
+                (bid(ids[0]), bid(ids[1]), 1_000.0),
+                (bid(ids[0]), bid(ids[2]), 1_000.0),
+                (bid(ids[1]), bid(ids[2]), 1_000.0),
+            ]
+        };
+        let mut edges = clique([0, 1, 2]);
+        edges.extend(clique([3, 4, 5]));
+        // Worst seed: {0,1,2} split 2/1 across localities, same for {3,4,5}.
+        let mut map: HashMap<BlockId, LocalityId> = HashMap::new();
+        for (i, loc) in [(0u32, 0), (1, 0), (2, 1), (3, 1), (4, 1), (5, 0)] {
+            map.insert(bid(i), loc);
+        }
+        let before = wire_objective(&weights, &edges, &members, &map, 1.0);
+        let moves = refine_cut(&weights, &edges, &members, &mut map, 1.0);
+        let after = wire_objective(&weights, &edges, &members, &map, 1.0);
+        assert!(moves >= 1, "the torn cliques must trigger moves");
+        assert!(
+            after < before,
+            "refinement must strictly decrease the objective: {after} vs {before}"
+        );
+        // The optimum here is one clique per locality: zero cut, zero
+        // imbalance.
+        assert_eq!(after, 0.0, "two cliques on two localities have a zero-cost optimum");
+        assert_eq!(map[&bid(0)], map[&bid(1)]);
+        assert_eq!(map[&bid(1)], map[&bid(2)]);
+        assert_eq!(map[&bid(3)], map[&bid(4)]);
+        assert_eq!(map[&bid(4)], map[&bid(5)]);
+        assert_ne!(map[&bid(0)], map[&bid(3)], "load balance keeps the cliques apart");
+        // Refinement is idempotent at a local optimum.
+        let again = refine_cut(&weights, &edges, &members, &mut map, 1.0);
+        assert_eq!(again, 0, "a local optimum admits no further improving move");
+    }
+
+    #[test]
+    fn refinement_respects_the_imbalance_term() {
+        // One heavy edge across two blocks on different localities, but
+        // alpha so large that internalizing it can never pay for the
+        // induced imbalance: the pass must leave the map alone. With
+        // alpha=0 (pure cut), the same graph collapses onto one home.
+        let members: Vec<LocalityId> = vec![0, 1];
+        let weights: HashMap<BlockId, f64> = [(bid(0), 100.0), (bid(1), 100.0)].into();
+        let edges = vec![(bid(0), bid(1), 50.0)];
+        let seed: HashMap<BlockId, LocalityId> = [(bid(0), 0), (bid(1), 1)].into();
+        let mut map = seed.clone();
+        let moves = refine_cut(&weights, &edges, &members, &mut map, 1e9);
+        assert_eq!(moves, 0, "huge alpha: imbalance dominates, no move pays");
+        assert_eq!(map, seed);
+        let mut map = seed.clone();
+        let moves = refine_cut(&weights, &edges, &members, &mut map, 0.0);
+        assert_eq!(moves, 1, "pure cut objective internalizes the edge");
+        assert_eq!(map[&bid(0)], map[&bid(1)]);
     }
 
     #[test]

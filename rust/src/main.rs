@@ -11,6 +11,8 @@
 //!   bench5     crash tolerance study (steady/checkpointed/kill), BENCH_5.json
 //!   bench6     kernel fast path study (native/fused/simd), BENCH_6.json
 //!   bench7     deterministic replay study (dataflow vs barrier), BENCH_7.json
+//!   bench8     wire-aware placement study (traffic-refined packing under
+//!              regridding + elastic membership + strong scaling), BENCH_8.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -18,8 +20,10 @@
 //!   --backend native|fused|simd|xla --scheduler local|global --barrier
 //!   --epochs E (regrid between epochs) --amplitude A --deadline-ms MS
 //!   --localities K (distributed localities with a simulated wire)
-//!   --placement slabs|weighted|adaptive (block -> locality policy;
-//!     adaptive feeds each epoch's observed costs into the next map)
+//!   --placement slabs|weighted|adaptive|wire (block -> locality policy;
+//!     adaptive feeds each epoch's observed costs into the next map, wire
+//!     additionally folds observed parcel traffic into the packing
+//!     objective, tuned by --wire-alpha)
 
 // Same style-lint opt-outs as the library crate (see lib.rs): CI runs
 // `cargo clippy -- -D warnings` over both.
@@ -29,10 +33,10 @@ use std::sync::Arc;
 
 use parallex::amr::backend::{make_backend, BackendKind};
 use parallex::amr::dataflow_driver::{
-    initial_block_states, run_epoch_adaptive, run_epoch_placed, AmrConfig,
+    initial_block_states, run_epoch_adaptive, run_epoch_placed, run_epoch_wire, AmrConfig,
 };
 use parallex::amr::engine::EpochPlan;
-use parallex::coordinator::{CostModel, DistAmrOpts, PlacementPolicy};
+use parallex::coordinator::{CostModel, DistAmrOpts, PlacementPolicy, TrafficModel};
 use parallex::amr::mesh::MeshConfig;
 use parallex::amr::physics::energy_norm;
 use parallex::amr::regrid::{initial_hierarchy, regrid_hierarchy, remap, Composite, RegridConfig};
@@ -97,6 +101,7 @@ fn main() {
         "bench5" => cmd_bench_artifact(&args, scale, "BENCH_5.json", bench::write_bench5_json),
         "bench6" => cmd_bench_artifact(&args, scale, "BENCH_6.json", bench::write_bench6_json),
         "bench7" => cmd_bench_artifact(&args, scale, "BENCH_7.json", bench::write_bench7_json),
+        "bench8" => cmd_bench_artifact(&args, scale, "BENCH_8.json", bench::write_bench8_json),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -148,14 +153,18 @@ fn cmd_bench_artifact(
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6|bench7> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6|bench7|bench8> [--options]\n\n\
          run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
                        --workers <cores> --backend native|fused|simd|xla\n\
                        --scheduler local|global\n\
                        --barrier --epochs 1 --amplitude 0.05 --deadline-ms 0\n\
-                       --localities 1 --placement slabs|weighted|adaptive\n\
+                       --localities 1 --placement slabs|weighted|adaptive|wire\n\
+                       --wire-alpha 1.0 (wire placement: weight of compute\n\
+                       imbalance vs cut bytes in the packing objective)\n\
          dist options: --backend native|fused|simd|xla (physics backend)\n\
-                       --placement slabs|weighted|adaptive (default slabs + balancer)\n\
+                       --placement slabs|weighted|adaptive|wire (default slabs +\n\
+                       balancer; wire uses its cold-start map here — the carried\n\
+                       traffic feedback loop lives in `run --placement wire`)\n\
                        --elastic \"25:-3,25:-2,60:+2,60:+3\" (scripted membership\n\
                        changes at task-completion percentages: -L leave, +L join)\n\
                        --kill <L>@<frac> (kill locality L unplanned at the given\n\
@@ -172,6 +181,9 @@ fn print_help() {
                        block sizes and 1/2/4/8 localities (BENCH_6.json)\n\
          bench7:       deterministic replay — dataflow (LCO) vs global barrier\n\
                        on the virtual clock over the measured DAG (BENCH_7.json)\n\
+         bench8:       wire-aware placement — traffic-refined packing vs adaptive\n\
+                       under regridding + elastic membership, plus strong scaling\n\
+                       across 1/2/4/8 localities x slabs/adaptive/wire (BENCH_8.json)\n\
                        (bench subcommands also accept --backend)\n\
          env: PX_SCALE=quick|full  PX_BACKEND=native|fused|simd|xla  PX_ARTIFACTS=<dir>"
     );
@@ -258,6 +270,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let placement: PlacementPolicy = args
         .get_choice("placement", &PlacementPolicy::CLI_NAMES, "weighted")?
         .parse()?;
+    let wire_alpha: f64 = args.get_parse("wire-alpha", 1.0)?;
     let unknown = args.unknown();
     if !unknown.is_empty() {
         return Err(format!("unknown options: {}", unknown.join(", ")));
@@ -299,8 +312,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 
     let opts = DistAmrOpts { policy: placement, ..Default::default() };
     // The adaptive feedback loop: one cost model carried across every
-    // epoch/regrid boundary of this run.
+    // epoch/regrid boundary of this run. Wire placement additionally
+    // carries the observed parcel-traffic model (DESIGN.md §12).
     let mut model = CostModel::new();
+    let mut traffic = TrafficModel::new();
     let mut init = None;
     let t0 = std::time::Instant::now();
     for epoch in 0..epochs {
@@ -309,7 +324,19 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             Some(s) => s,
             None => initial_block_states(&plan, &cfg),
         };
-        let outcome = if placement == PlacementPolicy::Adaptive {
+        let outcome = if placement == PlacementPolicy::Wire {
+            run_epoch_wire(
+                &rt,
+                plan.clone(),
+                backend.clone(),
+                cfg,
+                &init_states,
+                &opts,
+                &mut model,
+                &mut traffic,
+                wire_alpha,
+            )
+        } else if placement == PlacementPolicy::Adaptive {
             run_epoch_adaptive(&rt, plan.clone(), backend.clone(), cfg, &init_states, &opts, &mut model)
         } else {
             run_epoch_placed(&rt, plan.clone(), backend.clone(), cfg, &init_states, &opts)

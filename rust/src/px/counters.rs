@@ -114,6 +114,14 @@ pub struct Counters {
     /// latency (counted at the sender; a subset of `amr_remote_pushes`).
     /// Zero when ghost batching is disabled.
     pub amr_batched_pushes: Counter,
+    /// Serialized AMR fragment payload bytes whose producer and consumer
+    /// lived on *different* localities at send time — the cut of the
+    /// block traffic graph under the current placement, payload only
+    /// (parcel/batch envelope headers are excluded; see `parcel_bytes`
+    /// for whole-wire accounting). The metric `PlacementPolicy::Wire`
+    /// exists to shrink (DESIGN.md §12); counted at the sender on both
+    /// the batched and per-fragment push paths.
+    pub amr_cut_bytes: Counter,
     /// Epoch boundaries at which the adaptive placement policy moved at
     /// least one block relative to where it ended the previous epoch —
     /// the coordinator's cost-feedback loop firing (DESIGN.md §7).
@@ -170,6 +178,7 @@ pub struct CounterSnapshot {
     pub amr_remote_pushes: u64,
     pub payload_deep_copies: u64,
     pub amr_batched_pushes: u64,
+    pub amr_cut_bytes: u64,
     pub placement_rebalances: u64,
     pub amr_batch_spawns: u64,
     pub bounced: u64,
@@ -207,6 +216,7 @@ impl Counters {
             amr_remote_pushes: self.amr_remote_pushes.get(),
             payload_deep_copies: self.payload_deep_copies.get(),
             amr_batched_pushes: self.amr_batched_pushes.get(),
+            amr_cut_bytes: self.amr_cut_bytes.get(),
             placement_rebalances: self.placement_rebalances.get(),
             amr_batch_spawns: self.amr_batch_spawns.get(),
             bounced: self.bounced.get(),
@@ -249,6 +259,7 @@ impl CounterSnapshot {
         self.amr_remote_pushes += s.amr_remote_pushes;
         self.payload_deep_copies += s.payload_deep_copies;
         self.amr_batched_pushes += s.amr_batched_pushes;
+        self.amr_cut_bytes += s.amr_cut_bytes;
         self.placement_rebalances += s.placement_rebalances;
         self.amr_batch_spawns += s.amr_batch_spawns;
         self.bounced += s.bounced;
@@ -285,6 +296,7 @@ impl CounterSnapshot {
             amr_remote_pushes: self.amr_remote_pushes - earlier.amr_remote_pushes,
             payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
             amr_batched_pushes: self.amr_batched_pushes - earlier.amr_batched_pushes,
+            amr_cut_bytes: self.amr_cut_bytes - earlier.amr_cut_bytes,
             placement_rebalances: self.placement_rebalances - earlier.placement_rebalances,
             amr_batch_spawns: self.amr_batch_spawns - earlier.amr_batch_spawns,
             bounced: self.bounced - earlier.bounced,
@@ -325,6 +337,7 @@ impl CounterSnapshot {
             ("amr_remote_pushes", self.amr_remote_pushes),
             ("payload_deep_copies", self.payload_deep_copies),
             ("amr_batched_pushes", self.amr_batched_pushes),
+            ("amr_cut_bytes", self.amr_cut_bytes),
             ("placement_rebalances", self.placement_rebalances),
             ("amr_batch_spawns", self.amr_batch_spawns),
             ("bounced", self.bounced),
@@ -400,6 +413,7 @@ mod tests {
         let s = Counters::default().snapshot().render();
         assert!(s.contains("threads_spawned") && s.contains("xla_calls"));
         assert!(s.contains("amr_batch_spawns"));
+        assert!(s.contains("amr_cut_bytes"));
         assert!(s.contains("dead_letters") && s.contains("parcels_replayed"));
         assert!(s.contains("blocks_recovered") && s.contains("heartbeats_missed"));
         assert!(s.contains("bounced"));
@@ -410,6 +424,7 @@ mod tests {
     fn absorb_sums_events_and_maxes_hwm() {
         let a = Counters::default();
         a.amr_batched_pushes.add(3);
+        a.amr_cut_bytes.add(400);
         a.placement_rebalances.inc();
         a.amr_batch_spawns.add(2);
         a.queue_hwm.max(5);
@@ -419,6 +434,7 @@ mod tests {
         let b = Counters::default();
         b.kernel_ns_total.add(250);
         b.amr_batched_pushes.add(4);
+        b.amr_cut_bytes.add(100);
         b.amr_batch_spawns.add(1);
         b.queue_hwm.max(9);
         b.parcels_replayed.add(3);
@@ -428,6 +444,7 @@ mod tests {
         let mut total = a.snapshot();
         total.absorb(&b.snapshot());
         assert_eq!(total.amr_batched_pushes, 7);
+        assert_eq!(total.amr_cut_bytes, 500);
         assert_eq!(total.placement_rebalances, 1);
         assert_eq!(total.amr_batch_spawns, 3);
         assert_eq!(total.queue_hwm, 9);
