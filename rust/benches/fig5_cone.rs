@@ -1,4 +1,8 @@
-//! Fig 5: timestep-reached cone — regenerates the paper's rows/series.
+//! Fig 5, un-stubbed: the timestep-reached cone plus the BENCH 9
+//! flight-recorder study — critical path vs total work over level depth
+//! x 1/2/4/8 localities x {dataflow, barrier}, every traced row gated
+//! bitwise against an untraced reference, with the tracing-tax headline
+//! — emitting `BENCH_9.json` next to its siblings.
 //! Run: `cargo bench --bench fig5_cone` (PX_SCALE=full for paper scale).
 fn main() {
     if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
@@ -6,5 +10,18 @@ fn main() {
     }
     let t0 = std::time::Instant::now();
     print!("{}", parallex::bench::fig5_cone(parallex::bench::Scale::from_env()));
-    eprintln!("[fig5_cone] total {:.1}s", t0.elapsed().as_secs_f64());
+    match parallex::bench::write_bench9_json(parallex::bench::Scale::from_env()) {
+        Ok((path, table)) => {
+            print!("{table}");
+            eprintln!(
+                "[fig5_cone] wrote {} in {:.1}s",
+                path.display(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("[fig5_cone] failed to write BENCH_9.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -1231,6 +1231,7 @@ impl DriverState {
         // fragments will never need replaying — prune them.
         if self.ckpt_on.load(Ordering::Relaxed) {
             self.ckpt.lock().unwrap().remove(&(id, k));
+            crate::px::trace::checkpoint_prune();
         }
         self.running[loc].fetch_sub(1, Ordering::SeqCst);
 
@@ -1882,6 +1883,7 @@ impl DriverState {
             }
         }
         self.shards[0].ctx.counters.blocks_recovered.add(recovered.len() as u64);
+        crate::px::trace::recovery(recovered.len() as u64, fragments);
         Ok((recovered.len() as u64, fragments))
     }
 
@@ -3422,6 +3424,99 @@ mod tests {
             }
             runtime.shutdown();
         }
+    }
+
+    /// Tracing must be observation-only. With the flight recorder on, the
+    /// distributed runs stay bitwise identical to the untraced reference,
+    /// and the harvested event stream satisfies the causal-ledger
+    /// invariants: every parcel receive pairs with exactly one send for
+    /// its trace id (hop-forwards mint fresh ids), and task spans nest
+    /// per worker ring (one task at a time, begin before end, rings
+    /// time-ordered). CI re-runs this test by name in the trace job.
+    #[test]
+    fn traced_distributed_epoch_bitwise_identical_on_1_2_4_8_localities() {
+        use crate::px::trace::{self, EventKind};
+        let mesh = MeshConfig { r_max: 20.0, n0: 201, levels: 1, cfl: 0.25, granularity: 10 };
+        let cfg = AmrConfig { coarse_steps: 4, ..Default::default() };
+        let h = Hierarchy::build(mesh, &[vec![Region { lo: 120, hi: 200 }]]).unwrap();
+        let reference = {
+            let runtime = rt(2);
+            let (_, out) = run(&runtime, h.clone(), Arc::new(NativeBackend), cfg).unwrap();
+            runtime.shutdown();
+            out
+        };
+        let _session = trace::exclusive_session();
+        for localities in [1usize, 2, 4, 8] {
+            trace::reset();
+            // Id watermark: trace state is process-global, so scope the
+            // ledger to ids minted inside this window.
+            let lo = trace::fresh_id();
+            trace::enable(trace::DEFAULT_CAPACITY);
+            let runtime = rt_dist(localities, 2);
+            let plan = Arc::new(EpochPlan::new(h.clone(), cfg.coarse_steps));
+            let init = initial_block_states(&plan, &cfg);
+            let out = run_epoch(&runtime, plan, Arc::new(NativeBackend), cfg, &init).unwrap();
+            runtime.wait_quiescent();
+            trace::disable();
+            let hi = trace::fresh_id();
+            assert_outcomes_bitwise_equal(&reference, &out, &format!("traced {localities} loc"));
+
+            let rings = trace::harvest();
+            let ours = runtime.manager_ids();
+            let mut sends: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+            let mut recvs: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+            for r in &rings {
+                for e in &r.events {
+                    match e.kind {
+                        EventKind::ParcelSend if e.a > lo && e.a < hi => {
+                            *sends.entry(e.a).or_insert(0) += 1;
+                        }
+                        EventKind::ParcelRecv if e.a > lo && e.a < hi => {
+                            *recvs.entry(e.a).or_insert(0) += 1;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            for (id, n) in &recvs {
+                assert_eq!(*n, 1, "{localities} loc: trace id {id} received {n} times");
+                assert_eq!(
+                    sends.get(id),
+                    Some(&1),
+                    "{localities} loc: recv without exactly one send for id {id}"
+                );
+            }
+            if localities > 1 {
+                assert!(!recvs.is_empty(), "{localities} loc: wire traffic must be traced");
+            }
+            for r in rings.iter().filter(|r| ours.contains(&r.manager_id)) {
+                let mut open: Option<u64> = None;
+                let mut last_t = 0u64;
+                for e in &r.events {
+                    assert!(e.t_ns >= last_t, "{}: ring must be time-ordered", r.thread);
+                    last_t = e.t_ns;
+                    match e.kind {
+                        EventKind::TaskBegin => {
+                            assert!(
+                                open.is_none(),
+                                "{}: span {} began while {:?} still open",
+                                r.thread,
+                                e.a,
+                                open
+                            );
+                            open = Some(e.a);
+                        }
+                        EventKind::TaskEnd => {
+                            assert_eq!(open, Some(e.a), "{}: end without its begin", r.thread);
+                            open = None;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            runtime.shutdown();
+        }
+        trace::reset();
     }
 
     #[test]

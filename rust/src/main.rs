@@ -13,6 +13,8 @@
 //!   bench7     deterministic replay study (dataflow vs barrier), BENCH_7.json
 //!   bench8     wire-aware placement study (traffic-refined packing under
 //!              regridding + elastic membership + strong scaling), BENCH_8.json
+//!   bench9     flight-recorder causal tracing study (critical path vs total
+//!              work, tracing tax), BENCH_9.json
 //!   info       print runtime/topology/artifact information
 //!
 //! Common options for `run`:
@@ -24,6 +26,8 @@
 //!     adaptive feeds each epoch's observed costs into the next map, wire
 //!     additionally folds observed parcel traffic into the packing
 //!     objective, tuned by --wire-alpha)
+//!   --trace out.json (record the flight recorder and write the run as
+//!     Perfetto-loadable Chrome trace-event JSON; also on `dist`)
 
 // Same style-lint opt-outs as the library crate (see lib.rs): CI runs
 // `cargo clippy -- -D warnings` over both.
@@ -45,6 +49,7 @@ use parallex::cli::Args;
 use parallex::metrics::fmt_dur;
 use parallex::px::net::NetModel;
 use parallex::px::runtime::{PxConfig, PxRuntime, SchedPolicyKind};
+use parallex::px::trace;
 
 fn main() {
     // Quiet the PJRT CPU client's info logging unless the user overrides.
@@ -102,6 +107,7 @@ fn main() {
         "bench6" => cmd_bench_artifact(&args, scale, "BENCH_6.json", bench::write_bench6_json),
         "bench7" => cmd_bench_artifact(&args, scale, "BENCH_7.json", bench::write_bench7_json),
         "bench8" => cmd_bench_artifact(&args, scale, "BENCH_8.json", bench::write_bench8_json),
+        "bench9" => cmd_bench_artifact(&args, scale, "BENCH_9.json", bench::write_bench9_json),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -153,7 +159,7 @@ fn cmd_bench_artifact(
 fn print_help() {
     println!(
         "px-amr — ParalleX execution-model reproduction (Anderson et al. 2011)\n\n\
-         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6|bench7|bench8> [--options]\n\n\
+         usage: px-amr <run|info|fig2|fig3|fig5|fig6|fig7|fig8|fig9|fpga|dist|bench3|bench4|bench5|bench6|bench7|bench8|bench9> [--options]\n\n\
          run options:  --n0 1601 --levels 2 --steps 32 --granularity 16\n\
                        --workers <cores> --backend native|fused|simd|xla\n\
                        --scheduler local|global\n\
@@ -161,7 +167,10 @@ fn print_help() {
                        --localities 1 --placement slabs|weighted|adaptive|wire\n\
                        --wire-alpha 1.0 (wire placement: weight of compute\n\
                        imbalance vs cut bytes in the packing objective)\n\
+                       --trace out.json (flight recorder on; writes the run as\n\
+                       Perfetto-loadable trace JSON + causal summary)\n\
          dist options: --backend native|fused|simd|xla (physics backend)\n\
+                       --trace out.json (flight recorder over the experiment)\n\
                        --placement slabs|weighted|adaptive|wire (default slabs +\n\
                        balancer; wire uses its cold-start map here — the carried\n\
                        traffic feedback loop lives in `run --placement wire`)\n\
@@ -184,6 +193,9 @@ fn print_help() {
          bench8:       wire-aware placement — traffic-refined packing vs adaptive\n\
                        under regridding + elastic membership, plus strong scaling\n\
                        across 1/2/4/8 localities x slabs/adaptive/wire (BENCH_8.json)\n\
+         bench9:       flight-recorder causal tracing — critical path vs total\n\
+                       work over level depth x 1/2/4/8 localities x dataflow/\n\
+                       barrier, with the tracing-tax headline (BENCH_9.json)\n\
                        (bench subcommands also accept --backend)\n\
          env: PX_SCALE=quick|full  PX_BACKEND=native|fused|simd|xla  PX_ARTIFACTS=<dir>"
     );
@@ -197,36 +209,58 @@ fn cmd_dist(args: &Args, scale: bench::Scale) -> Result<(), String> {
     let elastic = args.get("elastic", "");
     let kill = args.get("kill", "");
     let loss_rate: f64 = args.get_parse("loss-rate", 0.0)?;
+    let trace_out = args.get("trace", "");
     let unknown = args.unknown();
     if !unknown.is_empty() {
         return Err(format!("unknown options: {}", unknown.join(", ")));
     }
-    if !kill.is_empty() || loss_rate > 0.0 {
-        // Failure-injection epoch, e.g. `px-amr dist --kill 2@0.35`
-        // (unplanned death of locality 2 at 35% task completion) or
-        // `px-amr dist --loss-rate 0.01` (irrecoverable wire loss).
+    // Flight recorder around the whole experiment: rings outlive the
+    // runtimes the experiment boots internally, so one harvest at the
+    // end covers every locality it ran.
+    let _session = (!trace_out.is_empty()).then(trace::exclusive_session);
+    if !trace_out.is_empty() {
+        trace::reset();
+        trace::enable(trace::DEFAULT_CAPACITY);
+    }
+    let result = (|| -> Result<(), String> {
+        if !kill.is_empty() || loss_rate > 0.0 {
+            // Failure-injection epoch, e.g. `px-amr dist --kill 2@0.35`
+            // (unplanned death of locality 2 at 35% task completion) or
+            // `px-amr dist --loss-rate 0.01` (irrecoverable wire loss).
+            if !elastic.is_empty() {
+                return Err("--kill/--loss-rate and --elastic are separate demos".into());
+            }
+            let report = bench::run_crash_demo(scale, &kill, loss_rate, placement)?;
+            print!("{report}");
+            return Ok(());
+        }
         if !elastic.is_empty() {
-            return Err("--kill/--loss-rate and --elastic are separate demos".into());
+            // Scripted membership-change epoch, e.g.
+            // `px-amr dist --elastic "25:-3,25:-2,60:+2,60:+3"`.
+            let report = bench::run_elastic_demo(scale, &elastic, placement)?;
+            print!("{report}");
+            return Ok(());
         }
-        let report = bench::run_crash_demo(scale, &kill, loss_rate, placement)?;
-        print!("{report}");
-        return Ok(());
-    }
-    if !elastic.is_empty() {
-        // Scripted membership-change epoch, e.g.
-        // `px-amr dist --elastic "25:-3,25:-2,60:+2,60:+3"`.
-        let report = bench::run_elastic_demo(scale, &elastic, placement)?;
-        print!("{report}");
-        return Ok(());
-    }
-    match bench::write_bench2_json(scale, placement) {
-        Ok((path, table)) => {
-            print!("{table}");
-            println!("BENCH_2.json written to {}", path.display());
-            Ok(())
+        match bench::write_bench2_json(scale, placement) {
+            Ok((path, table)) => {
+                print!("{table}");
+                println!("BENCH_2.json written to {}", path.display());
+                Ok(())
+            }
+            Err(e) => Err(format!("dist experiment failed: {e}")),
         }
-        Err(e) => Err(format!("dist experiment failed: {e}")),
+    })();
+    if !trace_out.is_empty() {
+        trace::disable();
+        let rings = trace::harvest();
+        let stats = trace::analyze(&rings);
+        print!("{}", stats.render());
+        trace::write_perfetto(&trace_out, &rings)
+            .map_err(|e| format!("--trace {trace_out}: {e}"))?;
+        println!("trace written to {trace_out} (open in ui.perfetto.dev or chrome://tracing)");
+        trace::reset();
     }
+    result
 }
 
 fn cmd_info() -> Result<(), String> {
@@ -271,6 +305,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         .get_choice("placement", &PlacementPolicy::CLI_NAMES, "weighted")?
         .parse()?;
     let wire_alpha: f64 = args.get_parse("wire-alpha", 1.0)?;
+    let trace_out = args.get("trace", "");
     let unknown = args.unknown();
     if !unknown.is_empty() {
         return Err(format!("unknown options: {}", unknown.join(", ")));
@@ -294,6 +329,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         placement.name()
     );
 
+    // Enable the flight recorder before boot so worker rings capture the
+    // run from the first task.
+    let _session = (!trace_out.is_empty()).then(trace::exclusive_session);
+    if !trace_out.is_empty() {
+        trace::reset();
+        trace::enable(trace::DEFAULT_CAPACITY);
+    }
     let rt = PxRuntime::boot(PxConfig {
         localities,
         workers_per_locality: workers,
@@ -375,6 +417,17 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
     println!("total wallclock {}", fmt_dur(t0.elapsed()));
     println!("counters:\n{}", rt.counters_total().render());
+    if !trace_out.is_empty() {
+        rt.wait_quiescent();
+        trace::disable();
+        let rings = trace::harvest();
+        let stats = trace::analyze(&rings);
+        print!("{}", stats.render());
+        trace::write_perfetto(&trace_out, &rings)
+            .map_err(|e| format!("--trace {trace_out}: {e}"))?;
+        println!("trace written to {trace_out} (open in ui.perfetto.dev or chrome://tracing)");
+        trace::reset();
+    }
     rt.shutdown();
     Ok(())
 }

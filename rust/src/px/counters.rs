@@ -5,6 +5,22 @@
 //! by the runtime. They are cheap enough to leave enabled on the hot path
 //! (one relaxed `fetch_add` per event); the Fig 9 overhead bench measures
 //! their cost as part of thread-management overhead, exactly as HPX does.
+//!
+//! The field list lives in exactly one place: the `for_each_counter!`
+//! registry below. `Counters`, [`CounterSnapshot`], `snapshot`, `absorb`,
+//! `since` and `render` are all generated from it, so a new counter cannot
+//! be forgotten by any of them — the by-hand quadruplication this replaces
+//! once let `counters_total` silently drop two fields. Each entry carries a
+//! *kind* that fixes its aggregation semantics:
+//!
+//! * `event` — monotone event count: `absorb` sums, `since` subtracts.
+//! * `hwm` — high-water mark: `absorb` takes the max; `since` reports the
+//!   **later** snapshot's mark (a mark over a window is not a delta — the
+//!   old `max(self, earlier)` answer was simply wrong when the mark had
+//!   been reached before the window opened), and `render` labels it so.
+//! * `level` — non-monotone level (e.g. `dead_letters`, which a recovery
+//!   replay drains back down): `absorb` sums, `since` saturates at zero
+//!   instead of underflowing, and `render` labels it.
 
 use crate::util::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,322 +53,253 @@ impl Counter {
     }
 }
 
-/// Counter set for one locality's runtime services.
+/// The single registry of every counter: `(name, kind, doc)`.
 ///
-/// Field names follow the paper's taxonomy of SLOW factors: starvation is
-/// visible through `steals`/`parked_waits`, latency through parcel
-/// round-trips, overhead through `threads_spawned` × per-thread cost, and
-/// contention through `queue_contended`.
-#[derive(Default)]
-pub struct Counters {
-    /// PX-threads created (locally spawned + parcel-instantiated).
-    pub threads_spawned: Counter,
-    /// PX-threads that ran to completion.
-    pub threads_completed: Counter,
-    /// PX-threads created in direct response to an incoming parcel.
-    pub threads_from_parcels: Counter,
-    /// Continuations registered on LCOs (suspension events).
-    pub suspensions: Counter,
-    /// Continuations resumed by LCO triggers.
-    pub resumptions: Counter,
-    /// Work-stealing events (local-priority policy only).
-    pub steals: Counter,
-    /// Times a worker found every queue empty and parked.
-    pub parked_waits: Counter,
-    /// Lock acquisitions on a scheduling queue that had to contend.
-    /// On the lock-free schedulers the only lock left is the injector's
-    /// overflow spillover, so this stays ~0 by construction.
-    pub queue_contended: Counter,
-    /// CAS retries on lock-free scheduling queues (a cursor race lost to
-    /// another core). The lock-free analogue of `queue_contended`.
-    pub queue_cas_retries: Counter,
-    /// High-water mark of any scheduling queue length.
-    pub queue_hwm: Counter,
-    /// Parcels sent to a remote locality.
-    pub parcels_sent: Counter,
-    /// Parcels received and decoded.
-    pub parcels_received: Counter,
-    /// Parcels re-sent by the action manager because a stale AGAS cache
-    /// routed them to a locality that no longer hosts the object (the
-    /// migration hop-forwarding path).
-    pub parcels_forwarded: Counter,
-    /// Total serialized parcel bytes sent.
-    pub parcel_bytes: Counter,
-    /// AGAS lookups answered from the local cache.
-    pub agas_cache_hits: Counter,
-    /// AGAS lookups that went to the home table.
-    pub agas_cache_misses: Counter,
-    /// Objects migrated between localities.
-    pub migrations: Counter,
-    /// LCO set/trigger events (future set_value, dataflow input, ...).
-    pub lco_triggers: Counter,
-    /// XLA executable invocations (the PJRT hot path).
-    pub xla_calls: Counter,
-    /// Nanoseconds spent inside `ComputeBackend::step_exact` on this
-    /// locality — the pure kernel cost, excluding assembly/scheduling, so
-    /// a faster backend (DESIGN.md §10) is visible next to `amr_pushes`
-    /// and the CostModel's per-block EWMA.
-    pub kernel_ns_total: Counter,
-    /// AMR dataflow inputs delivered into a task table — same-locality
-    /// `Arc` refcount bumps plus decoded remote arrivals (a remote input
-    /// counts once here, at the receiver, and once in
-    /// `amr_remote_pushes`, at the sender).
-    pub amr_pushes: Counter,
-    /// AMR dataflow inputs whose producer and consumer live on different
-    /// localities: the fragment was serialized into a parcel and crossed
-    /// the wire. Counted at the sender; these are wire transfers, not
-    /// deep copies on the local push path (`payload_deep_copies` stays 0).
-    pub amr_remote_pushes: Counter,
-    /// Deep copies of fragment payloads on the *same-locality* dataflow
-    /// push path. Contract: stays 0 — the zero-copy regression tripwire.
-    /// Any future code that must deep-copy a payload on the local push
-    /// path bumps this. (Remote deliveries serialize by necessity and are
-    /// accounted under `amr_remote_pushes`/`parcel_bytes` instead.)
-    pub payload_deep_copies: Counter,
-    /// Remote AMR pushes that travelled inside a coalesced
-    /// `ACT_AMR_PUSH_BATCH` parcel instead of paying their own wire
-    /// latency (counted at the sender; a subset of `amr_remote_pushes`).
-    /// Zero when ghost batching is disabled.
-    pub amr_batched_pushes: Counter,
-    /// Serialized AMR fragment payload bytes whose producer and consumer
-    /// lived on *different* localities at send time — the cut of the
-    /// block traffic graph under the current placement, payload only
-    /// (parcel/batch envelope headers are excluded; see `parcel_bytes`
-    /// for whole-wire accounting). The metric `PlacementPolicy::Wire`
-    /// exists to shrink (DESIGN.md §12); counted at the sender on both
-    /// the batched and per-fragment push paths.
-    pub amr_cut_bytes: Counter,
-    /// Epoch boundaries at which the adaptive placement policy moved at
-    /// least one block relative to where it ended the previous epoch —
-    /// the coordinator's cost-feedback loop firing (DESIGN.md §7).
-    pub placement_rebalances: Counter,
-    /// AMR block-step tasks whose inputs were completed by an
-    /// `ACT_AMR_PUSH_BATCH` arrival and that were drained straight into
-    /// one `spawn_batch` call — the whole batch publishes a single
-    /// worker wake instead of one per completed task (DESIGN.md §8).
-    pub amr_batch_spawns: Counter,
-    /// Parcels that arrived at a gracefully detached port and were
-    /// redirected to the anchor locality (the hop-forward fallback).
-    /// Folded in from `SimNet::bounced()` by `counters_total`.
-    pub bounced: Counter,
-    /// Parcels whose destination port was gone with no anchor fallback —
-    /// quarantined arrivals held for replay plus true discards. Folded in
-    /// from `SimNet::dead_letters()` by `counters_total`; ends at 0 after
-    /// a successful recovery replay.
-    pub dead_letters: Counter,
-    /// Dead-lettered parcels re-resolved against post-recovery AGAS and
-    /// re-sent by the recovery subsystem (DESIGN.md §9).
-    pub parcels_replayed: Counter,
-    /// AGAS Block residents reconstructed onto survivors from the
-    /// per-epoch checkpoint after an unplanned locality death.
-    pub blocks_recovered: Counter,
-    /// Heartbeat deadlines a member missed before the failure detector
-    /// declared it dead (K consecutive misses trigger recovery).
-    pub heartbeats_missed: Counter,
-}
-
-/// A plain snapshot of all counters, for diffing across a run.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct CounterSnapshot {
-    pub threads_spawned: u64,
-    pub threads_completed: u64,
-    pub threads_from_parcels: u64,
-    pub suspensions: u64,
-    pub resumptions: u64,
-    pub steals: u64,
-    pub parked_waits: u64,
-    pub queue_contended: u64,
-    pub queue_cas_retries: u64,
-    pub queue_hwm: u64,
-    pub parcels_sent: u64,
-    pub parcels_received: u64,
-    pub parcels_forwarded: u64,
-    pub parcel_bytes: u64,
-    pub agas_cache_hits: u64,
-    pub agas_cache_misses: u64,
-    pub migrations: u64,
-    pub lco_triggers: u64,
-    pub xla_calls: u64,
-    pub kernel_ns_total: u64,
-    pub amr_pushes: u64,
-    pub amr_remote_pushes: u64,
-    pub payload_deep_copies: u64,
-    pub amr_batched_pushes: u64,
-    pub amr_cut_bytes: u64,
-    pub placement_rebalances: u64,
-    pub amr_batch_spawns: u64,
-    pub bounced: u64,
-    pub dead_letters: u64,
-    pub parcels_replayed: u64,
-    pub blocks_recovered: u64,
-    pub heartbeats_missed: u64,
-}
-
-impl Counters {
-    /// Capture the current values.
-    pub fn snapshot(&self) -> CounterSnapshot {
-        CounterSnapshot {
-            threads_spawned: self.threads_spawned.get(),
-            threads_completed: self.threads_completed.get(),
-            threads_from_parcels: self.threads_from_parcels.get(),
-            suspensions: self.suspensions.get(),
-            resumptions: self.resumptions.get(),
-            steals: self.steals.get(),
-            parked_waits: self.parked_waits.get(),
-            queue_contended: self.queue_contended.get(),
-            queue_cas_retries: self.queue_cas_retries.get(),
-            queue_hwm: self.queue_hwm.get(),
-            parcels_sent: self.parcels_sent.get(),
-            parcels_received: self.parcels_received.get(),
-            parcels_forwarded: self.parcels_forwarded.get(),
-            parcel_bytes: self.parcel_bytes.get(),
-            agas_cache_hits: self.agas_cache_hits.get(),
-            agas_cache_misses: self.agas_cache_misses.get(),
-            migrations: self.migrations.get(),
-            lco_triggers: self.lco_triggers.get(),
-            xla_calls: self.xla_calls.get(),
-            kernel_ns_total: self.kernel_ns_total.get(),
-            amr_pushes: self.amr_pushes.get(),
-            amr_remote_pushes: self.amr_remote_pushes.get(),
-            payload_deep_copies: self.payload_deep_copies.get(),
-            amr_batched_pushes: self.amr_batched_pushes.get(),
-            amr_cut_bytes: self.amr_cut_bytes.get(),
-            placement_rebalances: self.placement_rebalances.get(),
-            amr_batch_spawns: self.amr_batch_spawns.get(),
-            bounced: self.bounced.get(),
-            dead_letters: self.dead_letters.get(),
-            parcels_replayed: self.parcels_replayed.get(),
-            blocks_recovered: self.blocks_recovered.get(),
-            heartbeats_missed: self.heartbeats_missed.get(),
+/// Invoked with a callback macro that receives the whole list; all four
+/// generated items (struct fields, snapshot, fold, render) expand from
+/// this one list, in this order.
+macro_rules! for_each_counter {
+    ($with:ident) => {
+        $with! {
+            (threads_spawned, event,
+             "PX-threads created (locally spawned + parcel-instantiated)."),
+            (threads_completed, event,
+             "PX-threads that ran to completion."),
+            (threads_from_parcels, event,
+             "PX-threads created in direct response to an incoming parcel."),
+            (suspensions, event,
+             "Continuations registered on LCOs (suspension events)."),
+            (resumptions, event,
+             "Continuations resumed by LCO triggers."),
+            (steals, event,
+             "Work-stealing events (local-priority policy only)."),
+            (parked_waits, event,
+             "Times a worker found every queue empty and parked."),
+            (queue_contended, event,
+             "Lock acquisitions on a scheduling queue that had to contend. \
+              On the lock-free schedulers the only lock left is the \
+              injector's overflow spillover, so this stays ~0 by \
+              construction."),
+            (queue_cas_retries, event,
+             "CAS retries on lock-free scheduling queues (a cursor race \
+              lost to another core). The lock-free analogue of \
+              `queue_contended`."),
+            (queue_hwm, hwm,
+             "High-water mark of any scheduling queue length."),
+            (parcels_sent, event,
+             "Parcels sent to a remote locality."),
+            (parcels_received, event,
+             "Parcels received and decoded."),
+            (parcels_forwarded, event,
+             "Parcels re-sent by the action manager because a stale AGAS \
+              cache routed them to a locality that no longer hosts the \
+              object (the migration hop-forwarding path)."),
+            (parcel_bytes, event,
+             "Total serialized parcel bytes sent."),
+            (agas_cache_hits, event,
+             "AGAS lookups answered from the local cache."),
+            (agas_cache_misses, event,
+             "AGAS lookups that went to the home table."),
+            (migrations, event,
+             "Objects migrated between localities."),
+            (lco_triggers, event,
+             "LCO set/trigger events (future set_value, dataflow input, ...)."),
+            (xla_calls, event,
+             "XLA executable invocations (the PJRT hot path)."),
+            (kernel_ns_total, event,
+             "Nanoseconds spent inside `ComputeBackend::step_exact` on this \
+              locality — the pure kernel cost, excluding assembly/\
+              scheduling, so a faster backend (DESIGN.md §10) is visible \
+              next to `amr_pushes` and the CostModel's per-block EWMA."),
+            (amr_pushes, event,
+             "AMR dataflow inputs delivered into a task table — \
+              same-locality `Arc` refcount bumps plus decoded remote \
+              arrivals (a remote input counts once here, at the receiver, \
+              and once in `amr_remote_pushes`, at the sender)."),
+            (amr_remote_pushes, event,
+             "AMR dataflow inputs whose producer and consumer live on \
+              different localities: the fragment was serialized into a \
+              parcel and crossed the wire. Counted at the sender; these \
+              are wire transfers, not deep copies on the local push path \
+              (`payload_deep_copies` stays 0)."),
+            (payload_deep_copies, event,
+             "Deep copies of fragment payloads on the *same-locality* \
+              dataflow push path. Contract: stays 0 — the zero-copy \
+              regression tripwire. Any future code that must deep-copy a \
+              payload on the local push path bumps this. (Remote \
+              deliveries serialize by necessity and are accounted under \
+              `amr_remote_pushes`/`parcel_bytes` instead.)"),
+            (amr_batched_pushes, event,
+             "Remote AMR pushes that travelled inside a coalesced \
+              `ACT_AMR_PUSH_BATCH` parcel instead of paying their own wire \
+              latency (counted at the sender; a subset of \
+              `amr_remote_pushes`). Zero when ghost batching is disabled."),
+            (amr_cut_bytes, event,
+             "Serialized AMR fragment payload bytes whose producer and \
+              consumer lived on *different* localities at send time — the \
+              cut of the block traffic graph under the current placement, \
+              payload only (parcel/batch envelope headers are excluded; \
+              see `parcel_bytes` for whole-wire accounting). The metric \
+              `PlacementPolicy::Wire` exists to shrink (DESIGN.md §12); \
+              counted at the sender on both the batched and per-fragment \
+              push paths."),
+            (placement_rebalances, event,
+             "Epoch boundaries at which the adaptive placement policy \
+              moved at least one block relative to where it ended the \
+              previous epoch — the coordinator's cost-feedback loop firing \
+              (DESIGN.md §7)."),
+            (amr_batch_spawns, event,
+             "AMR block-step tasks whose inputs were completed by an \
+              `ACT_AMR_PUSH_BATCH` arrival and that were drained straight \
+              into one `spawn_batch` call — the whole batch publishes a \
+              single worker wake instead of one per completed task \
+              (DESIGN.md §8)."),
+            (bounced, event,
+             "Parcels that arrived at a gracefully detached port and were \
+              redirected to the anchor locality (the hop-forward \
+              fallback). Folded in from `SimNet::bounced()` by \
+              `counters_total`."),
+            (dead_letters, level,
+             "Parcels whose destination port was gone with no anchor \
+              fallback — quarantined arrivals held for replay plus true \
+              discards. Folded in from `SimNet::dead_letters()` by \
+              `counters_total`; ends at 0 after a successful recovery \
+              replay, so this is a *level*, not a monotone count — a \
+              later snapshot can legitimately be smaller than an earlier \
+              one, and `since` saturates at zero instead of underflowing."),
+            (parcels_replayed, event,
+             "Dead-lettered parcels re-resolved against post-recovery AGAS \
+              and re-sent by the recovery subsystem (DESIGN.md §9)."),
+            (blocks_recovered, event,
+             "AGAS Block residents reconstructed onto survivors from the \
+              per-epoch checkpoint after an unplanned locality death."),
+            (heartbeats_missed, event,
+             "Heartbeat deadlines a member missed before the failure \
+              detector declared it dead (K consecutive misses trigger \
+              recovery)."),
         }
-    }
+    };
 }
 
-impl CounterSnapshot {
-    /// Fold another locality's snapshot into this one (runtime-wide
-    /// totals): every event counter sums, high-water marks take the max.
-    /// Lives next to the field list so a new counter cannot be forgotten
-    /// by the aggregation the way a by-hand sum in `runtime.rs` once
-    /// dropped `amr_batched_pushes`/`placement_rebalances`.
-    pub fn absorb(&mut self, s: &CounterSnapshot) {
-        self.threads_spawned += s.threads_spawned;
-        self.threads_completed += s.threads_completed;
-        self.threads_from_parcels += s.threads_from_parcels;
-        self.suspensions += s.suspensions;
-        self.resumptions += s.resumptions;
-        self.steals += s.steals;
-        self.parked_waits += s.parked_waits;
-        self.queue_contended += s.queue_contended;
-        self.queue_cas_retries += s.queue_cas_retries;
-        self.queue_hwm = self.queue_hwm.max(s.queue_hwm);
-        self.parcels_sent += s.parcels_sent;
-        self.parcels_received += s.parcels_received;
-        self.parcels_forwarded += s.parcels_forwarded;
-        self.parcel_bytes += s.parcel_bytes;
-        self.agas_cache_hits += s.agas_cache_hits;
-        self.agas_cache_misses += s.agas_cache_misses;
-        self.migrations += s.migrations;
-        self.lco_triggers += s.lco_triggers;
-        self.xla_calls += s.xla_calls;
-        self.kernel_ns_total += s.kernel_ns_total;
-        self.amr_pushes += s.amr_pushes;
-        self.amr_remote_pushes += s.amr_remote_pushes;
-        self.payload_deep_copies += s.payload_deep_copies;
-        self.amr_batched_pushes += s.amr_batched_pushes;
-        self.amr_cut_bytes += s.amr_cut_bytes;
-        self.placement_rebalances += s.placement_rebalances;
-        self.amr_batch_spawns += s.amr_batch_spawns;
-        self.bounced += s.bounced;
-        self.dead_letters += s.dead_letters;
-        self.parcels_replayed += s.parcels_replayed;
-        self.blocks_recovered += s.blocks_recovered;
-        self.heartbeats_missed += s.heartbeats_missed;
-    }
-
-    /// Event deltas between two snapshots (self - earlier).
-    pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
-        CounterSnapshot {
-            threads_spawned: self.threads_spawned - earlier.threads_spawned,
-            threads_completed: self.threads_completed - earlier.threads_completed,
-            threads_from_parcels: self.threads_from_parcels - earlier.threads_from_parcels,
-            suspensions: self.suspensions - earlier.suspensions,
-            resumptions: self.resumptions - earlier.resumptions,
-            steals: self.steals - earlier.steals,
-            parked_waits: self.parked_waits - earlier.parked_waits,
-            queue_contended: self.queue_contended - earlier.queue_contended,
-            queue_cas_retries: self.queue_cas_retries - earlier.queue_cas_retries,
-            queue_hwm: self.queue_hwm.max(earlier.queue_hwm),
-            parcels_sent: self.parcels_sent - earlier.parcels_sent,
-            parcels_received: self.parcels_received - earlier.parcels_received,
-            parcels_forwarded: self.parcels_forwarded - earlier.parcels_forwarded,
-            parcel_bytes: self.parcel_bytes - earlier.parcel_bytes,
-            agas_cache_hits: self.agas_cache_hits - earlier.agas_cache_hits,
-            agas_cache_misses: self.agas_cache_misses - earlier.agas_cache_misses,
-            migrations: self.migrations - earlier.migrations,
-            lco_triggers: self.lco_triggers - earlier.lco_triggers,
-            xla_calls: self.xla_calls - earlier.xla_calls,
-            kernel_ns_total: self.kernel_ns_total - earlier.kernel_ns_total,
-            amr_pushes: self.amr_pushes - earlier.amr_pushes,
-            amr_remote_pushes: self.amr_remote_pushes - earlier.amr_remote_pushes,
-            payload_deep_copies: self.payload_deep_copies - earlier.payload_deep_copies,
-            amr_batched_pushes: self.amr_batched_pushes - earlier.amr_batched_pushes,
-            amr_cut_bytes: self.amr_cut_bytes - earlier.amr_cut_bytes,
-            placement_rebalances: self.placement_rebalances - earlier.placement_rebalances,
-            amr_batch_spawns: self.amr_batch_spawns - earlier.amr_batch_spawns,
-            bounced: self.bounced - earlier.bounced,
-            // Non-monotone by design: a recovery replay drains captured
-            // dead letters back out of the tally, so a later snapshot can
-            // be smaller than an earlier one.
-            dead_letters: self.dead_letters.saturating_sub(earlier.dead_letters),
-            parcels_replayed: self.parcels_replayed - earlier.parcels_replayed,
-            blocks_recovered: self.blocks_recovered - earlier.blocks_recovered,
-            heartbeats_missed: self.heartbeats_missed - earlier.heartbeats_missed,
-        }
-    }
-
-    /// Render as aligned `name value` lines for logs and reports.
-    pub fn render(&self) -> String {
-        let rows = [
-            ("threads_spawned", self.threads_spawned),
-            ("threads_completed", self.threads_completed),
-            ("threads_from_parcels", self.threads_from_parcels),
-            ("suspensions", self.suspensions),
-            ("resumptions", self.resumptions),
-            ("steals", self.steals),
-            ("parked_waits", self.parked_waits),
-            ("queue_contended", self.queue_contended),
-            ("queue_cas_retries", self.queue_cas_retries),
-            ("queue_hwm", self.queue_hwm),
-            ("parcels_sent", self.parcels_sent),
-            ("parcels_received", self.parcels_received),
-            ("parcels_forwarded", self.parcels_forwarded),
-            ("parcel_bytes", self.parcel_bytes),
-            ("agas_cache_hits", self.agas_cache_hits),
-            ("agas_cache_misses", self.agas_cache_misses),
-            ("migrations", self.migrations),
-            ("lco_triggers", self.lco_triggers),
-            ("xla_calls", self.xla_calls),
-            ("kernel_ns_total", self.kernel_ns_total),
-            ("amr_pushes", self.amr_pushes),
-            ("amr_remote_pushes", self.amr_remote_pushes),
-            ("payload_deep_copies", self.payload_deep_copies),
-            ("amr_batched_pushes", self.amr_batched_pushes),
-            ("amr_cut_bytes", self.amr_cut_bytes),
-            ("placement_rebalances", self.placement_rebalances),
-            ("amr_batch_spawns", self.amr_batch_spawns),
-            ("bounced", self.bounced),
-            ("dead_letters", self.dead_letters),
-            ("parcels_replayed", self.parcels_replayed),
-            ("blocks_recovered", self.blocks_recovered),
-            ("heartbeats_missed", self.heartbeats_missed),
-        ];
-        let mut out = String::new();
-        for (k, v) in rows {
-            out.push_str(&format!("{k:<22} {v}\n"));
-        }
-        out
-    }
+/// `absorb` semantics per counter kind (runtime-wide totals).
+macro_rules! absorb_field {
+    (event, $mine:expr, $theirs:expr) => {
+        $mine += $theirs
+    };
+    (hwm, $mine:expr, $theirs:expr) => {
+        $mine = $mine.max($theirs)
+    };
+    (level, $mine:expr, $theirs:expr) => {
+        $mine += $theirs
+    };
 }
+
+/// `since` semantics per counter kind (windowed deltas).
+macro_rules! since_field {
+    (event, $later:expr, $earlier:expr) => {
+        $later - $earlier
+    };
+    // A high-water mark over a window is the later snapshot's mark, not a
+    // difference of marks (and not `max` of the two — the mark may predate
+    // the window entirely; the reader just wants "how high did it get").
+    (hwm, $later:expr, $earlier:expr) => {
+        $later
+    };
+    // Non-monotone level: a recovery replay drains the tally back down, so
+    // the windowed view saturates at zero instead of underflowing.
+    (level, $later:expr, $earlier:expr) => {
+        $later.saturating_sub($earlier)
+    };
+}
+
+/// Suffix `render` appends so a reader of the delta dump knows which rows
+/// are not plain event deltas.
+macro_rules! render_note {
+    (event) => {
+        ""
+    };
+    (hwm) => {
+        "  [high-water mark of the window's later snapshot, not a delta]"
+    };
+    (level) => {
+        "  [level, non-monotone: recovery replay drains it]"
+    };
+}
+
+macro_rules! define_counters {
+    ($( ($name:ident, $kind:ident, $doc:expr) ),+ $(,)?) => {
+        /// Counter set for one locality's runtime services.
+        ///
+        /// Field names follow the paper's taxonomy of SLOW factors:
+        /// starvation is visible through `steals`/`parked_waits`, latency
+        /// through parcel round-trips, overhead through `threads_spawned`
+        /// × per-thread cost, and contention through `queue_contended`.
+        #[derive(Default)]
+        pub struct Counters {
+            $( #[doc = $doc] pub $name: Counter, )+
+        }
+
+        /// A plain snapshot of all counters, for diffing across a run.
+        #[derive(Debug, Clone, Default, PartialEq, Eq)]
+        pub struct CounterSnapshot {
+            $( #[doc = $doc] pub $name: u64, )+
+        }
+
+        impl Counters {
+            /// Capture the current values.
+            pub fn snapshot(&self) -> CounterSnapshot {
+                CounterSnapshot {
+                    $( $name: self.$name.get(), )+
+                }
+            }
+        }
+
+        impl CounterSnapshot {
+            /// Number of counters in the registry — `render()` emits
+            /// exactly this many rows, and the test below pins it.
+            pub const FIELD_COUNT: usize = [$(stringify!($name)),+].len();
+
+            /// Fold another locality's snapshot into this one
+            /// (runtime-wide totals): every event counter sums,
+            /// high-water marks take the max. Generated from the same
+            /// registry as the field list so a new counter cannot be
+            /// forgotten by the aggregation the way a by-hand sum in
+            /// `runtime.rs` once dropped
+            /// `amr_batched_pushes`/`placement_rebalances`.
+            pub fn absorb(&mut self, s: &CounterSnapshot) {
+                $( absorb_field!($kind, self.$name, s.$name); )+
+            }
+
+            /// Event deltas between two snapshots (self - earlier).
+            /// High-water marks report the later snapshot's mark; levels
+            /// saturate at zero (see the module docs).
+            pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+                CounterSnapshot {
+                    $( $name: since_field!($kind, self.$name, earlier.$name), )+
+                }
+            }
+
+            /// Render as aligned `name value` lines for logs and reports.
+            /// Rows whose semantics differ from a plain event delta
+            /// (high-water marks, non-monotone levels) carry a bracketed
+            /// note.
+            pub fn render(&self) -> String {
+                let mut out = String::new();
+                $(
+                    out.push_str(&format!(
+                        "{:<22} {}{}\n",
+                        stringify!($name),
+                        self.$name,
+                        render_note!($kind)
+                    ));
+                )+
+                out
+            }
+        }
+    };
+}
+
+for_each_counter!(define_counters);
 
 #[cfg(test)]
 mod tests {
@@ -418,6 +365,46 @@ mod tests {
         assert!(s.contains("blocks_recovered") && s.contains("heartbeats_missed"));
         assert!(s.contains("bounced"));
         assert!(s.contains("kernel_ns_total"));
+    }
+
+    /// The registry is the single source of truth: `render()` must emit
+    /// one row per field, no more, no fewer. This is the regression guard
+    /// for the drift that once let `counters_total` drop two fields.
+    #[test]
+    fn render_row_count_matches_field_count() {
+        let s = Counters::default().snapshot().render();
+        assert_eq!(s.lines().count(), CounterSnapshot::FIELD_COUNT);
+        // Sanity: the registry currently holds all 32 counters.
+        assert_eq!(CounterSnapshot::FIELD_COUNT, 32);
+    }
+
+    /// A high-water mark over a window reports the *later* snapshot's
+    /// mark — not `max(later, earlier)` (the pre-registry bug: if the
+    /// mark was reached before the window opened, the old answer claimed
+    /// the window hit it too).
+    #[test]
+    fn since_reports_later_hwm_mark() {
+        let cs = Counters::default();
+        cs.queue_hwm.max(50);
+        let a = cs.snapshot();
+        let b = cs.snapshot();
+        // No queue activity inside the window: the window's mark is the
+        // later snapshot's mark (still 50 — the counter is process-wide),
+        // and critically NOT inflated above it.
+        assert_eq!(b.since(&a).queue_hwm, b.queue_hwm);
+        assert_eq!(b.since(&a).queue_hwm, 50);
+        // The rendered dump labels the row as a mark, not a delta.
+        assert!(b.since(&a).render().contains("high-water mark"));
+    }
+
+    /// `dead_letters` is a level, not a monotone count: a recovery replay
+    /// drains it, so a later snapshot can be smaller and `since` must
+    /// saturate rather than underflow.
+    #[test]
+    fn since_saturates_nonmonotone_dead_letters() {
+        let a = CounterSnapshot { dead_letters: 7, ..Default::default() };
+        let b = CounterSnapshot { dead_letters: 2, ..Default::default() };
+        assert_eq!(b.since(&a).dead_letters, 0);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Mergeable log-bucketed latency histograms (HDR-style), dependency-free.
+//!
+//! The flat counters in [`crate::px::counters`] answer *how many*; the
+//! comparative AMT literature (1904.00518) shows that what separates
+//! runtimes is the *distribution* of per-task timings — medians hide the
+//! tail that starvation and contention live in. This module provides the
+//! distribution half: a fixed-size log-linear histogram in the spirit of
+//! HdrHistogram, with
+//!
+//! * values `0..16` recorded exactly (one bucket per value);
+//! * every power-of-two decade above that split into 16 sub-buckets, so
+//!   any recorded value lands in a bucket whose lower bound is within
+//!   ~6.25 % (1/16) of it — good enough for p50/p90/p99/p999 over
+//!   nanosecond latencies spanning ns..hours;
+//! * O(1) `record`, O(buckets) `merge`/`quantile`, no allocation after
+//!   construction, no locks — the trace harvester populates one
+//!   histogram per metric single-threaded, then merges across rings.
+//!
+//! Histograms are *not* written on the hot path: `px::trace` records raw
+//! timestamps into per-worker rings and the post-run harvest folds the
+//! deltas in here. That keeps the enabled-tracing cost at one relaxed
+//! store per event and makes the histogram code free to be simple.
+
+/// Linear buckets cover `0..SUB` exactly.
+const SUB_BITS: u32 = 4;
+/// Sub-buckets per power-of-two decade (16).
+const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: 16 exact + 16 per decade for decades 4..=63.
+const NBUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Map a value to its bucket index.
+#[inline]
+fn bucket(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        // Highest set bit z is in 4..=63; keep the next 4 bits below it
+        // as the sub-bucket.
+        let z = 63 - v.leading_zeros();
+        let sub = ((v >> (z - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        SUB + ((z - SUB_BITS) as usize) * SUB + sub
+    }
+}
+
+/// Lower bound of a bucket (its representative value for quantiles).
+#[inline]
+fn bucket_low(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        let idx = i - SUB;
+        let z = (idx / SUB) as u32 + SUB_BITS;
+        let sub = (idx % SUB) as u64;
+        (1u64 << z) + (sub << (z - SUB_BITS))
+    }
+}
+
+/// A mergeable log-linear histogram of `u64` samples (typically
+/// nanoseconds). See the module docs for the bucketing scheme.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: [u64; NBUCKETS],
+    count: u64,
+    total: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram { counts: [0; NBUCKETS], count: 0, total: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one sample. O(1), no allocation.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket(v)] += 1;
+        self.count += 1;
+        self.total = self.total.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one. Bucket boundaries are fixed
+    /// at compile time, so merging is exact: the merge of two histograms
+    /// equals the histogram of the concatenated sample streams.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.total = self.total.saturating_add(other.total);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True if nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded sample (0 if empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 if empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded samples (0 if empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total / self.count
+        }
+    }
+
+    /// The q-quantile (`0.0 ..= 1.0`) as the representative value of the
+    /// bucket holding the q·count-th ranked sample, clamped into
+    /// `[min, max]` so single-sample and narrow distributions report
+    /// exact values. Relative error is bounded by the 1/16 sub-bucket
+    /// width. Returns 0 if empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_low(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 90th percentile.
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th percentile — the tail the SLOW factors live in.
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// One aligned summary line for the run dump, next to
+    /// `CounterSnapshot::render` rows. Values are raw units (ns for the
+    /// runtime's latency metrics).
+    pub fn render(&self, name: &str) -> String {
+        if self.count == 0 {
+            return format!("{name:<22} n=0\n");
+        }
+        format!(
+            "{name:<22} n={} mean={} p50={} p90={} p99={} p999={} max={}\n",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            self.p999(),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+        // Each value has its own bucket, so quantiles are exact.
+        assert_eq!(h.quantile(1.0), 15);
+    }
+
+    #[test]
+    fn single_sample_reports_exactly() {
+        let mut h = Histogram::new();
+        h.record(123_456_789);
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile(q), 123_456_789, "q={q}");
+        }
+        assert_eq!(h.mean(), 123_456_789);
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50() as f64;
+        let p99 = h.p99() as f64;
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 0.07, "p50={p50}");
+        assert!((p99 - 99_000.0).abs() / 99_000.0 < 0.07, "p99={p99}");
+        assert_eq!(h.max(), 100_000);
+        assert_eq!(h.min(), 1);
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in [3u64, 17, 900, 1_000_000, 5, 64, 4096] {
+            if v % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.min(), c.min());
+        assert_eq!(a.max(), c.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), c.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_is_all_zeros() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0);
+        assert!(h.render("task_run_ns").contains("n=0"));
+    }
+
+    #[test]
+    fn bucket_low_is_inverse_floor_of_bucket() {
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 1000, 65_535, 1 << 40, u64::MAX] {
+            let i = bucket(v);
+            let low = bucket_low(i);
+            assert!(low <= v, "low({i})={low} > v={v}");
+            // The next bucket's low bound is above v.
+            if i + 1 < NBUCKETS {
+                assert!(bucket_low(i + 1) > v, "v={v} not below next bucket");
+            }
+        }
+    }
+}

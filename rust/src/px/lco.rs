@@ -104,6 +104,7 @@ impl<T: Clone + Send + 'static> Future<T> {
         if let Some(c) = &self.inner.counters {
             c.lco_triggers.inc();
         }
+        super::trace::lco_trigger();
         let conts = {
             let mut g = self.inner.state.lock().unwrap();
             match std::mem::replace(&mut *g, FutureState::Ready(r.clone())) {
@@ -276,6 +277,7 @@ impl<T: Clone + Send + 'static> Dataflow<T> {
         if let Some(c) = &self.inner.counters {
             c.lco_triggers.inc();
         }
+        super::trace::lco_trigger();
         let ready = {
             let mut g = self.inner.slots.lock().unwrap();
             assert!(i < g.inputs.len(), "dataflow input {i} out of range");

@@ -21,6 +21,7 @@ use super::net::SimNet;
 use super::parcel::{ActionId, Parcel};
 use super::sched::Priority;
 use super::thread::Spawner;
+use super::trace::{self, TraceCtx};
 use super::wire::{Dec, Enc};
 
 /// Maximum AGAS-stale forwarding hops before a parcel is failed.
@@ -134,21 +135,35 @@ impl LocalityCtx {
         let placement = self.agas.resolve(dest)?;
         if placement.locality == self.id {
             let body = self.actions.get(action)?;
-            let parcel = Parcel { dest, action, args, continuation, source: self.id, hops: 0 };
+            let parcel =
+                Parcel { dest, action, args, continuation, source: self.id, hops: 0, trace: None };
             let ctx = self.clone();
             self.spawner.spawn(move |_| body(&ctx, parcel));
             Ok(())
         } else {
-            let parcel = Parcel { dest, action, args, continuation, source: self.id, hops: 0 };
+            let mut parcel =
+                Parcel { dest, action, args, continuation, source: self.id, hops: 0, trace: None };
+            // Causality crosses the wire: a fresh trace id, caused by
+            // whatever task is running on this thread right now.
+            if trace::enabled() {
+                parcel.trace = Some(TraceCtx {
+                    trace_id: trace::fresh_id(),
+                    parent_span: trace::current_span(),
+                });
+            }
             self.send_parcel(placement.locality, &parcel)
         }
     }
 
-    /// Send an encoded parcel toward `to` over the fabric.
+    /// Send an encoded parcel toward `to` over the fabric. The single
+    /// wire egress: every traced parcel records its send event here.
     fn send_parcel(&self, to: LocalityId, parcel: &Parcel) -> PxResult<()> {
         let n = self.net.send(to, parcel)?;
         self.counters.parcels_sent.inc();
         self.counters.parcel_bytes.add(n as u64);
+        if let Some(ctx) = parcel.trace {
+            trace::parcel_send(ctx, to);
+        }
         Ok(())
     }
 
@@ -158,7 +173,12 @@ impl LocalityCtx {
     pub fn on_parcel_bytes(self: &Arc<Self>, bytes: Vec<u8>) {
         self.counters.parcels_received.inc();
         match Parcel::decode(&bytes) {
-            Ok(p) => self.dispatch_parcel(p),
+            Ok(p) => {
+                if let Some(ctx) = p.trace {
+                    trace::parcel_recv(ctx, p.source);
+                }
+                self.dispatch_parcel(p)
+            }
             Err(e) => {
                 // Corrupt parcel: account and drop (a real transport would
                 // nack; the wire here is reliable so this only fires in
@@ -181,6 +201,15 @@ impl LocalityCtx {
                 }
                 let mut fwd = p;
                 fwd.hops += 1;
+                // Re-send under a *fresh* trace id chained to the old one:
+                // the old id's journey ended at this hop's receive event,
+                // so every id keeps exactly one send and one receive even
+                // across migration forwarding.
+                if let Some(ctx) = fwd.trace {
+                    let new_id = trace::fresh_id();
+                    trace::parcel_forward(ctx.trace_id, new_id);
+                    fwd.trace = Some(TraceCtx { trace_id: new_id, parent_span: ctx.trace_id });
+                }
                 self.counters.parcels_forwarded.inc();
                 let _ = self.send_parcel(pl.locality, &fwd);
                 return;
@@ -207,7 +236,16 @@ impl LocalityCtx {
         // Parcel-instantiated threads run at High priority: the message
         // already crossed the wire; finishing its work promptly shortens
         // the split-phase round trip.
-        self.spawner.spawn_prio(Priority::High, move |_| body(&ctx, p));
+        //
+        // The parcel's trace id becomes the spawn parent, linking the
+        // handler task to the sender's span across the wire.
+        if let Some(t) = p.trace {
+            let prev = trace::swap_current_span(t.trace_id);
+            self.spawner.spawn_prio(Priority::High, move |_| body(&ctx, p));
+            trace::swap_current_span(prev);
+        } else {
+            self.spawner.spawn_prio(Priority::High, move |_| body(&ctx, p));
+        }
     }
 
     // --------------------------------------------- remote future helpers

@@ -10,6 +10,9 @@
 //! * [`lco`] — Local Control Objects (future, dataflow, mutex, semaphore,
 //!   full-empty bit, and-gate, global barrier)
 //! * [`counters`] — the performance-counter monitoring framework
+//! * [`trace`] / [`hist`] — the flight-recorder causal tracing layer and
+//!   its latency histograms (counts say *how many*; these say *when*,
+//!   *how long*, and *because of what*)
 //! * [`recovery`] — heartbeat failure detection for unplanned locality
 //!   death (the crash-tolerance layer over elastic membership)
 //! * [`locality`] / [`runtime`] — composition into localities and the
@@ -20,6 +23,7 @@ pub mod agas;
 pub mod counters;
 pub mod error;
 pub mod gid;
+pub mod hist;
 pub mod lco;
 pub mod lockfree;
 pub mod locality;
@@ -29,6 +33,7 @@ pub mod recovery;
 pub mod runtime;
 pub mod sched;
 pub mod thread;
+pub mod trace;
 pub mod wire;
 
 pub use action::{ActionRegistry, RESERVED_ACTION_BASE};
@@ -36,6 +41,7 @@ pub use agas::{Agas, AgasClient, Placement};
 pub use counters::{Counter, CounterSnapshot, Counters};
 pub use error::{PxError, PxResult};
 pub use gid::{Gid, GidAllocator, GidKind, LocalityId};
+pub use hist::Histogram;
 pub use lco::{AndGate, CountingSemaphore, Dataflow, FullEmptyBit, Future, GlobalBarrier, PxMutex};
 pub use locality::LocalityCtx;
 pub use net::{NetModel, SimNet};
@@ -46,3 +52,4 @@ pub use sched::{GlobalQueue, LocalPriority, MutexQueue, Policy, Priority, Task};
 pub use thread::{
     global_queue_manager, local_priority_manager, mutex_queue_manager, Spawner, ThreadManager,
 };
+pub use trace::{CausalSummary, OwnedEvent, OwnedRing, TraceCtx, TraceStats};

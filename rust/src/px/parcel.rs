@@ -19,6 +19,7 @@
 
 use super::error::PxResult;
 use super::gid::{Gid, LocalityId};
+use super::trace::TraceCtx;
 use super::wire::{Dec, Enc};
 
 /// Numeric id of a registered action (see [`crate::px::action`]).
@@ -41,12 +42,18 @@ pub struct Parcel {
     /// Forwarding-hop count: bumped each time a stale AGAS cache routes a
     /// parcel to a locality that no longer hosts `dest`.
     pub hops: u8,
+    /// Optional flight-recorder context: who caused this parcel, so the
+    /// receive event links back to the sending task's span across the
+    /// wire (DESIGN.md §13). `None` encodes byte-identically to the
+    /// pre-tracing envelope, so old and new decoders interoperate when
+    /// tracing is off.
+    pub trace: Option<TraceCtx>,
 }
 
 impl Parcel {
     /// A parcel with no continuation.
     pub fn new(dest: Gid, action: ActionId, args: Vec<u8>, source: LocalityId) -> Parcel {
-        Parcel { dest, action, args, continuation: Gid::NULL, source, hops: 0 }
+        Parcel { dest, action, args, continuation: Gid::NULL, source, hops: 0, trace: None }
     }
 
     /// Attach a continuation GID (builder style).
@@ -55,12 +62,20 @@ impl Parcel {
         self
     }
 
-    /// Serialized size in bytes (wire framing included).
-    pub fn wire_size(&self) -> usize {
-        16 + 4 + 4 + self.args.len() + 16 + 4 + 1
+    /// Attach flight-recorder trace context (builder style).
+    pub fn with_trace(mut self, ctx: TraceCtx) -> Parcel {
+        self.trace = Some(ctx);
+        self
     }
 
-    /// Encode to the wire format.
+    /// Serialized size in bytes (wire framing included).
+    pub fn wire_size(&self) -> usize {
+        16 + 4 + 4 + self.args.len() + 16 + 4 + 1 + if self.trace.is_some() { 16 } else { 0 }
+    }
+
+    /// Encode to the wire format. The trace context, when present, is a
+    /// fixed 16-byte tail after the legacy envelope; when absent nothing
+    /// is appended, keeping the bytes identical to the old format.
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::with_capacity(self.wire_size());
         e.gid(self.dest)
@@ -69,10 +84,16 @@ impl Parcel {
             .gid(self.continuation)
             .u32(self.source)
             .u8(self.hops);
+        if let Some(t) = self.trace {
+            e.u64(t.trace_id).u64(t.parent_span);
+        }
         e.finish()
     }
 
     /// Decode from the wire format (strict: trailing bytes are an error).
+    /// An envelope ending at the legacy fields decodes with
+    /// `trace: None`; a partial trace tail is a truncation error, and
+    /// anything longer than the 16-byte tail is trailing garbage.
     pub fn decode(buf: &[u8]) -> PxResult<Parcel> {
         let mut d = Dec::new(buf);
         let dest = d.gid()?;
@@ -81,8 +102,13 @@ impl Parcel {
         let continuation = d.gid()?;
         let source = d.u32()?;
         let hops = d.u8()?;
+        let trace = if d.remaining() == 0 {
+            None
+        } else {
+            Some(TraceCtx { trace_id: d.u64()?, parent_span: d.u64()? })
+        };
         d.expect_end()?;
-        Ok(Parcel { dest, action, args, continuation, source, hops })
+        Ok(Parcel { dest, action, args, continuation, source, hops, trace })
     }
 }
 
@@ -143,10 +169,72 @@ mod tests {
                 },
                 source: rng.next_u32(),
                 hops: rng.below(4) as u8,
+                trace: if rng.chance(0.5) {
+                    None
+                } else {
+                    Some(TraceCtx { trace_id: rng.next_u64(), parent_span: rng.next_u64() })
+                },
             };
             let buf = p.encode();
             assert_eq!(buf.len(), p.wire_size());
             assert_eq!(Parcel::decode(&buf).unwrap(), p);
         });
+    }
+
+    /// Old → new compatibility: a buffer in the pre-tracing layout (what
+    /// an old encoder would produce) decodes with `trace: None`.
+    #[test]
+    fn legacy_envelope_without_trace_decodes_as_none() {
+        let p = Parcel::new(Gid::new(1, GidKind::Block, 7), 42, vec![1, 2, 3], 0)
+            .with_continuation(Gid::new(0, GidKind::Future, 9));
+        // Hand-build the legacy layout field by field (no trace tail).
+        let mut e = crate::px::wire::Enc::new();
+        e.gid(p.dest).u32(p.action).bytes(&p.args).gid(p.continuation).u32(p.source).u8(p.hops);
+        let legacy = e.finish();
+        let decoded = Parcel::decode(&legacy).unwrap();
+        assert_eq!(decoded.trace, None);
+        assert_eq!(decoded, p);
+    }
+
+    /// New → old compatibility: with tracing off (`trace: None`) the new
+    /// encoder's bytes are identical to the legacy layout, so an old
+    /// decoder (strict about trailing bytes) still accepts them.
+    #[test]
+    fn untraced_encoding_is_byte_identical_to_legacy() {
+        let p = Parcel::new(Gid::new(3, GidKind::Block, 11), 5, vec![9; 32], 2);
+        let mut e = crate::px::wire::Enc::new();
+        e.gid(p.dest).u32(p.action).bytes(&p.args).gid(p.continuation).u32(p.source).u8(p.hops);
+        assert_eq!(p.encode(), e.finish());
+    }
+
+    /// A truncated trace tail is a clean decode error, never a silent
+    /// `None` or a misparse — at every cut point inside the 16-byte tail.
+    #[test]
+    fn truncated_trace_context_is_a_clean_error() {
+        let p = Parcel::new(Gid::new(1, GidKind::Block, 7), 1, vec![4, 5], 0)
+            .with_trace(TraceCtx { trace_id: 0xDEAD_BEEF, parent_span: 77 });
+        let buf = p.encode();
+        assert_eq!(buf.len(), p.wire_size());
+        for cut in 1..16 {
+            let err = Parcel::decode(&buf[..buf.len() - cut]);
+            assert!(err.is_err(), "cut of {cut} bytes must fail");
+        }
+        // One byte beyond the tail is trailing garbage, also an error.
+        let mut extended = buf.clone();
+        extended.push(0);
+        assert!(Parcel::decode(&extended).is_err());
+        // The intact tail round-trips.
+        assert_eq!(Parcel::decode(&buf).unwrap(), p);
+    }
+
+    /// `wire_size` accounts for the optional trace tail: exactly 16 more
+    /// bytes when present, and always equal to the encoded length.
+    #[test]
+    fn wire_size_accounts_for_trace_context() {
+        let bare = Parcel::new(Gid::new(1, GidKind::Block, 7), 1, vec![0; 10], 0);
+        let traced = bare.clone().with_trace(TraceCtx { trace_id: 1, parent_span: 2 });
+        assert_eq!(traced.wire_size(), bare.wire_size() + 16);
+        assert_eq!(bare.encode().len(), bare.wire_size());
+        assert_eq!(traced.encode().len(), traced.wire_size());
     }
 }

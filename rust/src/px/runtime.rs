@@ -315,6 +315,7 @@ impl PxRuntime {
             );
             let port_ctx = ctx.clone();
             net.attach_port(l, move |bytes| port_ctx.on_parcel_bytes(bytes));
+            super::trace::bind_manager_locality(tm.manager_id(), l);
             localities.push(ctx);
             managers.push(tm);
         }
@@ -346,6 +347,15 @@ impl PxRuntime {
     /// The interconnect (for failure injection in tests).
     pub fn net(&self) -> &Arc<SimNet> {
         &self.net
+    }
+
+    /// The thread-manager ids of this runtime's localities (index =
+    /// locality id). Trace consumers use these to attribute harvested
+    /// flight-recorder rings to this runtime's workers — process-global
+    /// ring registries can hold rings from other runtimes in the same
+    /// process (tests, benches).
+    pub fn manager_ids(&self) -> Vec<u64> {
+        self.managers.iter().map(|tm| tm.manager_id()).collect()
     }
 
     /// The dynamic membership set — which roster localities currently
@@ -538,6 +548,72 @@ mod tests {
         l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
         rt.wait_quiescent();
         assert_eq!(ran_on.load(std::sync::atomic::Ordering::SeqCst), 2);
+        rt.shutdown();
+    }
+
+    /// An AGAS hop-forward must keep the flight-recorder parcel ledger
+    /// balanced: the forwarding hop ends the old trace id's journey and
+    /// re-sends under a fresh id, so both ids pair exactly one send with
+    /// one receive.
+    #[test]
+    fn traced_parcel_follows_migration_with_fresh_forward_id() {
+        use crate::px::trace::{self, EventKind};
+        let _session = trace::exclusive_session();
+        trace::reset();
+        let lo = trace::fresh_id();
+        trace::enable(1 << 12);
+        let rt = PxRuntime::boot(PxConfig { localities: 3, workers_per_locality: 2, ..Default::default() });
+        let l0 = rt.locality(0).clone();
+        let l1 = rt.locality(1).clone();
+        let l2 = rt.locality(2).clone();
+        let ran_on = Arc::new(AtomicU64::new(u64::MAX));
+        let r2 = ran_on.clone();
+        rt.actions().register(1, move |ctx, _| {
+            r2.store(ctx.id as u64, Ordering::SeqCst);
+        });
+        // Object born on L1, cached by L0, migrated to L2: L0's stale
+        // apply routes via L1, which hop-forwards to L2.
+        let g = l1.register_component(GidKind::Block, ()).unwrap();
+        assert!(l0.agas.resolve(g).is_ok());
+        let obj = l1.take_component(g).unwrap();
+        l2.install_component(g, obj);
+        l1.agas.migrate(g, 2).unwrap();
+        l0.apply(g, 1, vec![], crate::px::gid::Gid::NULL).unwrap();
+        rt.wait_quiescent();
+        trace::disable();
+        let hi = trace::fresh_id();
+        assert_eq!(ran_on.load(Ordering::SeqCst), 2);
+        assert_eq!(rt.counters_total().parcels_forwarded, 1);
+        let rings = trace::harvest();
+        trace::reset();
+        let mut sends: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        let mut recvs: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        let mut forwards: Vec<(u64, u64)> = Vec::new();
+        for r in &rings {
+            for e in &r.events {
+                if e.a <= lo || e.a >= hi {
+                    continue;
+                }
+                match e.kind {
+                    EventKind::ParcelSend => *sends.entry(e.a).or_insert(0) += 1,
+                    EventKind::ParcelRecv => *recvs.entry(e.a).or_insert(0) += 1,
+                    EventKind::ParcelForward => forwards.push((e.a, e.b)),
+                    _ => {}
+                }
+            }
+        }
+        assert!(
+            forwards.iter().any(|(old, new)| new > old
+                && sends.get(old) == Some(&1)
+                && recvs.get(old) == Some(&1)
+                && sends.get(new) == Some(&1)
+                && recvs.get(new) == Some(&1)),
+            "forward must chain a fresh id with a balanced send/recv pair on both sides"
+        );
+        for (id, n) in &recvs {
+            assert_eq!(*n, 1, "trace id {id} received more than once");
+            assert_eq!(sends.get(id), Some(&1), "recv without exactly one send for id {id}");
+        }
         rt.shutdown();
     }
 

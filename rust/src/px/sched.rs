@@ -58,6 +58,11 @@ pub enum Priority {
 /// A ready-to-run PX-thread.
 pub struct Task {
     pub prio: Priority,
+    /// Trace span id when the flight recorder was enabled at spawn time
+    /// (0 otherwise — spans are never 0). Rides with the task so the
+    /// begin/end events on the executing worker and the steal event on
+    /// the thief name the same DAG node as the spawn edge.
+    pub span: u64,
     pub f: Box<dyn FnOnce(&Spawner) + Send>,
 }
 
@@ -211,6 +216,9 @@ impl LocalPriority {
                     match q.steal() {
                         Steal::Taken(t) => {
                             self.counters.steals.inc();
+                            if t.span != 0 {
+                                super::trace::steal(t.span);
+                            }
                             return Some(t);
                         }
                         Steal::Empty => break,
@@ -343,7 +351,7 @@ mod tests {
     use super::*;
 
     fn task(prio: Priority) -> Task {
-        Task { prio, f: Box::new(|_| {}) }
+        Task { prio, span: 0, f: Box::new(|_| {}) }
     }
 
     #[test]
@@ -354,7 +362,11 @@ mod tests {
         for i in 0..3 {
             let seen = seen.clone();
             q.push(
-                Task { prio: Priority::Normal, f: Box::new(move |_| seen.lock().unwrap().push(i)) },
+                Task {
+                    prio: Priority::Normal,
+                    span: 0,
+                    f: Box::new(move |_| seen.lock().unwrap().push(i)),
+                },
                 None,
             );
         }
@@ -439,7 +451,11 @@ mod tests {
         for i in 0..3 {
             let order = order.clone();
             q.push(
-                Task { prio: Priority::Normal, f: Box::new(move |_| order.lock().unwrap().push(i)) },
+                Task {
+                    prio: Priority::Normal,
+                    span: 0,
+                    f: Box::new(move |_| order.lock().unwrap().push(i)),
+                },
                 Some(0),
             );
         }

@@ -31,6 +31,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::counters::Counters;
 use super::sched::{Policy, Task};
+use super::trace;
 
 pub use super::sched::Priority;
 
@@ -136,8 +137,16 @@ impl Spawner {
         let id = sh.next_thread_id.fetch_add(1, Ordering::Relaxed);
         sh.active.fetch_add(1, Ordering::Relaxed);
         sh.counters.threads_spawned.inc();
+        // One branch when tracing is off; a span + spawn edge when on.
+        let span = if trace::enabled() {
+            let span = trace::fresh_id();
+            trace::spawn(span, trace::current_span());
+            span
+        } else {
+            0
+        };
         let hint = sh.local_hint();
-        sh.policy.push(Task { prio, f: Box::new(f) }, hint);
+        sh.policy.push(Task { prio, span, f: Box::new(f) }, hint);
         sh.wake_one();
         id
     }
@@ -150,17 +159,29 @@ impl Spawner {
     {
         let sh = &*self.shared;
         let hint = sh.local_hint();
+        let tracing = trace::enabled();
+        let parent = if tracing { trace::current_span() } else { 0 };
         let mut n = 0usize;
         for f in fs {
             // `active` must rise before the task becomes poppable, or a
             // fast worker could complete it and underflow the counter.
             sh.active.fetch_add(1, Ordering::Relaxed);
             sh.next_thread_id.fetch_add(1, Ordering::Relaxed);
-            sh.policy.push(Task { prio, f }, hint);
+            let span = if tracing {
+                let span = trace::fresh_id();
+                trace::spawn(span, parent);
+                span
+            } else {
+                0
+            };
+            sh.policy.push(Task { prio, span, f }, hint);
             n += 1;
         }
         if n > 0 {
             sh.counters.threads_spawned.add(n as u64);
+            if tracing {
+                trace::batch_drain(n as u64);
+            }
             sh.wake_many(n);
         }
         n
@@ -229,6 +250,12 @@ impl ThreadManager {
         Spawner { shared: self.shared.clone() }
     }
 
+    /// This manager's process-unique id — the key the trace layer uses
+    /// to group its worker rings under a locality.
+    pub fn manager_id(&self) -> u64 {
+        self.shared.manager_id
+    }
+
     /// Block the calling OS thread until no task is queued or running.
     /// Event-driven: the worker completing the last task notifies; there
     /// is no polling interval.
@@ -271,16 +298,29 @@ impl Drop for ThreadManager {
 
 fn worker_loop(w: usize, sh: Arc<TmShared>) {
     WORKER_INDEX.with(|c| c.set(Some((sh.manager_id, w))));
+    trace::set_worker(sh.manager_id, w);
     let spawner = Spawner { shared: sh.clone() };
     loop {
         match next_task(w, &sh) {
             Some(task) => {
+                // Span 0 = spawned while tracing was off: no events.
+                let span = task.span;
+                let prev = if span != 0 {
+                    trace::task_begin(span);
+                    trace::swap_current_span(span)
+                } else {
+                    0
+                };
                 // A panicking PX-thread must not kill the worker: catch,
                 // report, and keep scheduling (HPX likewise contains
                 // exceptions at thread boundaries).
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     (task.f)(&spawner)
                 }));
+                if span != 0 {
+                    trace::swap_current_span(prev);
+                    trace::task_end(span);
+                }
                 if let Err(e) = r {
                     let msg = e
                         .downcast_ref::<String>()
@@ -339,6 +379,7 @@ fn next_task(w: usize, sh: &TmShared) -> Option<Task> {
             continue; // drain + exit via the top of the loop
         }
         sh.counters.parked_waits.inc();
+        trace::park();
         {
             let mut g = sh.idle_lock.lock().unwrap();
             // The epoch only moves under `idle_lock`, so this check-then-
@@ -349,6 +390,7 @@ fn next_task(w: usize, sh: &TmShared) -> Option<Task> {
                 g = sh.idle_cv.wait(g).unwrap();
             }
         }
+        trace::unpark();
         sh.parked.fetch_sub(1, Ordering::Relaxed);
     }
 }

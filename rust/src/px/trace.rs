@@ -1,0 +1,941 @@
+//! Flight-recorder causal tracing — per-worker span rings, parcel-carried
+//! trace context, and post-run causal analysis (DESIGN.md §13).
+//!
+//! The paper's §IV overhead study works because HPX can attribute wall
+//! time to the SLOW factors through its monitoring framework; the flat
+//! counters in [`crate::px::counters`] reproduce the *counts* but cannot
+//! answer *when*, *how long*, or *because of what*. This module is the
+//! missing layer, modeled on HPX's APEX task-level tracing (2401.03353):
+//!
+//! * **Always compiled, runtime toggled.** Every instrumentation site
+//!   costs exactly one predictable branch when tracing is disabled — no
+//!   allocation, no lock, no RMW. When enabled, recording an event is
+//!   four relaxed stores into a thread-local ring slot plus one release
+//!   cursor bump.
+//! * **Per-worker bounded rings.** Each thread that records gets its own
+//!   fixed-capacity ring of binary event records, created lazily on
+//!   first use and registered globally for harvest. When a ring wraps,
+//!   the oldest records are overwritten and the overflow is *counted*
+//!   (`OwnedRing::dropped`) — drops are never silent.
+//! * **Causality crosses the wire.** Spawn edges carry
+//!   `(child span, parent span)`; a parcel leaving the locality carries
+//!   an optional [`TraceCtx`] in its envelope, so the receive event on
+//!   the far side links back to the sending task. A hop-forward mints a
+//!   *fresh* trace id chained to the old one, so every receive pairs
+//!   with exactly one send per id even across migration forwarding.
+//! * **Post-run analysis.** [`harvest`] snapshots every ring after the
+//!   run quiesces; [`analyze`] merges them time-ordered, rebuilds the
+//!   causal DAG (spawn edges, parcel edges, forward chains), extracts
+//!   the critical path (the fig 5 "future cone" depth), and fills the
+//!   [`crate::px::hist::Histogram`]s for task run time, queue wait,
+//!   parcel latency, and steal-to-run latency. [`perfetto_json`] emits
+//!   Chrome trace-event JSON (one track per locality × worker, flow
+//!   arrows for parcels) loadable in Perfetto / `chrome://tracing`.
+//!
+//! # Harvest contract
+//!
+//! Rings are single-writer (the owning thread) and read by [`harvest`].
+//! Call [`disable`] and quiesce the runtime before harvesting: a ring
+//! being actively written can tear a slot that wraps mid-read. Torn or
+//! unknown records are skipped, never misparsed (the kind byte gates).
+//!
+//! Trace state is process-global. Tests and benches that enable tracing
+//! serialize through [`exclusive_session`] and scope their assertions by
+//! manager id and a [`fresh_id`] watermark, because rings from other
+//! threads in the same process may carry unrelated events.
+
+use crate::px::hist::Histogram;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+// ------------------------------------------------------------ event model
+
+/// Binary event kinds. The discriminant is the on-ring tag byte; harvest
+/// skips any slot whose tag does not parse (torn or unwritten).
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A PX-thread started running. `a` = span id.
+    TaskBegin = 1,
+    /// A PX-thread ran to completion. `a` = span id.
+    TaskEnd = 2,
+    /// A spawn edge. `a` = child span, `b` = parent node (span or
+    /// parcel trace id; 0 = root).
+    Spawn = 3,
+    /// A task was stolen between workers. `a` = span id.
+    Steal = 4,
+    /// Worker found every queue empty and parked.
+    Park = 5,
+    /// Worker woke from a park.
+    Unpark = 6,
+    /// A parcel left this locality. `a` = trace id, `b` = parent node,
+    /// `aux` = destination locality.
+    ParcelSend = 7,
+    /// A parcel arrived and decoded. `a` = trace id, `aux` = source
+    /// locality.
+    ParcelRecv = 8,
+    /// A stale-cache hop-forward re-sent a parcel under a fresh id.
+    /// `a` = old trace id, `b` = new trace id.
+    ParcelForward = 9,
+    /// An LCO fired (future set, dataflow input). `a` = current span.
+    LcoTrigger = 10,
+    /// A coalesced batch drained into one spawn. `a` = tasks in batch.
+    BatchDrain = 11,
+    /// A checkpoint log entry was pruned at task commit.
+    Checkpoint = 12,
+    /// Crash recovery replayed state. `a` = blocks, `b` = fragments.
+    Recovery = 13,
+}
+
+impl EventKind {
+    fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::TaskBegin,
+            2 => EventKind::TaskEnd,
+            3 => EventKind::Spawn,
+            4 => EventKind::Steal,
+            5 => EventKind::Park,
+            6 => EventKind::Unpark,
+            7 => EventKind::ParcelSend,
+            8 => EventKind::ParcelRecv,
+            9 => EventKind::ParcelForward,
+            10 => EventKind::LcoTrigger,
+            11 => EventKind::BatchDrain,
+            12 => EventKind::Checkpoint,
+            13 => EventKind::Recovery,
+            _ => return None,
+        })
+    }
+}
+
+/// Trace context carried across the wire in a parcel envelope: the
+/// receiver links its handler task to `trace_id`, whose send event on
+/// the origin locality recorded `parent_span` as its cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Identity of this wire hop in the causal DAG (fresh per hop).
+    pub trace_id: u64,
+    /// The sender-side node (task span or prior hop id) that caused it.
+    pub parent_span: u64,
+}
+
+/// One decoded event, as returned by [`harvest`].
+#[derive(Debug, Clone, Copy)]
+pub struct OwnedEvent {
+    /// Nanoseconds since the trace epoch (one process-wide `Instant`).
+    pub t_ns: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// First payload word (see [`EventKind`] per-kind docs).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+    /// Small auxiliary word (locality ids, counts).
+    pub aux: u32,
+}
+
+/// One thread's harvested ring: identity plus its surviving events in
+/// record order.
+#[derive(Debug, Clone)]
+pub struct OwnedRing {
+    /// Thread-manager id for pool workers; 0 for off-pool threads.
+    pub manager_id: u64,
+    /// Worker index within the manager, if a pool worker.
+    pub worker: Option<usize>,
+    /// OS thread name at ring creation (for track labels).
+    pub thread: String,
+    /// Events oldest-first. If the ring wrapped, only the newest
+    /// `capacity` survive.
+    pub events: Vec<OwnedEvent>,
+    /// Records overwritten by wraparound — counted, never silent.
+    pub dropped: u64,
+}
+
+// ------------------------------------------------------------ the rings
+
+#[derive(Default)]
+struct Slot {
+    t: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    /// kind byte in the low 8 bits, aux in the high 32.
+    meta: AtomicU64,
+}
+
+struct Ring {
+    manager_id: u64,
+    worker: Option<usize>,
+    thread: String,
+    slots: Box<[Slot]>,
+    /// Total records ever written (single-writer; Release on store so a
+    /// post-quiescence harvester's Acquire read sees the slot stores).
+    cursor: AtomicU64,
+}
+
+impl Ring {
+    fn new(capacity: usize, manager_id: u64, worker: Option<usize>, thread: String) -> Ring {
+        Ring {
+            manager_id,
+            worker,
+            thread,
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Single-writer append: four relaxed stores + one release bump.
+    #[inline]
+    fn record(&self, t_ns: u64, kind: EventKind, a: u64, b: u64, aux: u32) {
+        let i = self.cursor.load(Ordering::Relaxed);
+        let s = &self.slots[(i as usize) & (self.slots.len() - 1)];
+        s.t.store(t_ns, Ordering::Relaxed);
+        s.a.store(a, Ordering::Relaxed);
+        s.b.store(b, Ordering::Relaxed);
+        s.meta.store(kind as u64 | ((aux as u64) << 32), Ordering::Relaxed);
+        self.cursor.store(i + 1, Ordering::Release);
+    }
+
+    fn harvest(&self) -> OwnedRing {
+        let cursor = self.cursor.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let n = cursor.min(cap);
+        let mut events = Vec::with_capacity(n as usize);
+        for i in (cursor - n)..cursor {
+            let s = &self.slots[(i as usize) & (self.slots.len() - 1)];
+            let meta = s.meta.load(Ordering::Relaxed);
+            if let Some(kind) = EventKind::from_u8(meta as u8) {
+                events.push(OwnedEvent {
+                    t_ns: s.t.load(Ordering::Relaxed),
+                    kind,
+                    a: s.a.load(Ordering::Relaxed),
+                    b: s.b.load(Ordering::Relaxed),
+                    aux: (meta >> 32) as u32,
+                });
+            }
+        }
+        OwnedRing {
+            manager_id: self.manager_id,
+            worker: self.worker,
+            thread: self.thread.clone(),
+            events,
+            dropped: cursor - n,
+        }
+    }
+}
+
+// ------------------------------------------------------- global recorder
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Per-ring slot capacity (power of two), set by [`enable`].
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+/// Bumped by [`reset`]: thread-local rings from an older generation
+/// re-create and re-register themselves on next use.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+/// Shared id namespace for task spans and parcel trace ids (0 = none).
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+/// Every live ring, for harvest.
+static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+/// `(manager_id, locality)` bindings, for Perfetto track grouping.
+static MANAGER_LOCALITY: Mutex<Vec<(u64, u32)>> = Mutex::new(Vec::new());
+/// Serializes whole trace sessions across tests/benches in one process.
+static SESSION: Mutex<()> = Mutex::new(());
+
+/// Default ring capacity: 64 Ki events (2 MiB) per recording thread.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+thread_local! {
+    /// This thread's ring, tagged with the generation it was created in.
+    static RING: RefCell<Option<(u64, Arc<Ring>)>> = const { RefCell::new(None) };
+    /// Pool-worker identity, set by the worker loop before any event.
+    static WORKER: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+    /// The span of the task currently executing on this thread (0 = none).
+    static CURRENT_SPAN: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Is the recorder on? One relaxed load — the only cost every
+/// instrumentation site pays when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on with the given per-thread ring capacity
+/// (rounded up to a power of two). Also pins the time epoch.
+pub fn enable(capacity: usize) {
+    let _ = epoch();
+    CAPACITY.store(capacity.next_power_of_two().max(8), Ordering::Relaxed);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the recorder off. Rings stay registered for [`harvest`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drop every registered ring and start a fresh recording generation.
+/// Threads that still hold a stale thread-local ring re-create and
+/// re-register on their next recorded event.
+pub fn reset() {
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    MANAGER_LOCALITY.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Hold this guard around an enable → run → harvest session in tests and
+/// benches: trace state is process-global, and two concurrent sessions
+/// would reset each other's rings.
+pub fn exclusive_session() -> MutexGuard<'static, ()> {
+    SESSION.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Allocate a fresh nonzero id (shared namespace for task spans and
+/// parcel trace ids). Also useful as a watermark: ids handed out later
+/// compare greater.
+#[inline]
+pub fn fresh_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The span of the task currently running on this thread (0 = none).
+#[inline]
+pub fn current_span() -> u64 {
+    CURRENT_SPAN.with(|c| c.get())
+}
+
+/// Install `span` as this thread's current span, returning the previous
+/// value (restore it when the scope ends).
+#[inline]
+pub fn swap_current_span(span: u64) -> u64 {
+    CURRENT_SPAN.with(|c| c.replace(span))
+}
+
+/// Declare this thread a pool worker (called once by the worker loop);
+/// its ring is labeled `(manager_id, worker)` and its track groups under
+/// the manager's locality in the Perfetto export.
+pub fn set_worker(manager_id: u64, worker: usize) {
+    WORKER.with(|w| w.set(Some((manager_id, worker))));
+}
+
+/// Bind a thread manager to the locality it serves, so harvested worker
+/// rings can be grouped into per-locality process tracks.
+pub fn bind_manager_locality(manager_id: u64, locality: u32) {
+    MANAGER_LOCALITY.lock().unwrap_or_else(|e| e.into_inner()).push((manager_id, locality));
+}
+
+/// The locality a manager was bound to, if any.
+pub fn locality_of_manager(manager_id: u64) -> Option<u32> {
+    MANAGER_LOCALITY
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .find(|(m, _)| *m == manager_id)
+        .map(|(_, l)| *l)
+}
+
+/// Append one event to this thread's ring (creating + registering the
+/// ring on first use or after a [`reset`]).
+fn emit(kind: EventKind, a: u64, b: u64, aux: u32) {
+    let t = now_ns();
+    RING.with(|r| {
+        let mut slot = r.borrow_mut();
+        let generation = GENERATION.load(Ordering::Relaxed);
+        let stale = !matches!(&*slot, Some((g, _)) if *g == generation);
+        if stale {
+            let (manager_id, worker) = match WORKER.with(|w| w.get()) {
+                Some((m, w)) => (m, Some(w)),
+                None => (0, None),
+            };
+            let name = std::thread::current().name().unwrap_or("?").to_string();
+            let ring = Arc::new(Ring::new(
+                CAPACITY.load(Ordering::Relaxed),
+                manager_id,
+                worker,
+                name,
+            ));
+            REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(ring.clone());
+            *slot = Some((generation, ring));
+        }
+        if let Some((_, ring)) = &*slot {
+            ring.record(t, kind, a, b, aux);
+        }
+    });
+}
+
+// Each helper below is one branch when tracing is disabled.
+
+/// Record a task starting. `span` becomes the thread's current span at
+/// the call site (the caller swaps it in).
+#[inline]
+pub fn task_begin(span: u64) {
+    if enabled() {
+        emit(EventKind::TaskBegin, span, 0, 0);
+    }
+}
+
+/// Record a task completing.
+#[inline]
+pub fn task_end(span: u64) {
+    if enabled() {
+        emit(EventKind::TaskEnd, span, 0, 0);
+    }
+}
+
+/// Record a spawn edge from `parent` (span or parcel trace id; 0 = root)
+/// to the new task `child`.
+#[inline]
+pub fn spawn(child: u64, parent: u64) {
+    if enabled() {
+        emit(EventKind::Spawn, child, parent, 0);
+    }
+}
+
+/// Record a successful steal of the task with span `span`.
+#[inline]
+pub fn steal(span: u64) {
+    if enabled() {
+        emit(EventKind::Steal, span, 0, 0);
+    }
+}
+
+/// Record this worker parking on an empty system.
+#[inline]
+pub fn park() {
+    if enabled() {
+        emit(EventKind::Park, 0, 0, 0);
+    }
+}
+
+/// Record this worker waking from a park.
+#[inline]
+pub fn unpark() {
+    if enabled() {
+        emit(EventKind::Unpark, 0, 0, 0);
+    }
+}
+
+/// Record a parcel leaving this locality under `ctx`, toward `dest`.
+#[inline]
+pub fn parcel_send(ctx: TraceCtx, dest: u32) {
+    if enabled() {
+        emit(EventKind::ParcelSend, ctx.trace_id, ctx.parent_span, dest);
+    }
+}
+
+/// Record a parcel arriving (post-decode) that carried `ctx`, from `src`.
+#[inline]
+pub fn parcel_recv(ctx: TraceCtx, src: u32) {
+    if enabled() {
+        emit(EventKind::ParcelRecv, ctx.trace_id, ctx.parent_span, src);
+    }
+}
+
+/// Record a hop-forward re-send: the old id's journey ended here and the
+/// fresh id continues the chain (keeps the send/recv ledger 1:1 per id).
+#[inline]
+pub fn parcel_forward(old_id: u64, new_id: u64) {
+    if enabled() {
+        emit(EventKind::ParcelForward, old_id, new_id, 0);
+    }
+}
+
+/// Record an LCO trigger on the current thread.
+#[inline]
+pub fn lco_trigger() {
+    if enabled() {
+        emit(EventKind::LcoTrigger, current_span(), 0, 0);
+    }
+}
+
+/// Record a coalesced batch of `n` tasks draining into one spawn.
+#[inline]
+pub fn batch_drain(n: u64) {
+    if enabled() {
+        emit(EventKind::BatchDrain, n, 0, 0);
+    }
+}
+
+/// Record a checkpoint-log prune at task commit.
+#[inline]
+pub fn checkpoint_prune() {
+    if enabled() {
+        emit(EventKind::Checkpoint, 0, 0, 0);
+    }
+}
+
+/// Record a crash-recovery replay (`blocks` reconstructed, `fragments`
+/// re-delivered).
+#[inline]
+pub fn recovery(blocks: u64, fragments: u64) {
+    if enabled() {
+        emit(EventKind::Recovery, blocks, fragments, 0);
+    }
+}
+
+/// Snapshot every registered ring. Call after [`disable`] + runtime
+/// quiescence (see the module docs' harvest contract).
+pub fn harvest() -> Vec<OwnedRing> {
+    let rings = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    rings.iter().map(|r| r.harvest()).collect()
+}
+
+// ------------------------------------------------------------- analysis
+
+/// Aggregate causal facts extracted from one harvest.
+#[derive(Debug, Clone, Default)]
+pub struct CausalSummary {
+    /// Events that survived in rings (post-drop).
+    pub events: u64,
+    /// Events lost to ring wraparound, summed over rings.
+    pub dropped: u64,
+    /// Completed task spans (begin+end both observed).
+    pub tasks: u64,
+    /// Parcel sends observed.
+    pub parcels: u64,
+    /// Hop-forward re-sends observed.
+    pub forwards: u64,
+    /// Steals observed.
+    pub steals: u64,
+    /// Sum of task durations — the DAG's total work T1.
+    pub total_work_ns: u64,
+    /// Longest causal chain (task durations + parcel latencies) — the
+    /// DAG's span T∞, the fig 5 future-cone depth.
+    pub critical_path_ns: u64,
+    /// T1 / T∞ — available parallelism of the recorded execution.
+    pub parallelism: f64,
+}
+
+/// Everything [`analyze`] derives from a harvest: the causal summary and
+/// the four latency distributions.
+pub struct TraceStats {
+    /// DAG-level facts (work, span, parallelism).
+    pub summary: CausalSummary,
+    /// Task begin → end, per completed span.
+    pub task_run: Histogram,
+    /// Spawn edge → task begin (scheduling delay).
+    pub queue_wait: Histogram,
+    /// Parcel send → receive, per trace id (one wire hop).
+    pub parcel_latency: Histogram,
+    /// Steal → task begin, for stolen spans only.
+    pub steal_to_run: Histogram,
+}
+
+impl TraceStats {
+    /// Aligned multi-line dump for run reports, next to
+    /// `CounterSnapshot::render` output.
+    pub fn render(&self) -> String {
+        let s = &self.summary;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: {} events ({} dropped), {} tasks, {} parcels ({} forwards), {} steals\n",
+            s.events, s.dropped, s.tasks, s.parcels, s.forwards, s.steals
+        ));
+        out.push_str(&format!(
+            "trace: total work {} ns, critical path {} ns, parallelism {:.2}\n",
+            s.total_work_ns, s.critical_path_ns, s.parallelism
+        ));
+        out.push_str(&self.task_run.render("task_run_ns"));
+        out.push_str(&self.queue_wait.render("queue_wait_ns"));
+        out.push_str(&self.parcel_latency.render("parcel_latency_ns"));
+        out.push_str(&self.steal_to_run.render("steal_to_run_ns"));
+        out
+    }
+}
+
+/// Merge the rings time-ordered, rebuild the causal DAG, and extract the
+/// critical path and latency distributions.
+///
+/// The chain length of a node is "nanoseconds of causally ordered work
+/// and wire latency that had to elapse before it": a spawned task starts
+/// its chain at the parent's chain at spawn time (the parent is still
+/// running — it has accrued `begin..spawn` of its own duration); a
+/// parcel extends its sender's chain by the observed send→recv latency;
+/// a hop-forward chains the fresh id onto the old id's arrival. The
+/// critical path is the maximum chain at any task completion. Events
+/// lost to ring wraparound shorten chains (a missing edge restarts a
+/// chain at zero), so `dropped > 0` means the reported critical path is
+/// a lower bound — size rings accordingly.
+pub fn analyze(rings: &[OwnedRing]) -> TraceStats {
+    let mut events: Vec<&OwnedEvent> = rings.iter().flat_map(|r| r.events.iter()).collect();
+    events.sort_by_key(|e| e.t_ns);
+
+    let mut summary = CausalSummary {
+        events: events.len() as u64,
+        dropped: rings.iter().map(|r| r.dropped).sum(),
+        ..Default::default()
+    };
+    let mut task_run = Histogram::new();
+    let mut queue_wait = Histogram::new();
+    let mut parcel_latency = Histogram::new();
+    let mut steal_to_run = Histogram::new();
+
+    // span -> (begin t, chain at begin) while running
+    let mut running: HashMap<u64, (u64, u64)> = HashMap::new();
+    // node -> chain at its completion/arrival (finished spans, arrived
+    // parcels, spawned-but-not-begun tasks)
+    let mut chain: HashMap<u64, u64> = HashMap::new();
+    // trace id -> (send t, chain at send) while in flight
+    let mut in_flight: HashMap<u64, (u64, u64)> = HashMap::new();
+    // span -> spawn t / steal t, for the wait histograms
+    let mut spawned_at: HashMap<u64, u64> = HashMap::new();
+    let mut stolen_at: HashMap<u64, u64> = HashMap::new();
+
+    // The chain at `parent` as of time `t`: a still-running parent has
+    // accrued part of its duration; everything else is a finished node.
+    let chain_at = |running: &HashMap<u64, (u64, u64)>,
+                    chain: &HashMap<u64, u64>,
+                    parent: u64,
+                    t: u64| {
+        if parent == 0 {
+            return 0;
+        }
+        if let Some((begin, base)) = running.get(&parent) {
+            base + t.saturating_sub(*begin)
+        } else {
+            chain.get(&parent).copied().unwrap_or(0)
+        }
+    };
+
+    for e in events {
+        match e.kind {
+            EventKind::Spawn => {
+                let base = chain_at(&running, &chain, e.b, e.t_ns);
+                let entry = chain.entry(e.a).or_insert(0);
+                *entry = (*entry).max(base);
+                spawned_at.insert(e.a, e.t_ns);
+            }
+            EventKind::TaskBegin => {
+                let base = chain.remove(&e.a).unwrap_or(0);
+                running.insert(e.a, (e.t_ns, base));
+                if let Some(ts) = spawned_at.remove(&e.a) {
+                    queue_wait.record(e.t_ns.saturating_sub(ts));
+                }
+                if let Some(ts) = stolen_at.remove(&e.a) {
+                    steal_to_run.record(e.t_ns.saturating_sub(ts));
+                }
+            }
+            EventKind::TaskEnd => {
+                if let Some((begin, base)) = running.remove(&e.a) {
+                    let dur = e.t_ns.saturating_sub(begin);
+                    summary.tasks += 1;
+                    summary.total_work_ns += dur;
+                    task_run.record(dur);
+                    let end_chain = base + dur;
+                    summary.critical_path_ns = summary.critical_path_ns.max(end_chain);
+                    chain.insert(e.a, end_chain);
+                }
+            }
+            EventKind::Steal => {
+                summary.steals += 1;
+                stolen_at.insert(e.a, e.t_ns);
+            }
+            EventKind::ParcelSend => {
+                summary.parcels += 1;
+                let base = chain_at(&running, &chain, e.b, e.t_ns);
+                in_flight.insert(e.a, (e.t_ns, base));
+            }
+            EventKind::ParcelRecv => {
+                if let Some((ts, base)) = in_flight.remove(&e.a) {
+                    let lat = e.t_ns.saturating_sub(ts);
+                    parcel_latency.record(lat);
+                    chain.insert(e.a, base + lat);
+                } else {
+                    chain.entry(e.a).or_insert(0);
+                }
+            }
+            EventKind::ParcelForward => {
+                summary.forwards += 1;
+            }
+            EventKind::Park
+            | EventKind::Unpark
+            | EventKind::LcoTrigger
+            | EventKind::BatchDrain
+            | EventKind::Checkpoint
+            | EventKind::Recovery => {}
+        }
+    }
+
+    summary.parallelism = if summary.critical_path_ns == 0 {
+        0.0
+    } else {
+        summary.total_work_ns as f64 / summary.critical_path_ns as f64
+    };
+
+    TraceStats { summary, task_run, queue_wait, parcel_latency, steal_to_run }
+}
+
+// ------------------------------------------------------ perfetto export
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a harvest as Chrome trace-event JSON (the Perfetto /
+/// `chrome://tracing` interchange format): one process per locality, one
+/// thread track per worker, "X" complete slices for task spans, and
+/// "s"/"f" flow arrows connecting each parcel send to its receive.
+/// Off-pool threads (drivers, controllers) group under process 9999.
+pub fn perfetto_json(rings: &[OwnedRing]) -> String {
+    let mut out = String::from("[\n");
+    let mut first = true;
+    let mut push = |s: String, out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str("  ");
+        out.push_str(&s);
+    };
+
+    for (ri, ring) in rings.iter().enumerate() {
+        let pid = match locality_of_manager(ring.manager_id) {
+            Some(l) => l as u64,
+            None => 9999,
+        };
+        let tid = match ring.worker {
+            Some(w) => w as u64,
+            None => 1000 + ri as u64,
+        };
+        let name = json_escape(&ring.thread);
+        push(
+            format!(
+                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ),
+            &mut out,
+            &mut first,
+        );
+
+        // Tasks run to completion on a worker, so begins/ends pair up
+        // in ring order without a stack.
+        let mut open: HashMap<u64, u64> = HashMap::new();
+        for e in &ring.events {
+            match e.kind {
+                EventKind::TaskBegin => {
+                    open.insert(e.a, e.t_ns);
+                }
+                EventKind::TaskEnd => {
+                    if let Some(begin) = open.remove(&e.a) {
+                        let ts = begin as f64 / 1000.0;
+                        let dur = e.t_ns.saturating_sub(begin) as f64 / 1000.0;
+                        push(
+                            format!(
+                                "{{\"ph\":\"X\",\"name\":\"task {}\",\"cat\":\"task\",\
+                                 \"ts\":{ts:.3},\"dur\":{dur:.3},\"pid\":{pid},\"tid\":{tid},\
+                                 \"args\":{{\"span\":{}}}}}",
+                                e.a, e.a
+                            ),
+                            &mut out,
+                            &mut first,
+                        );
+                    }
+                }
+                EventKind::ParcelSend => {
+                    let ts = e.t_ns as f64 / 1000.0;
+                    push(
+                        format!(
+                            "{{\"ph\":\"s\",\"name\":\"parcel\",\"cat\":\"parcel\",\
+                             \"id\":{},\"ts\":{ts:.3},\"pid\":{pid},\"tid\":{tid}}}",
+                            e.a
+                        ),
+                        &mut out,
+                        &mut first,
+                    );
+                }
+                EventKind::ParcelRecv => {
+                    let ts = e.t_ns as f64 / 1000.0;
+                    push(
+                        format!(
+                            "{{\"ph\":\"f\",\"bp\":\"e\",\"name\":\"parcel\",\
+                             \"cat\":\"parcel\",\"id\":{},\"ts\":{ts:.3},\
+                             \"pid\":{pid},\"tid\":{tid}}}",
+                            e.a
+                        ),
+                        &mut out,
+                        &mut first,
+                    );
+                }
+                EventKind::Steal => {
+                    let ts = e.t_ns as f64 / 1000.0;
+                    push(
+                        format!(
+                            "{{\"ph\":\"i\",\"name\":\"steal\",\"cat\":\"sched\",\"s\":\"t\",\
+                             \"ts\":{ts:.3},\"pid\":{pid},\"tid\":{tid}}}",
+                            ),
+                        &mut out,
+                        &mut first,
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Write a harvest as Perfetto-loadable JSON at `path`.
+pub fn write_perfetto(path: &str, rings: &[OwnedRing]) -> std::io::Result<()> {
+    std::fs::write(path, perfetto_json(rings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recording_is_a_noop() {
+        let _g = exclusive_session();
+        reset();
+        disable();
+        task_begin(1);
+        task_end(1);
+        // Scope to this thread's ring: unrelated tests in the same
+        // process own other rings.
+        let me = std::thread::current().name().unwrap_or("?").to_string();
+        assert!(
+            harvest().iter().filter(|r| r.thread == me).all(|r| r.events.is_empty()),
+            "no event should be recorded while disabled"
+        );
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let r = Ring::new(8, 0, None, "t".into());
+        for i in 0..20u64 {
+            r.record(i, EventKind::Park, i, 0, 0);
+        }
+        let o = r.harvest();
+        assert_eq!(o.events.len(), 8);
+        assert_eq!(o.dropped, 12);
+        // Newest 8 survive, oldest-first.
+        assert_eq!(o.events.first().unwrap().a, 12);
+        assert_eq!(o.events.last().unwrap().a, 19);
+    }
+
+    #[test]
+    fn enable_record_harvest_analyze_roundtrip() {
+        let _g = exclusive_session();
+        reset();
+        enable(1 << 10);
+        // Synthesize a two-task chain with one parcel hop: root task
+        // spawns a parcel; the remote handler task completes.
+        let pause = || std::thread::sleep(std::time::Duration::from_millis(1));
+        let root = fresh_id();
+        spawn(root, 0);
+        task_begin(root);
+        pause();
+        let prev = swap_current_span(root);
+        let tid = fresh_id();
+        parcel_send(TraceCtx { trace_id: tid, parent_span: root }, 1);
+        swap_current_span(prev);
+        task_end(root);
+        pause();
+        parcel_recv(TraceCtx { trace_id: tid, parent_span: root }, 0);
+        let handler = fresh_id();
+        spawn(handler, tid);
+        task_begin(handler);
+        pause();
+        task_end(handler);
+        disable();
+        // Scope to this thread's ring (see disabled_recording_is_a_noop).
+        let me = std::thread::current().name().unwrap_or("?").to_string();
+        let rings: Vec<OwnedRing> =
+            harvest().into_iter().filter(|r| r.thread == me).collect();
+        reset();
+        let stats = analyze(&rings);
+        assert_eq!(stats.summary.tasks, 2);
+        assert_eq!(stats.summary.parcels, 1);
+        assert_eq!(stats.parcel_latency.count(), 1);
+        assert_eq!(stats.task_run.count(), 2);
+        assert_eq!(stats.queue_wait.count(), 2);
+        // The chain (root work + parcel latency + handler work) is at
+        // least as long as either task alone and at most total elapsed.
+        assert!(stats.summary.critical_path_ns >= stats.summary.total_work_ns / 2);
+        assert!(stats.summary.parallelism > 0.0);
+    }
+
+    #[test]
+    fn perfetto_export_is_wellformed() {
+        let rings = vec![OwnedRing {
+            manager_id: 0,
+            worker: Some(3),
+            thread: "px-worker-3".into(),
+            events: vec![
+                OwnedEvent { t_ns: 1000, kind: EventKind::TaskBegin, a: 7, b: 0, aux: 0 },
+                OwnedEvent { t_ns: 1500, kind: EventKind::ParcelSend, a: 9, b: 7, aux: 1 },
+                OwnedEvent { t_ns: 2000, kind: EventKind::TaskEnd, a: 7, b: 0, aux: 0 },
+                OwnedEvent { t_ns: 2500, kind: EventKind::ParcelRecv, a: 9, b: 7, aux: 0 },
+            ],
+            dropped: 0,
+        }];
+        let j = perfetto_json(&rings);
+        assert!(j.starts_with('[') && j.trim_end().ends_with(']'));
+        assert!(j.contains("\"ph\":\"M\""), "thread metadata present");
+        assert!(j.contains("\"ph\":\"X\""), "task slice present");
+        assert!(j.contains("\"ph\":\"s\"") && j.contains("\"ph\":\"f\""), "flow pair present");
+        assert!(j.contains("px-worker-3"));
+        // Balanced braces and quotes — cheap well-formedness canary.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('"').count() % 2, 0);
+    }
+
+    #[test]
+    fn forward_chain_keeps_ledger_one_to_one() {
+        let _g = exclusive_session();
+        reset();
+        enable(1 << 10);
+        let a = fresh_id();
+        parcel_send(TraceCtx { trace_id: a, parent_span: 0 }, 1);
+        parcel_recv(TraceCtx { trace_id: a, parent_span: 0 }, 0);
+        // Hop-forward: fresh id chained onto the old.
+        let b = fresh_id();
+        parcel_forward(a, b);
+        parcel_send(TraceCtx { trace_id: b, parent_span: a }, 2);
+        parcel_recv(TraceCtx { trace_id: b, parent_span: a }, 1);
+        disable();
+        let me = std::thread::current().name().unwrap_or("?").to_string();
+        let rings: Vec<OwnedRing> =
+            harvest().into_iter().filter(|r| r.thread == me).collect();
+        reset();
+        let mut sends: HashMap<u64, u64> = HashMap::new();
+        let mut recvs: HashMap<u64, u64> = HashMap::new();
+        for r in &rings {
+            for e in &r.events {
+                match e.kind {
+                    EventKind::ParcelSend => *sends.entry(e.a).or_insert(0) += 1,
+                    EventKind::ParcelRecv => *recvs.entry(e.a).or_insert(0) += 1,
+                    _ => {}
+                }
+            }
+        }
+        for (id, n) in &recvs {
+            assert_eq!(*n, 1, "trace id {id} received more than once");
+            assert_eq!(sends.get(id), Some(&1), "recv without exactly one send for {id}");
+        }
+        let stats = analyze(&rings);
+        assert_eq!(stats.summary.forwards, 1);
+        assert_eq!(stats.summary.parcels, 2);
+    }
+}
